@@ -1,0 +1,89 @@
+//! End-to-end driver: load the build-time-trained transformer, quantize it
+//! with the paper's methods, and evaluate perplexity — through BOTH the
+//! pure-Rust forward and the AOT JAX/Pallas graph on PJRT, proving all
+//! three layers compose. Results are recorded in EXPERIMENTS.md.
+//!
+//! Run (after `make artifacts`):
+//!   cargo run --release --example quantize_model
+
+use claq::coordinator::pipeline::{quantize_model, PipelineOpts};
+use claq::coordinator::registry::artifacts_dir;
+use claq::data::calibration::{sample_segments, CalibConfig};
+use claq::data::corpus::load_tokens;
+use claq::eval::perplexity::perplexity;
+use claq::model::io::load_model;
+use claq::quant::config::Method;
+use claq::runtime::executor::ModelExecutor;
+use claq::runtime::Runtime;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    let model = load_model(&dir.join("weights_l.bin")).map_err(|e| {
+        anyhow::anyhow!("{e}\nhint: run `make artifacts` first to train the model")
+    })?;
+    println!(
+        "loaded tiny-L: {} params ({} quantizable)",
+        model.config.n_params(),
+        model.quantizable_params()
+    );
+
+    let train = load_tokens(&dir.join("corpus_c4_train.bin"))?;
+    let heldout = load_tokens(&dir.join("corpus_c4_heldout.bin"))?;
+    let calib = sample_segments(
+        &train,
+        &CalibConfig { n_segments: 32, seq_len: model.config.max_seq, seed: 0xCA11B },
+    );
+
+    // PJRT runtime over the AOT-lowered JAX+Pallas graph.
+    let mut rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let windows = 40;
+
+    println!(
+        "\n{:<14} {:>8} {:>12} {:>12} {:>10} {:>9}",
+        "method", "eq.bits", "ppl (rust)", "ppl (pjrt)", "quant s", "MB"
+    );
+    for method in [
+        Method::Fp16,
+        Method::Claq { bits: 4 },
+        Method::Claq { bits: 3 },
+        Method::Claq { bits: 2 },
+        Method::fusion_2_12(),
+    ] {
+        let t0 = Instant::now();
+        let (qm, _) = quantize_model(&model, &method, &calib, &PipelineOpts::default());
+        let quant_s = t0.elapsed().as_secs_f64();
+        let dense = qm.to_dense();
+        let rep = qm.size_report();
+
+        // L3 evaluation path (pure Rust)
+        let ppl_rust = perplexity(&dense, &heldout, windows).ppl;
+
+        // L2/L1 evaluation path (PJRT executing the lowered JAX+Pallas HLO)
+        let exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &dense)?;
+        let ppl_pjrt = exec.perplexity(&mut rt, &heldout, windows)?;
+
+        let bits = if qm.matrices.is_empty() { 16.0 } else { rep.paper_equivalent_bits };
+        let mb = if qm.matrices.is_empty() {
+            model.quantizable_params() as f64 * 2.0 / 1e6 // fp16 deployment
+        } else {
+            rep.container_bytes as f64 / 1e6
+        };
+        println!(
+            "{:<14} {:>8.2} {:>12.3} {:>12.3} {:>10.2} {:>9.3}",
+            method.name(),
+            bits,
+            ppl_rust,
+            ppl_pjrt,
+            quant_s,
+            mb
+        );
+        assert!(
+            (ppl_rust / ppl_pjrt - 1.0).abs() < 0.02,
+            "Rust and PJRT evaluation disagree"
+        );
+    }
+    println!("\nRust-forward and PJRT(JAX/Pallas) perplexities agree — all layers compose.");
+    Ok(())
+}

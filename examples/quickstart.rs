@@ -1,0 +1,74 @@
+//! Quickstart: quantize one weight matrix with CLAQ and compare against
+//! the RTN / GPTQ baselines — the paper's §3.1 claim in 60 seconds.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use claq::quant::config::Method;
+use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
+use claq::quant::outliers::OutlierStats;
+use claq::tensor::linalg::gram;
+use claq::tensor::Matrix;
+use claq::util::rng::Rng;
+
+fn main() {
+    // A synthetic weight matrix with the structure CLAQ exploits: mostly
+    // small Gaussian weights plus a few outlier-heavy columns.
+    let (rows, cols) = (256, 64);
+    let mut rng = Rng::new(42);
+    let mut w = Matrix::zeros(rows, cols);
+    rng.fill_normal(&mut w.data, 0.02);
+    for &c in &[5usize, 17, 40] {
+        for r in 0..rows {
+            if rng.next_f64() < 0.3 {
+                *w.at_mut(r, c) *= 8.0;
+            }
+        }
+    }
+
+    // Calibration "activations" → Hessian H = 2·E[x xᵀ].
+    let mut x = Matrix::zeros(512, cols);
+    rng.fill_normal(&mut x.data, 1.0);
+    let mut h = gram(&x, 0.0);
+    for v in h.iter_mut() {
+        *v *= 2.0;
+    }
+
+    // The Outlier Order metric (§3.2) finds the planted columns.
+    let stats = OutlierStats::compute(&w, 5.0);
+    let mut top = stats.top_columns(0.05);
+    top.sort_unstable();
+    println!("Outlier Order top-5% columns: {top:?} (planted: [5, 17, 40])");
+    println!(
+        "top-10% of columns hold {:.0}% of all outliers\n",
+        stats.concentration(0.10) * 100.0
+    );
+
+    // Quantize at 3 bits with each method and compare weight error.
+    println!("{:<28} {:>12} {:>14}", "method", "rel. error", "proxy loss");
+    for (name, rule, propagate) in [
+        ("RTN (uniform, no OBS)", CentroidRule::UniformMinMax, false),
+        ("GPTQ (uniform + OBS)", CentroidRule::UniformMinMax, true),
+        ("CLAQ (K-Means + OBS)", CentroidRule::KMeans, true),
+    ] {
+        let plan = MatrixPlan::uniform(cols, 3, rule, propagate);
+        let hess = propagate.then_some(h.as_slice());
+        let q = quantize_matrix(&w, hess, &plan);
+        println!(
+            "{:<28} {:>12.5} {:>14.5}",
+            name, q.metrics.rel_frobenius_err, q.metrics.proxy_loss
+        );
+    }
+
+    // The fusion preset (AP + OR) at ~2.12 equivalent bits.
+    let method = Method::fusion_2_12();
+    let plan = method.plan_for(&w, None).unwrap();
+    let q = quantize_matrix(&w, Some(&h), &plan);
+    println!(
+        "\nCLAQ*-2.12 fusion: rel. error {:.5} at {:.3} equivalent bits ({} FP16 outliers kept)",
+        q.metrics.rel_frobenius_err,
+        q.equivalent_bits_paper(),
+        q.outliers.len()
+    );
+    let bits4 = plan.bits.iter().filter(|&&b| b == 4).count();
+    println!("adaptive precision promoted {bits4}/{cols} columns to 4-bit");
+}

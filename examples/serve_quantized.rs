@@ -1,0 +1,72 @@
+//! Serving driver: load the quantized model and serve batched scoring
+//! requests through the PJRT runtime, reporting latency percentiles and
+//! throughput — the deployment story the paper defers to future CUDA
+//! kernels, exercised end to end on this stack.
+//!
+//! Run (after `make artifacts`):
+//!   cargo run --release --example serve_quantized [n_requests]
+
+use claq::coordinator::pipeline::{quantize_model, PipelineOpts};
+use claq::coordinator::registry::artifacts_dir;
+use claq::data::calibration::{sample_segments, CalibConfig};
+use claq::data::corpus::{generate, load_tokens, CorpusKind};
+use claq::model::io::load_model;
+use claq::quant::config::Method;
+use claq::runtime::executor::ModelExecutor;
+use claq::runtime::Runtime;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+    let dir = artifacts_dir();
+    let model = load_model(&dir.join("weights_l.bin"))
+        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+    let seq = model.config.max_seq;
+
+    // Quantize once at CLAQ*-2.12 (the paper's headline config).
+    let train = load_tokens(&dir.join("corpus_c4_train.bin"))?;
+    let calib = sample_segments(&train, &CalibConfig { n_segments: 24, seq_len: seq, seed: 2 });
+    let t0 = Instant::now();
+    let (qm, _) = quantize_model(&model, &Method::fusion_2_12(), &calib, &PipelineOpts::default());
+    let dense = qm.to_dense();
+    let rep = qm.size_report();
+    println!(
+        "quantized to CLAQ*-2.12 in {:.1}s — container {:.2} MB ({:.2} bits/param, honest accounting)",
+        t0.elapsed().as_secs_f64(),
+        rep.container_bytes as f64 / 1e6,
+        rep.container_bits_per_param
+    );
+
+    // Request stream: random scoring jobs (seq tokens each).
+    let requests: Vec<Vec<u16>> = (0..n_requests)
+        .map(|i| generate(CorpusKind::SynthC4, seq, 1000 + i as u64))
+        .collect();
+
+    let mut rt = Runtime::cpu()?;
+    let exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &dense)?;
+
+    // Warm-up compile.
+    let _ = exec.logits(&mut rt, &requests[0])?;
+
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(n_requests);
+    let serve_start = Instant::now();
+    for req in &requests {
+        let t = Instant::now();
+        let logits = exec.logits(&mut rt, req)?;
+        assert_eq!(logits.rows, seq);
+        latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = serve_start.elapsed().as_secs_f64();
+
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies_ms[((latencies_ms.len() - 1) as f64 * p) as usize];
+    println!("\nserved {n_requests} requests × {seq} tokens on PJRT ({})", rt.platform());
+    println!("  p50 latency: {:>8.2} ms", pct(0.50));
+    println!("  p90 latency: {:>8.2} ms", pct(0.90));
+    println!("  p99 latency: {:>8.2} ms", pct(0.99));
+    println!(
+        "  throughput:  {:>8.0} tok/s",
+        (n_requests * seq) as f64 / wall
+    );
+    Ok(())
+}

@@ -1,0 +1,144 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts for the Rust
+PJRT runtime.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (behind the
+`xla` crate) rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts written (to --artifacts, default ../artifacts):
+  model_l.hlo.txt / model_xl.hlo.txt
+      logits graph. Inputs: tokens (1, max_seq) i32, then the weight
+      tensors in CLAQWT01 file order (tok_embed, per layer [attn_norm, wq,
+      wk, wv, wo, mlp_norm, w_gate, w_up, w_down], final_norm, lm_head).
+      Output: 1-tuple of logits (1, max_seq, vocab) f32.
+  quant_matmul.hlo.txt
+      fused dequant-matmul kernel, inputs x (128,128) f32, codebooks
+      (128,16) f32, indices (128,128) i32 -> 1-tuple (128,128) f32.
+  kmeans_step.hlo.txt
+      one Lloyd step, inputs values (128,128) f32, centroids (128,16) f32
+      -> 1-tuple of (new_centroids (128,16), inertia (128,1)).
+
+Runs ONCE at `make artifacts`.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.kmeans import kmeans_step
+from compile.kernels.quant_matmul import quant_matmul
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_params(params):
+    """CLAQWT01 tensor order (must match rust/src/model/io.rs)."""
+    flat = [params["tok_embed"]]
+    for l in params["layers"]:
+        for name in ("attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down"):
+            flat.append(l[name])
+    flat.append(params["final_norm"])
+    flat.append(params["lm_head"])
+    return flat
+
+
+def unflatten_params(flat, cfg: M.Config):
+    it = iter(flat)
+    params = dict(tok_embed=next(it), layers=[])
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            dict(
+                attn_norm=next(it),
+                wq=next(it),
+                wk=next(it),
+                wv=next(it),
+                wo=next(it),
+                mlp_norm=next(it),
+                w_gate=next(it),
+                w_up=next(it),
+                w_down=next(it),
+            )
+        )
+    params["final_norm"] = next(it)
+    params["lm_head"] = next(it)
+    return params
+
+
+def param_specs(cfg: M.Config):
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    spec = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    flat = [spec(v, d)]
+    for _ in range(cfg.n_layers):
+        flat += [
+            spec(d), spec(d, d), spec(d, d), spec(d, d), spec(d, d),
+            spec(d), spec(f, d), spec(f, d), spec(d, f),
+        ]
+    flat += [spec(d), spec(v, d)]
+    return flat
+
+
+def lower_model(cfg: M.Config, use_pallas: bool):
+    def fn(tokens, *flat):
+        params = unflatten_params(list(flat), cfg)
+        return (M.forward(params, tokens, cfg, use_pallas=use_pallas),)
+
+    tok_spec = jax.ShapeDtypeStruct((1, cfg.max_seq), jnp.int32)
+    return jax.jit(fn).lower(tok_spec, *param_specs(cfg))
+
+
+def lower_quant_matmul(m=128, k=128, n=128, L=16):
+    def fn(x, cb, idx):
+        return (quant_matmul(x, cb, idx),)
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, L), jnp.float32),
+        jax.ShapeDtypeStruct((n, k), jnp.int32),
+    )
+
+
+def lower_kmeans(c=128, n=128, K=16):
+    def fn(v, cent):
+        return kmeans_step(v, cent)
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((c, n), jnp.float32),
+        jax.ShapeDtypeStruct((c, K), jnp.float32),
+    )
+
+
+def write(text: str, path: str):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)", flush=True)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--artifacts", default="../artifacts")
+    p.add_argument("--skip-models", action="store_true", help="only lower the kernels")
+    args = p.parse_args()
+    art = args.artifacts
+    os.makedirs(art, exist_ok=True)
+
+    write(to_hlo_text(lower_quant_matmul()), os.path.join(art, "quant_matmul.hlo.txt"))
+    write(to_hlo_text(lower_kmeans()), os.path.join(art, "kmeans_step.hlo.txt"))
+    if not args.skip_models:
+        # Pallas-linear graphs: the L1 kernel lowered into the same HLO.
+        write(to_hlo_text(lower_model(M.TINY_L, use_pallas=True)), os.path.join(art, "model_l.hlo.txt"))
+        write(to_hlo_text(lower_model(M.TINY_XL, use_pallas=True)), os.path.join(art, "model_xl.hlo.txt"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Layer-1 Pallas kernel: the GPTQ OBS rank-1 error-propagation update,
+the inner-loop hot-spot of the quantization engine:
+
+    W[:, j+1:] -= err ⊗ U[j, j+1:]
+
+expressed as a full-width rank-1 update with `urow` pre-masked to zero on
+already-quantized columns (branch-free, TPU-friendly). Grid tiles rows;
+each program streams a (br, cols) tile of W through VMEM, reads the shared
+`urow` tile, and writes the updated tile back — a pure VPU (elementwise)
+kernel whose roofline is HBM bandwidth.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_kernel(w_ref, e_ref, u_ref, o_ref):
+    w = w_ref[...]      # (br, cols)
+    e = e_ref[...]      # (br, 1)
+    u = u_ref[...]      # (1, cols)
+    o_ref[...] = w - e * u
+
+
+def gptq_update(w, err, urow, block_r: int = 64):
+    """W - err[:, None] * urow[None, :] (rank-1), tiled over rows."""
+    rows, cols = w.shape
+    assert err.shape == (rows,)
+    assert urow.shape == (cols,)
+    br = min(block_r, rows)
+    grid = (pl.cdiv(rows, br),)
+    return pl.pallas_call(
+        _update_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(w, err.reshape(rows, 1), urow.reshape(1, cols))

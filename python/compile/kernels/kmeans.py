@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: one batched Lloyd step of 1-D K-Means — the
+compute hot-spot of CLAQ's codebook construction (§3.1), batched over the
+columns of a weight matrix.
+
+Inputs:
+  values:    (c, n) f32 — c independent columns of n samples each.
+  centroids: (c, K) f32 — current centroids per column.
+Outputs:
+  new_centroids: (c, K), inertia: (c, 1)
+
+Grid tiles the column axis; each program handles a (bc, n) tile with its
+(bc, K) centroids resident in VMEM. The assignment is computed as a dense
+(bc, n, K) distance tensor (vector units), and the centroid update is the
+one-hot contraction (MXU) — no scatter needed.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kmeans_kernel(v_ref, c_ref, newc_ref, inertia_ref):
+    v = v_ref[...]  # (bc, n)
+    c = c_ref[...]  # (bc, K)
+    d = jnp.abs(v[:, :, None] - c[:, None, :])  # (bc, n, K)
+    assign = jnp.argmin(d, axis=-1)
+    onehot = jax.nn.one_hot(assign, c.shape[-1], dtype=v.dtype)  # (bc, n, K)
+    counts = onehot.sum(axis=1)
+    sums = jnp.einsum("cnk,cn->ck", onehot, v)
+    newc_ref[...] = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), c)
+    best = jnp.min(d, axis=-1)
+    inertia_ref[...] = jnp.sum(best * best, axis=-1, keepdims=True)
+
+
+def kmeans_step(values, centroids, block_c: int = 8):
+    """One Lloyd step for a batch of independent 1-D K-Means problems."""
+    c, n = values.shape
+    c2, k = centroids.shape
+    assert c == c2
+    bc = min(block_c, c)
+    grid = (pl.cdiv(c, bc),)
+    return pl.pallas_call(
+        _kmeans_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((c, k), jnp.float32),
+            jax.ShapeDtypeStruct((c, 1), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, n), lambda i: (i, 0)),
+            pl.BlockSpec((bc, k), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bc, k), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(values, centroids)

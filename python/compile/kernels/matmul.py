@@ -1,0 +1,54 @@
+"""Layer-1 Pallas kernel: blocked matmul `y = x @ W.T` for the linear
+layers of the inference graph.
+
+TPU mapping (DESIGN.md §4): the grid tiles (rows(x) × rows(W)); each
+program loads an x-tile and a W-tile into VMEM and accumulates the
+contraction on the MXU. interpret=True is mandatory in this sandbox —
+real-TPU lowering emits a Mosaic custom-call the CPU PJRT client cannot
+execute.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # x tile: (bm, k); w tile: (bn, k); out tile: (bm, bn)
+    x = x_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        x,
+        w,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul_t(x, w, block_m: int = 64, block_n: int = 64):
+    """y[m, n] = x[m, k] @ w[n, k].T via a Pallas grid over (m, n) tiles."""
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w)
+
+
+def linear(x, w):
+    """Apply `x @ w.T` over arbitrary leading dims of x."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    y = matmul_t(x.reshape(-1, k), w)
+    return y.reshape(*lead, w.shape[0])

@@ -1,0 +1,56 @@
+"""Layer-1 Pallas kernel: fused codebook-dequantize + matmul — the CLAQ
+deployment kernel (the paper defers this to "customized CUDA kernels";
+DESIGN.md §4 describes the TPU re-think).
+
+Inputs:
+  x:         (m, k) f32 activations
+  codebooks: (k, L) f32 — per-input-feature (column) codebook, L = 2^bits
+  indices:   (n, k) i32 — quantized weight plane for W (n = out features)
+Output:
+  y: (m, n) = x @ dequant(W).T
+
+The dequant inside each tile uses the **one-hot MXU trick**: instead of a
+scalar gather (slow on TPU vector units), build onehot(idx) ∈ {0,1}^(bn·k·L)
+and contract it with the codebook plane — a (bn·k, L)×(L,) matmul per input
+feature batch that maps onto the systolic array. The codebook tile
+(k × L ≤ 128·16 f32 = 8 KiB) comfortably stays resident in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(x_ref, cb_ref, idx_ref, o_ref):
+    x = x_ref[...]          # (bm, k)
+    cb = cb_ref[...]        # (k, L)
+    idx = idx_ref[...]      # (bn, k)
+    L = cb.shape[-1]
+    onehot = jax.nn.one_hot(idx, L, dtype=x.dtype)          # (bn, k, L)
+    w = jnp.einsum("nkl,kl->nk", onehot, cb)                # dequant via MXU
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def quant_matmul(x, codebooks, indices, block_m: int = 64, block_n: int = 64):
+    """Fused dequant-matmul; see module docstring for layout."""
+    m, k = x.shape
+    n, k2 = indices.shape
+    assert k == k2, (x.shape, indices.shape)
+    assert codebooks.shape[0] == k
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _qmm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, codebooks.shape[1]), lambda i, j: (0, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, codebooks, indices)

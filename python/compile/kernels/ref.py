@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels. Every kernel in this package
+is checked against these references by `python/tests/` (hypothesis sweeps
+over shapes); the references themselves are validated by hand-computable
+cases in `tests/test_ref.py`.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_t_ref(x, w):
+    """y = x @ w.T"""
+    return x @ w.T
+
+
+def dequant_ref(codebooks, indices):
+    """Reconstruct W[n, k] with per-input-feature codebooks.
+
+    codebooks: (k, L) — codebook of input feature i is codebooks[i].
+    indices:   (n, k) int32 in [0, L).
+    """
+    k = codebooks.shape[0]
+    return codebooks[jnp.arange(k)[None, :], indices]
+
+
+def quant_matmul_ref(x, codebooks, indices):
+    """y[m, n] = x[m, k] @ dequant(W)[n, k].T"""
+    w = dequant_ref(codebooks, indices)
+    return x @ w.T
+
+
+def kmeans_step_ref(values, centroids):
+    """One Lloyd step over a batch of independent 1-D problems.
+
+    values:    (c, n) — c columns of n samples.
+    centroids: (c, K)
+    Returns (new_centroids (c, K), inertia (c,)).
+    Empty clusters keep their previous centroid.
+    """
+    import jax
+
+    d = jnp.abs(values[:, :, None] - centroids[:, None, :])  # (c, n, K)
+    assign = jnp.argmin(d, axis=-1)  # (c, n)
+    onehot = jax.nn.one_hot(assign, centroids.shape[1], dtype=values.dtype)  # (c, n, K)
+    counts = onehot.sum(axis=1)  # (c, K)
+    sums = jnp.einsum("cnk,cn->ck", onehot, values)
+    new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), centroids)
+    best = jnp.min(d, axis=-1)
+    inertia = jnp.sum(best * best, axis=-1)
+    return new, inertia
+
+
+def gptq_update_ref(w, err, urow):
+    """OBS rank-1 error propagation: W -= err ⊗ urow.
+
+    w:    (rows, cols) working weights.
+    err:  (rows,) scaled quantization residual of the just-quantized column.
+    urow: (cols,) the inverse-Hessian Cholesky row, pre-masked so entries
+          for already-quantized columns are zero.
+    """
+    return w - err[:, None] * urow[None, :]

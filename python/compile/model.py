@@ -1,0 +1,252 @@
+"""Layer-2: the LLaMA-style transformer in JAX.
+
+Exactly mirrors the Rust reference forward (`rust/src/model/forward.rs`):
+RMSNorm -> interleaved-RoPE causal MHA -> SiLU-gated MLP, pre-norm
+residuals. Linear weights are stored (out_features, in_features); a
+projection computes ``y = x @ W.T``.
+
+Two execution paths share the math:
+  * ``forward(params, tokens)``             — pure jnp (training speed).
+  * ``forward(params, tokens, use_pallas=True)`` — linear layers routed
+    through the L1 Pallas matmul kernel (the AOT/inference graph). With
+    interpret=True the kernel lowers to plain HLO, so the PJRT CPU client
+    can run the result.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import linear as pallas_linear
+
+
+@dataclass(frozen=True)
+class Config:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 352
+    max_seq: int = 128
+    rope_theta: float = 10000.0
+    eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+TINY_L = Config()
+TINY_XL = Config(d_model=192, n_layers=6, n_heads=6, d_ff=512)
+
+
+def init_params(cfg: Config, key) -> dict:
+    """Random init at 1/sqrt(fan_in) scale, with **induced outlier
+    channels**: ~5% of the input-feature columns of every projection are
+    scaled up 3-6x. Large pretrained LLMs develop exactly this structure
+    (rare high-magnitude channels concentrated in few columns — the
+    phenomenon CLAQ's Outlier Order exploits); at our build-time training
+    scale it does not emerge on its own, so it is planted at init and
+    survives the short training run. Documented in DESIGN.md §1.
+    """
+    keys = iter(jax.random.split(key, 64 + 64 * cfg.n_layers))
+
+    def mat(rows, cols):
+        w = jax.random.normal(next(keys), (rows, cols), jnp.float32) / jnp.sqrt(cols)
+        # outlier channels: ~5% of columns scaled by 3..6
+        mask = jax.random.uniform(next(keys), (cols,)) < 0.05
+        factor = 3.0 + 3.0 * jax.random.uniform(next(keys), (cols,))
+        scale = jnp.where(mask, factor, 1.0)
+        return w * scale[None, :]
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            dict(
+                attn_norm=jnp.ones((cfg.d_model,), jnp.float32),
+                wq=mat(cfg.d_model, cfg.d_model),
+                wk=mat(cfg.d_model, cfg.d_model),
+                wv=mat(cfg.d_model, cfg.d_model),
+                wo=mat(cfg.d_model, cfg.d_model),
+                mlp_norm=jnp.ones((cfg.d_model,), jnp.float32),
+                w_gate=mat(cfg.d_ff, cfg.d_model),
+                w_up=mat(cfg.d_ff, cfg.d_model),
+                w_down=mat(cfg.d_model, cfg.d_ff),
+            )
+        )
+    return dict(
+        tok_embed=mat(cfg.vocab, cfg.d_model),
+        layers=layers,
+        final_norm=jnp.ones((cfg.d_model,), jnp.float32),
+        lm_head=mat(cfg.vocab, cfg.d_model),
+    )
+
+
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope_tables(cfg: Config, seq: int):
+    """cos/sin tables, (seq, head_dim//2)."""
+    half = cfg.head_dim // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    freq = 1.0 / (cfg.rope_theta ** (2.0 * i / cfg.head_dim))
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    ang = pos * freq[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, n_heads, head_dim), interleaved pairs (2i, 2i+1)."""
+    a = x[..., 0::2]
+    b = x[..., 1::2]
+    # cos/sin: (seq, half) -> broadcast over heads
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    ra = a * c - b * s
+    rb = a * s + b * c
+    out = jnp.stack([ra, rb], axis=-1)  # (..., seq, heads, half, 2)
+    return out.reshape(x.shape)
+
+
+def _linear(x, w, use_pallas):
+    if use_pallas:
+        return pallas_linear(x, w)
+    return x @ w.T
+
+
+def forward(params, tokens, cfg: Config, use_pallas: bool = False):
+    """tokens: (batch, seq) int32 -> logits (batch, seq, vocab)."""
+    b, seq = tokens.shape
+    x = params["tok_embed"][tokens]  # (b, seq, d)
+    cos, sin = rope_tables(cfg, seq)
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    scale = 1.0 / jnp.sqrt(jnp.array(cfg.head_dim, jnp.float32))
+
+    for layer in params["layers"]:
+        h = rmsnorm(x, layer["attn_norm"], cfg.eps)
+        q = _linear(h, layer["wq"], use_pallas).reshape(b, seq, cfg.n_heads, cfg.head_dim)
+        k = _linear(h, layer["wk"], use_pallas).reshape(b, seq, cfg.n_heads, cfg.head_dim)
+        v = _linear(h, layer["wv"], use_pallas).reshape(b, seq, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        # (b, heads, seq, seq)
+        att = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+        att = jnp.where(mask[None, None, :, :], att, -1e30)
+        p = jax.nn.softmax(att, axis=-1)
+        mixed = jnp.einsum("bhts,bshd->bthd", p, v).reshape(b, seq, cfg.d_model)
+        x = x + _linear(mixed, layer["wo"], use_pallas)
+
+        h = rmsnorm(x, layer["mlp_norm"], cfg.eps)
+        g = _linear(h, layer["w_gate"], use_pallas)
+        u = _linear(h, layer["w_up"], use_pallas)
+        act = jax.nn.silu(g) * u
+        x = x + _linear(act, layer["w_down"], use_pallas)
+
+    x = rmsnorm(x, params["final_norm"], cfg.eps)
+    return _linear(x, params["lm_head"], use_pallas)
+
+
+def loss_fn(params, tokens, cfg: Config):
+    """Mean next-token cross-entropy over (batch, seq)."""
+    logits = forward(params, tokens, cfg)
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None].astype(jnp.int32), axis=-1)
+    return -jnp.mean(ll)
+
+
+# ---------------------------------------------------------------- IO ----
+
+WEIGHTS_MAGIC = b"CLAQWT01"
+
+
+def save_weights(params, cfg: Config, path: str) -> None:
+    """Write the CLAQWT01 container (see rust/src/model/io.rs)."""
+    import numpy as np
+    import struct
+
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(
+            struct.pack(
+                "<6I2f",
+                cfg.vocab,
+                cfg.d_model,
+                cfg.n_layers,
+                cfg.n_heads,
+                cfg.d_ff,
+                cfg.max_seq,
+                cfg.rope_theta,
+                cfg.eps,
+            )
+        )
+
+        def dump(a):
+            f.write(np.asarray(a, dtype="<f4").tobytes())
+
+        dump(params["tok_embed"])
+        for l in params["layers"]:
+            for name in ("attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down"):
+                dump(l[name])
+        dump(params["final_norm"])
+        dump(params["lm_head"])
+
+
+def load_weights(path: str):
+    """Read a CLAQWT01 container -> (params, Config)."""
+    import numpy as np
+    import struct
+
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        assert magic == WEIGHTS_MAGIC, f"bad magic {magic!r}"
+        vocab, d, n_layers, n_heads, d_ff, max_seq = struct.unpack("<6I", f.read(24))
+        rope_theta, eps = struct.unpack("<2f", f.read(8))
+        cfg = Config(vocab, d, n_layers, n_heads, d_ff, max_seq, rope_theta, eps)
+
+        def take(*shape):
+            n = 1
+            for s in shape:
+                n *= s
+            a = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(shape)
+            return jnp.asarray(a)
+
+        params = dict(tok_embed=take(vocab, d), layers=[], final_norm=None, lm_head=None)
+        for _ in range(n_layers):
+            params["layers"].append(
+                dict(
+                    attn_norm=take(d),
+                    wq=take(d, d),
+                    wk=take(d, d),
+                    wv=take(d, d),
+                    wo=take(d, d),
+                    mlp_norm=take(d),
+                    w_gate=take(d_ff, d),
+                    w_up=take(d_ff, d),
+                    w_down=take(d, d_ff),
+                )
+            )
+        params["final_norm"] = take(d)
+        params["lm_head"] = take(vocab, d)
+        rest = f.read(1)
+        assert rest == b"", "trailing bytes in weights file"
+    return params, cfg
+
+
+def load_tokens(path: str):
+    """Read a CLAQTK01 token file (see rust/src/data/corpus.rs)."""
+    import numpy as np
+    import struct
+
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        assert magic == b"CLAQTK01", f"bad magic {magic!r}"
+        (vocab,) = struct.unpack("<I", f.read(4))
+        (n,) = struct.unpack("<Q", f.read(8))
+        toks = np.frombuffer(f.read(2 * n), dtype="<u2")
+        assert len(toks) == n
+    return toks, vocab

@@ -1,0 +1,123 @@
+"""Build-time trainer: fits the tiny-L / tiny-XL models on the synthetic
+corpora produced by `claq datagen`, writing CLAQWT01 weight containers and
+loss-curve CSVs into `artifacts/`. Hand-rolled AdamW (no optax offline).
+
+Runs ONCE at `make artifacts`; never on the request path.
+
+Env knobs: CLAQ_TRAIN_STEPS (default 400), CLAQ_TRAIN_BATCH (default 8).
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return dict(m=zeros, v=jax.tree_util.tree_map(jnp.zeros_like, params), t=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(params, grads, state, lr, wd=0.01, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+
+    def upd(p, m_, v_):
+        step = lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+        return p - step - lr * wd * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, dict(m=m, v=v, t=t)
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, rng: np.random.Generator):
+    n = len(tokens) - seq - 1
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        yield np.stack([tokens[s : s + seq] for s in starts]).astype(np.int32)
+
+
+def cosine_lr(step, total, base=3e-3, warmup=20):
+    if step < warmup:
+        return base * (step + 1) / warmup
+    frac = (step - warmup) / max(1, total - warmup)
+    return base * 0.5 * (1 + np.cos(np.pi * frac))
+
+
+def train_one(name: str, cfg: M.Config, corpus_paths, out_path: str, steps: int, batch: int, art_dir: str):
+    # Train on the concatenation of both corpora so held-out perplexity is
+    # meaningful on each (mirrors an LLM pretrained on both test domains).
+    parts = []
+    for cp in corpus_paths:
+        toks, vocab = M.load_tokens(cp)
+        assert vocab == cfg.vocab
+        parts.append(toks)
+    tokens = np.concatenate(parts)
+    rng = np.random.default_rng(0xC1A9)
+    key = jax.random.PRNGKey(7)
+    params = M.init_params(cfg, key)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, lr):
+        loss, grads = jax.value_and_grad(M.loss_fn)(params, toks, cfg)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    gen = batches(tokens, batch, cfg.max_seq, rng)
+    curve = []
+    t0 = time.time()
+    for step in range(steps):
+        toks = jnp.asarray(next(gen))
+        lr = jnp.asarray(cosine_lr(step, steps), jnp.float32)
+        params, opt, loss = step_fn(params, opt, toks, lr)
+        if step % 10 == 0 or step == steps - 1:
+            l = float(loss)
+            curve.append((step, l))
+            print(f"[{name}] step {step:4d} loss {l:.4f} ({time.time()-t0:.0f}s)", flush=True)
+
+    M.save_weights(params, cfg, out_path)
+    with open(os.path.join(art_dir, f"loss_curve_{name}.csv"), "w") as f:
+        f.write("step,loss\n")
+        for s, l in curve:
+            f.write(f"{s},{l:.6f}\n")
+    print(f"[{name}] wrote {out_path} (final loss {curve[-1][1]:.4f})", flush=True)
+    return curve[-1][1]
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--artifacts", default="../artifacts")
+    p.add_argument("--models", default="l,xl")
+    args = p.parse_args()
+    art = args.artifacts
+    steps = int(os.environ.get("CLAQ_TRAIN_STEPS", "400"))
+    batch = int(os.environ.get("CLAQ_TRAIN_BATCH", "8"))
+
+    corpora = [
+        os.path.join(art, "corpus_c4_train.bin"),
+        os.path.join(art, "corpus_wiki_train.bin"),
+    ]
+    for corpus in corpora:
+        if not os.path.exists(corpus):
+            print(f"missing {corpus}; run `claq datagen` first", file=sys.stderr)
+            sys.exit(1)
+
+    wanted = args.models.split(",")
+    if "l" in wanted:
+        train_one("l", M.TINY_L, corpora, os.path.join(art, "weights_l.bin"), steps, batch, art)
+    if "xl" in wanted:
+        train_one("xl", M.TINY_XL, corpora, os.path.join(art, "weights_xl.bin"), max(steps * 2 // 3, 50), batch, art)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes/seeds; every kernel must match its `ref.py`
+oracle to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gptq_update import gptq_update
+from compile.kernels.kmeans import kmeans_step
+from compile.kernels.matmul import linear, matmul_t
+from compile.kernels.quant_matmul import quant_matmul
+
+settings.register_profile("kernels", deadline=None, max_examples=12)
+settings.load_profile("kernels")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ------------------------------------------------------------- matmul ----
+
+
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 96),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_t_matches_ref(m, k, n, seed):
+    x = rand(seed, m, k)
+    w = rand(seed + 1, n, k)
+    got = matmul_t(x, w)
+    want = ref.matmul_t_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_linear_broadcasts_leading_dims():
+    x = rand(0, 2, 7, 16)
+    w = rand(1, 5, 16)
+    got = linear(x, w)
+    assert got.shape == (2, 7, 5)
+    np.testing.assert_allclose(got, x @ w.T, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_block_boundary_shapes():
+    # shapes straddling the 64-tile boundary
+    for m, n in [(64, 64), (65, 63), (128, 1), (1, 128)]:
+        x = rand(2, m, 32)
+        w = rand(3, n, 32)
+        np.testing.assert_allclose(matmul_t(x, w), x @ w.T, rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------- quant_matmul ----
+
+
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 64),
+    n=st.integers(1, 80),
+    bits=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_quant_matmul_matches_ref(m, k, n, bits, seed):
+    L = 1 << bits
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    cb = jax.random.normal(k2, (k, L), jnp.float32)
+    idx = jax.random.randint(k3, (n, k), 0, L, jnp.int32)
+    got = quant_matmul(x, cb, idx)
+    want = ref.quant_matmul_ref(x, cb, idx)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dequant_ref_gathers_per_column():
+    # hand-checkable case
+    cb = jnp.array([[0.0, 1.0], [10.0, 20.0]], jnp.float32)  # k=2, L=2
+    idx = jnp.array([[1, 0], [0, 1]], jnp.int32)  # n=2, k=2
+    w = ref.dequant_ref(cb, idx)
+    np.testing.assert_array_equal(w, jnp.array([[1.0, 10.0], [0.0, 20.0]]))
+
+
+def test_quant_matmul_equals_dense_matmul_of_dequant():
+    x = rand(5, 33, 20)
+    cb = rand(6, 20, 8)
+    idx = jax.random.randint(jax.random.PRNGKey(7), (41, 20), 0, 8, jnp.int32)
+    w = ref.dequant_ref(cb, idx)
+    np.testing.assert_allclose(quant_matmul(x, cb, idx), x @ w.T, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------- kmeans ----
+
+
+@given(
+    c=st.integers(1, 20),
+    n=st.integers(2, 64),
+    K=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_kmeans_step_matches_ref(c, n, K, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    v = jax.random.normal(k1, (c, n), jnp.float32)
+    cent = jax.random.normal(k2, (c, K), jnp.float32)
+    got_c, got_i = kmeans_step(v, cent)
+    want_c, want_i = ref.kmeans_step_ref(v, cent)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_i.ravel(), want_i, rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_step_reduces_inertia():
+    v = jax.random.normal(jax.random.PRNGKey(1), (6, 128), jnp.float32)
+    cent = jax.random.normal(jax.random.PRNGKey(2), (6, 8), jnp.float32)
+    prev = None
+    for _ in range(5):
+        cent, inertia = kmeans_step(v, cent)
+        total = float(jnp.sum(inertia))
+        if prev is not None:
+            assert total <= prev + 1e-4, f"inertia increased {prev} -> {total}"
+        prev = total
+
+
+def test_kmeans_empty_cluster_keeps_centroid():
+    v = jnp.array([[0.0, 0.1, 0.2, 0.3]], jnp.float32)
+    cent = jnp.array([[0.15, 100.0]], jnp.float32)  # second centroid empty
+    new, _ = kmeans_step(v, cent)
+    assert float(new[0, 1]) == 100.0
+
+
+# --------------------------------------------------------- gptq_update ----
+
+
+@given(
+    rows=st.integers(1, 150),
+    cols=st.integers(1, 64),
+    seed=st.integers(0, 2**16),
+)
+def test_gptq_update_matches_ref(rows, cols, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = jax.random.normal(k1, (rows, cols), jnp.float32)
+    e = jax.random.normal(k2, (rows,), jnp.float32)
+    u = jax.random.normal(k3, (cols,), jnp.float32)
+    got = gptq_update(w, e, u)
+    want = ref.gptq_update_ref(w, e, u)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gptq_update_masked_columns_untouched():
+    w = rand(9, 16, 8)
+    e = rand(10, 16)
+    u = jnp.zeros((8,), jnp.float32).at[5:].set(1.0)  # columns 0..4 masked
+    got = gptq_update(w, e, u)
+    np.testing.assert_array_equal(got[:, :5], w[:, :5])
+    assert not np.allclose(got[:, 5:], w[:, 5:])

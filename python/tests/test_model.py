@@ -1,0 +1,106 @@
+"""L2 model checks: shapes, causality, loss behaviour, the Pallas-linear
+path vs the jnp path, and weight-container round-trips."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.Config(vocab=32, d_model=16, n_layers=2, n_heads=2, d_ff=24, max_seq=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_forward_shapes(params):
+    toks = jnp.zeros((2, 8), jnp.int32)
+    logits = M.forward(params, toks, CFG)
+    assert logits.shape == (2, 8, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality(params):
+    a = jnp.array([[1, 2, 3, 4, 5]], jnp.int32)
+    b = a.at[0, 4].set(9)
+    la = M.forward(params, a, CFG)
+    lb = M.forward(params, b, CFG)
+    np.testing.assert_allclose(la[0, :4], lb[0, :4], atol=1e-5)
+    assert not np.allclose(la[0, 4], lb[0, 4])
+
+
+def test_pallas_linear_path_matches_jnp(params):
+    toks = jnp.array([[3, 1, 4, 1, 5, 9, 2, 6]], jnp.int32)
+    a = M.forward(params, toks, CFG, use_pallas=False)
+    b = M.forward(params, toks, CFG, use_pallas=True)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_loss_near_uniform_at_init(params):
+    toks = jnp.zeros((2, 16), jnp.int32)
+    loss = float(M.loss_fn(params, toks, CFG))
+    assert abs(loss - np.log(CFG.vocab)) < 1.5
+
+
+def test_loss_decreases_with_sgd(params):
+    # a couple of gradient steps on a fixed batch must reduce loss
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, CFG.vocab, jnp.int32)
+    p = params
+    losses = []
+    for _ in range(5):
+        loss, grads = jax.value_and_grad(M.loss_fn)(p, toks, CFG)
+        losses.append(float(loss))
+        p = jax.tree_util.tree_map(lambda a, g: a - 0.5 * g, p, grads)
+    assert losses[-1] < losses[0]
+
+
+def test_weights_round_trip(params):
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "w.bin")
+        M.save_weights(params, CFG, path)
+        loaded, cfg = M.load_weights(path)
+        assert (cfg.vocab, cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.max_seq) == (
+            CFG.vocab, CFG.d_model, CFG.n_layers, CFG.n_heads, CFG.d_ff, CFG.max_seq,
+        )
+        assert cfg.rope_theta == pytest.approx(CFG.rope_theta)
+        assert cfg.eps == pytest.approx(CFG.eps, rel=1e-6)
+        np.testing.assert_array_equal(loaded["tok_embed"], params["tok_embed"])
+        np.testing.assert_array_equal(
+            loaded["layers"][1]["w_down"], params["layers"][1]["w_down"]
+        )
+        toks = jnp.array([[1, 2, 3]], jnp.int32)
+        np.testing.assert_allclose(
+            M.forward(loaded, toks, cfg), M.forward(params, toks, CFG), atol=1e-6
+        )
+
+
+def test_rope_interleaved_convention():
+    # position 0 is identity; rotating [1, 0] by angle t gives [cos, sin]
+    cos, sin = M.rope_tables(M.Config(d_model=8, n_heads=1), 4)
+    x = jnp.zeros((1, 4, 1, 8)).at[..., 0].set(1.0)
+    r = M.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(r[0, 0, 0], x[0, 0, 0], atol=1e-6)
+    np.testing.assert_allclose(float(r[0, 1, 0, 0]), float(cos[1, 0]), rtol=1e-6)
+    np.testing.assert_allclose(float(r[0, 1, 0, 1]), float(sin[1, 0]), rtol=1e-6)
+
+
+def test_token_loader_reads_rust_format():
+    import struct
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.bin")
+        toks = np.array([0, 1, 255, 17], dtype="<u2")
+        with open(path, "wb") as f:
+            f.write(b"CLAQTK01")
+            f.write(struct.pack("<I", 256))
+            f.write(struct.pack("<Q", len(toks)))
+            f.write(toks.tobytes())
+        loaded, vocab = M.load_tokens(path)
+        assert vocab == 256
+        np.testing.assert_array_equal(loaded, toks)

@@ -1,0 +1,42 @@
+//! Inference-path bench: the pure-Rust forward pass and, when artifacts
+//! exist, the PJRT execution of the AOT JAX/Pallas graph — the serving
+//! hot path of `examples/serve_quantized.rs`.
+
+use claq::data::corpus::{generate, CorpusKind, VOCAB};
+use claq::model::forward::{forward, ForwardState};
+use claq::model::io::load_model;
+use claq::model::{Model, TransformerConfig};
+use claq::runtime::executor::ModelExecutor;
+use claq::runtime::Runtime;
+use claq::util::benchlib::{black_box, Bench};
+use claq::util::rng::Rng;
+use std::path::PathBuf;
+
+fn main() {
+    let mut b = Bench::new("forward");
+
+    let cfg = TransformerConfig::tiny_l();
+    let model = Model::random(cfg, &mut Rng::new(5));
+    let tokens = generate(CorpusKind::SynthC4, cfg.max_seq, 1);
+    assert!(tokens.iter().all(|&t| (t as usize) < VOCAB));
+    let mut state = ForwardState::new(cfg);
+    let toks = (cfg.max_seq) as u64;
+    b.run_with_elems("rust forward tiny-L seq=128", Some(toks), || {
+        black_box(forward(black_box(&model), &tokens, &mut state));
+    });
+
+    // PJRT path needs artifacts
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("model_l.hlo.txt").exists() && dir.join("weights_l.bin").exists() {
+        let trained = load_model(&dir.join("weights_l.bin")).unwrap();
+        let mut rt = Runtime::cpu().unwrap();
+        let exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &trained).unwrap();
+        let _ = exec.logits(&mut rt, &tokens).unwrap(); // compile warm-up
+        b.run_with_elems("pjrt forward tiny-L seq=128", Some(toks), || {
+            black_box(exec.logits(&mut rt, black_box(&tokens)).unwrap());
+        });
+    } else {
+        eprintln!("(skipping PJRT forward bench: run `make artifacts` first)");
+    }
+    b.finish();
+}

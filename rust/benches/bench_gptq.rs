@@ -1,0 +1,47 @@
+//! L3 hot-path bench: the GPTQ engine end to end on one matrix — Hessian
+//! factorization + per-column quantize + OBS error propagation, the inner
+//! loop behind every Table-1 row. Cells cover the model's real matrix
+//! shapes and both centroid rules.
+
+use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
+use claq::tensor::linalg::gram;
+use claq::tensor::Matrix;
+use claq::util::benchlib::{black_box, Bench};
+use claq::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("gptq");
+    let mut rng = Rng::new(2);
+    // (rows, cols) mirror tiny-L / tiny-XL projection shapes
+    for &(rows, cols) in &[(128usize, 128usize), (352, 128), (192, 192)] {
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.02);
+        let mut x = Matrix::zeros(256, cols);
+        rng.fill_normal(&mut x.data, 1.0);
+        let mut h = gram(&x, 0.0);
+        for v in h.iter_mut() {
+            *v *= 2.0;
+        }
+        let elems = (rows * cols) as u64;
+        for (name, rule) in [("kmeans", CentroidRule::KMeans), ("uniform", CentroidRule::UniformMinMax)] {
+            let plan = MatrixPlan::uniform(cols, 2, rule, true);
+            b.run_with_elems(
+                &format!("quantize {rows}x{cols} 2b {name}+OBS"),
+                Some(elems),
+                || {
+                    black_box(quantize_matrix(black_box(&w), Some(&h), &plan));
+                },
+            );
+        }
+        // no-propagation variant isolates the OBS update cost
+        let plan_rtn = MatrixPlan::uniform(cols, 2, CentroidRule::KMeans, false);
+        b.run_with_elems(
+            &format!("quantize {rows}x{cols} 2b kmeans no-OBS"),
+            Some(elems),
+            || {
+                black_box(quantize_matrix(black_box(&w), None, &plan_rtn));
+            },
+        );
+    }
+    b.finish();
+}

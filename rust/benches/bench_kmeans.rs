@@ -1,0 +1,30 @@
+//! L3 hot-path bench: per-column K-Means codebook construction (§3.1) —
+//! the dominant cost of CLAQ quantization. One row per (column height ×
+//! bit width) cell; throughput is weights clustered per second.
+
+use claq::quant::kmeans::{kmeans_1d, KMeansOpts};
+use claq::util::benchlib::{black_box, Bench};
+use claq::util::proptest::gen_column;
+use claq::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("kmeans");
+    let mut rng = Rng::new(1);
+    for &n in &[128usize, 512, 2048] {
+        for &bits in &[2u32, 3, 4] {
+            let col = gen_column(&mut rng, n, 0.02);
+            let opts = KMeansOpts::default();
+            b.run_with_elems(&format!("kmeans_1d n={n} bits={bits}"), Some(n as u64), || {
+                black_box(kmeans_1d(black_box(&col), 1 << bits, &opts));
+            });
+        }
+    }
+    // uniform codebook as the comparison point (RTN centroid rule)
+    for &n in &[2048usize] {
+        let col = gen_column(&mut rng, n, 0.02);
+        b.run_with_elems(&format!("uniform_codebook n={n} k=8"), Some(n as u64), || {
+            black_box(claq::quant::codebook::uniform_codebook(black_box(&col), 8));
+        });
+    }
+    b.finish();
+}

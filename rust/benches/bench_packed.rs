@@ -1,0 +1,44 @@
+//! Deployment-format bench: bit-packing, container serialize/parse, and
+//! dequantization — the runtime costs of the packed CLAQ container.
+
+use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
+use claq::quant::packed::{pack, pack_indices, unpack, unpack_indices};
+use claq::tensor::Matrix;
+use claq::util::benchlib::{black_box, Bench};
+use claq::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("packed");
+    let mut rng = Rng::new(4);
+
+    for &bits in &[2u8, 3, 4] {
+        let n = 16_384;
+        let idx: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+        b.run_with_elems(&format!("pack_indices {bits}b n={n}"), Some(n as u64), || {
+            black_box(pack_indices(black_box(&idx), bits));
+        });
+        let packed = pack_indices(&idx, bits);
+        b.run_with_elems(&format!("unpack_indices {bits}b n={n}"), Some(n as u64), || {
+            black_box(unpack_indices(black_box(&packed), bits, n));
+        });
+    }
+
+    // whole-matrix container round trip at tiny-L shape
+    let mut w = Matrix::zeros(128, 128);
+    rng.fill_normal(&mut w.data, 0.02);
+    let mut plan = MatrixPlan::uniform(128, 2, CentroidRule::KMeans, false);
+    plan.reserve = vec![2; 128];
+    let qm = quantize_matrix(&w, None, &plan);
+    let elems = (128 * 128) as u64;
+    b.run_with_elems("pack 128x128 fusion", Some(elems), || {
+        black_box(pack(black_box(&qm)));
+    });
+    let (pm, _) = pack(&qm);
+    b.run_with_elems("unpack 128x128 fusion", Some(elems), || {
+        black_box(unpack(black_box(&pm)).unwrap());
+    });
+    b.run_with_elems("dequantize 128x128", Some(elems), || {
+        black_box(qm.dequantize());
+    });
+    b.finish();
+}

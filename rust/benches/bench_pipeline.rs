@@ -1,0 +1,57 @@
+//! End-to-end pipeline bench (the Table 1 inner loop): calibrate +
+//! quantize a whole model, and the evaluation passes — the costs that
+//! bound how fast the table harness regenerates the paper.
+
+use claq::coordinator::pipeline::{quantize_model, PipelineOpts};
+use claq::data::calibration::{sample_segments, CalibConfig};
+use claq::data::corpus::{generate, CorpusKind, VOCAB};
+use claq::eval::perplexity::perplexity;
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::Method;
+use claq::util::benchlib::{black_box, Bench};
+use claq::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("pipeline");
+    let cfg = TransformerConfig {
+        vocab: VOCAB,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 96,
+        max_seq: 64,
+        rope_theta: 10000.0,
+        eps: 1e-5,
+    };
+    let model = Model::random(cfg, &mut Rng::new(3));
+    let stream = generate(CorpusKind::SynthC4, 30_000, 1);
+    let calib = sample_segments(&stream, &CalibConfig { n_segments: 8, seq_len: 64, seed: 1 });
+    let heldout = generate(CorpusKind::SynthC4, 64 * 8, 2);
+
+    for method in [Method::Rtn { bits: 2 }, Method::Claq { bits: 2 }, Method::fusion_2_12()] {
+        b.run(&format!("quantize_model {}", method.name()), || {
+            black_box(quantize_model(
+                black_box(&model),
+                &method,
+                &calib,
+                &PipelineOpts::default(),
+            ));
+        });
+    }
+
+    // §Perf ablation: incremental layer-state calibration vs full
+    // re-forward per layer (same quantized output, different work).
+    for incremental in [false, true] {
+        let opts = PipelineOpts { incremental, ..Default::default() };
+        let tag = if incremental { "incremental" } else { "re-forward" };
+        b.run(&format!("calibration {} CLAQ-2", tag), || {
+            black_box(quantize_model(black_box(&model), &Method::Claq { bits: 2 }, &calib, &opts));
+        });
+    }
+
+    b.run_with_elems("perplexity 8 windows", Some((64 * 8) as u64), || {
+        black_box(perplexity(black_box(&model), &heldout, 0));
+    });
+
+    b.finish();
+}

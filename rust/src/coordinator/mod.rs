@@ -1,0 +1,6 @@
+//! L3 coordination: the end-to-end quantization pipeline (calibrate →
+//! sensitivity → allocate → quantize → pack), the run registry, and the
+//! artifact/data bootstrap used by the CLI and the table harness.
+
+pub mod pipeline;
+pub mod registry;

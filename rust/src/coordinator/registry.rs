@@ -1,0 +1,90 @@
+//! Run registry: every experiment the harness executes is appended as a
+//! CSV row to `artifacts/runs.csv` with its configuration and metrics, so
+//! EXPERIMENTS.md numbers are traceable to recorded runs.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// One recorded run.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub experiment: String,
+    pub model: String,
+    pub method: String,
+    pub bits: f64,
+    pub metric_name: String,
+    pub metric_value: f64,
+    pub detail: String,
+}
+
+/// Appends run records to a CSV file.
+pub struct Registry {
+    path: PathBuf,
+}
+
+impl Registry {
+    pub fn new(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join("runs.csv");
+        if !path.exists() {
+            std::fs::write(&path, "experiment,model,method,bits,metric,value,detail\n")
+                .with_context(|| format!("init {}", path.display()))?;
+        }
+        Ok(Self { path })
+    }
+
+    pub fn record(&self, r: &RunRecord) -> Result<()> {
+        let mut f = std::fs::OpenOptions::new().append(true).open(&self.path)?;
+        writeln!(
+            f,
+            "{},{},{},{:.3},{},{:.6},{}",
+            r.experiment,
+            r.model,
+            r.method.replace(',', ";"),
+            r.bits,
+            r.metric_name,
+            r.metric_value,
+            r.detail.replace(',', ";")
+        )?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Repo-standard artifact directory (env override for tests).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("CLAQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_rows() {
+        let dir = std::env::temp_dir().join("claq_registry_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = Registry::new(&dir).unwrap();
+        reg.record(&RunRecord {
+            experiment: "table1".into(),
+            model: "tiny-l".into(),
+            method: "CLAQ*-2.12".into(),
+            bits: 2.12,
+            metric_name: "ppl_wiki".into(),
+            metric_value: 7.57,
+            detail: "calib=synth-c4, with,comma".into(),
+        })
+        .unwrap();
+        let text = std::fs::read_to_string(reg.path()).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("CLAQ*-2.12"));
+        assert!(text.contains("with;comma"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

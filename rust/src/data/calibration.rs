@@ -1,0 +1,75 @@
+//! Calibration-set sampling (paper Appendix F: "128 random 2048-token
+//! segments from the C4 dataset"; scaled to this testbed's sequence
+//! length). Segments are drawn at random offsets from a token stream,
+//! deterministically from a seed.
+
+use crate::util::rng::Rng;
+
+/// Default calibration configuration mirroring the paper's shape.
+#[derive(Clone, Copy, Debug)]
+pub struct CalibConfig {
+    pub n_segments: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        Self { n_segments: 128, seq_len: 128, seed: 0xCA11B }
+    }
+}
+
+/// Sample `n_segments` windows of `seq_len` tokens.
+pub fn sample_segments(stream: &[u16], cfg: &CalibConfig) -> Vec<Vec<u16>> {
+    assert!(
+        stream.len() >= cfg.seq_len,
+        "stream too short for calibration ({} < {})",
+        stream.len(),
+        cfg.seq_len
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let max_start = stream.len() - cfg.seq_len;
+    (0..cfg.n_segments)
+        .map(|_| {
+            let start = rng.below_usize(max_start + 1);
+            stream[start..start + cfg.seq_len].to_vec()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{generate, CorpusKind};
+
+    #[test]
+    fn segment_shapes() {
+        let stream = generate(CorpusKind::SynthC4, 10_000, 1);
+        let cfg = CalibConfig { n_segments: 16, seq_len: 64, seed: 1 };
+        let segs = sample_segments(&stream, &cfg);
+        assert_eq!(segs.len(), 16);
+        assert!(segs.iter().all(|s| s.len() == 64));
+    }
+
+    #[test]
+    fn deterministic() {
+        let stream = generate(CorpusKind::SynthWiki, 5000, 2);
+        let cfg = CalibConfig::default();
+        assert_eq!(sample_segments(&stream, &cfg), sample_segments(&stream, &cfg));
+    }
+
+    #[test]
+    fn segments_are_substrings() {
+        let stream = generate(CorpusKind::SynthWiki, 4000, 3);
+        let cfg = CalibConfig { n_segments: 8, seq_len: 32, seed: 9 };
+        for seg in sample_segments(&stream, &cfg) {
+            assert!(stream.windows(32).any(|w| w == &seg[..]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "stream too short")]
+    fn too_short_stream_panics() {
+        sample_segments(&[1, 2, 3], &CalibConfig::default());
+    }
+}

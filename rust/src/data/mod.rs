@@ -1,0 +1,8 @@
+//! Synthetic data substrate standing in for the paper's gated datasets
+//! (C4, WikiText2, and the lm-eval zero-shot suites) — see DESIGN.md §1
+//! for the substitution rationale.
+
+pub mod calibration;
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;

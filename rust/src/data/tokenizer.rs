@@ -1,0 +1,102 @@
+//! Minimal vocabulary / detokenizer. The synthetic language is defined
+//! directly over token ids; this module gives ids stable human-readable
+//! surface forms for demos and debugging output (examples print generated
+//! "text"), plus a round-trip encode for tests.
+
+use crate::data::corpus::VOCAB;
+use std::collections::HashMap;
+
+const ONSETS: [&str; 16] = [
+    "b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z", "ch", "sh",
+];
+const NUCLEI: [&str; 8] = ["a", "e", "i", "o", "u", "ai", "ou", "ea"];
+const CODAS: [&str; 2] = ["", "n"];
+
+/// Deterministic id ↔ pseudo-word vocabulary.
+pub struct Vocab {
+    words: Vec<String>,
+    index: HashMap<String, u16>,
+}
+
+impl Default for Vocab {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Vocab {
+    pub fn new() -> Self {
+        let mut words = Vec::with_capacity(VOCAB);
+        for id in 0..VOCAB {
+            let o = ONSETS[id % 16];
+            let n = NUCLEI[(id / 16) % 8];
+            let c = CODAS[(id / 128) % 2];
+            words.push(format!("{o}{n}{c}"));
+        }
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u16))
+            .collect();
+        Self { words, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn word(&self, id: u16) -> &str {
+        &self.words[id as usize]
+    }
+
+    pub fn id(&self, word: &str) -> Option<u16> {
+        self.index.get(word).copied()
+    }
+
+    /// Render a token sequence as space-separated pseudo-words.
+    pub fn decode(&self, tokens: &[u16]) -> String {
+        tokens
+            .iter()
+            .map(|&t| self.word(t))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Parse space-separated pseudo-words back to ids.
+    pub fn encode(&self, text: &str) -> Option<Vec<u16>> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_vocab_uniquely() {
+        let v = Vocab::new();
+        assert_eq!(v.len(), VOCAB);
+        let mut set = std::collections::HashSet::new();
+        for id in 0..VOCAB as u16 {
+            assert!(set.insert(v.word(id).to_string()), "dup word {}", v.word(id));
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let v = Vocab::new();
+        let toks = vec![0u16, 17, 255, 128, 42];
+        let text = v.decode(&toks);
+        assert_eq!(v.encode(&text).unwrap(), toks);
+    }
+
+    #[test]
+    fn unknown_word_rejected() {
+        let v = Vocab::new();
+        assert!(v.encode("notaword").is_none());
+    }
+}

@@ -1,0 +1,6 @@
+//! Evaluation harnesses: perplexity (the paper's Table 1 metric) and
+//! zero-shot multiple-choice accuracy (Table 2, lm-eval-harness
+//! convention).
+
+pub mod perplexity;
+pub mod zeroshot;

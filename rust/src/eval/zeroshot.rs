@@ -1,0 +1,77 @@
+//! Zero-shot multiple-choice scoring, lm-eval-harness `acc_norm`
+//! convention: each choice is scored by its length-normalized continuation
+//! log-likelihood under the model; the argmax choice is the prediction.
+
+use crate::data::tasks::TaskItem;
+use crate::model::forward::{continuation_logprob, ForwardState};
+use crate::model::Model;
+
+/// Accuracy of `model` on a set of items.
+pub fn accuracy(model: &Model, items: &[TaskItem]) -> f64 {
+    let mut state = ForwardState::new(model.config);
+    let mut correct = 0usize;
+    for item in items {
+        if predict(model, item, &mut state) == item.answer {
+            correct += 1;
+        }
+    }
+    correct as f64 / items.len().max(1) as f64
+}
+
+/// Predicted choice index for one item.
+pub fn predict(model: &Model, item: &TaskItem, state: &mut ForwardState) -> usize {
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (ci, cont) in item.choices.iter().enumerate() {
+        let lp = continuation_logprob(model, &item.prefix, cont, state) / cont.len() as f64;
+        if lp > best.0 {
+            best = (lp, ci);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{CorpusKind, VOCAB};
+    use crate::data::tasks::{generate_task, TASKS};
+    use crate::model::TransformerConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn random_model_near_chance() {
+        let cfg = TransformerConfig {
+            vocab: VOCAB,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 64,
+            rope_theta: 10000.0,
+            eps: 1e-5,
+        };
+        let m = crate::model::Model::random(cfg, &mut Rng::new(2));
+        // 2-choice task: untrained model should hover near 50%
+        let items = generate_task(&TASKS[0], CorpusKind::SynthWiki, 60);
+        let acc = accuracy(&m, &items);
+        assert!(acc > 0.2 && acc < 0.8, "acc {acc}");
+    }
+
+    #[test]
+    fn accuracy_bounds() {
+        let cfg = TransformerConfig {
+            vocab: VOCAB,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 64,
+            rope_theta: 10000.0,
+            eps: 1e-5,
+        };
+        let m = crate::model::Model::random(cfg, &mut Rng::new(3));
+        let items = generate_task(&TASKS[1], CorpusKind::SynthC4, 10);
+        let acc = accuracy(&m, &items);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

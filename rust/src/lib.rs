@@ -1,0 +1,25 @@
+//! # CLAQ — Column-Level Adaptive weight Quantization for LLMs
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of
+//! *CLAQ: Pushing the Limits of Low-Bit Post-Training Quantization for
+//! LLMs* (Wang et al., 2024). See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! * [`quant`] — the paper's contribution: K-Means codebooks, Outlier
+//!   Order, adaptive precision, outlier reservation, fusion presets, plus
+//!   the GPTQ substrate and the RTN/GPTQ/AWQ baselines.
+//! * [`model`] — the LLaMA-style transformer the experiments quantize.
+//! * [`data`] — synthetic corpora / calibration / zero-shot tasks.
+//! * [`eval`] — perplexity and zero-shot harnesses.
+//! * [`tensor`], [`util`] — from-scratch substrates (matrix/linalg, RNG,
+//!   stats, thread pool, property tests, bench harness, CLI).
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tables;
+pub mod tensor;
+pub mod util;

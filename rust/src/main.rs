@@ -1,0 +1,60 @@
+//! `claq` — CLI entrypoint of the CLAQ reproduction.
+//!
+//! Subcommands:
+//! * `datagen`   — write the synthetic corpora to `artifacts/` (build step;
+//!                 the JAX trainer consumes these files).
+//! * `quantize`  — quantize a trained model with a chosen method and
+//!                 report size + perplexity.
+//! * `table <n>` — regenerate paper table n (1–13).
+//! * `figure <n>`— regenerate paper figure n (3–5).
+//! * `outliers`  — print outlier-order diagnostics for a model.
+//!
+//! Run `claq help` for flags.
+
+use anyhow::{bail, Result};
+use claq::util::cli::Args;
+
+const VALUE_FLAGS: &[&str] = &[
+    "out", "model", "method", "bits", "s", "segments", "windows", "items", "tokens", "seed",
+    "setting", "calib", "target", "workers", "artifacts",
+];
+
+fn usage() -> &'static str {
+    "claq — CLAQ: Column-Level Adaptive weight Quantization (reproduction)
+
+USAGE:
+  claq datagen  [--out artifacts] [--tokens N]
+  claq quantize --model artifacts/weights_l.bin --method claq --bits 2.12
+  claq table    <1|2|3|4|5|6|7|8|10|12|13> [--fast]
+  claq figure   <3|4|5>
+  claq outliers [--model PATH] [--s 13]
+  claq eval     --model PATH [--method METHOD --bits B]
+  claq help
+
+METHODS (for --method): fp16, rtn, gptq, awq, claq, claq-ap, claq-or,
+  claq-or-fixed, claq-fusion, claq-search
+"
+}
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{}", usage());
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv, VALUE_FLAGS).map_err(|e| anyhow::anyhow!(e))?;
+    match cmd.as_str() {
+        "datagen" => claq::tables::bootstrap::datagen(&args),
+        "quantize" => claq::tables::cli_entry::quantize(&args),
+        "eval" => claq::tables::cli_entry::eval(&args),
+        "table" => claq::tables::cli_entry::table(&args),
+        "figure" => claq::tables::cli_entry::figure(&args),
+        "outliers" => claq::tables::cli_entry::outliers(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{}", usage()),
+    }
+}

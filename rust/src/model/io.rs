@@ -1,0 +1,171 @@
+//! Binary weight container shared with the JAX trainer (`python/compile/
+//! train.py` writes it, this module reads and also writes it for tests).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "CLAQWT01"
+//! vocab u32 | d_model u32 | n_layers u32 | n_heads u32 | d_ff u32 |
+//! max_seq u32 | rope_theta f32 | eps f32
+//! tok_embed (vocab×d f32)
+//! per layer: attn_norm d | wq d×d | wk d×d | wv d×d | wo d×d |
+//!            mlp_norm d | w_gate dff×d | w_up dff×d | w_down d×dff
+//! final_norm d
+//! lm_head (vocab×d)
+//! ```
+
+use super::{LayerWeights, Model, TransformerConfig};
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CLAQWT01";
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    // bulk conversion: f32 slice -> LE bytes
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf).context("short read")?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+/// Serialize a model.
+pub fn save_model(model: &Model, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    let c = &model.config;
+    w.write_all(MAGIC)?;
+    for v in [c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.max_seq] {
+        w.write_all(&(v as u32).to_le_bytes())?;
+    }
+    w.write_all(&c.rope_theta.to_le_bytes())?;
+    w.write_all(&c.eps.to_le_bytes())?;
+    write_f32s(&mut w, &model.tok_embed.data)?;
+    for l in &model.layers {
+        write_f32s(&mut w, &l.attn_norm)?;
+        write_f32s(&mut w, &l.wq.data)?;
+        write_f32s(&mut w, &l.wk.data)?;
+        write_f32s(&mut w, &l.wv.data)?;
+        write_f32s(&mut w, &l.wo.data)?;
+        write_f32s(&mut w, &l.mlp_norm)?;
+        write_f32s(&mut w, &l.w_gate.data)?;
+        write_f32s(&mut w, &l.w_up.data)?;
+        write_f32s(&mut w, &l.w_down.data)?;
+    }
+    write_f32s(&mut w, &model.final_norm)?;
+    write_f32s(&mut w, &model.lm_head.data)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a model.
+pub fn load_model(path: &Path) -> Result<Model> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = std::io::BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic in {}", path.display());
+    }
+    let vocab = read_u32(&mut r)? as usize;
+    let d_model = read_u32(&mut r)? as usize;
+    let n_layers = read_u32(&mut r)? as usize;
+    let n_heads = read_u32(&mut r)? as usize;
+    let d_ff = read_u32(&mut r)? as usize;
+    let max_seq = read_u32(&mut r)? as usize;
+    let rope_theta = read_f32(&mut r)?;
+    let eps = read_f32(&mut r)?;
+    let config = TransformerConfig { vocab, d_model, n_layers, n_heads, d_ff, max_seq, rope_theta, eps };
+    config.validate()?;
+
+    let d = d_model;
+    let tok_embed = Matrix::from_vec(vocab, d, read_f32s(&mut r, vocab * d)?);
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        layers.push(LayerWeights {
+            attn_norm: read_f32s(&mut r, d)?,
+            wq: Matrix::from_vec(d, d, read_f32s(&mut r, d * d)?),
+            wk: Matrix::from_vec(d, d, read_f32s(&mut r, d * d)?),
+            wv: Matrix::from_vec(d, d, read_f32s(&mut r, d * d)?),
+            wo: Matrix::from_vec(d, d, read_f32s(&mut r, d * d)?),
+            mlp_norm: read_f32s(&mut r, d)?,
+            w_gate: Matrix::from_vec(d_ff, d, read_f32s(&mut r, d_ff * d)?),
+            w_up: Matrix::from_vec(d_ff, d, read_f32s(&mut r, d_ff * d)?),
+            w_down: Matrix::from_vec(d, d_ff, read_f32s(&mut r, d * d_ff)?),
+        });
+    }
+    let final_norm = read_f32s(&mut r, d)?;
+    let lm_head = Matrix::from_vec(vocab, d, read_f32s(&mut r, vocab * d)?);
+    // ensure EOF
+    let mut probe = [0u8; 1];
+    if r.read(&mut probe)? != 0 {
+        bail!("trailing bytes in {}", path.display());
+    }
+    Ok(Model { config, tok_embed, layers, final_norm, lm_head })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip() {
+        let cfg = TransformerConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+            rope_theta: 10000.0,
+            eps: 1e-5,
+        };
+        let mut rng = Rng::new(1);
+        let m = Model::random(cfg, &mut rng);
+        let dir = std::env::temp_dir().join("claq_model_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bin");
+        save_model(&m, &path).unwrap();
+        let back = load_model(&path).unwrap();
+        assert_eq!(back.config, m.config);
+        assert_eq!(back.tok_embed.data, m.tok_embed.data);
+        assert_eq!(back.layers[1].w_down.data, m.layers[1].w_down.data);
+        assert_eq!(back.final_norm, m.final_norm);
+        assert_eq!(back.lm_head.data, m.lm_head.data);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("claq_model_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTAMODELFILE").unwrap();
+        assert!(load_model(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,172 @@
+//! The quantized model: every attention/MLP matrix replaced by its packed
+//! CLAQ representation (embedding, norms, and LM head stay FP, as in the
+//! paper). Evaluation dequantizes once into a dense [`Model`] — the CPU
+//! analog of loading a quantized checkpoint onto the accelerator — while
+//! the packed planes drive the size accounting and the fused
+//! dequant-matmul benches.
+
+use super::{MatrixId, Model};
+use crate::quant::gptq::QuantizedMatrix;
+use crate::quant::packed::pack;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// A fully quantized model plus bookkeeping.
+pub struct QuantizedModel {
+    /// The source model with FP parts intact (weights of quantized matrices
+    /// inside are *stale*; use `to_dense` for an evaluable model).
+    pub base: Model,
+    pub matrices: HashMap<MatrixId, QuantizedMatrix>,
+    /// AWQ per-column activation scales (quantized weights live in the
+    /// scaled space; `to_dense` divides them back out). Empty for non-AWQ.
+    pub awq_scales: HashMap<MatrixId, Vec<f32>>,
+    pub method_name: String,
+}
+
+/// Aggregated size accounting over all quantized matrices.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ModelSizeReport {
+    pub quantized_params: usize,
+    pub container_bytes: usize,
+    pub paper_equivalent_bits: f64,
+    pub container_bits_per_param: f64,
+    pub total_outliers: usize,
+}
+
+impl QuantizedModel {
+    /// Materialize a dense model with quantized weights dequantized.
+    pub fn to_dense(&self) -> Model {
+        let mut m = self.base.clone();
+        for (&id, qm) in &self.matrices {
+            let mut deq = qm.dequantize();
+            if let Some(scales) = self.awq_scales.get(&id) {
+                for r in 0..deq.rows {
+                    let row = deq.row_mut(r);
+                    for (v, &s) in row.iter_mut().zip(scales) {
+                        *v /= s;
+                    }
+                }
+            }
+            *m.matrix_mut(id) = deq;
+        }
+        m
+    }
+
+    /// Pack every matrix and aggregate size accounting.
+    pub fn size_report(&self) -> ModelSizeReport {
+        let mut rep = ModelSizeReport::default();
+        let mut weighted_bits = 0.0f64;
+        for qm in self.matrices.values() {
+            let (_, r) = pack(qm);
+            rep.quantized_params += r.params;
+            rep.container_bytes += r.container_bytes();
+            weighted_bits += r.paper_equivalent_bits * r.params as f64;
+            rep.total_outliers += qm.outliers.len();
+        }
+        if rep.quantized_params > 0 {
+            rep.paper_equivalent_bits = weighted_bits / rep.quantized_params as f64;
+            rep.container_bits_per_param =
+                rep.container_bytes as f64 * 8.0 / rep.quantized_params as f64;
+        }
+        rep
+    }
+
+    /// Serialize all packed matrices into one directory (one file per
+    /// matrix), plus the FP parts as a weights file.
+    pub fn save_dir(&self, dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (&id, qm) in &self.matrices {
+            let (pm, _) = pack(qm);
+            crate::quant::packed::save(&pm, &dir.join(format!("{}.claq", id.name())))?;
+        }
+        super::io::save_model(&self.base, &dir.join("fp_parts.bin"))?;
+        Ok(())
+    }
+
+    /// Mean relative Frobenius error across quantized matrices (diagnostic).
+    pub fn mean_rel_err(&self) -> f64 {
+        if self.matrices.is_empty() {
+            return 0.0;
+        }
+        self.matrices.values().map(|q| q.metrics.rel_frobenius_err).sum::<f64>()
+            / self.matrices.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TransformerConfig;
+    use crate::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
+    use crate::util::rng::Rng;
+
+    fn quantize_all(model: &Model, bits: u8) -> QuantizedModel {
+        let mut matrices = HashMap::new();
+        for id in model.matrix_ids() {
+            let w = model.matrix(id);
+            let plan = MatrixPlan::uniform(w.cols, bits, CentroidRule::KMeans, false);
+            matrices.insert(id, quantize_matrix(w, None, &plan));
+        }
+        QuantizedModel {
+            base: model.clone(),
+            matrices,
+            awq_scales: HashMap::new(),
+            method_name: format!("test-{bits}b"),
+        }
+    }
+
+    fn small() -> Model {
+        let cfg = TransformerConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+            rope_theta: 10000.0,
+            eps: 1e-5,
+        };
+        Model::random(cfg, &mut Rng::new(3))
+    }
+
+    #[test]
+    fn dense_reconstruction_close_at_8bit() {
+        let m = small();
+        let qm = quantize_all(&m, 8);
+        let dense = qm.to_dense();
+        for id in m.matrix_ids() {
+            let a = m.matrix(id);
+            let b = dense.matrix(id);
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for (x, y) in a.data.iter().zip(&b.data) {
+                num += ((x - y) as f64).powi(2);
+                den += (*x as f64).powi(2);
+            }
+            assert!((num / den).sqrt() < 0.01, "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn size_report_scales_with_bits() {
+        let m = small();
+        let r2 = quantize_all(&m, 2).size_report();
+        let r4 = quantize_all(&m, 4).size_report();
+        assert_eq!(r2.quantized_params, m.quantizable_params());
+        assert!((r2.paper_equivalent_bits - 2.0).abs() < 1e-9);
+        assert!((r4.paper_equivalent_bits - 4.0).abs() < 1e-9);
+        assert!(r4.container_bytes > r2.container_bytes);
+    }
+
+    #[test]
+    fn save_dir_writes_files() {
+        let m = small();
+        let qm = quantize_all(&m, 3);
+        let dir = std::env::temp_dir().join("claq_qmodel_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        qm.save_dir(&dir).unwrap();
+        let n = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(n, m.matrix_ids().len() + 1); // matrices + fp_parts.bin
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

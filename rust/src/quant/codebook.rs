@@ -1,0 +1,180 @@
+//! Quantization codebooks: a sorted list of centroids plus nearest-centroid
+//! encode / table decode (paper Eq. 2). Shared by the K-Means (CLAQ) and
+//! uniform (RTN/GPTQ-baseline) quantizers.
+
+/// A per-column quantization codebook. Centroids are stored ascending so
+/// nearest-centroid assignment is a binary search over midpoints.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codebook {
+    pub centroids: Vec<f32>,
+}
+
+impl Codebook {
+    /// Build from centroids; sorts them ascending.
+    pub fn new(mut centroids: Vec<f32>) -> Self {
+        assert!(!centroids.is_empty());
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { centroids }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.centroids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.centroids.is_empty()
+    }
+
+    /// Bits needed to index this codebook.
+    pub fn bits(&self) -> u32 {
+        (usize::BITS - (self.len() - 1).leading_zeros()).max(1)
+    }
+
+    /// Nearest-centroid index (argmin |c_q − x|, Eq. 2). Ties break toward
+    /// the lower index.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u8 {
+        let c = &self.centroids;
+        // binary search for insertion point
+        let mut lo = 0usize;
+        let mut hi = c.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if c[mid] < x {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        // candidates: lo-1 and lo
+        if lo == 0 {
+            return 0;
+        }
+        if lo >= c.len() {
+            return (c.len() - 1) as u8;
+        }
+        let d_lo = (x - c[lo - 1]).abs();
+        let d_hi = (c[lo] - x).abs();
+        if d_lo <= d_hi {
+            (lo - 1) as u8
+        } else {
+            lo as u8
+        }
+    }
+
+    #[inline]
+    pub fn dequantize(&self, idx: u8) -> f32 {
+        self.centroids[idx as usize]
+    }
+
+    /// Encode a whole column.
+    pub fn quantize_slice(&self, xs: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.extend(xs.iter().map(|&x| self.quantize(x)));
+    }
+
+    /// Decode a whole column.
+    pub fn dequantize_slice(&self, idx: &[u8], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(idx.iter().map(|&i| self.dequantize(i)));
+    }
+}
+
+/// Uniform min–max codebook over `values` with `k` levels — the RTN /
+/// GPTQ-baseline centroid rule (equally spaced levels, the paper's "prior
+/// techniques adopt uniform quantization levels").
+pub fn uniform_codebook(values: &[f32], k: usize) -> Codebook {
+    assert!(k >= 1);
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || !hi.is_finite() || lo == hi {
+        let c = if lo.is_finite() { lo } else { 0.0 };
+        return Codebook::new(vec![c; k]);
+    }
+    let step = (hi - lo) / (k - 1).max(1) as f32;
+    Codebook::new((0..k).map(|i| lo + step * i as f32).collect())
+}
+
+/// Symmetric uniform codebook (zero-centered, like absmax int quant).
+/// Used by the AWQ baseline after scaling.
+pub fn symmetric_codebook(values: &[f32], k: usize) -> Codebook {
+    assert!(k >= 2);
+    let absmax = values.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    if absmax == 0.0 {
+        return Codebook::new(vec![0.0; k]);
+    }
+    let half = (k / 2) as f32;
+    let step = absmax / half;
+    // levels: -half..half-1 scaled (k levels), includes 0
+    Codebook::new((0..k).map(|i| (i as f32 - half) * step).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_picks_nearest() {
+        let cb = Codebook::new(vec![0.0, 1.0, 10.0]);
+        assert_eq!(cb.quantize(-5.0), 0);
+        assert_eq!(cb.quantize(0.4), 0);
+        assert_eq!(cb.quantize(0.6), 1);
+        assert_eq!(cb.quantize(5.6), 2);
+        assert_eq!(cb.quantize(100.0), 2);
+    }
+
+    #[test]
+    fn tie_breaks_low() {
+        let cb = Codebook::new(vec![0.0, 2.0]);
+        assert_eq!(cb.quantize(1.0), 0);
+    }
+
+    #[test]
+    fn new_sorts() {
+        let cb = Codebook::new(vec![3.0, -1.0, 2.0]);
+        assert_eq!(cb.centroids, vec![-1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn bits_accounting() {
+        assert_eq!(Codebook::new(vec![0.0; 2]).bits(), 1);
+        assert_eq!(Codebook::new(vec![0.0; 4]).bits(), 2);
+        assert_eq!(Codebook::new(vec![0.0; 8]).bits(), 3);
+        assert_eq!(Codebook::new(vec![0.0; 16]).bits(), 4);
+    }
+
+    #[test]
+    fn uniform_covers_range() {
+        let vals = [-2.0f32, 0.0, 6.0];
+        let cb = uniform_codebook(&vals, 4);
+        assert_eq!(cb.centroids[0], -2.0);
+        assert_eq!(*cb.centroids.last().unwrap(), 6.0);
+    }
+
+    #[test]
+    fn uniform_constant_input() {
+        let cb = uniform_codebook(&[3.0; 5], 4);
+        assert!(cb.centroids.iter().all(|&c| c == 3.0));
+    }
+
+    #[test]
+    fn symmetric_contains_zero() {
+        let cb = symmetric_codebook(&[-1.0, 2.0], 4);
+        assert!(cb.centroids.iter().any(|&c| c == 0.0));
+    }
+
+    #[test]
+    fn slice_round_trip() {
+        let cb = Codebook::new(vec![-1.0, 0.0, 1.0, 2.0]);
+        let xs = [-0.9f32, 0.1, 1.4, 5.0];
+        let mut idx = Vec::new();
+        cb.quantize_slice(&xs, &mut idx);
+        let mut deq = Vec::new();
+        cb.dequantize_slice(&idx, &mut deq);
+        assert_eq!(deq, vec![-1.0, 0.0, 1.0, 2.0]);
+    }
+}

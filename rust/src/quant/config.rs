@@ -1,0 +1,272 @@
+//! Method / configuration surface: every quantization scheme evaluated in
+//! the paper expressed as a [`Method`], plus the Appendix F fusion presets
+//! (CLAQ* 2.12 / 2.24 / 3.12 / 3.23).
+
+use crate::quant::gptq::{CentroidRule, MatrixPlan};
+use crate::quant::outliers::{ColumnMetric, OutlierStats};
+use crate::quant::precision::{allocate_ap, BitPair, BitPlan};
+use crate::quant::reservation::{allocate_fixed, allocate_or, OrSetting, ReservePlan};
+use crate::tensor::Matrix;
+
+/// Default outlier standard (Appendix B: S = 13 in all main experiments).
+pub const DEFAULT_S: f64 = 13.0;
+
+/// A quantization method with its hyper-parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    /// No quantization (the FP16 rows of every table).
+    Fp16,
+    /// Round-to-nearest uniform, no error compensation.
+    Rtn { bits: u8 },
+    /// GPTQ: uniform codebooks + OBS error compensation.
+    Gptq { bits: u8 },
+    /// Simplified AWQ: activation-aware scaling + uniform RTN.
+    Awq { bits: u8 },
+    /// CLAQ single precision: K-Means codebooks + error compensation (§3.1).
+    Claq { bits: u8 },
+    /// CLAQ + column-level Adaptive Precision (§3.3).
+    ClaqAp {
+        pair: BitPair,
+        target_bits: f64,
+        metric: ColumnMetric,
+        s: f64,
+    },
+    /// CLAQ + column-level adaptive Outlier Reservation (§3.4).
+    ClaqOr {
+        bits: u8,
+        budget_bits: f64,
+        setting: OrSetting,
+        s: f64,
+    },
+    /// CLAQ + *fixed* (uniform-per-column) outlier reservation — the
+    /// "Outlier fix" baseline of Table 4.
+    ClaqOrFixed { bits: u8, budget_bits: f64 },
+    /// Fusion CLAQ*: AP + OR together (the paper's best low-bit results).
+    ClaqFusion {
+        pair: BitPair,
+        ap_target_bits: f64,
+        or_budget_bits: f64,
+        setting: OrSetting,
+        s: f64,
+    },
+}
+
+impl Method {
+    /// Appendix F preset: CLAQ* 2.12 — 2&4 AP with +0.05 bits, +0.07 bits
+    /// of FP16 outliers (Setting 2), S = 13.
+    pub fn fusion_2_12() -> Method {
+        Method::ClaqFusion {
+            pair: BitPair::new(4, 2),
+            ap_target_bits: 2.05,
+            or_budget_bits: 0.07,
+            setting: OrSetting::SETTING2,
+            s: DEFAULT_S,
+        }
+    }
+
+    /// Appendix F preset: CLAQ* 2.24 — +0.1 AP bits, +0.13 outlier bits.
+    pub fn fusion_2_24() -> Method {
+        Method::ClaqFusion {
+            pair: BitPair::new(4, 2),
+            ap_target_bits: 2.1,
+            or_budget_bits: 0.13,
+            setting: OrSetting::SETTING2,
+            s: DEFAULT_S,
+        }
+    }
+
+    /// Appendix F preset: CLAQ* 3.12 (base 3, 3&4 AP).
+    pub fn fusion_3_12() -> Method {
+        Method::ClaqFusion {
+            pair: BitPair::new(4, 3),
+            ap_target_bits: 3.05,
+            or_budget_bits: 0.07,
+            setting: OrSetting::SETTING2,
+            s: DEFAULT_S,
+        }
+    }
+
+    /// Appendix F preset: CLAQ* 3.23.
+    pub fn fusion_3_23() -> Method {
+        Method::ClaqFusion {
+            pair: BitPair::new(4, 3),
+            ap_target_bits: 3.1,
+            or_budget_bits: 0.13,
+            setting: OrSetting::SETTING2,
+            s: DEFAULT_S,
+        }
+    }
+
+    /// Short display name used in table rows.
+    pub fn name(&self) -> String {
+        match self {
+            Method::Fp16 => "FP16".into(),
+            Method::Rtn { bits } => format!("RTN-{bits}"),
+            Method::Gptq { bits } => format!("GPTQ-{bits}"),
+            Method::Awq { bits } => format!("AWQ-{bits}"),
+            Method::Claq { bits } => format!("CLAQ-{bits}"),
+            Method::ClaqAp { target_bits, metric, .. } => {
+                let m = match metric {
+                    ColumnMetric::OutlierRatio => "AP",
+                    ColumnMetric::Magnitude => "MP(mag)",
+                    ColumnMetric::Salience => "MP(sal)",
+                };
+                format!("CLAQ+{m}-{target_bits:.2}")
+            }
+            Method::ClaqOr { bits, budget_bits, .. } => {
+                format!("CLAQ+OR-{:.2}", *bits as f64 + budget_bits)
+            }
+            Method::ClaqOrFixed { bits, budget_bits } => {
+                format!("CLAQ+OutlierFix-{:.2}", *bits as f64 + budget_bits)
+            }
+            Method::ClaqFusion { ap_target_bits, or_budget_bits, .. } => {
+                format!("CLAQ*-{:.2}", ap_target_bits + or_budget_bits)
+            }
+        }
+    }
+
+    /// Nominal equivalent bits per parameter under paper accounting (16 for
+    /// FP16 rows).
+    pub fn nominal_bits(&self) -> f64 {
+        match self {
+            Method::Fp16 => 16.0,
+            Method::Rtn { bits } | Method::Gptq { bits } | Method::Awq { bits } | Method::Claq { bits } => {
+                *bits as f64
+            }
+            Method::ClaqAp { target_bits, .. } => *target_bits,
+            Method::ClaqOr { bits, budget_bits, .. } | Method::ClaqOrFixed { bits, budget_bits } => {
+                *bits as f64 + budget_bits
+            }
+            Method::ClaqFusion { ap_target_bits, or_budget_bits, .. } => {
+                ap_target_bits + or_budget_bits
+            }
+        }
+    }
+
+    /// Does this method need the calibration Hessian?
+    pub fn needs_hessian(&self) -> bool {
+        !matches!(self, Method::Fp16 | Method::Rtn { .. })
+    }
+
+    /// Build the per-matrix quantization plan. `hess_diag` feeds the
+    /// salience comparator metric when present.
+    pub fn plan_for(&self, w: &Matrix, hess_diag: Option<&[f64]>) -> Option<MatrixPlan> {
+        let cols = w.cols;
+        match self {
+            Method::Fp16 => None,
+            Method::Awq { .. } => None, // AWQ has its own path (quant/awq.rs)
+            Method::Rtn { bits } => {
+                Some(MatrixPlan::uniform(cols, *bits, CentroidRule::UniformMinMax, false))
+            }
+            Method::Gptq { bits } => {
+                Some(MatrixPlan::uniform(cols, *bits, CentroidRule::UniformMinMax, true))
+            }
+            Method::Claq { bits } => {
+                Some(MatrixPlan::uniform(cols, *bits, CentroidRule::KMeans, true))
+            }
+            Method::ClaqAp { pair, target_bits, metric, s } => {
+                let scores = crate::quant::outliers::column_scores(w, *metric, *s, hess_diag);
+                let bitplan = allocate_ap(&scores, *pair, *target_bits);
+                Some(MatrixPlan {
+                    bits: bitplan.bits,
+                    reserve: Vec::new(),
+                    rule: CentroidRule::KMeans,
+                    propagate: true,
+                    damp_pct: 0.01,
+                })
+            }
+            Method::ClaqOr { bits, budget_bits, setting, s } => {
+                let stats = OutlierStats::compute(w, *s);
+                let rp = allocate_or(&stats, w.rows, *budget_bits, *setting);
+                Some(plan_with_reserve(BitPlan::uniform(cols, *bits), rp))
+            }
+            Method::ClaqOrFixed { bits, budget_bits } => {
+                let rp = allocate_fixed(w.rows, cols, *budget_bits);
+                Some(plan_with_reserve(BitPlan::uniform(cols, *bits), rp))
+            }
+            Method::ClaqFusion { pair, ap_target_bits, or_budget_bits, setting, s } => {
+                let stats = OutlierStats::compute(w, *s);
+                let bitplan = allocate_ap(&stats.ratios, *pair, *ap_target_bits);
+                let rp = allocate_or(&stats, w.rows, *or_budget_bits, *setting);
+                Some(plan_with_reserve(bitplan, rp))
+            }
+        }
+    }
+}
+
+fn plan_with_reserve(bits: BitPlan, reserve: ReservePlan) -> MatrixPlan {
+    MatrixPlan {
+        bits: bits.bits,
+        reserve: reserve.counts,
+        rule: CentroidRule::KMeans,
+        propagate: true,
+        damp_pct: 0.01,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_w() -> Matrix {
+        let mut rng = Rng::new(42);
+        let mut w = Matrix::zeros(64, 40);
+        rng.fill_normal(&mut w.data, 0.02);
+        for r in 0..10 {
+            *w.at_mut(r, 3) = 0.8; // outlier column
+        }
+        w
+    }
+
+    #[test]
+    fn preset_budgets() {
+        assert!((Method::fusion_2_12().nominal_bits() - 2.12).abs() < 1e-9);
+        assert!((Method::fusion_2_24().nominal_bits() - 2.23).abs() < 0.011);
+        assert!((Method::fusion_3_12().nominal_bits() - 3.12).abs() < 1e-9);
+        assert!((Method::fusion_3_23().nominal_bits() - 3.23).abs() < 0.011);
+    }
+
+    #[test]
+    fn plans_produced_for_each_method() {
+        let w = sample_w();
+        for m in [
+            Method::Rtn { bits: 4 },
+            Method::Gptq { bits: 3 },
+            Method::Claq { bits: 2 },
+            Method::fusion_2_12(),
+            Method::ClaqOr { bits: 2, budget_bits: 0.14, setting: OrSetting::SETTING2, s: 3.0 },
+            Method::ClaqOrFixed { bits: 2, budget_bits: 0.14 },
+        ] {
+            let plan = m.plan_for(&w, None).expect("plan");
+            assert_eq!(plan.bits.len(), w.cols);
+        }
+        assert!(Method::Fp16.plan_for(&w, None).is_none());
+    }
+
+    #[test]
+    fn fusion_plan_promotes_outlier_column() {
+        let w = sample_w();
+        let plan = Method::fusion_2_12().plan_for(&w, None).unwrap();
+        // with a single strongly-spiked column and +0.05 AP bits over 40
+        // cols, exactly 1 column is promoted to 4 bits: column 3
+        assert_eq!(plan.bits[3], 4);
+        assert_eq!(plan.bits.iter().filter(|&&b| b == 4).count(), 1);
+        // and OR grants it the largest reservation
+        let max = plan.reserve.iter().max().unwrap();
+        assert_eq!(plan.reserve[3], *max);
+    }
+
+    #[test]
+    fn names_stable() {
+        assert_eq!(Method::Rtn { bits: 4 }.name(), "RTN-4");
+        assert_eq!(Method::fusion_2_12().name(), "CLAQ*-2.12");
+    }
+
+    #[test]
+    fn hessian_requirement() {
+        assert!(!Method::Fp16.needs_hessian());
+        assert!(!Method::Rtn { bits: 4 }.needs_hessian());
+        assert!(Method::Claq { bits: 2 }.needs_hessian());
+    }
+}

@@ -1,0 +1,462 @@
+//! The GPTQ-style per-column quantization engine — the substrate the paper
+//! builds on ("our experiments were built upon the GPTQ framework"), made
+//! general enough to express every method in the evaluation:
+//!
+//! * **RTN**      = no error propagation + uniform codebooks
+//! * **GPTQ**     = error propagation + uniform codebooks
+//! * **CLAQ**     = error propagation + K-Means codebooks (§3.1)
+//! * **CLAQ+AP**  = per-column bit widths from `precision.rs` (§3.3)
+//! * **CLAQ+OR**  = per-column FP16 reservations from `reservation.rs` (§3.4)
+//!
+//! Error compensation follows Frantar et al.: with H = 2·E[x xᵀ] the
+//! layer-local Hessian, let U be the upper Cholesky factor of H⁻¹
+//! (H⁻¹ = Uᵀ·U). Quantizing column j to q introduces residual
+//! e = (w_j − q)/U[j,j]; every not-yet-quantized column k > j is updated by
+//! w_k −= e · U[j,k], which is optimal in the OBS sense.
+
+use crate::quant::codebook::{uniform_codebook, Codebook};
+use crate::quant::kmeans::{kmeans_1d, KMeansOpts};
+use crate::quant::reservation::pick_reserved_rows;
+use crate::tensor::linalg::{dampen, gptq_inverse_factor};
+use crate::tensor::Matrix;
+
+/// How codebook centroids are chosen per column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CentroidRule {
+    /// §3.1 K-Means clustering (CLAQ).
+    KMeans,
+    /// Min–max uniform levels (RTN / GPTQ baselines).
+    UniformMinMax,
+}
+
+/// Full quantization plan for one weight matrix (rows × cols, columns are
+/// the quantization groups — for a Linear stored (out × in) each group is
+/// an input feature, matching GPTQ's traversal).
+#[derive(Clone, Debug)]
+pub struct MatrixPlan {
+    /// Index bits per column (from `BitPlan`).
+    pub bits: Vec<u8>,
+    /// FP16-reserved entries per column (from `ReservePlan`); may be empty
+    /// meaning "no reservation anywhere".
+    pub reserve: Vec<usize>,
+    pub rule: CentroidRule,
+    /// GPTQ error compensation on/off (RTN = off).
+    pub propagate: bool,
+    /// Hessian dampening (GPTQ default 0.01).
+    pub damp_pct: f64,
+}
+
+impl MatrixPlan {
+    pub fn uniform(cols: usize, bits: u8, rule: CentroidRule, propagate: bool) -> Self {
+        Self {
+            bits: vec![bits; cols],
+            reserve: Vec::new(),
+            rule,
+            propagate,
+            damp_pct: 0.01,
+        }
+    }
+
+    fn reserve_at(&self, col: usize) -> usize {
+        self.reserve.get(col).copied().unwrap_or(0)
+    }
+}
+
+/// One quantized column: codebook + per-row indices.
+#[derive(Clone, Debug)]
+pub struct QuantizedColumn {
+    pub codebook: Codebook,
+    pub indices: Vec<u8>,
+    pub bits: u8,
+}
+
+/// A reserved full-precision entry.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Outlier {
+    pub row: u32,
+    pub col: u32,
+    pub value: f32,
+}
+
+/// Quality metrics of one matrix quantization.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QuantMetrics {
+    /// ‖W − Ŵ‖_F relative to ‖W‖_F.
+    pub rel_frobenius_err: f64,
+    /// GPTQ proxy loss Σ_j ‖e_j‖² (scaled residuals) when propagating.
+    pub proxy_loss: f64,
+}
+
+/// The quantized representation of one matrix.
+#[derive(Clone, Debug)]
+pub struct QuantizedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub columns: Vec<QuantizedColumn>,
+    /// Sorted by (col, row).
+    pub outliers: Vec<Outlier>,
+    pub metrics: QuantMetrics,
+}
+
+impl QuantizedMatrix {
+    /// Reconstruct the dense matrix (codebook decode + outlier overwrite).
+    pub fn dequantize(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for (c, qc) in self.columns.iter().enumerate() {
+            for r in 0..self.rows {
+                m.data[r * self.cols + c] = qc.codebook.dequantize(qc.indices[r]);
+            }
+        }
+        for o in &self.outliers {
+            m.data[o.row as usize * self.cols + o.col as usize] = o.value;
+        }
+        m
+    }
+
+    /// Average index bits per parameter (excludes codebook + outlier cost;
+    /// see `packed.rs` for full accounting).
+    pub fn index_bits_per_param(&self) -> f64 {
+        let total: f64 = self.columns.iter().map(|c| c.bits as f64 * self.rows as f64).sum();
+        total / (self.rows * self.cols) as f64
+    }
+
+    /// Paper-accounting equivalent bits: index bits + 16 bits per reserved
+    /// outlier, amortized per parameter.
+    pub fn equivalent_bits_paper(&self) -> f64 {
+        self.index_bits_per_param()
+            + self.outliers.len() as f64 * 16.0 / (self.rows * self.cols) as f64
+    }
+}
+
+/// Quantize `w` under `plan`, optionally compensating error through the
+/// calibration Hessian `h` (cols × cols, row-major f64). Returns the packed
+/// representation; `w` itself is not modified.
+pub fn quantize_matrix(w: &Matrix, h: Option<&[f64]>, plan: &MatrixPlan) -> QuantizedMatrix {
+    let (rows, cols) = (w.rows, w.cols);
+    assert_eq!(plan.bits.len(), cols, "plan/matrix column mismatch");
+
+    // Inverse-Hessian Cholesky factor for propagation.
+    let u = if plan.propagate {
+        let mut hd = match h {
+            Some(h) => {
+                assert_eq!(h.len(), cols * cols);
+                h.to_vec()
+            }
+            // No calibration data: identity Hessian makes propagation a
+            // no-op but keeps the code path uniform.
+            None => {
+                let mut id = vec![0.0f64; cols * cols];
+                for i in 0..cols {
+                    id[i * cols + i] = 1.0;
+                }
+                id
+            }
+        };
+        dampen(&mut hd, cols, plan.damp_pct);
+        // Increase dampening until the factorization succeeds (rank-deficient
+        // calibration sets at small sample counts).
+        let mut pct = plan.damp_pct;
+        loop {
+            match gptq_inverse_factor(&hd, cols) {
+                Some(u) => break Some(u),
+                None => {
+                    pct *= 10.0;
+                    assert!(pct < 1e6, "Hessian cannot be stabilized");
+                    dampen(&mut hd, cols, pct);
+                }
+            }
+        }
+    } else {
+        None
+    };
+
+    let mut work = w.clone(); // updated in place by propagation
+    let mut columns: Vec<QuantizedColumn> = Vec::with_capacity(cols);
+    let mut outliers: Vec<Outlier> = Vec::new();
+    let mut proxy_loss = 0.0f64;
+    let mut col_buf: Vec<f32> = vec![0.0; rows];
+    let mut err: Vec<f32> = vec![0.0; rows];
+    let kopts = KMeansOpts::default();
+
+    for j in 0..cols {
+        // Extract the current (already-updated) column.
+        for r in 0..rows {
+            col_buf[r] = work.data[r * cols + j];
+        }
+
+        // Outlier reservation: pick rows kept in FP16 for this column.
+        let n_reserve = plan.reserve_at(j);
+        let reserved = pick_reserved_rows(&col_buf, n_reserve);
+        let mut is_reserved = vec![false; rows];
+        for &r in &reserved {
+            is_reserved[r] = true;
+            outliers.push(Outlier { row: r as u32, col: j as u32, value: col_buf[r] });
+        }
+
+        // Codebook over the non-reserved entries.
+        let clusterable: Vec<f32> = if reserved.is_empty() {
+            col_buf.clone()
+        } else {
+            col_buf
+                .iter()
+                .enumerate()
+                .filter(|(r, _)| !is_reserved[*r])
+                .map(|(_, &v)| v)
+                .collect()
+        };
+        let k = 1usize << plan.bits[j];
+        let codebook = match plan.rule {
+            CentroidRule::KMeans => kmeans_1d(&clusterable, k, &kopts).codebook,
+            CentroidRule::UniformMinMax => uniform_codebook(&clusterable, k),
+        };
+
+        // Quantize + error.
+        let mut indices = vec![0u8; rows];
+        for r in 0..rows {
+            if is_reserved[r] {
+                err[r] = 0.0; // reserved entries are exact
+                continue;
+            }
+            let q = codebook.quantize(col_buf[r]);
+            indices[r] = q;
+            err[r] = col_buf[r] - codebook.dequantize(q);
+        }
+
+        // OBS update of the not-yet-quantized columns.
+        if let Some(u) = &u {
+            let ujj = u[j * cols + j];
+            debug_assert!(ujj > 0.0);
+            let inv = 1.0 / ujj;
+            let mut e2 = 0.0f64;
+            for r in 0..rows {
+                let e = err[r] as f64 * inv;
+                e2 += e * e;
+                if e != 0.0 {
+                    let row = &mut work.data[r * cols..(r + 1) * cols];
+                    for kcol in (j + 1)..cols {
+                        row[kcol] -= (e * u[j * cols + kcol]) as f32;
+                    }
+                }
+            }
+            proxy_loss += e2;
+        }
+
+        columns.push(QuantizedColumn { codebook, indices, bits: plan.bits[j] });
+    }
+
+    outliers.sort_by_key(|o| (o.col, o.row));
+
+    let mut qm = QuantizedMatrix { rows, cols, columns, outliers, metrics: QuantMetrics::default() };
+    let deq = qm.dequantize();
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in w.data.iter().zip(&deq.data) {
+        let d = (*a - *b) as f64;
+        num += d * d;
+        den += (*a as f64) * (*a as f64);
+    }
+    qm.metrics = QuantMetrics {
+        rel_frobenius_err: if den > 0.0 { (num / den).sqrt() } else { 0.0 },
+        proxy_loss,
+    };
+    qm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg::gram;
+    use crate::util::proptest::{check_default, gen_column};
+    use crate::util::rng::Rng;
+
+    fn random_w(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(rows, cols);
+        for c in 0..cols {
+            let col = gen_column(&mut rng, rows, 0.01);
+            w.set_col(c, &col);
+        }
+        w
+    }
+
+    fn random_h(cols: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(cols * 3, cols);
+        rng.fill_normal(&mut x.data, 1.0);
+        let mut h = gram(&x, 0.0);
+        for v in h.iter_mut() {
+            *v *= 2.0;
+        }
+        h
+    }
+
+    #[test]
+    fn dequantize_shape_and_range() {
+        let w = random_w(32, 16, 1);
+        let plan = MatrixPlan::uniform(16, 4, CentroidRule::KMeans, false);
+        let q = quantize_matrix(&w, None, &plan);
+        let d = q.dequantize();
+        assert_eq!((d.rows, d.cols), (32, 16));
+        // every dequantized value must be a centroid of its column codebook
+        for c in 0..16 {
+            let cb = &q.columns[c].codebook;
+            for r in 0..32 {
+                assert!(cb.centroids.contains(&d.at(r, c)));
+            }
+        }
+    }
+
+    #[test]
+    fn high_bits_low_error() {
+        let w = random_w(64, 24, 2);
+        for rule in [CentroidRule::KMeans, CentroidRule::UniformMinMax] {
+            let e2 = quantize_matrix(&w, None, &MatrixPlan::uniform(24, 2, rule, false))
+                .metrics
+                .rel_frobenius_err;
+            let e4 = quantize_matrix(&w, None, &MatrixPlan::uniform(24, 4, rule, false))
+                .metrics
+                .rel_frobenius_err;
+            assert!(e4 < e2, "{rule:?}: 4-bit {e4} !< 2-bit {e2}");
+        }
+    }
+
+    #[test]
+    fn kmeans_beats_uniform_weight_error() {
+        let w = random_w(256, 16, 3);
+        let km = quantize_matrix(&w, None, &MatrixPlan::uniform(16, 3, CentroidRule::KMeans, false));
+        let un =
+            quantize_matrix(&w, None, &MatrixPlan::uniform(16, 3, CentroidRule::UniformMinMax, false));
+        assert!(
+            km.metrics.rel_frobenius_err < un.metrics.rel_frobenius_err,
+            "kmeans {} !< uniform {}",
+            km.metrics.rel_frobenius_err,
+            un.metrics.rel_frobenius_err
+        );
+    }
+
+    /// The defining GPTQ property: propagation reduces *layer output* error
+    /// E‖x·(W−Ŵ)ᵀ‖² (not necessarily the weight error itself).
+    #[test]
+    fn propagation_reduces_output_error() {
+        let rows = 48;
+        let cols = 32;
+        let w = random_w(rows, cols, 4);
+        let mut rng = Rng::new(5);
+        let mut x = Matrix::zeros(200, cols);
+        rng.fill_normal(&mut x.data, 1.0);
+        let mut h = gram(&x, 0.0);
+        for v in h.iter_mut() {
+            *v *= 2.0;
+        }
+
+        let out_err = |q: &QuantizedMatrix| -> f64 {
+            let dw = q.dequantize();
+            let mut diff = w.clone();
+            diff.axpy(-1.0, &dw);
+            // E ||x (W-What)^T||^2 = tr((W-What) G (W-What)^T), G = X^T X / m
+            let g = gram(&x, 0.0);
+            let mut total = 0.0f64;
+            for r in 0..rows {
+                let row = diff.row(r);
+                for i in 0..cols {
+                    let di = row[i] as f64;
+                    if di == 0.0 {
+                        continue;
+                    }
+                    for j in 0..cols {
+                        total += di * g[i * cols + j] * row[j] as f64;
+                    }
+                }
+            }
+            total
+        };
+
+        for rule in [CentroidRule::KMeans, CentroidRule::UniformMinMax] {
+            let no_prop = quantize_matrix(&w, None, &MatrixPlan::uniform(cols, 2, rule, false));
+            let with_prop = quantize_matrix(&w, Some(&h), &MatrixPlan::uniform(cols, 2, rule, true));
+            let (e0, e1) = (out_err(&no_prop), out_err(&with_prop));
+            assert!(
+                e1 < e0,
+                "{rule:?}: propagation should reduce output error ({e1} !< {e0})"
+            );
+        }
+    }
+
+    #[test]
+    fn reserved_outliers_are_exact() {
+        let w = random_w(64, 8, 6);
+        let mut plan = MatrixPlan::uniform(8, 2, CentroidRule::KMeans, false);
+        plan.reserve = vec![4; 8];
+        let q = quantize_matrix(&w, None, &plan);
+        assert_eq!(q.outliers.len(), 4 * 8);
+        let d = q.dequantize();
+        for o in &q.outliers {
+            assert_eq!(d.at(o.row as usize, o.col as usize), o.value);
+            // without propagation, the reserved value equals the original
+            assert_eq!(o.value, w.at(o.row as usize, o.col as usize));
+        }
+    }
+
+    #[test]
+    fn reservation_lowers_error() {
+        let w = random_w(128, 16, 7);
+        let base = quantize_matrix(&w, None, &MatrixPlan::uniform(16, 2, CentroidRule::KMeans, false));
+        let mut plan = MatrixPlan::uniform(16, 2, CentroidRule::KMeans, false);
+        plan.reserve = vec![8; 16];
+        let with_or = quantize_matrix(&w, None, &plan);
+        assert!(with_or.metrics.rel_frobenius_err < base.metrics.rel_frobenius_err);
+    }
+
+    #[test]
+    fn mixed_bits_respected() {
+        let w = random_w(32, 4, 8);
+        let plan = MatrixPlan {
+            bits: vec![4, 2, 2, 3],
+            reserve: Vec::new(),
+            rule: CentroidRule::KMeans,
+            propagate: false,
+            damp_pct: 0.01,
+        };
+        let q = quantize_matrix(&w, None, &plan);
+        assert_eq!(q.columns[0].codebook.len(), 16);
+        assert_eq!(q.columns[1].codebook.len(), 4);
+        assert_eq!(q.columns[3].codebook.len(), 8);
+        assert!((q.index_bits_per_param() - 11.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equivalent_bits_accounting() {
+        let w = random_w(100, 10, 9);
+        let mut plan = MatrixPlan::uniform(10, 2, CentroidRule::KMeans, false);
+        plan.reserve = vec![2; 10]; // 20 outliers over 1000 params
+        let q = quantize_matrix(&w, None, &plan);
+        let expect = 2.0 + 20.0 * 16.0 / 1000.0;
+        assert!((q.equivalent_bits_paper() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identity_hessian_propagation_matches_no_propagation_weights() {
+        // With H = I the OBS update still fires but off-diagonal U is 0, so
+        // dequantized weights match the non-propagating path.
+        let w = random_w(16, 8, 10);
+        let a = quantize_matrix(&w, None, &MatrixPlan::uniform(8, 3, CentroidRule::KMeans, false));
+        let plan_p = MatrixPlan { propagate: true, ..MatrixPlan::uniform(8, 3, CentroidRule::KMeans, false) };
+        let b = quantize_matrix(&w, None, &plan_p); // None -> identity H (dampened)
+        let (da, db) = (a.dequantize(), b.dequantize());
+        for (x, y) in da.data.iter().zip(&db.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn quantized_matrix_deterministic() {
+        check_default("gptq deterministic", |rng| {
+            let w = random_w(24, 12, rng.next_u64());
+            let h = random_h(12, rng.next_u64());
+            let plan = MatrixPlan::uniform(12, 2, CentroidRule::KMeans, true);
+            let a = quantize_matrix(&w, Some(&h), &plan);
+            let b = quantize_matrix(&w, Some(&h), &plan);
+            assert_eq!(a.dequantize().data, b.dequantize().data);
+        });
+    }
+}

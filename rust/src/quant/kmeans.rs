@@ -1,0 +1,315 @@
+//! 1-D K-Means clustering — the paper's §3.1 centroid generator.
+//!
+//! The clustering samples are the entries of one weight-matrix column; the
+//! `2^bits` cluster centroids become that column's quantization codebook
+//! (paper Eq. 1–2). The paper calls into scikit-learn-intelex; this is a
+//! from-scratch implementation: k-means++ seeding followed by Lloyd
+//! iterations, specialized for 1-D where sorting the inputs makes each
+//! Lloyd step a linear merge instead of an O(n·k) nearest-centroid scan.
+
+use crate::quant::codebook::Codebook;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KMeansOpts {
+    pub max_iters: usize,
+    /// Stop when no centroid moves more than this.
+    pub tol: f64,
+    /// Seed for k-means++ sampling (deterministic per column by default).
+    pub seed: u64,
+}
+
+impl Default for KMeansOpts {
+    fn default() -> Self {
+        Self { max_iters: 50, tol: 1e-7, seed: 0x5EED }
+    }
+}
+
+/// Result of clustering one column.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    pub codebook: Codebook,
+    pub inertia: f64,
+    pub iters: usize,
+}
+
+/// K-means++ seeding on sorted values. Returns `k` initial centroids
+/// (ascending). `values` must be non-empty and sorted.
+fn kmeanspp_init(sorted: &[f32], k: usize, rng: &mut Rng) -> Vec<f64> {
+    let n = sorted.len();
+    let mut centroids: Vec<f64> = Vec::with_capacity(k);
+    centroids.push(sorted[rng.below_usize(n)] as f64);
+    // d2[i] = squared distance of point i to its nearest chosen centroid
+    let mut d2: Vec<f64> = sorted
+        .iter()
+        .map(|&x| {
+            let d = x as f64 - centroids[0];
+            d * d
+        })
+        .collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // All points coincide with chosen centroids; pick uniformly.
+            sorted[rng.below_usize(n)] as f64
+        } else {
+            let mut t = rng.next_f64() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                t -= w;
+                if t <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            sorted[pick] as f64
+        };
+        centroids.push(next);
+        for (i, &x) in sorted.iter().enumerate() {
+            let d = x as f64 - next;
+            let dd = d * d;
+            if dd < d2[i] {
+                d2[i] = dd;
+            }
+        }
+    }
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    centroids
+}
+
+/// One Lloyd step over sorted values with sorted centroids. Assignment
+/// boundaries are centroid midpoints, so points map to clusters with a
+/// single linear sweep. Returns (new centroids asc, inertia, moved).
+fn lloyd_step(sorted: &[f32], centroids: &mut Vec<f64>, counts: &mut Vec<usize>, sums: &mut Vec<f64>) -> (f64, f64) {
+    let k = centroids.len();
+    counts.clear();
+    counts.resize(k, 0);
+    sums.clear();
+    sums.resize(k, 0.0);
+    let mut inertia = 0.0f64;
+    let mut c = 0usize;
+    for &xf in sorted {
+        let x = xf as f64;
+        // advance cluster while the next centroid is closer
+        while c + 1 < k && (centroids[c + 1] - x).abs() <= (x - centroids[c]).abs() {
+            c += 1;
+        }
+        // `c` is monotone over sorted x, but when x jumps back is impossible
+        counts[c] += 1;
+        sums[c] += x;
+        let d = x - centroids[c];
+        inertia += d * d;
+    }
+    let mut moved = 0.0f64;
+    for i in 0..k {
+        if counts[i] > 0 {
+            let nc = sums[i] / counts[i] as f64;
+            moved = moved.max((nc - centroids[i]).abs());
+            centroids[i] = nc;
+        }
+        // empty clusters handled by caller (reseed)
+    }
+    (inertia, moved)
+}
+
+/// Reseed any empty cluster at the point farthest from its centroid within
+/// the largest cluster — standard Lloyd empty-cluster repair, 1-D flavour:
+/// split the widest cluster at its extreme.
+fn repair_empty(sorted: &[f32], centroids: &mut [f64], counts: &[usize]) -> bool {
+    let mut repaired = false;
+    for i in 0..centroids.len() {
+        if counts[i] == 0 {
+            // find the largest-spread cluster boundary pair to split
+            let (mut best_j, mut best_spread) = (0usize, -1.0f64);
+            for j in 0..centroids.len() {
+                if counts[j] > 1 {
+                    let spread = counts[j] as f64;
+                    if spread > best_spread {
+                        best_spread = spread;
+                        best_j = j;
+                    }
+                }
+            }
+            if best_spread <= 0.0 {
+                // Degenerate (fewer distinct points than clusters); place at
+                // an arbitrary data point to keep the codebook well-formed.
+                centroids[i] = sorted[0] as f64;
+                continue;
+            }
+            centroids[i] = centroids[best_j] + 1e-6 + (i as f64) * 1e-9;
+            repaired = true;
+        }
+    }
+    if repaired {
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    repaired
+}
+
+/// Cluster `values` into `k` centroids. Not-a-number inputs are rejected by
+/// debug assertion; empty input yields a single zero centroid codebook.
+pub fn kmeans_1d(values: &[f32], k: usize, opts: &KMeansOpts) -> KMeansResult {
+    assert!(k >= 1, "k must be >= 1");
+    if values.is_empty() {
+        return KMeansResult { codebook: Codebook::new(vec![0.0; k]), inertia: 0.0, iters: 0 };
+    }
+    debug_assert!(values.iter().all(|v| v.is_finite()), "non-finite weight");
+    let mut sorted: Vec<f32> = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // Degenerate: constant column → all centroids equal that value.
+    if sorted[0] == sorted[sorted.len() - 1] {
+        return KMeansResult {
+            codebook: Codebook::new(vec![sorted[0]; k]),
+            inertia: 0.0,
+            iters: 0,
+        };
+    }
+
+    let mut rng = Rng::new(opts.seed ^ (values.len() as u64).rotate_left(17));
+    let mut centroids = kmeanspp_init(&sorted, k, &mut rng);
+    let mut counts: Vec<usize> = Vec::with_capacity(k);
+    let mut sums: Vec<f64> = Vec::with_capacity(k);
+    let mut inertia = f64::INFINITY;
+    let mut iters = 0usize;
+    for it in 0..opts.max_iters {
+        iters = it + 1;
+        let (in_, moved) = lloyd_step(&sorted, &mut centroids, &mut counts, &mut sums);
+        inertia = in_;
+        let repaired = repair_empty(&sorted, &mut centroids, &counts);
+        if !repaired && moved < opts.tol {
+            break;
+        }
+    }
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    KMeansResult {
+        codebook: Codebook::new(centroids.iter().map(|&c| c as f32).collect()),
+        inertia,
+        iters,
+    }
+}
+
+/// Total squared quantization error of `values` against a codebook.
+pub fn inertia(values: &[f32], cb: &Codebook) -> f64 {
+    values
+        .iter()
+        .map(|&x| {
+            let q = cb.dequantize(cb.quantize(x));
+            let d = x as f64 - q as f64;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::uniform_codebook;
+    use crate::util::proptest::{check_default, gen_column};
+
+    #[test]
+    fn recovers_separated_clusters() {
+        // Three well-separated blobs; k=3 must land near the blob means.
+        let mut vals = Vec::new();
+        for i in 0..100 {
+            vals.push(-1.0 + 0.001 * (i as f32));
+            vals.push(0.0 + 0.001 * (i as f32));
+            vals.push(5.0 + 0.001 * (i as f32));
+        }
+        let r = kmeans_1d(&vals, 3, &KMeansOpts::default());
+        let c = &r.codebook.centroids;
+        assert!((c[0] - -0.95).abs() < 0.1, "{c:?}");
+        assert!((c[1] - 0.05).abs() < 0.1, "{c:?}");
+        assert!((c[2] - 5.05).abs() < 0.1, "{c:?}");
+    }
+
+    #[test]
+    fn constant_column() {
+        let vals = vec![0.5f32; 64];
+        let r = kmeans_1d(&vals, 4, &KMeansOpts::default());
+        assert_eq!(r.inertia, 0.0);
+        assert!(r.codebook.centroids.iter().all(|&c| c == 0.5));
+    }
+
+    #[test]
+    fn k_larger_than_distinct_values() {
+        let vals = vec![1.0f32, 2.0, 1.0, 2.0];
+        let r = kmeans_1d(&vals, 8, &KMeansOpts::default());
+        // must quantize each point exactly
+        assert!(inertia(&vals, &r.codebook) < 1e-10);
+    }
+
+    #[test]
+    fn beats_uniform_on_outlier_columns() {
+        // The paper's core claim (§3.1): K-Means codebooks track the true
+        // distribution better than uniform levels, especially with outliers.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let col = gen_column(&mut rng, 2048, 0.01);
+        let k = 8; // 3-bit
+        let km = kmeans_1d(&col, k, &KMeansOpts::default());
+        let uni = uniform_codebook(&col, k);
+        let e_km = inertia(&col, &km.codebook);
+        let e_uni = inertia(&col, &uni);
+        assert!(
+            e_km < e_uni * 0.8,
+            "kmeans {e_km} should beat uniform {e_uni} clearly"
+        );
+    }
+
+    #[test]
+    fn centroids_sorted_ascending() {
+        check_default("kmeans centroids sorted", |rng| {
+            let n = 16 + rng.below_usize(256);
+            let col = gen_column(rng, n, 0.02);
+            let bits = 1 + rng.below_usize(4); // 1..=4 bits
+            let r = kmeans_1d(&col, 1 << bits, &KMeansOpts::default());
+            let c = &r.codebook.centroids;
+            for w in c.windows(2) {
+                assert!(w[0] <= w[1], "unsorted centroids {c:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn lloyd_never_increases_inertia() {
+        check_default("lloyd monotone", |rng| {
+            let n = 128 + rng.below_usize(128);
+            let col = gen_column(rng, n, 0.02);
+            let mut sorted = col.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut centroids = kmeanspp_init(&sorted, 8, rng);
+            let mut counts = Vec::new();
+            let mut sums = Vec::new();
+            let mut prev = f64::INFINITY;
+            for _ in 0..10 {
+                let (inertia, _) = lloyd_step(&sorted, &mut centroids, &mut counts, &mut sums);
+                // Lloyd's algorithm is monotone when no repair happens.
+                if repair_empty(&sorted, &mut centroids, &counts) {
+                    prev = f64::INFINITY; // repair may bump inertia; reset
+                    continue;
+                }
+                assert!(
+                    inertia <= prev + 1e-9,
+                    "inertia increased {prev} -> {inertia}"
+                );
+                prev = inertia;
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_matches_nearest_centroid() {
+        check_default("nearest centroid", |rng| {
+            let col = gen_column(rng, 200, 0.02);
+            let r = kmeans_1d(&col, 4, &KMeansOpts::default());
+            let cb = &r.codebook;
+            for &x in col.iter().take(50) {
+                let qi = cb.quantize(x) as usize;
+                let qd = (cb.centroids[qi] - x).abs();
+                for &c in &cb.centroids {
+                    assert!(qd <= (c - x).abs() + 1e-6);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! The CLAQ quantization core: K-Means codebooks (§3.1), the Outlier Order
+//! sensitivity metric (§3.2), adaptive precision (§3.3), outlier
+//! reservation (§3.4), the GPTQ error-compensation substrate, baselines
+//! (RTN / GPTQ / AWQ), the Appendix G heuristic search, and the packed
+//! deployment container.
+
+pub mod awq;
+pub mod codebook;
+pub mod config;
+pub mod gptq;
+pub mod kmeans;
+pub mod outliers;
+pub mod packed;
+pub mod precision;
+pub mod reservation;
+pub mod search;
+
+pub use codebook::Codebook;
+pub use config::Method;
+pub use gptq::{quantize_matrix, CentroidRule, MatrixPlan, QuantizedMatrix};
+pub use outliers::OutlierStats;

@@ -1,0 +1,249 @@
+//! §3.2 — the Outlier Order quantization-sensitivity metric.
+//!
+//! For an i×j weight matrix W, the outlier ratio of column j is
+//! `R_j = Card(|W_j| > mean(|W|) · S) / i` (paper Eq. 3): the fraction of
+//! entries whose magnitude exceeds S times the mean absolute value of the
+//! *whole matrix*. Ranking columns by R_j ("Outlier Order") drives both the
+//! Adaptive Precision allocator (§3.3) and Outlier Reservation (§3.4).
+
+use crate::tensor::Matrix;
+
+/// Column outlier statistics for one weight matrix.
+#[derive(Clone, Debug)]
+pub struct OutlierStats {
+    /// R_j per column (Eq. 3).
+    pub ratios: Vec<f64>,
+    /// mean(|W|) over the whole matrix.
+    pub mean_abs: f64,
+    /// The scale coefficient S used.
+    pub s: f64,
+    /// Total outliers counted.
+    pub total_outliers: usize,
+}
+
+impl OutlierStats {
+    /// Compute Eq. 3 for every column. `w` is (rows × cols) with columns as
+    /// quantization groups (rows = output features for a Linear layer
+    /// stored (out × in), so a "column" is all output weights of one input
+    /// feature — the GPTQ quantization group).
+    pub fn compute(w: &Matrix, s: f64) -> Self {
+        let mean_abs = if w.data.is_empty() {
+            0.0
+        } else {
+            w.data.iter().map(|&x| (x as f64).abs()).sum::<f64>() / w.data.len() as f64
+        };
+        let thresh = (mean_abs * s) as f32;
+        let mut counts = vec![0usize; w.cols];
+        for r in 0..w.rows {
+            let row = w.row(r);
+            for (c, &x) in row.iter().enumerate() {
+                if x.abs() > thresh {
+                    counts[c] += 1;
+                }
+            }
+        }
+        let total_outliers = counts.iter().sum();
+        let ratios = counts
+            .iter()
+            .map(|&c| c as f64 / w.rows.max(1) as f64)
+            .collect();
+        Self { ratios, mean_abs, s, total_outliers }
+    }
+
+    /// Column indices sorted by outlier ratio, descending — the paper's
+    /// "Outlier Order". Ties break by column index for determinism.
+    pub fn order(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.ratios.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.ratios[b]
+                .partial_cmp(&self.ratios[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx
+    }
+
+    /// Threshold value T such that exactly the top `frac` of columns have
+    /// R_j ranking above it (used for T_AP / T_OR). Returns the set of
+    /// selected top columns (by index) — using rank rather than a raw
+    /// threshold sidesteps ties producing over/under-sized selections.
+    pub fn top_columns(&self, frac: f64) -> Vec<usize> {
+        let n = self.ratios.len();
+        let k = ((n as f64) * frac).round() as usize;
+        self.order().into_iter().take(k.min(n)).collect()
+    }
+
+    /// Exact top-k variant.
+    pub fn top_k_columns(&self, k: usize) -> Vec<usize> {
+        self.order().into_iter().take(k.min(self.ratios.len())).collect()
+    }
+
+    /// Fraction of all outliers captured by the top `frac` of columns —
+    /// the paper's Appendix A concentration statistic ("90% of outliers
+    /// are in the top 10% of columns").
+    pub fn concentration(&self, frac: f64) -> f64 {
+        if self.total_outliers == 0 {
+            return 0.0;
+        }
+        let n_rows_f = 1.0; // ratios are already counts/rows; sum proportionally
+        let _ = n_rows_f;
+        let top = self.top_columns(frac);
+        let top_sum: f64 = top.iter().map(|&c| self.ratios[c]).sum();
+        let all_sum: f64 = self.ratios.iter().sum();
+        if all_sum == 0.0 {
+            0.0
+        } else {
+            top_sum / all_sum
+        }
+    }
+
+    /// Overall outlier ratio of the matrix (for the Figure 5 per-layer plot).
+    pub fn overall_ratio(&self) -> f64 {
+        if self.ratios.is_empty() {
+            0.0
+        } else {
+            self.ratios.iter().sum::<f64>() / self.ratios.len() as f64
+        }
+    }
+}
+
+/// Alternative column-sensitivity metrics for the Table 3 ablation (the
+/// paper's MP† comparator uses a magnitude/activation criterion from
+/// SparseGPT [14]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ColumnMetric {
+    /// Paper's Outlier Order (Eq. 3).
+    OutlierRatio,
+    /// Mean |W_j| per column — plain magnitude.
+    Magnitude,
+    /// SparseGPT-style salience: ‖W_j‖² · H_jj (needs the Hessian diagonal;
+    /// falls back to Magnitude when it is absent).
+    Salience,
+}
+
+/// Compute per-column sensitivity scores under the chosen metric.
+/// `hess_diag` is diag(H) from calibration (length = cols) when available.
+pub fn column_scores(
+    w: &Matrix,
+    metric: ColumnMetric,
+    s: f64,
+    hess_diag: Option<&[f64]>,
+) -> Vec<f64> {
+    match metric {
+        ColumnMetric::OutlierRatio => OutlierStats::compute(w, s).ratios,
+        ColumnMetric::Magnitude => (0..w.cols)
+            .map(|c| {
+                (0..w.rows).map(|r| (w.at(r, c) as f64).abs()).sum::<f64>() / w.rows.max(1) as f64
+            })
+            .collect(),
+        ColumnMetric::Salience => {
+            let hd = match hess_diag {
+                Some(h) if h.len() == w.cols => h,
+                _ => return column_scores(w, ColumnMetric::Magnitude, s, None),
+            };
+            (0..w.cols)
+                .map(|c| {
+                    let norm2: f64 =
+                        (0..w.rows).map(|r| (w.at(r, c) as f64).powi(2)).sum();
+                    norm2 * hd[c]
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_default;
+    use crate::util::rng::Rng;
+
+    /// A matrix where column 2 is stuffed with outliers.
+    fn spiked_matrix() -> Matrix {
+        let mut rng = Rng::new(1);
+        let mut w = Matrix::zeros(64, 8);
+        rng.fill_normal(&mut w.data, 0.01);
+        for r in 0..32 {
+            *w.at_mut(r, 2) = 1.0;
+        }
+        w
+    }
+
+    #[test]
+    fn ratio_counts_eq3() {
+        let w = Matrix::from_vec(2, 2, vec![0.1, 10.0, 0.1, 10.0]);
+        // mean|W| = 5.05; S=1 -> threshold 5.05; col1 has 2 outliers.
+        let st = OutlierStats::compute(&w, 1.0);
+        assert_eq!(st.ratios, vec![0.0, 1.0]);
+        assert_eq!(st.total_outliers, 2);
+    }
+
+    #[test]
+    fn spiked_column_ranks_first() {
+        let st = OutlierStats::compute(&spiked_matrix(), 3.0);
+        assert_eq!(st.order()[0], 2);
+        assert_eq!(st.top_columns(0.125), vec![2]);
+    }
+
+    #[test]
+    fn larger_s_fewer_outliers() {
+        check_default("S monotone", |rng| {
+            let mut w = Matrix::zeros(32, 16);
+            rng.fill_normal(&mut w.data, 1.0);
+            let a = OutlierStats::compute(&w, 2.0).total_outliers;
+            let b = OutlierStats::compute(&w, 5.0).total_outliers;
+            assert!(b <= a, "S=5 gave more outliers ({b}) than S=2 ({a})");
+        });
+    }
+
+    #[test]
+    fn ratios_in_unit_interval() {
+        check_default("ratio bounds", |rng| {
+            let rows = 8 + rng.below_usize(64);
+            let cols = 1 + rng.below_usize(32);
+            let mut w = Matrix::zeros(rows, cols);
+            rng.fill_normal(&mut w.data, 0.5);
+            let st = OutlierStats::compute(&w, 1.0 + rng.next_f64() * 12.0);
+            for &r in &st.ratios {
+                assert!((0.0..=1.0).contains(&r));
+            }
+        });
+    }
+
+    #[test]
+    fn concentration_of_spiked_matrix_high() {
+        let st = OutlierStats::compute(&spiked_matrix(), 3.0);
+        assert!(st.concentration(0.125) > 0.9);
+    }
+
+    #[test]
+    fn magnitude_metric_orders_by_size() {
+        let mut w = Matrix::zeros(16, 3);
+        for r in 0..16 {
+            *w.at_mut(r, 0) = 0.01;
+            *w.at_mut(r, 1) = 1.0;
+            *w.at_mut(r, 2) = 0.1;
+        }
+        let s = column_scores(&w, ColumnMetric::Magnitude, 13.0, None);
+        assert!(s[1] > s[2] && s[2] > s[0]);
+    }
+
+    #[test]
+    fn salience_uses_hessian() {
+        let mut w = Matrix::zeros(4, 2);
+        for r in 0..4 {
+            *w.at_mut(r, 0) = 1.0;
+            *w.at_mut(r, 1) = 1.0;
+        }
+        let s = column_scores(&w, ColumnMetric::Salience, 13.0, Some(&[1.0, 100.0]));
+        assert!(s[1] > s[0]);
+    }
+
+    #[test]
+    fn top_k_exact() {
+        let st = OutlierStats::compute(&spiked_matrix(), 3.0);
+        assert_eq!(st.top_k_columns(1), vec![2]);
+        assert_eq!(st.top_k_columns(0), Vec::<usize>::new());
+        assert_eq!(st.top_k_columns(100).len(), 8);
+    }
+}

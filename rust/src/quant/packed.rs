@@ -1,0 +1,390 @@
+//! The deployable CLAQ container: bit-packed index planes, per-column
+//! codebooks, and a sparse outlier plane, with exact byte accounting.
+//!
+//! The paper reports model sizes in "equivalent bits" (index bits + 16 per
+//! reserved outlier). A real deployment also pays for codebooks and outlier
+//! coordinates; both accountings are exposed so EXPERIMENTS.md can quote
+//! paper-comparable numbers *and* honest container sizes.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "CLAQPK01" | rows u32 | cols u32 | n_outliers u32
+//! per column: bits u8 | 2^bits centroids (f16) | ceil(rows*bits/8) packed bytes
+//! outliers:   (row u32, col u32, value f32) × n_outliers
+//! ```
+
+use crate::quant::gptq::{Outlier, QuantizedColumn, QuantizedMatrix};
+use crate::quant::codebook::Codebook;
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"CLAQPK01";
+
+// ---------------------------------------------------------------- f16 ----
+
+/// f32 → IEEE 754 binary16 (round-to-nearest-even), no crate available.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xFF) as i32;
+    let mut man = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // inf/nan
+        return sign | 0x7C00 | if man != 0 { 0x200 } else { 0 };
+    }
+    exp = exp - 127 + 15;
+    if exp >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // subnormal (or zero)
+        if exp < -10 {
+            return sign;
+        }
+        man |= 0x80_0000;
+        let shift = 14 - exp;
+        let half = man >> shift;
+        let rem = man & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && half & 1 == 1) { half + 1 } else { half };
+        return sign | rounded as u16;
+    }
+    let half = (exp as u32) << 10 | (man >> 13);
+    let rem = man & 0x1FFF;
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && half & 1 == 1) { half + 1 } else { half };
+    sign | rounded as u16
+}
+
+/// IEEE 754 binary16 → f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            sign | (((114 + e) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ------------------------------------------------------------- packing ----
+
+/// Pack `bits`-wide indices into bytes (LSB-first within each byte).
+pub fn pack_indices(idx: &[u8], bits: u8) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let total_bits = idx.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut bitpos = 0usize;
+    for &v in idx {
+        debug_assert!(v & !mask == 0, "index {v} exceeds {bits} bits");
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= v << off;
+        let spill = off + bits as usize;
+        if spill > 8 {
+            out[byte + 1] |= v >> (8 - off);
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Unpack `n` indices of `bits` width from a packed byte stream.
+pub fn unpack_indices(packed: &[u8], bits: u8, n: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = packed[byte] >> off;
+        let spill = off + bits as usize;
+        if spill > 8 {
+            v |= packed[byte + 1] << (8 - off);
+        }
+        out.push(v & mask);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+// ------------------------------------------------------------ container ----
+
+/// Serialized CLAQ matrix container.
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    pub bytes: Vec<u8>,
+}
+
+/// Size accounting for one packed matrix.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SizeReport {
+    pub params: usize,
+    pub index_bytes: usize,
+    pub codebook_bytes: usize,
+    pub outlier_bytes: usize,
+    pub header_bytes: usize,
+    /// index bits + 16·outliers per param — the paper's accounting.
+    pub paper_equivalent_bits: f64,
+}
+
+impl SizeReport {
+    pub fn container_bytes(&self) -> usize {
+        self.index_bytes + self.codebook_bytes + self.outlier_bytes + self.header_bytes
+    }
+
+    /// True container bits per parameter (everything included).
+    pub fn container_bits_per_param(&self) -> f64 {
+        self.container_bytes() as f64 * 8.0 / self.params.max(1) as f64
+    }
+}
+
+/// Serialize a quantized matrix. Codebook centroids are stored f16 (the
+/// deployment format; dequantization error from f16 codebooks is part of
+/// the measured pipeline, as it would be on device).
+pub fn pack(qm: &QuantizedMatrix) -> (PackedMatrix, SizeReport) {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&(qm.rows as u32).to_le_bytes());
+    bytes.extend_from_slice(&(qm.cols as u32).to_le_bytes());
+    bytes.extend_from_slice(&(qm.outliers.len() as u32).to_le_bytes());
+    let header_bytes = bytes.len();
+
+    let mut index_bytes = 0usize;
+    let mut codebook_bytes = 0usize;
+    for col in &qm.columns {
+        bytes.push(col.bits);
+        for &c in &col.codebook.centroids {
+            bytes.extend_from_slice(&f32_to_f16_bits(c).to_le_bytes());
+        }
+        codebook_bytes += 1 + 2 * col.codebook.len();
+        let packed = pack_indices(&col.indices, col.bits);
+        index_bytes += packed.len();
+        bytes.extend_from_slice(&packed);
+    }
+    let mut outlier_bytes = 0usize;
+    for o in &qm.outliers {
+        bytes.extend_from_slice(&o.row.to_le_bytes());
+        bytes.extend_from_slice(&o.col.to_le_bytes());
+        bytes.extend_from_slice(&o.value.to_le_bytes());
+        outlier_bytes += 12;
+    }
+    let params = qm.rows * qm.cols;
+    let index_bits: f64 = qm.columns.iter().map(|c| c.bits as f64 * qm.rows as f64).sum();
+    let report = SizeReport {
+        params,
+        index_bytes,
+        codebook_bytes,
+        outlier_bytes,
+        header_bytes,
+        paper_equivalent_bits: (index_bits + 16.0 * qm.outliers.len() as f64) / params as f64,
+    };
+    (PackedMatrix { bytes }, report)
+}
+
+/// Deserialize a container produced by [`pack`].
+pub fn unpack(pm: &PackedMatrix) -> Result<QuantizedMatrix> {
+    let b = &pm.bytes;
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > b.len() {
+            bail!("truncated container at offset {pos}");
+        }
+        let s = &b[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let magic = take(&mut pos, 8)?;
+    if magic != MAGIC {
+        bail!("bad magic");
+    }
+    let rows = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let cols = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let n_out = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+
+    let mut columns = Vec::with_capacity(cols);
+    for c in 0..cols {
+        let bits = take(&mut pos, 1)?[0];
+        if !(1..=8).contains(&bits) {
+            bail!("column {c}: invalid bit width {bits}");
+        }
+        let k = 1usize << bits;
+        let mut centroids = Vec::with_capacity(k);
+        for _ in 0..k {
+            let h = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap());
+            centroids.push(f16_bits_to_f32(h));
+        }
+        let packed_len = (rows * bits as usize).div_ceil(8);
+        let packed = take(&mut pos, packed_len)?;
+        let indices = unpack_indices(packed, bits, rows);
+        columns.push(QuantizedColumn { codebook: Codebook::new(centroids), indices, bits });
+    }
+    let mut outliers = Vec::with_capacity(n_out);
+    for _ in 0..n_out {
+        let row = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let col = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let value = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if row as usize >= rows || col as usize >= cols {
+            bail!("outlier out of range ({row},{col})");
+        }
+        outliers.push(Outlier { row, col, value });
+    }
+    if pos != b.len() {
+        bail!("trailing bytes ({} unread)", b.len() - pos);
+    }
+    Ok(QuantizedMatrix {
+        rows,
+        cols,
+        columns,
+        outliers,
+        metrics: Default::default(),
+    })
+}
+
+/// Write a container to disk.
+pub fn save(pm: &PackedMatrix, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, &pm.bytes).with_context(|| format!("write {}", path.display()))
+}
+
+/// Read a container from disk.
+pub fn load(path: &std::path::Path) -> Result<PackedMatrix> {
+    Ok(PackedMatrix { bytes: std::fs::read(path).with_context(|| format!("read {}", path.display()))? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
+    use crate::tensor::Matrix;
+    use crate::util::proptest::check_default;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn f16_round_trip_exact_values() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 6.1035156e-5] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn f16_precision_bound() {
+        check_default("f16 rel err < 2^-10", |rng| {
+            let x = (rng.normal() as f32) * 10.0;
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            if x.abs() > 1e-4 {
+                assert!(((x - y) / x).abs() < 1.0 / 1024.0, "{x} -> {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn f16_specials() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f32_to_f16_bits(1e10), 0x7C00); // overflow -> inf
+        assert!(f16_bits_to_f32(0x7E00).is_nan());
+        // subnormal round-trip
+        let sub = f16_bits_to_f32(0x0001);
+        assert!(sub > 0.0 && sub < 1e-7);
+        assert_eq!(f32_to_f16_bits(sub), 0x0001);
+    }
+
+    #[test]
+    fn pack_unpack_identity_all_widths() {
+        check_default("pack round trip", |rng| {
+            let bits = 1 + rng.below_usize(8) as u8;
+            let n = 1 + rng.below_usize(300);
+            let idx: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let packed = pack_indices(&idx, bits);
+            assert_eq!(packed.len(), (n * bits as usize).div_ceil(8));
+            assert_eq!(unpack_indices(&packed, bits, n), idx);
+        });
+    }
+
+    fn sample_qm(seed: u64) -> QuantizedMatrix {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(40, 12);
+        rng.fill_normal(&mut w.data, 0.1);
+        let mut plan = MatrixPlan::uniform(12, 3, CentroidRule::KMeans, false);
+        plan.bits[0] = 4;
+        plan.bits[5] = 2;
+        plan.reserve = vec![2; 12];
+        quantize_matrix(&w, None, &plan)
+    }
+
+    #[test]
+    fn container_round_trip() {
+        let qm = sample_qm(1);
+        let (pm, _) = pack(&qm);
+        let back = unpack(&pm).unwrap();
+        assert_eq!(back.rows, qm.rows);
+        assert_eq!(back.cols, qm.cols);
+        assert_eq!(back.outliers, qm.outliers);
+        for (a, b) in back.columns.iter().zip(&qm.columns) {
+            assert_eq!(a.bits, b.bits);
+            assert_eq!(a.indices, b.indices);
+            // centroids round-trip through f16
+            for (&x, &y) in a.codebook.centroids.iter().zip(&b.codebook.centroids) {
+                assert_eq!(x, f16_bits_to_f32(f32_to_f16_bits(y)));
+            }
+        }
+    }
+
+    #[test]
+    fn size_report_consistent() {
+        let qm = sample_qm(2);
+        let (pm, rep) = pack(&qm);
+        assert_eq!(pm.bytes.len(), rep.container_bytes());
+        assert_eq!(rep.params, 40 * 12);
+        assert!((rep.paper_equivalent_bits - qm.equivalent_bits_paper()).abs() < 1e-12);
+        // paper accounting excludes codebooks/coords, so container >= paper
+        assert!(rep.container_bits_per_param() > rep.paper_equivalent_bits);
+    }
+
+    #[test]
+    fn corrupt_containers_rejected() {
+        let qm = sample_qm(3);
+        let (pm, _) = pack(&qm);
+        // bad magic
+        let mut bad = pm.clone();
+        bad.bytes[0] = b'X';
+        assert!(unpack(&bad).is_err());
+        // truncated
+        let mut trunc = pm.clone();
+        trunc.bytes.truncate(pm.bytes.len() - 3);
+        assert!(unpack(&trunc).is_err());
+        // trailing garbage
+        let mut long = pm.clone();
+        long.bytes.push(0);
+        assert!(unpack(&long).is_err());
+    }
+
+    #[test]
+    fn disk_round_trip() {
+        let qm = sample_qm(4);
+        let (pm, _) = pack(&qm);
+        let dir = std::env::temp_dir().join("claq_packed_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.claq");
+        save(&pm, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.bytes, pm.bytes);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,258 @@
+//! §3.4 — Column-Level Adaptive Outlier Reservation (OR).
+//!
+//! A small budget of parameters is kept in full precision. Guided by the
+//! Outlier Order, the top 10% most outlier-concentrated columns receive a
+//! share o₁ of the total reservation budget and the remaining 90% share o₂
+//! (paper Eq. 5). Within each column, the same number of largest and
+//! smallest parameters are reserved (the paper's rule).
+
+use crate::quant::outliers::OutlierStats;
+
+/// The grid-searched budget split of Appendix C: fraction of the total
+/// reserved-parameter budget granted to the top-10% columns.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrSetting {
+    /// Share of the budget for the top `top_frac` columns (o₁ side).
+    pub hi_share: f64,
+    /// Fraction of columns considered "high outlier ratio" (paper: 0.10).
+    pub top_frac: f64,
+}
+
+impl OrSetting {
+    /// Appendix C settings.
+    pub const SETTING1: OrSetting = OrSetting { hi_share: 0.19, top_frac: 0.10 };
+    pub const SETTING2: OrSetting = OrSetting { hi_share: 0.28, top_frac: 0.10 };
+    pub const SETTING3: OrSetting = OrSetting { hi_share: 0.37, top_frac: 0.10 };
+
+    pub fn by_id(id: usize) -> OrSetting {
+        match id {
+            1 => Self::SETTING1,
+            2 => Self::SETTING2,
+            3 => Self::SETTING3,
+            other => panic!("unknown OR setting {other}"),
+        }
+    }
+}
+
+/// Per-column reservation counts for one matrix.
+#[derive(Clone, Debug)]
+pub struct ReservePlan {
+    /// Number of FP16-reserved parameters per column (always even: half
+    /// largest, half smallest).
+    pub counts: Vec<usize>,
+    /// Total reserved parameters.
+    pub total: usize,
+    /// Extra bits per parameter this plan costs under paper accounting
+    /// (16 bits per reserved value).
+    pub overhead_bits: f64,
+}
+
+/// Paper accounting: a reserved FP16 outlier costs 16 bits. (The real
+/// container also stores a 16-bit row index; `packed.rs` reports both.)
+pub const PAPER_BITS_PER_OUTLIER: f64 = 16.0;
+
+/// Allocate reservation counts. `budget_bits` is the extra equivalent
+/// bits/parameter to spend on outliers (e.g. 0.07 for the 2.12 fusion
+/// preset). Counts are clamped to the column height and rounded down to
+/// even so the largest/smallest split is exact.
+pub fn allocate_or(
+    stats: &OutlierStats,
+    rows: usize,
+    budget_bits: f64,
+    setting: OrSetting,
+) -> ReservePlan {
+    let cols = stats.ratios.len();
+    assert!(cols > 0 && rows > 0);
+    let total_params = rows * cols;
+    let budget = ((budget_bits * total_params as f64) / PAPER_BITS_PER_OUTLIER).floor() as usize;
+
+    let top: Vec<usize> = stats.top_columns(setting.top_frac);
+    let is_top = {
+        let mut mask = vec![false; cols];
+        for &c in &top {
+            mask[c] = true;
+        }
+        mask
+    };
+    let n_top = top.len().max(1);
+    let n_rest = (cols - top.len()).max(1);
+
+    let hi_budget = (budget as f64 * setting.hi_share) as usize;
+    let lo_budget = budget - hi_budget;
+    let _ = (n_top, n_rest);
+
+    // Distribute each tier's budget in PAIRS (one largest + one smallest
+    // per grant, keeping the per-column count even as the paper requires),
+    // round-robin in Outlier Order so higher-ratio columns absorb any
+    // remainder first. This uses small budgets exactly instead of
+    // truncating them to zero per column.
+    let order = stats.order();
+    let rest: Vec<usize> = order.iter().copied().filter(|c| !is_top[*c]).collect();
+    let mut counts = vec![0usize; cols];
+    let max_even = make_even(rows);
+    let grant = |tier: &[usize], tier_budget: usize, counts: &mut Vec<usize>| {
+        if tier.is_empty() {
+            return;
+        }
+        let mut pairs = tier_budget / 2;
+        let mut i = 0usize;
+        let mut stalled = 0usize;
+        while pairs > 0 && stalled < tier.len() {
+            let c = tier[i % tier.len()];
+            if counts[c] + 2 <= max_even {
+                counts[c] += 2;
+                pairs -= 1;
+                stalled = 0;
+            } else {
+                stalled += 1;
+            }
+            i += 1;
+        }
+    };
+    grant(&top, hi_budget, &mut counts);
+    grant(&rest, lo_budget, &mut counts);
+    let total: usize = counts.iter().sum();
+    let overhead_bits = total as f64 * PAPER_BITS_PER_OUTLIER / total_params as f64;
+    ReservePlan { counts, total, overhead_bits }
+}
+
+/// The "Outlier fix" baseline of Table 4: the same total budget spread
+/// uniformly over all columns (no Outlier Order guidance).
+pub fn allocate_fixed(rows: usize, cols: usize, budget_bits: f64) -> ReservePlan {
+    assert!(cols > 0 && rows > 0);
+    let total_params = rows * cols;
+    let budget = ((budget_bits * total_params as f64) / PAPER_BITS_PER_OUTLIER).floor() as usize;
+    // Uniform pair-granular spread (no sensitivity guidance): every column
+    // receives the same even count; the remainder pairs go to the lowest
+    // column indices (fixed, metric-blind).
+    let base = make_even((budget / cols).min(rows));
+    let mut counts = vec![base; cols];
+    let mut leftover_pairs = budget.saturating_sub(base * cols) / 2;
+    let max_even = make_even(rows);
+    for c in 0..cols {
+        if leftover_pairs == 0 {
+            break;
+        }
+        if counts[c] + 2 <= max_even {
+            counts[c] += 2;
+            leftover_pairs -= 1;
+        }
+    }
+    let total: usize = counts.iter().sum();
+    let overhead_bits = total as f64 * PAPER_BITS_PER_OUTLIER / total_params as f64;
+    ReservePlan { counts, total, overhead_bits }
+}
+
+fn make_even(n: usize) -> usize {
+    n - (n % 2)
+}
+
+/// Pick the reserved entries of one column: the `count/2` largest and
+/// `count/2` smallest values (by signed value — reserving both tails is the
+/// paper's rule). Returns row indices.
+pub fn pick_reserved_rows(column: &[f32], count: usize) -> Vec<usize> {
+    let count = count.min(make_even(column.len()));
+    if count == 0 {
+        return Vec::new();
+    }
+    let half = count / 2;
+    let mut idx: Vec<usize> = (0..column.len()).collect();
+    idx.sort_by(|&a, &b| column[a].partial_cmp(&column[b]).unwrap());
+    let mut out: Vec<usize> = Vec::with_capacity(count);
+    out.extend_from_slice(&idx[..half]); // smallest
+    out.extend_from_slice(&idx[idx.len() - half..]); // largest
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::proptest::check_default;
+    use crate::util::rng::Rng;
+
+    fn stats_for(rows: usize, cols: usize, seed: u64) -> (OutlierStats, usize) {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.02);
+        // spike the first column so the top tier is deterministic
+        for r in 0..rows / 4 {
+            *w.at_mut(r, 0) = 0.9;
+        }
+        (OutlierStats::compute(&w, 3.0), rows)
+    }
+
+    #[test]
+    fn budget_respected() {
+        let (st, rows) = stats_for(128, 40, 1);
+        let plan = allocate_or(&st, rows, 0.13, OrSetting::SETTING2);
+        // Achieved overhead must not exceed the requested budget.
+        assert!(plan.overhead_bits <= 0.13 + 1e-9, "got {}", plan.overhead_bits);
+        assert!(plan.total > 0);
+    }
+
+    #[test]
+    fn top_columns_get_more() {
+        let (st, rows) = stats_for(256, 50, 2);
+        let plan = allocate_or(&st, rows, 0.2, OrSetting::SETTING2);
+        let top = st.top_columns(0.10);
+        let top_count = plan.counts[top[0]];
+        let rest_max = (0..50)
+            .filter(|c| !top.contains(c))
+            .map(|c| plan.counts[c])
+            .max()
+            .unwrap();
+        assert!(
+            top_count > rest_max,
+            "top column got {top_count}, rest max {rest_max}"
+        );
+    }
+
+    #[test]
+    fn counts_even_and_bounded() {
+        check_default("or counts even", |rng| {
+            let rows = 16 + rng.below_usize(200);
+            let cols = 10 + rng.below_usize(64);
+            let (st, _) = stats_for(rows, cols, rng.next_u64());
+            let plan = allocate_or(&st, rows, rng.next_f64() * 0.5, OrSetting::by_id(1 + rng.below_usize(3)));
+            for &c in &plan.counts {
+                assert_eq!(c % 2, 0);
+                assert!(c <= rows);
+            }
+        });
+    }
+
+    #[test]
+    fn fixed_is_uniform() {
+        let plan = allocate_fixed(128, 16, 0.25);
+        assert!(plan.counts.windows(2).all(|w| w[0] == w[1]));
+        assert!(plan.overhead_bits <= 0.25 + 1e-9);
+    }
+
+    #[test]
+    fn pick_reserved_takes_both_tails() {
+        let col = vec![-5.0f32, -0.1, 0.0, 0.2, 7.0, 0.05];
+        let rows = pick_reserved_rows(&col, 2);
+        assert_eq!(rows, vec![0, 4]); // -5 and 7
+    }
+
+    #[test]
+    fn pick_reserved_full_column() {
+        let col = vec![1.0f32, 2.0, 3.0, 4.0];
+        let rows = pick_reserved_rows(&col, 100);
+        assert_eq!(rows, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pick_reserved_zero() {
+        assert!(pick_reserved_rows(&[1.0, 2.0], 0).is_empty());
+    }
+
+    #[test]
+    fn settings_order() {
+        assert!(OrSetting::SETTING1.hi_share < OrSetting::SETTING2.hi_share);
+        assert!(OrSetting::SETTING2.hi_share < OrSetting::SETTING3.hi_share);
+    }
+}

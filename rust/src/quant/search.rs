@@ -1,0 +1,262 @@
+//! Appendix G — heuristic adaptive-precision search.
+//!
+//! For wider budgets (e.g. 2.5 equivalent bits) the simple dual-level AP of
+//! §3.3 is not optimal. The paper's heuristic: rank weight matrices by
+//! overall outlier ratio, discretize each matrix's precision class into
+//! {2-bit, 2&3-bit, 2&4-bit}, enumerate feasible combinations under the
+//! size budget, and pick the one maximizing the precision score
+//! PS_total = OR₄·PS₄·p₄·M₄ + OR₃·PS₃·p₃·M₃ (paper Eq. 6–8).
+
+/// Precision class of one matrix in the search space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatrixClass {
+    /// All columns at the base low precision.
+    Lo,
+    /// Mixture of base and 3-bit columns (2&3).
+    Mix3,
+    /// Mixture of base and 4-bit columns (2&4).
+    Mix4,
+}
+
+/// Search configuration (paper: PS₃ = 3, PS₄ = 4, base 2-bit).
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub base_bits: u8,
+    pub ps3: f64,
+    pub ps4: f64,
+    /// Candidate high-precision column fractions (discretized search).
+    pub fractions: Vec<f64>,
+    /// Target equivalent bits across all matrices.
+    pub target_bits: f64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            base_bits: 2,
+            ps3: 3.0,
+            ps4: 4.0,
+            fractions: vec![0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6],
+            target_bits: 2.5,
+        }
+    }
+}
+
+/// Per-matrix input: its outlier ratio (matrix-level, Appendix A Figure 5)
+/// and parameter count (for budget accounting).
+#[derive(Clone, Debug)]
+pub struct MatrixInfo {
+    pub name: String,
+    pub outlier_ratio: f64,
+    pub params: usize,
+}
+
+/// The chosen configuration for one matrix.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub class: MatrixClass,
+    /// Fraction of columns promoted to the class's high precision.
+    pub hi_fraction: f64,
+}
+
+impl Assignment {
+    pub fn equivalent_bits(&self, base: u8) -> f64 {
+        let b = base as f64;
+        match self.class {
+            MatrixClass::Lo => b,
+            MatrixClass::Mix3 => b + self.hi_fraction * (3.0 - b),
+            MatrixClass::Mix4 => b + self.hi_fraction * (4.0 - b),
+        }
+    }
+}
+
+/// Search result.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub assignments: Vec<Assignment>,
+    pub score: f64,
+    pub achieved_bits: f64,
+}
+
+fn mean_or(matrices: &[MatrixInfo], sel: &[bool]) -> f64 {
+    let mut s = 0.0;
+    let mut n = 0usize;
+    for (m, &take) in matrices.iter().zip(sel) {
+        if take {
+            s += m.outlier_ratio;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        s / n as f64
+    }
+}
+
+/// Run the heuristic search. Matrices with higher outlier ratio are
+/// considered first for higher-precision classes (the paper's ranking
+/// step); we then enumerate (M₄ prefix length, p₄, p₃) and for each
+/// candidate compute the p₃ that exhausts the remaining budget.
+pub fn search(matrices: &[MatrixInfo], cfg: &SearchConfig) -> SearchResult {
+    let n = matrices.len();
+    assert!(n > 0);
+    let total_params: usize = matrices.iter().map(|m| m.params).sum();
+    let base = cfg.base_bits as f64;
+    let budget_extra = (cfg.target_bits - base) * total_params as f64; // in bit·params
+
+    // Rank matrices by outlier ratio descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        matrices[b]
+            .outlier_ratio
+            .partial_cmp(&matrices[a].outlier_ratio)
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+
+    let mut best: Option<SearchResult> = None;
+    // M4 = how many top-ranked matrices go 2&4; the rest are 2&3 (and fall
+    // back to Lo when the budget runs out).
+    for m4 in 0..=n {
+        for &p4 in &cfg.fractions {
+            // bits consumed by the 2&4 group
+            let params4: usize = order[..m4].iter().map(|&i| matrices[i].params).sum();
+            let cost4 = p4 * (4.0 - base) * params4 as f64;
+            if cost4 > budget_extra * (1.0 + 1e-9) {
+                continue;
+            }
+            let remaining = budget_extra - cost4;
+            let params3: usize = order[m4..].iter().map(|&i| matrices[i].params).sum();
+            // p3 chosen to exhaust the remaining budget exactly (clamped).
+            let p3 = if params3 == 0 {
+                0.0
+            } else {
+                (remaining / ((3.0 - base) * params3 as f64)).clamp(0.0, 1.0)
+            };
+
+            let mut sel4 = vec![false; n];
+            for &i in &order[..m4] {
+                sel4[i] = true;
+            }
+            let sel3: Vec<bool> = sel4.iter().map(|&s| !s).collect();
+            let or4 = mean_or(matrices, &sel4);
+            let or3 = mean_or(matrices, &sel3);
+            let m3 = n - m4;
+            // Paper Eq. 7.
+            let score = or4 * cfg.ps4 * p4 * m4 as f64 + or3 * cfg.ps3 * p3 * m3 as f64;
+
+            let mut assignments = vec![
+                Assignment { class: MatrixClass::Lo, hi_fraction: 0.0 };
+                n
+            ];
+            for &i in &order[..m4] {
+                assignments[i] = Assignment { class: MatrixClass::Mix4, hi_fraction: p4 };
+            }
+            for &i in &order[m4..] {
+                assignments[i] = if p3 > 0.0 {
+                    Assignment { class: MatrixClass::Mix3, hi_fraction: p3 }
+                } else {
+                    Assignment { class: MatrixClass::Lo, hi_fraction: 0.0 }
+                };
+            }
+            let achieved: f64 = assignments
+                .iter()
+                .zip(matrices)
+                .map(|(a, m)| a.equivalent_bits(cfg.base_bits) * m.params as f64)
+                .sum::<f64>()
+                / total_params as f64;
+            if achieved > cfg.target_bits * (1.0 + 1e-6) {
+                continue;
+            }
+            let cand = SearchResult { assignments, score, achieved_bits: achieved };
+            if best.as_ref().map(|b| cand.score > b.score).unwrap_or(true) {
+                best = Some(cand);
+            }
+        }
+    }
+    best.expect("search space non-empty (Lo-only is always feasible)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize, spread: f64) -> Vec<MatrixInfo> {
+        (0..n)
+            .map(|i| MatrixInfo {
+                name: format!("m{i}"),
+                // descending outlier ratios with the given spread
+                outlier_ratio: 0.05 + spread * (n - i) as f64 / n as f64,
+                params: 4096,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn respects_budget() {
+        let ms = mk(16, 0.2);
+        let cfg = SearchConfig { target_bits: 2.5, ..Default::default() };
+        let r = search(&ms, &cfg);
+        assert!(r.achieved_bits <= 2.5 + 1e-6, "got {}", r.achieved_bits);
+        assert!(r.achieved_bits > 2.2, "budget underused: {}", r.achieved_bits);
+    }
+
+    #[test]
+    fn high_outlier_matrices_get_mix4() {
+        let ms = mk(10, 0.5);
+        let r = search(&ms, &SearchConfig::default());
+        // wherever Mix4 is assigned, it must be on the highest-OR matrices
+        let min_or_mix4 = r
+            .assignments
+            .iter()
+            .zip(&ms)
+            .filter(|(a, _)| a.class == MatrixClass::Mix4)
+            .map(|(_, m)| m.outlier_ratio)
+            .fold(f64::INFINITY, f64::min);
+        let max_or_other = r
+            .assignments
+            .iter()
+            .zip(&ms)
+            .filter(|(a, _)| a.class != MatrixClass::Mix4)
+            .map(|(_, m)| m.outlier_ratio)
+            .fold(0.0, f64::max);
+        if min_or_mix4.is_finite() {
+            assert!(min_or_mix4 >= max_or_other);
+        }
+    }
+
+    #[test]
+    fn small_budget_prefers_max_mix4_paper_observation() {
+        // "in scenarios where the incremental bit-width is modest (2.1),
+        //  the search results favor ... 2&4-bit matrices"
+        let ms = mk(12, 0.3);
+        let cfg = SearchConfig { target_bits: 2.1, ..Default::default() };
+        let r = search(&ms, &cfg);
+        let n4 = r.assignments.iter().filter(|a| a.class == MatrixClass::Mix4).count();
+        assert!(n4 >= 1, "expected some 2&4 matrices at 2.1 bits");
+    }
+
+    #[test]
+    fn equivalent_bits_formula() {
+        let a = Assignment { class: MatrixClass::Mix4, hi_fraction: 0.25 };
+        assert!((a.equivalent_bits(2) - 2.5).abs() < 1e-12);
+        let b = Assignment { class: MatrixClass::Mix3, hi_fraction: 0.5 };
+        assert!((b.equivalent_bits(2) - 2.5).abs() < 1e-12);
+        let c = Assignment { class: MatrixClass::Lo, hi_fraction: 0.0 };
+        assert!((c.equivalent_bits(2) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn score_beats_uniform_assignment() {
+        // The chosen config's score must be at least that of "all Mix3 at
+        // uniform fraction", which is in the search space.
+        let ms = mk(8, 0.4);
+        let cfg = SearchConfig::default();
+        let r = search(&ms, &cfg);
+        let uniform_p3 = ((cfg.target_bits - 2.0) / 1.0).clamp(0.0, 1.0);
+        let or_all: f64 = ms.iter().map(|m| m.outlier_ratio).sum::<f64>() / ms.len() as f64;
+        let uniform_score = or_all * cfg.ps3 * uniform_p3 * ms.len() as f64;
+        assert!(r.score >= uniform_score - 1e-9);
+    }
+}

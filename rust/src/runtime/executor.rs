@@ -1,0 +1,156 @@
+//! Typed executors over the AOT artifacts: the transformer logits graph
+//! (weights passed as PJRT literals, built once per model) and the
+//! standalone kernels (fused dequant-matmul, K-Means step).
+
+use super::{literal_f32, literal_i32, Runtime};
+use crate::model::Model;
+use crate::tensor::Matrix;
+use anyhow::{ensure, Context, Result};
+use std::path::PathBuf;
+
+/// Executes the `model_{l,xl}.hlo.txt` logits graph for a concrete model.
+/// Weight literals are materialized once at construction; each `logits`
+/// call only builds the (1, seq) token literal.
+pub struct ModelExecutor {
+    hlo_path: PathBuf,
+    weights: Vec<xla::Literal>,
+    pub seq: usize,
+    vocab: usize,
+}
+
+impl ModelExecutor {
+    /// `hlo_path` must have been lowered for exactly `model.config`
+    /// (argument order: tokens, then CLAQWT01 tensor order).
+    pub fn new(hlo_path: PathBuf, model: &Model) -> Result<Self> {
+        let c = &model.config;
+        let mut weights: Vec<xla::Literal> = Vec::new();
+        let d = c.d_model as i64;
+        let f = c.d_ff as i64;
+        let v = c.vocab as i64;
+        weights.push(literal_f32(&model.tok_embed.data, &[v, d])?);
+        for l in &model.layers {
+            weights.push(literal_f32(&l.attn_norm, &[d])?);
+            weights.push(literal_f32(&l.wq.data, &[d, d])?);
+            weights.push(literal_f32(&l.wk.data, &[d, d])?);
+            weights.push(literal_f32(&l.wv.data, &[d, d])?);
+            weights.push(literal_f32(&l.wo.data, &[d, d])?);
+            weights.push(literal_f32(&l.mlp_norm, &[d])?);
+            weights.push(literal_f32(&l.w_gate.data, &[f, d])?);
+            weights.push(literal_f32(&l.w_up.data, &[f, d])?);
+            weights.push(literal_f32(&l.w_down.data, &[d, f])?);
+        }
+        weights.push(literal_f32(&model.final_norm, &[d])?);
+        weights.push(literal_f32(&model.lm_head.data, &[v, d])?);
+        Ok(Self { hlo_path, weights, seq: c.max_seq, vocab: c.vocab })
+    }
+
+    /// Run the graph on exactly `seq` tokens → logits (seq × vocab).
+    pub fn logits(&self, rt: &mut Runtime, tokens: &[u16]) -> Result<Matrix> {
+        ensure!(
+            tokens.len() == self.seq,
+            "AOT graph is fixed-shape: expected {} tokens, got {}",
+            self.seq,
+            tokens.len()
+        );
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + self.weights.len());
+        args.push(literal_i32(&toks, &[1, self.seq as i64])?);
+        for w in &self.weights {
+            args.push(w.clone());
+        }
+        let out = rt.execute(&self.hlo_path, &args)?;
+        let logits = out.into_iter().next().context("empty result")?;
+        let data = super::literal_to_vec_f32(&logits)?;
+        ensure!(data.len() == self.seq * self.vocab, "bad logits size {}", data.len());
+        Ok(Matrix::from_vec(self.seq, self.vocab, data))
+    }
+
+    /// Perplexity over a token stream using the PJRT graph (the runtime
+    /// hot path; mirrors `eval::perplexity` on the Rust forward).
+    pub fn perplexity(&self, rt: &mut Runtime, stream: &[u16], max_windows: usize) -> Result<f64> {
+        let mut total_nll = 0.0f64;
+        let mut total_tok = 0usize;
+        let mut windows = 0usize;
+        for chunk in stream.chunks_exact(self.seq) {
+            let logits = self.logits(rt, chunk)?;
+            for t in 0..self.seq - 1 {
+                let row = logits.row(t);
+                let lse = crate::util::stats::log_sum_exp(row);
+                total_nll += lse - row[chunk[t + 1] as usize] as f64;
+            }
+            total_tok += self.seq - 1;
+            windows += 1;
+            if max_windows > 0 && windows >= max_windows {
+                break;
+            }
+        }
+        Ok((total_nll / total_tok.max(1) as f64).exp())
+    }
+}
+
+/// Executor for the standalone fused dequant-matmul kernel artifact
+/// (`quant_matmul.hlo.txt`, fixed shape m=k=n=128, L=16).
+pub struct QuantMatmulExecutor {
+    pub hlo_path: PathBuf,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub levels: usize,
+}
+
+impl QuantMatmulExecutor {
+    pub fn standard(hlo_path: PathBuf) -> Self {
+        Self { hlo_path, m: 128, k: 128, n: 128, levels: 16 }
+    }
+
+    /// y = x @ dequant(W).T with per-input-feature codebooks.
+    pub fn run(
+        &self,
+        rt: &mut Runtime,
+        x: &[f32],
+        codebooks: &[f32],
+        indices: &[i32],
+    ) -> Result<Vec<f32>> {
+        let args = vec![
+            literal_f32(x, &[self.m as i64, self.k as i64])?,
+            literal_f32(codebooks, &[self.k as i64, self.levels as i64])?,
+            literal_i32(indices, &[self.n as i64, self.k as i64])?,
+        ];
+        let out = rt.execute(&self.hlo_path, &args)?;
+        super::literal_to_vec_f32(&out[0])
+    }
+}
+
+/// Executor for the K-Means Lloyd-step kernel artifact
+/// (`kmeans_step.hlo.txt`, fixed shape c=128, n=128, K=16).
+pub struct KMeansExecutor {
+    pub hlo_path: PathBuf,
+    pub c: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl KMeansExecutor {
+    pub fn standard(hlo_path: PathBuf) -> Self {
+        Self { hlo_path, c: 128, n: 128, k: 16 }
+    }
+
+    /// One Lloyd step → (new centroids (c×k), inertia (c)).
+    pub fn step(
+        &self,
+        rt: &mut Runtime,
+        values: &[f32],
+        centroids: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let args = vec![
+            literal_f32(values, &[self.c as i64, self.n as i64])?,
+            literal_f32(centroids, &[self.c as i64, self.k as i64])?,
+        ];
+        let out = rt.execute(&self.hlo_path, &args)?;
+        ensure!(out.len() == 2, "expected 2 outputs, got {}", out.len());
+        Ok((
+            super::literal_to_vec_f32(&out[0])?,
+            super::literal_to_vec_f32(&out[1])?,
+        ))
+    }
+}

@@ -1,0 +1,74 @@
+//! PJRT runtime: loads the AOT-lowered HLO text artifacts (produced once
+//! by `python/compile/aot.py`) and executes them from the Rust side via
+//! the `xla` crate. Python is never on this path.
+
+pub mod executor;
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled-executable cache over one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(path) {
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", path.display()))?;
+            self.cache.insert(path.to_path_buf(), exe);
+        }
+        Ok(self.cache.get(path).unwrap())
+    }
+
+    /// Execute a cached executable. All aot.py graphs are lowered with
+    /// `return_tuple=True`; the tuple is unpacked into its elements.
+    pub fn execute(&mut self, path: &Path, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(path)?;
+        let out = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("execute {}", path.display()))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        lit.to_tuple().context("unpack result tuple")
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape from a slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Read an f32 literal back into a Vec.
+pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

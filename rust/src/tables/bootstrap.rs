@@ -1,0 +1,81 @@
+//! Data bootstrap: generates the synthetic corpora the whole stack shares.
+//! `make artifacts` runs this *before* the JAX trainer, which reads the
+//! token files so both layers see an identical language.
+
+use crate::coordinator::registry::artifacts_dir;
+use crate::data::corpus::{generate, save_tokens, CorpusKind};
+use crate::util::cli::Args;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Default token counts: enough for 128-segment calibration + training +
+/// held-out evaluation at seq 128.
+pub const TRAIN_TOKENS: usize = 600_000;
+pub const HELDOUT_TOKENS: usize = 40_000;
+
+/// Corpus files written into the artifacts directory.
+pub fn corpus_paths(dir: &std::path::Path) -> Vec<(CorpusKind, &'static str, PathBuf, usize)> {
+    vec![
+        (CorpusKind::SynthWiki, "train", dir.join("corpus_wiki_train.bin"), TRAIN_TOKENS),
+        (CorpusKind::SynthWiki, "heldout", dir.join("corpus_wiki_heldout.bin"), HELDOUT_TOKENS),
+        (CorpusKind::SynthC4, "train", dir.join("corpus_c4_train.bin"), TRAIN_TOKENS),
+        (CorpusKind::SynthC4, "heldout", dir.join("corpus_c4_heldout.bin"), HELDOUT_TOKENS),
+    ]
+}
+
+/// `claq datagen [--out DIR] [--tokens N]`
+pub fn datagen(args: &Args) -> Result<()> {
+    let dir = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    std::fs::create_dir_all(&dir)?;
+    let scale: f64 = args.get_parse_or("tokens", TRAIN_TOKENS as f64).map_err(anyhow::Error::msg)?
+        / TRAIN_TOKENS as f64;
+    for (kind, split, path, base_n) in corpus_paths(&dir) {
+        let n = ((base_n as f64) * scale) as usize;
+        // train/heldout come from disjoint generator seeds (see corpus.rs)
+        let seed = if split == "train" { 1 } else { 2 };
+        let toks = generate(kind, n, seed);
+        save_tokens(&toks, &path)?;
+        println!(
+            "wrote {} ({} {} tokens: {})",
+            path.display(),
+            kind.name(),
+            split,
+            toks.len()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::load_tokens;
+
+    #[test]
+    fn datagen_writes_all_corpora() {
+        let dir = std::env::temp_dir().join("claq_bootstrap_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = Args::parse(
+            vec![
+                "--out".to_string(),
+                dir.to_str().unwrap().to_string(),
+                "--tokens".to_string(),
+                "6000".to_string(),
+            ],
+            &["out", "tokens"],
+        )
+        .unwrap();
+        datagen(&args).unwrap();
+        for (_, _, path, _) in corpus_paths(&dir) {
+            let toks = load_tokens(&path).unwrap();
+            assert!(!toks.is_empty());
+        }
+        // scaled: train ≈ 6000 tokens
+        let train = load_tokens(&dir.join("corpus_wiki_train.bin")).unwrap();
+        assert_eq!(train.len(), 6000);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

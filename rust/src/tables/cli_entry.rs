@@ -1,0 +1,158 @@
+//! CLI subcommand implementations: dispatch to the table/figure
+//! generators, plus ad-hoc `quantize` / `eval` / `outliers` commands.
+
+use super::runner::{emit, render_table, Harness, ModelKey};
+use super::{figures, tables_ablation, tables_appendix, tables_main};
+use crate::data::corpus::CorpusKind;
+use crate::model::{MatrixId, MatrixKind};
+use crate::quant::config::{Method, DEFAULT_S};
+use crate::quant::outliers::{ColumnMetric, OutlierStats};
+use crate::quant::precision::BitPair;
+use crate::quant::reservation::OrSetting;
+use crate::util::cli::Args;
+use anyhow::{bail, Context, Result};
+
+/// Parse a `--method NAME --bits B [--s S] [--setting N]` triple.
+pub fn parse_method(args: &Args) -> Result<Method> {
+    let name = args.get_or("method", "claq");
+    let bits: f64 = args.get_parse_or("bits", 4.0).map_err(anyhow::Error::msg)?;
+    let s: f64 = args.get_parse_or("s", DEFAULT_S).map_err(anyhow::Error::msg)?;
+    let setting: usize = args.get_parse_or("setting", 2).map_err(anyhow::Error::msg)?;
+    let ibits = bits.round() as u8;
+    Ok(match name {
+        "fp16" => Method::Fp16,
+        "rtn" => Method::Rtn { bits: ibits },
+        "gptq" => Method::Gptq { bits: ibits },
+        "awq" => Method::Awq { bits: ibits },
+        "claq" => {
+            if (bits - ibits as f64).abs() < 1e-9 {
+                Method::Claq { bits: ibits }
+            } else {
+                // fractional bits => fusion preset style split
+                match format!("{bits:.2}").as_str() {
+                    "2.12" => Method::fusion_2_12(),
+                    "2.24" => Method::fusion_2_24(),
+                    "3.12" => Method::fusion_3_12(),
+                    "3.23" => Method::fusion_3_23(),
+                    _ => Method::ClaqAp {
+                        pair: BitPair::new(4, bits.floor() as u8),
+                        target_bits: bits,
+                        metric: ColumnMetric::OutlierRatio,
+                        s,
+                    },
+                }
+            }
+        }
+        "claq-ap" => Method::ClaqAp {
+            pair: BitPair::new(4, bits.floor() as u8),
+            target_bits: bits,
+            metric: ColumnMetric::OutlierRatio,
+            s,
+        },
+        "claq-or" => Method::ClaqOr {
+            bits: bits.floor() as u8,
+            budget_bits: bits - bits.floor(),
+            setting: OrSetting::by_id(setting),
+            s,
+        },
+        "claq-or-fixed" => Method::ClaqOrFixed {
+            bits: bits.floor() as u8,
+            budget_bits: bits - bits.floor(),
+        },
+        "claq-fusion" => Method::fusion_2_12(),
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+fn model_key(args: &Args) -> ModelKey {
+    match args.get_or("model", "l") {
+        "xl" | "tiny-xl" => ModelKey::TinyXl,
+        _ => ModelKey::TinyL,
+    }
+}
+
+/// `claq quantize --method M --bits B [--model l|xl]`
+pub fn quantize(args: &Args) -> Result<()> {
+    let h = Harness::load(args.has("fast"))?;
+    let method = parse_method(args)?;
+    let key = model_key(args);
+    eprintln!("quantizing {} with {} ...", key.name(), method.name());
+    let row = h.run(key, &method, CorpusKind::SynthC4, false, "quantize")?;
+    println!("{}", render_table("quantize result", &[row], false));
+    Ok(())
+}
+
+/// `claq eval --model l|xl [--method M --bits B]` — with zero-shot.
+pub fn eval(args: &Args) -> Result<()> {
+    let h = Harness::load(args.has("fast"))?;
+    let method = if args.get("method").is_some() { parse_method(args)? } else { Method::Fp16 };
+    let key = model_key(args);
+    let row = h.run(key, &method, CorpusKind::SynthC4, true, "eval")?;
+    println!("{}", render_table("eval result", &[row], true));
+    Ok(())
+}
+
+/// `claq table <n> [--fast]`
+pub fn table(args: &Args) -> Result<()> {
+    let n: usize = args
+        .positional
+        .first()
+        .context("usage: claq table <n>")?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("table id must be a number"))?;
+    let h = Harness::load(args.has("fast"))?;
+    match n {
+        1 => tables_main::table1(&h).map(|_| ()),
+        2 => tables_main::table2(&h).map(|_| ()),
+        3 => tables_ablation::table3(&h).map(|_| ()),
+        4 => tables_ablation::table4(&h).map(|_| ()),
+        5 => tables_ablation::table5(&h).map(|_| ()),
+        6 => tables_ablation::table6(&h).map(|_| ()),
+        7 => tables_ablation::table7(&h).map(|_| ()),
+        8 | 9 => tables_main::table8(&h).map(|_| ()),
+        10 | 11 => tables_main::table10(&h).map(|_| ()),
+        12 => tables_appendix::table12(&h).map(|_| ()),
+        13 => tables_appendix::table13(&h).map(|_| ()),
+        other => bail!("no generator for table {other} (1-13; figures are `claq figure`)"),
+    }
+}
+
+/// `claq figure <n>`
+pub fn figure(args: &Args) -> Result<()> {
+    let n: usize = args
+        .positional
+        .first()
+        .context("usage: claq figure <3|4|5>")?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("figure id must be a number"))?;
+    let h = Harness::load(args.has("fast"))?;
+    match n {
+        3 => figures::figure3(&h),
+        4 => figures::figure4(&h),
+        5 => figures::figure5(&h),
+        other => bail!("no generator for figure {other} (3-5; 1-2 are architecture diagrams)"),
+    }
+}
+
+/// `claq outliers [--s S] [--model l|xl]` — Outlier Order diagnostics.
+pub fn outliers(args: &Args) -> Result<()> {
+    let h = Harness::load(true)?;
+    let s: f64 = args.get_parse_or("s", DEFAULT_S).map_err(anyhow::Error::msg)?;
+    let model = h.model(model_key(args))?;
+    println!("{:<22} {:>10} {:>12} {:>14}", "matrix", "outliers", "overall R", "top10% conc.");
+    for layer in 0..model.config.n_layers {
+        for kind in MatrixKind::ALL {
+            let id = MatrixId { layer, kind };
+            let st = OutlierStats::compute(model.matrix(id), s);
+            println!(
+                "{:<22} {:>10} {:>12.5} {:>13.1}%",
+                id.name(),
+                st.total_outliers,
+                st.overall_ratio(),
+                st.concentration(0.10) * 100.0
+            );
+        }
+    }
+    let _ = emit(&h, "outliers", ""); // ensure tables dir exists for tooling
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (see DESIGN.md §5 for the per-experiment index) plus the data bootstrap
+//! and CLI glue.
+
+pub mod bootstrap;
+pub mod cli_entry;
+pub mod figures;
+pub mod runner;
+pub mod tables_ablation;
+pub mod tables_appendix;
+pub mod tables_main;

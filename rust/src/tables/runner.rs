@@ -1,0 +1,280 @@
+//! Shared experiment runner: loads the trained models + corpora from
+//! `artifacts/`, quantizes with a method, evaluates perplexity and
+//! zero-shot accuracy, and records rows in the run registry.
+
+use crate::coordinator::pipeline::{quantize_model, PipelineOpts};
+use crate::coordinator::registry::{artifacts_dir, Registry, RunRecord};
+use crate::data::calibration::{sample_segments, CalibConfig};
+use crate::data::corpus::{load_tokens, CorpusKind};
+use crate::data::tasks::{generate_task, TaskItem, TASKS};
+use crate::eval::perplexity::perplexity;
+use crate::eval::zeroshot::accuracy;
+use crate::model::io::load_model;
+use crate::model::{Model, TransformerConfig};
+use crate::quant::config::Method;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Which trained model family a row uses ("LLaMA-1" stand-in vs the
+/// Appendix E "LLaMA-2/Yi" stand-in).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKey {
+    TinyL,
+    TinyXl,
+}
+
+impl ModelKey {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKey::TinyL => "tiny-L",
+            ModelKey::TinyXl => "tiny-XL",
+        }
+    }
+
+    pub fn weights_file(&self) -> &'static str {
+        match self {
+            ModelKey::TinyL => "weights_l.bin",
+            ModelKey::TinyXl => "weights_xl.bin",
+        }
+    }
+}
+
+/// Evaluation knobs (scaled down in --fast mode).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalBudget {
+    pub ppl_windows: usize,
+    pub zs_items: usize,
+    pub calib_segments: usize,
+}
+
+impl EvalBudget {
+    pub fn standard() -> Self {
+        Self { ppl_windows: 60, zs_items: 100, calib_segments: 32 }
+    }
+
+    pub fn fast() -> Self {
+        Self { ppl_windows: 16, zs_items: 32, calib_segments: 12 }
+    }
+}
+
+/// One evaluated configuration.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub model: String,
+    pub method: String,
+    pub nominal_bits: f64,
+    pub achieved_bits: f64,
+    pub container_bits: f64,
+    pub ppl_wiki: f64,
+    pub ppl_c4: f64,
+    /// (task name, accuracy) when zero-shot was requested.
+    pub zeroshot: Vec<(String, f64)>,
+    pub mean_rel_err: f64,
+}
+
+impl Row {
+    pub fn zs_avg(&self) -> f64 {
+        if self.zeroshot.is_empty() {
+            return f64::NAN;
+        }
+        self.zeroshot.iter().map(|(_, a)| a).sum::<f64>() / self.zeroshot.len() as f64
+    }
+}
+
+/// Loaded experiment context.
+pub struct Harness {
+    pub dir: PathBuf,
+    pub model_l: Model,
+    pub model_xl: Option<Model>,
+    pub held_wiki: Vec<u16>,
+    pub held_c4: Vec<u16>,
+    pub calib_c4: Vec<Vec<u16>>,
+    pub calib_wiki: Vec<Vec<u16>>,
+    pub budget: EvalBudget,
+    pub registry: Registry,
+}
+
+impl Harness {
+    /// Load from the artifacts directory; fails with guidance when `make
+    /// artifacts` has not been run.
+    pub fn load(fast: bool) -> Result<Self> {
+        let dir = artifacts_dir();
+        let budget = if fast { EvalBudget::fast() } else { EvalBudget::standard() };
+        let wl = dir.join("weights_l.bin");
+        if !wl.exists() {
+            bail!(
+                "missing {} — run `make artifacts` (datagen + training) first",
+                wl.display()
+            );
+        }
+        let model_l = load_model(&wl).context("load tiny-L")?;
+        let model_xl = load_model(&dir.join("weights_xl.bin")).ok();
+        let held_wiki = load_tokens(&dir.join("corpus_wiki_heldout.bin"))?;
+        let held_c4 = load_tokens(&dir.join("corpus_c4_heldout.bin"))?;
+        let train_c4 = load_tokens(&dir.join("corpus_c4_train.bin"))?;
+        let train_wiki = load_tokens(&dir.join("corpus_wiki_train.bin"))?;
+        let seq = model_l.config.max_seq;
+        let calib_cfg = CalibConfig { n_segments: budget.calib_segments, seq_len: seq, seed: 0xCA11B };
+        let calib_c4 = sample_segments(&train_c4, &calib_cfg);
+        let calib_wiki = sample_segments(&train_wiki, &calib_cfg);
+        let registry = Registry::new(&dir)?;
+        Ok(Self {
+            dir,
+            model_l,
+            model_xl,
+            held_wiki,
+            held_c4,
+            calib_c4,
+            calib_wiki,
+            budget,
+            registry,
+        })
+    }
+
+    pub fn model(&self, key: ModelKey) -> Result<&Model> {
+        match key {
+            ModelKey::TinyL => Ok(&self.model_l),
+            ModelKey::TinyXl => self
+                .model_xl
+                .as_ref()
+                .context("weights_xl.bin missing — rerun `make artifacts`"),
+        }
+    }
+
+    /// Quantize (with the given calibration corpus) and evaluate.
+    pub fn run(
+        &self,
+        key: ModelKey,
+        method: &Method,
+        calib_on: CorpusKind,
+        with_zeroshot: bool,
+        experiment: &str,
+    ) -> Result<Row> {
+        let model = self.model(key)?;
+        let calib = match calib_on {
+            CorpusKind::SynthC4 => &self.calib_c4,
+            CorpusKind::SynthWiki => &self.calib_wiki,
+        };
+        let (qm, _stats) = quantize_model(model, method, calib, &PipelineOpts::default());
+        let dense = qm.to_dense();
+        let rep = qm.size_report();
+        let ppl_wiki = perplexity(&dense, &self.held_wiki, self.budget.ppl_windows).ppl;
+        let ppl_c4 = perplexity(&dense, &self.held_c4, self.budget.ppl_windows).ppl;
+        let mut zeroshot = Vec::new();
+        if with_zeroshot {
+            for spec in &TASKS {
+                let items = self.task_items(spec.name)?;
+                zeroshot.push((spec.name.to_string(), accuracy(&dense, &items)));
+            }
+        }
+        let achieved = if qm.matrices.is_empty() { 16.0 } else { rep.paper_equivalent_bits };
+        let container = if qm.matrices.is_empty() { 32.0 } else { rep.container_bits_per_param };
+        let row = Row {
+            model: key.name().to_string(),
+            method: method.name(),
+            nominal_bits: method.nominal_bits(),
+            achieved_bits: achieved,
+            container_bits: container,
+            ppl_wiki,
+            ppl_c4,
+            zeroshot,
+            mean_rel_err: qm.mean_rel_err(),
+        };
+        self.record(experiment, &row)?;
+        Ok(row)
+    }
+
+    fn task_items(&self, name: &str) -> Result<Vec<TaskItem>> {
+        let spec = TASKS
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("unknown task {name}"))?;
+        Ok(generate_task(spec, CorpusKind::SynthWiki, self.budget.zs_items))
+    }
+
+    fn record(&self, experiment: &str, row: &Row) -> Result<()> {
+        for (metric, value) in [("ppl_wiki", row.ppl_wiki), ("ppl_c4", row.ppl_c4)] {
+            self.registry.record(&RunRecord {
+                experiment: experiment.to_string(),
+                model: row.model.clone(),
+                method: row.method.clone(),
+                bits: row.achieved_bits,
+                metric_name: metric.to_string(),
+                metric_value: value,
+                detail: String::new(),
+            })?;
+        }
+        for (task, acc) in &row.zeroshot {
+            self.registry.record(&RunRecord {
+                experiment: experiment.to_string(),
+                model: row.model.clone(),
+                method: row.method.clone(),
+                bits: row.achieved_bits,
+                metric_name: format!("acc_{}", task.trim_end_matches('*')),
+                metric_value: *acc,
+                detail: String::new(),
+            })?;
+        }
+        Ok(())
+    }
+
+    /// FP16 baseline row (no quantization).
+    pub fn fp16_row(&self, key: ModelKey, with_zeroshot: bool, experiment: &str) -> Result<Row> {
+        self.run(key, &Method::Fp16, CorpusKind::SynthC4, with_zeroshot, experiment)
+    }
+}
+
+/// Render rows as an aligned text table (and return the string).
+pub fn render_table(title: &str, rows: &[Row], with_zeroshot: bool) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    if with_zeroshot {
+        out.push_str(&format!(
+            "{:<10} {:<22} {:>6} {:>7} {:>9} {:>9}",
+            "model", "method", "bits", "eq.bits", "ppl-wiki", "ppl-c4"
+        ));
+        if let Some(r) = rows.first() {
+            for (name, _) in &r.zeroshot {
+                out.push_str(&format!(" {:>11}", name));
+            }
+        }
+        out.push_str(&format!(" {:>7}\n", "avg"));
+    } else {
+        out.push_str(&format!(
+            "{:<10} {:<22} {:>6} {:>7} {:>9} {:>9} {:>10}\n",
+            "model", "method", "bits", "eq.bits", "ppl-wiki", "ppl-c4", "rel-err"
+        ));
+    }
+    for r in rows {
+        if with_zeroshot {
+            out.push_str(&format!(
+                "{:<10} {:<22} {:>6.2} {:>7.2} {:>9.2} {:>9.2}",
+                r.model, r.method, r.nominal_bits, r.achieved_bits, r.ppl_wiki, r.ppl_c4
+            ));
+            for (_, acc) in &r.zeroshot {
+                out.push_str(&format!(" {:>11.2}", acc * 100.0));
+            }
+            out.push_str(&format!(" {:>7.2}\n", r.zs_avg() * 100.0));
+        } else {
+            out.push_str(&format!(
+                "{:<10} {:<22} {:>6.2} {:>7.2} {:>9.2} {:>9.2} {:>10.4}\n",
+                r.model, r.method, r.nominal_bits, r.achieved_bits, r.ppl_wiki, r.ppl_c4, r.mean_rel_err
+            ));
+        }
+    }
+    out
+}
+
+/// Print a table and persist it under artifacts/tables/.
+pub fn emit(harness: &Harness, file_stem: &str, text: &str) -> Result<()> {
+    println!("{text}");
+    let dir = harness.dir.join("tables");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(format!("{file_stem}.txt")), text)?;
+    Ok(())
+}
+
+/// Shared model-size guard used by tests.
+pub fn default_config_matches(model: &Model) -> bool {
+    model.config == TransformerConfig::tiny_l() || model.config == TransformerConfig::tiny_xl()
+}

@@ -1,0 +1,118 @@
+//! Tables 3–7 — the ablation studies: adaptive precision vs magnitude
+//! mixed precision, OR vs fixed reservation, the outlier standard S sweep,
+//! the OR budget-split grid, and the 2&3 vs 2&4 candidate study.
+
+use super::runner::{emit, render_table, Harness, ModelKey, Row};
+use crate::data::corpus::CorpusKind;
+use crate::quant::config::{Method, DEFAULT_S};
+use crate::quant::outliers::ColumnMetric;
+use crate::quant::precision::BitPair;
+use crate::quant::reservation::OrSetting;
+use anyhow::Result;
+
+/// Table 3: column-level AP (Outlier Order) vs MP† (SparseGPT-style
+/// salience metric) at 2.5 / 2.2 / 2.1 equivalent bits.
+pub fn table3(h: &Harness) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    rows.push(h.fp16_row(ModelKey::TinyL, true, "table3")?);
+    for m in [Method::Claq { bits: 3 }, Method::Claq { bits: 2 }] {
+        eprintln!("[table3] {}", m.name());
+        rows.push(h.run(ModelKey::TinyL, &m, CorpusKind::SynthC4, true, "table3")?);
+    }
+    for target in [2.5, 2.2, 2.1] {
+        for metric in [ColumnMetric::Salience, ColumnMetric::OutlierRatio] {
+            let m = Method::ClaqAp {
+                pair: BitPair::new(4, 2),
+                target_bits: target,
+                metric,
+                s: DEFAULT_S,
+            };
+            eprintln!("[table3] {}", m.name());
+            rows.push(h.run(ModelKey::TinyL, &m, CorpusKind::SynthC4, true, "table3")?);
+        }
+    }
+    emit(h, "table3", &render_table("Table 3 — AP vs MP† ablation (tiny-L)", &rows, true))?;
+    Ok(rows)
+}
+
+/// Table 4: adaptive OR vs fixed outlier reservation at 2.28 / 2.14.
+pub fn table4(h: &Harness) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    rows.push(h.fp16_row(ModelKey::TinyL, true, "table4")?);
+    rows.push(h.run(ModelKey::TinyL, &Method::Claq { bits: 2 }, CorpusKind::SynthC4, true, "table4")?);
+    for budget in [0.28, 0.14] {
+        for fixed in [true, false] {
+            let m = if fixed {
+                Method::ClaqOrFixed { bits: 2, budget_bits: budget }
+            } else {
+                Method::ClaqOr { bits: 2, budget_bits: budget, setting: OrSetting::SETTING2, s: DEFAULT_S }
+            };
+            eprintln!("[table4] {}", m.name());
+            rows.push(h.run(ModelKey::TinyL, &m, CorpusKind::SynthC4, true, "table4")?);
+        }
+    }
+    emit(h, "table4", &render_table("Table 4 — OR vs fixed reservation (tiny-L)", &rows, true))?;
+    Ok(rows)
+}
+
+/// Table 5 (Appendix B): outlier standard S sweep at AP 2.2.
+pub fn table5(h: &Harness) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for s in [1.0, 3.0, 5.0, 7.0, 9.0, 11.0, 13.0, 15.0, 17.0] {
+        let m = Method::ClaqAp {
+            pair: BitPair::new(4, 2),
+            target_bits: 2.2,
+            metric: ColumnMetric::OutlierRatio,
+            s,
+        };
+        eprintln!("[table5] S={s}");
+        let mut row = h.run(ModelKey::TinyL, &m, CorpusKind::SynthC4, false, "table5")?;
+        row.method = format!("CLAQ+AP-2.2 (S={s})");
+        rows.push(row);
+    }
+    emit(h, "table5", &render_table("Table 5 (App. B) — outlier standard S sweep", &rows, false))?;
+    Ok(rows)
+}
+
+/// Table 6 (Appendix C): OR budget-split settings 1–3 at 2.28 / 2.14.
+pub fn table6(h: &Harness) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    rows.push(h.fp16_row(ModelKey::TinyL, true, "table6")?);
+    for budget in [0.28, 0.14] {
+        for setting in 1..=3usize {
+            let m = Method::ClaqOr {
+                bits: 2,
+                budget_bits: budget,
+                setting: OrSetting::by_id(setting),
+                s: DEFAULT_S,
+            };
+            eprintln!("[table6] budget={budget} setting={setting}");
+            let mut row = h.run(ModelKey::TinyL, &m, CorpusKind::SynthC4, true, "table6")?;
+            row.method = format!("+OR-{:.2} Setting{setting}", 2.0 + budget);
+            rows.push(row);
+        }
+    }
+    emit(h, "table6", &render_table("Table 6 (App. C) — OR budget split grid", &rows, true))?;
+    Ok(rows)
+}
+
+/// Table 7 (Appendix D): 2&3 vs 2&4 bit candidates at 2.1, S ∈ {5, 9, 13}.
+pub fn table7(h: &Harness) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for s in [5.0, 9.0, 13.0] {
+        for hi in [3u8, 4u8] {
+            let m = Method::ClaqAp {
+                pair: BitPair::new(hi, 2),
+                target_bits: 2.1,
+                metric: ColumnMetric::OutlierRatio,
+                s,
+            };
+            eprintln!("[table7] S={s} bits=2&{hi}");
+            let mut row = h.run(ModelKey::TinyL, &m, CorpusKind::SynthC4, false, "table7")?;
+            row.method = format!("AP-2.1 2&{hi} (S={s})");
+            rows.push(row);
+        }
+    }
+    emit(h, "table7", &render_table("Table 7 (App. D) — AP candidate bit-width study", &rows, false))?;
+    Ok(rows)
+}

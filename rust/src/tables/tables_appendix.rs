@@ -1,0 +1,79 @@
+//! Tables 12–13 — the heuristic AP search (Appendix G) and the
+//! calibration-data ablation (Appendix H).
+
+use super::runner::{emit, render_table, Harness, ModelKey, Row};
+use crate::coordinator::pipeline::{quantize_model_heuristic, PipelineOpts};
+use crate::data::corpus::CorpusKind;
+use crate::eval::perplexity::perplexity;
+use crate::eval::zeroshot::accuracy;
+use crate::data::tasks::{generate_task, TASKS};
+use crate::quant::config::{Method, DEFAULT_S};
+use crate::quant::outliers::ColumnMetric;
+use crate::quant::precision::BitPair;
+use crate::quant::search::SearchConfig;
+use anyhow::Result;
+
+/// Table 12: plain dual-level AP vs the heuristic search at 2.5 bits.
+pub fn table12(h: &Harness) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    rows.push(h.fp16_row(ModelKey::TinyL, true, "table12")?);
+    for m in [Method::Claq { bits: 3 }, Method::Claq { bits: 2 }] {
+        rows.push(h.run(ModelKey::TinyL, &m, CorpusKind::SynthC4, true, "table12")?);
+    }
+    let plain = Method::ClaqAp {
+        pair: BitPair::new(4, 2),
+        target_bits: 2.5,
+        metric: ColumnMetric::OutlierRatio,
+        s: DEFAULT_S,
+    };
+    eprintln!("[table12] plain AP 2.5");
+    rows.push(h.run(ModelKey::TinyL, &plain, CorpusKind::SynthC4, true, "table12")?);
+
+    // Heuristic search (its own pipeline entry point).
+    eprintln!("[table12] heuristic search 2.5");
+    let model = h.model(ModelKey::TinyL)?;
+    let cfg = SearchConfig { target_bits: 2.5, ..Default::default() };
+    let (qm, _, result) =
+        quantize_model_heuristic(model, &cfg, DEFAULT_S, &h.calib_c4, &PipelineOpts::default());
+    let dense = qm.to_dense();
+    let rep = qm.size_report();
+    let mut zeroshot = Vec::new();
+    for spec in &TASKS {
+        let items = generate_task(spec, CorpusKind::SynthWiki, h.budget.zs_items);
+        zeroshot.push((spec.name.to_string(), accuracy(&dense, &items)));
+    }
+    rows.push(Row {
+        model: ModelKey::TinyL.name().to_string(),
+        method: "+AP(Heuristic search)".to_string(),
+        nominal_bits: 2.5,
+        achieved_bits: rep.paper_equivalent_bits,
+        container_bits: rep.container_bits_per_param,
+        ppl_wiki: perplexity(&dense, &h.held_wiki, h.budget.ppl_windows).ppl,
+        ppl_c4: perplexity(&dense, &h.held_c4, h.budget.ppl_windows).ppl,
+        zeroshot,
+        mean_rel_err: qm.mean_rel_err(),
+    });
+    eprintln!(
+        "[table12] search score {:.4}, achieved bits {:.3}",
+        result.score, result.achieved_bits
+    );
+    emit(h, "table12", &render_table("Table 12 (App. G) — heuristic AP search @2.5", &rows, true))?;
+    Ok(rows)
+}
+
+/// Table 13: calibration on synth-wiki vs synth-c4 (CLAQ 4 / 3 / 2).
+pub fn table13(h: &Harness) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    rows.push(h.fp16_row(ModelKey::TinyL, false, "table13")?);
+    for bits in [4u8, 3, 2] {
+        for calib in [CorpusKind::SynthWiki, CorpusKind::SynthC4] {
+            let m = Method::Claq { bits };
+            eprintln!("[table13] CLAQ-{bits} calibrated on {}", calib.name());
+            let mut row = h.run(ModelKey::TinyL, &m, calib, false, "table13")?;
+            row.method = format!("CLAQ-{bits} (calib {})", calib.name());
+            rows.push(row);
+        }
+    }
+    emit(h, "table13", &render_table("Table 13 (App. H) — calibration-set ablation", &rows, false))?;
+    Ok(rows)
+}

@@ -1,0 +1,116 @@
+//! Tables 1, 2, 8/9, 10/11 — the paper's main perplexity and zero-shot
+//! results, on the tiny-L ("LLaMA-1" stand-in) and tiny-XL ("LLaMA-2/Yi"
+//! stand-in) model families.
+
+use super::runner::{emit, render_table, Harness, ModelKey, Row};
+use crate::data::corpus::CorpusKind;
+use crate::quant::config::Method;
+use anyhow::Result;
+
+/// The method grid of Table 1 (implemented comparators only; OmniQuant /
+/// SqueezeLLM / SpQR / decoupleQ are other papers' training loops — see
+/// DESIGN.md §1).
+pub fn table1_methods() -> Vec<Method> {
+    vec![
+        Method::Fp16,
+        Method::Rtn { bits: 4 },
+        Method::Gptq { bits: 4 },
+        Method::Awq { bits: 4 },
+        Method::Claq { bits: 4 },
+        Method::Rtn { bits: 3 },
+        Method::Gptq { bits: 3 },
+        Method::Awq { bits: 3 },
+        Method::Claq { bits: 3 },
+        Method::fusion_3_12(),
+        Method::fusion_3_23(),
+        Method::Gptq { bits: 2 },
+        Method::Claq { bits: 2 },
+        Method::fusion_2_12(),
+        Method::fusion_2_24(),
+    ]
+}
+
+/// Table 1: perplexity grid on tiny-L.
+pub fn table1(h: &Harness) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for m in table1_methods() {
+        eprintln!("[table1] {}", m.name());
+        rows.push(h.run(ModelKey::TinyL, &m, CorpusKind::SynthC4, false, "table1")?);
+    }
+    emit(h, "table1", &render_table("Table 1 — perplexity (tiny-L)", &rows, false))?;
+    Ok(rows)
+}
+
+/// Table 2's method subset (zero-shot is expensive).
+pub fn table2_methods() -> Vec<Method> {
+    vec![
+        Method::Fp16,
+        Method::Gptq { bits: 4 },
+        Method::Claq { bits: 4 },
+        Method::Gptq { bits: 2 },
+        Method::fusion_2_12(),
+    ]
+}
+
+/// Table 2: zero-shot accuracy on tiny-L.
+pub fn table2(h: &Harness) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for m in table2_methods() {
+        eprintln!("[table2] {}", m.name());
+        rows.push(h.run(ModelKey::TinyL, &m, CorpusKind::SynthC4, true, "table2")?);
+    }
+    emit(h, "table2", &render_table("Table 2 — zero-shot accuracy % (tiny-L)", &rows, true))?;
+    Ok(rows)
+}
+
+/// Tables 8+9 (Appendix E): perplexity on the second model family.
+pub fn table8(h: &Harness) -> Result<Vec<Row>> {
+    let methods = vec![
+        Method::Fp16,
+        Method::Gptq { bits: 4 },
+        Method::Claq { bits: 4 },
+        Method::Gptq { bits: 3 },
+        Method::Claq { bits: 3 },
+        Method::fusion_3_12(),
+        Method::fusion_3_23(),
+        Method::Gptq { bits: 2 },
+        Method::Claq { bits: 2 },
+        Method::fusion_2_12(),
+        Method::fusion_2_24(),
+    ];
+    let mut rows = Vec::new();
+    for m in methods {
+        eprintln!("[table8] {}", m.name());
+        rows.push(h.run(ModelKey::TinyXl, &m, CorpusKind::SynthC4, false, "table8")?);
+    }
+    emit(
+        h,
+        "table8",
+        &render_table("Tables 8/9 (App. E) — perplexity (tiny-XL)", &rows, false),
+    )?;
+    Ok(rows)
+}
+
+/// Tables 10+11 (Appendix E): zero-shot on the second family.
+pub fn table10(h: &Harness) -> Result<Vec<Row>> {
+    let methods = vec![
+        Method::Fp16,
+        Method::Gptq { bits: 4 },
+        Method::Claq { bits: 4 },
+        Method::Gptq { bits: 3 },
+        Method::fusion_3_12(),
+        Method::Gptq { bits: 2 },
+        Method::fusion_2_12(),
+    ];
+    let mut rows = Vec::new();
+    for m in methods {
+        eprintln!("[table10] {}", m.name());
+        rows.push(h.run(ModelKey::TinyXl, &m, CorpusKind::SynthC4, true, "table10")?);
+    }
+    emit(
+        h,
+        "table10",
+        &render_table("Tables 10/11 (App. E) — zero-shot accuracy % (tiny-XL)", &rows, true),
+    )?;
+    Ok(rows)
+}

@@ -1,0 +1,262 @@
+//! Dense linear algebra needed by the GPTQ engine: Cholesky factorization,
+//! triangular solves, and symmetric-positive-definite inversion. All in f64
+//! internally — the Hessian conditioning at 2-bit targets is poor enough
+//! that f32 factorization visibly degrades quantization quality.
+
+use super::Matrix;
+
+/// Lower-triangular Cholesky factor L of a symmetric positive-definite
+/// matrix A (so A = L·Lᵀ). Input is row-major n×n in f64. Returns None if
+/// the matrix is not positive definite.
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L·y = b with L lower triangular (forward substitution).
+pub fn solve_lower(l: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    y
+}
+
+/// Solve Lᵀ·x = y with L lower triangular (back substitution).
+pub fn solve_lower_transpose(l: &[f64], y: &[f64], n: usize) -> Vec<f64> {
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    x
+}
+
+/// Invert a symmetric positive-definite matrix via Cholesky.
+/// Returns None if not SPD.
+pub fn spd_inverse(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let l = cholesky(a, n)?;
+    let mut inv = vec![0.0f64; n * n];
+    let mut e = vec![0.0f64; n];
+    for j in 0..n {
+        e.fill(0.0);
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e, n);
+        let x = solve_lower_transpose(&l, &y, n);
+        for i in 0..n {
+            inv[i * n + j] = x[i];
+        }
+    }
+    Some(inv)
+}
+
+/// The GPTQ factorization: given SPD H, compute the *upper* Cholesky factor
+/// U of H⁻¹ (H⁻¹ = Uᵀ·U is GPTQ's convention where `U = Cholesky(H^-1,
+/// upper=True)`; its rows drive the error propagation). Dampening is the
+/// caller's responsibility.
+pub fn gptq_inverse_factor(h: &[f64], n: usize) -> Option<Vec<f64>> {
+    let inv = spd_inverse(h, n)?;
+    // Upper Cholesky of inv: inv = Uᵀ·U where U is upper triangular.
+    // Compute lower factor of inv and transpose.
+    let l = cholesky(&inv, n)?;
+    let mut u = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            u[j * n + i] = l[i * n + j];
+        }
+    }
+    Some(u)
+}
+
+/// Dampen a (near-)SPD matrix in place: H += mean(diag(H)) * pct * I.
+/// GPTQ uses pct = 0.01. Also replaces exactly-zero diagonal entries
+/// ("dead" input features that never activated) with 1.0, matching the
+/// reference implementation.
+pub fn dampen(h: &mut [f64], n: usize, pct: f64) {
+    let mut diag_mean = 0.0;
+    for i in 0..n {
+        if h[i * n + i] == 0.0 {
+            h[i * n + i] = 1.0;
+        }
+        diag_mean += h[i * n + i];
+    }
+    diag_mean /= n as f64;
+    let damp = diag_mean * pct;
+    for i in 0..n {
+        h[i * n + i] += damp;
+    }
+}
+
+/// A·B for square f64 row-major (test helper and small-n uses).
+pub fn matmul_f64(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+    out
+}
+
+/// Build a random SPD matrix X·Xᵀ + eps·I from a source matrix (test aid and
+/// Hessian shape: H = 2/m Σ x xᵀ).
+pub fn gram(x: &Matrix, eps: f64) -> Vec<f64> {
+    // x: m×n samples in rows; G = xᵀ·x / m
+    let m = x.rows;
+    let n = x.cols;
+    let mut g = vec![0.0f64; n * n];
+    for r in 0..m {
+        let row = x.row(r);
+        for i in 0..n {
+            let xi = row[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                g[i * n + j] += xi * row[j] as f64;
+            }
+        }
+    }
+    let inv_m = 1.0 / m.max(1) as f64;
+    for v in g.iter_mut() {
+        *v *= inv_m;
+    }
+    for i in 0..n {
+        g[i * n + i] += eps;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(2 * n, n);
+        rng.fill_normal(&mut x.data, 1.0);
+        gram(&x, 1e-3)
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let n = 8;
+        let a = random_spd(n, 1);
+        let l = cholesky(&a, n).expect("SPD");
+        // L·Lᵀ == A
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l[i * n + k] * l[j * n + k];
+                }
+                assert!((s - a[i * n + j]).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_none());
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let n = 6;
+        let a = random_spd(n, 2);
+        let l = cholesky(&a, n).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| (i as f64) - 2.0).collect();
+        let y = solve_lower(&l, &b, n);
+        let x = solve_lower_transpose(&l, &y, n);
+        // A·x should equal b
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += a[i * n + j] * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let n = 7;
+        let a = random_spd(n, 3);
+        let inv = spd_inverse(&a, n).unwrap();
+        let prod = matmul_f64(&a, &inv, n);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[i * n + j] - want).abs() < 1e-7, "({i},{j})={}", prod[i * n + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_factor_squares_to_inverse() {
+        let n = 5;
+        let a = random_spd(n, 4);
+        let u = gptq_inverse_factor(&a, n).unwrap();
+        let inv = spd_inverse(&a, n).unwrap();
+        // Uᵀ·U == A⁻¹
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += u[k * n + i] * u[k * n + j];
+                }
+                assert!((s - inv[i * n + j]).abs() < 1e-7);
+            }
+        }
+        // U is upper triangular
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(u[i * n + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn dampen_fixes_dead_rows() {
+        let n = 3;
+        let mut h = vec![0.0f64; 9];
+        h[0] = 4.0;
+        h[4] = 0.0; // dead feature
+        h[8] = 2.0;
+        dampen(&mut h, n, 0.01);
+        assert!(h[4] >= 1.0);
+        assert!(cholesky(&h, n).is_some());
+    }
+}

