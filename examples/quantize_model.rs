@@ -1,7 +1,7 @@
 //! End-to-end driver: load the build-time-trained transformer, quantize it
 //! with the paper's methods, and evaluate perplexity — through BOTH the
 //! pure-Rust forward and the AOT JAX/Pallas graph on PJRT, proving all
-//! three layers compose. Results are recorded in EXPERIMENTS.md.
+//! three layers compose. Results are recorded in `artifacts/runs.csv`.
 //!
 //! Run (after `make artifacts`):
 //!   cargo run --release --example quantize_model
@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
         let ppl_rust = perplexity(&dense, &heldout, windows).ppl;
 
         // L2/L1 evaluation path (PJRT executing the lowered JAX+Pallas HLO)
-        let exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &dense)?;
+        let mut exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &dense)?;
         let ppl_pjrt = exec.perplexity(&mut rt, &heldout, windows)?;
 
         let bits = if qm.matrices.is_empty() { 16.0 } else { rep.paper_equivalent_bits };

@@ -1,0 +1,81 @@
+//! Decode-path bench: packed vs dense KV-cached decode throughput
+//! (tokens/s at batch 1/4/16) — tracks the serving hot path of
+//! `examples/serve_quantized.rs` in `target/claq-bench.csv` (throughput is
+//! reported as Melem/s where an "elem" is one decoded token).
+
+use claq::model::exec::{decode_step, prefill, ExecModel, ExecState, KvCache};
+use claq::model::quantized::QuantizedModel;
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::Method;
+use claq::quant::gptq::quantize_matrix;
+use claq::util::benchlib::{black_box, Bench};
+use claq::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Quantize every projection with the CLAQ*-2.12 plan, calibration-free
+/// (identity Hessian) — representative planes/codebooks at bench speed.
+fn quantize_fast(model: &Model) -> QuantizedModel {
+    let method = Method::fusion_2_12();
+    let mut matrices = HashMap::new();
+    for id in model.matrix_ids() {
+        let w = model.matrix(id);
+        let plan = method.plan_for(w, None).expect("plan");
+        matrices.insert(id, quantize_matrix(w, None, &plan));
+    }
+    QuantizedModel {
+        base: model.clone(),
+        matrices,
+        awq_scales: HashMap::new(),
+        method_name: method.name(),
+    }
+}
+
+fn bench_backend(b: &mut Bench, em: &ExecModel, label: &str) {
+    let cfg = em.config;
+    let prompt_len = 32usize;
+    let mut state = ExecState::new(cfg);
+    let prompt: Vec<u16> = (0..prompt_len as u16).map(|i| (i * 7) % cfg.vocab as u16).collect();
+
+    b.run_with_elems(&format!("{label} prefill seq={prompt_len}"), Some(prompt_len as u64), || {
+        let mut cache = KvCache::new(&cfg);
+        black_box(prefill(em, &mut cache, &prompt, &mut state));
+    });
+
+    for &batch in &[1usize, 4, 16] {
+        let mut caches: Vec<KvCache> = (0..batch)
+            .map(|_| {
+                let mut c = KvCache::new(&cfg);
+                let _ = prefill(em, &mut c, &prompt, &mut state);
+                c
+            })
+            .collect();
+        let toks: Vec<u16> = (0..batch as u16).map(|i| i % cfg.vocab as u16).collect();
+        b.run_with_elems(&format!("{label} decode batch={batch}"), Some(batch as u64), || {
+            if caches[0].len() >= cfg.max_seq {
+                for c in caches.iter_mut() {
+                    c.truncate(prompt_len);
+                }
+            }
+            black_box(decode_step(em, &mut caches, &toks, &mut state));
+        });
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("decode");
+    let cfg = TransformerConfig::tiny_l();
+    let model = Model::random(cfg, &mut Rng::new(6));
+    let qm = quantize_fast(&model);
+
+    let packed = qm.to_exec();
+    let dense = ExecModel::dense(&qm.to_dense());
+    println!(
+        "projection weights: packed {:.2} MB vs dense {:.2} MB",
+        packed.projection_bytes() as f64 / 1e6,
+        dense.projection_bytes() as f64 / 1e6
+    );
+
+    bench_backend(&mut b, &packed, "packed");
+    bench_backend(&mut b, &dense, "dense");
+    b.finish();
+}

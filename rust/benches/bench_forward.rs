@@ -30,7 +30,7 @@ fn main() {
     if dir.join("model_l.hlo.txt").exists() && dir.join("weights_l.bin").exists() {
         let trained = load_model(&dir.join("weights_l.bin")).unwrap();
         let mut rt = Runtime::cpu().unwrap();
-        let exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &trained).unwrap();
+        let mut exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &trained).unwrap();
         let _ = exec.logits(&mut rt, &tokens).unwrap(); // compile warm-up
         b.run_with_elems("pjrt forward tiny-L seq=128", Some(toks), || {
             black_box(exec.logits(&mut rt, black_box(&tokens)).unwrap());

@@ -34,8 +34,8 @@ pub struct PipelineOpts {
     /// Incremental calibration: keep per-segment hidden states and advance
     /// them one layer at a time (2 layer-steps per layer) instead of
     /// re-running a full forward per layer (L layer-steps + LM head per
-    /// layer). Same math, ~L/2× less calibration work — see EXPERIMENTS.md
-    /// §Perf. The non-incremental path is kept for the ablation bench.
+    /// layer). Same math, ~L/2× less calibration work — see DESIGN.md §5.
+    /// The non-incremental path is kept for the ablation bench.
     pub incremental: bool,
 }
 

@@ -1,6 +1,6 @@
 //! Run registry: every experiment the harness executes is appended as a
 //! CSV row to `artifacts/runs.csv` with its configuration and metrics, so
-//! EXPERIMENTS.md numbers are traceable to recorded runs.
+//! every reported number is traceable to a recorded run (DESIGN.md §5).
 
 use anyhow::{Context, Result};
 use std::io::Write;

@@ -3,8 +3,10 @@
 //! length; NLL is accumulated over every next-token prediction inside each
 //! window; PPL = exp(total NLL / total predicted tokens).
 
+use crate::model::exec::{prefill, ExecModel, ExecState, KvCache};
 use crate::model::forward::{sequence_nll, ForwardState};
 use crate::model::Model;
+use crate::util::stats::log_sum_exp;
 
 /// Perplexity result.
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +30,36 @@ pub fn perplexity(model: &Model, stream: &[u16], max_windows: usize) -> PplResul
         let (nll, n) = sequence_nll(model, chunk, &mut state);
         total_nll += nll;
         total_tok += n;
+        windows += 1;
+        if max_windows > 0 && windows >= max_windows {
+            break;
+        }
+    }
+    let per_tok = total_nll / total_tok.max(1) as f64;
+    PplResult { ppl: per_tok.exp(), nll_per_token: per_tok, tokens: total_tok, windows }
+}
+
+/// Perplexity through an [`ExecModel`] backend — the packed serving path
+/// scores held-out text without ever materializing dense weights (for the
+/// dense backend this mirrors [`perplexity`] exactly). Windows run through
+/// [`prefill`] with a reset KV cache each.
+pub fn perplexity_exec(model: &ExecModel, stream: &[u16], max_windows: usize) -> PplResult {
+    let seq = model.config.max_seq;
+    assert!(stream.len() >= seq, "stream shorter than one window");
+    let mut state = ExecState::new(model.config);
+    let mut cache = KvCache::new(&model.config);
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0usize;
+    let mut windows = 0usize;
+    for chunk in stream.chunks_exact(seq) {
+        cache.reset();
+        let logits = prefill(model, &mut cache, chunk, &mut state);
+        for t in 0..seq - 1 {
+            let row = logits.row(t);
+            let lse = log_sum_exp(row);
+            total_nll += lse - row[chunk[t + 1] as usize] as f64;
+        }
+        total_tok += seq - 1;
         windows += 1;
         if max_windows > 0 && windows >= max_windows {
             break;
@@ -84,5 +116,48 @@ mod tests {
         let a = perplexity(&m, &stream, 0);
         let b = perplexity(&m, &stream, 0);
         assert_eq!(a.ppl, b.ppl);
+    }
+
+    #[test]
+    fn exec_dense_matches_reference() {
+        let m = small_model();
+        let stream = generate(CorpusKind::SynthWiki, 256, 4);
+        let a = perplexity(&m, &stream, 0);
+        let b = perplexity_exec(&ExecModel::dense(&m), &stream, 0);
+        assert_eq!(a.windows, b.windows);
+        assert_eq!(a.tokens, b.tokens);
+        assert!((a.ppl / b.ppl - 1.0).abs() < 1e-5, "{} vs {}", a.ppl, b.ppl);
+    }
+
+    #[test]
+    fn exec_packed_matches_dense_path() {
+        // Acceptance gate: eval::perplexity on the packed path matches the
+        // dense path to within float tolerance.
+        use crate::model::quantized::QuantizedModel;
+        use crate::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
+        use std::collections::HashMap;
+        let m = small_model();
+        let mut matrices = HashMap::new();
+        for id in m.matrix_ids() {
+            let w = m.matrix(id);
+            let mut plan = MatrixPlan::uniform(w.cols, 3, CentroidRule::KMeans, false);
+            plan.reserve = vec![2; w.cols];
+            matrices.insert(id, quantize_matrix(w, None, &plan));
+        }
+        let qm = QuantizedModel {
+            base: m.clone(),
+            matrices,
+            awq_scales: HashMap::new(),
+            method_name: "test-3b".into(),
+        };
+        let stream = generate(CorpusKind::SynthC4, 256, 5);
+        let dense = perplexity(&qm.to_dense(), &stream, 0);
+        let packed = perplexity_exec(&qm.to_exec(), &stream, 0);
+        assert!(
+            (dense.ppl / packed.ppl - 1.0).abs() < 1e-4,
+            "dense {} vs packed {}",
+            dense.ppl,
+            packed.ppl
+        );
     }
 }

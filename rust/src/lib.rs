@@ -2,13 +2,15 @@
 //!
 //! A three-layer Rust + JAX + Pallas reproduction of
 //! *CLAQ: Pushing the Limits of Low-Bit Post-Training Quantization for
-//! LLMs* (Wang et al., 2024). See DESIGN.md for the system inventory and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! LLMs* (Wang et al., 2024). See DESIGN.md for the system inventory;
+//! measured results live in the run registry (`artifacts/runs.csv`).
 //!
 //! * [`quant`] — the paper's contribution: K-Means codebooks, Outlier
 //!   Order, adaptive precision, outlier reservation, fusion presets, plus
 //!   the GPTQ substrate and the RTN/GPTQ/AWQ baselines.
-//! * [`model`] — the LLaMA-style transformer the experiments quantize.
+//! * [`model`] — the LLaMA-style transformer the experiments quantize,
+//!   including the `LinearOp` execution backends (dense f32 and packed
+//!   CLAQ planes) and the KV-cached serving path (`model::exec`).
 //! * [`data`] — synthetic corpora / calibration / zero-shot tasks.
 //! * [`eval`] — perplexity and zero-shot harnesses.
 //! * [`tensor`], [`util`] — from-scratch substrates (matrix/linalg, RNG,

@@ -1,0 +1,552 @@
+//! Packed-execution layer: the serving counterpart of `forward.rs`.
+//!
+//! An [`ExecModel`] is the transformer with every attention/MLP projection
+//! behind the [`LinearOp`] trait, so the same forward code runs off dense
+//! f32 weights *or* straight off the packed CLAQ planes (embedding, norms,
+//! and LM head stay FP, as in the paper). On top of it sits the
+//! incremental decode path the scoring-only harness never needed:
+//!
+//! * [`KvCache`] — per-request key/value cache (n_layers × max_seq × d).
+//! * [`prefill`] — run a prompt chunk once, populating the cache and
+//!   returning logits for every prompt position.
+//! * [`decode_step`] — advance a *batch* of requests by one token each.
+//!   Batching matters for the packed backend: a weight column is decoded
+//!   once per step and the rank-1 update is applied to every sequence in
+//!   the batch, amortizing plane unpacking across the batch.
+//!
+//! Both paths reuse the RMSNorm/RoPE/SiLU kernels of `forward.rs`, so the
+//! dense ExecModel agrees with [`forward`](super::forward::forward) to
+//! rounding error (pinned by tests below).
+
+use super::forward::{rmsnorm, rope_row, rope_tables, silu};
+use super::linear::{DenseLinear, LinearOp};
+use super::{Model, TransformerConfig};
+use crate::tensor::Matrix;
+
+/// One decoder layer with backend-agnostic projections.
+pub struct ExecLayer {
+    pub attn_norm: Vec<f32>,
+    pub wq: Box<dyn LinearOp>,
+    pub wk: Box<dyn LinearOp>,
+    pub wv: Box<dyn LinearOp>,
+    pub wo: Box<dyn LinearOp>,
+    pub mlp_norm: Vec<f32>,
+    pub w_gate: Box<dyn LinearOp>,
+    pub w_up: Box<dyn LinearOp>,
+    pub w_down: Box<dyn LinearOp>,
+}
+
+/// The executable model: FP embedding/norms/LM-head plus `LinearOp`
+/// projections (dense or packed).
+pub struct ExecModel {
+    pub config: TransformerConfig,
+    /// (vocab × d_model), FP.
+    pub tok_embed: Matrix,
+    pub layers: Vec<ExecLayer>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Box<dyn LinearOp>,
+    /// Backend label for reports ("dense" / "packed").
+    pub backend: &'static str,
+}
+
+impl ExecModel {
+    /// Wrap a dense model (the reference backend).
+    pub fn dense(model: &Model) -> Self {
+        let boxed = |w: &Matrix| -> Box<dyn LinearOp> { Box::new(DenseLinear::new(w.clone())) };
+        let layers = model
+            .layers
+            .iter()
+            .map(|l| ExecLayer {
+                attn_norm: l.attn_norm.clone(),
+                wq: boxed(&l.wq),
+                wk: boxed(&l.wk),
+                wv: boxed(&l.wv),
+                wo: boxed(&l.wo),
+                mlp_norm: l.mlp_norm.clone(),
+                w_gate: boxed(&l.w_gate),
+                w_up: boxed(&l.w_up),
+                w_down: boxed(&l.w_down),
+            })
+            .collect();
+        Self {
+            config: model.config,
+            tok_embed: model.tok_embed.clone(),
+            layers,
+            final_norm: model.final_norm.clone(),
+            lm_head: Box::new(DenseLinear::new(model.lm_head.clone())),
+            backend: "dense",
+        }
+    }
+
+    /// Resident bytes of the quantizable projections (the part the packed
+    /// backend shrinks; FP embedding/head are identical across backends).
+    pub fn projection_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.wq.weight_bytes()
+                    + l.wk.weight_bytes()
+                    + l.wv.weight_bytes()
+                    + l.wo.weight_bytes()
+                    + l.w_gate.weight_bytes()
+                    + l.w_up.weight_bytes()
+                    + l.w_down.weight_bytes()
+            })
+            .sum()
+    }
+}
+
+/// Per-request key/value cache over all layers.
+pub struct KvCache {
+    n_layers: usize,
+    d: usize,
+    max_seq: usize,
+    len: usize,
+    /// (n_layers × max_seq × d) each.
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(cfg: &TransformerConfig) -> Self {
+        let n = cfg.n_layers * cfg.max_seq * cfg.d_model;
+        Self {
+            n_layers: cfg.n_layers,
+            d: cfg.d_model,
+            max_seq: cfg.max_seq,
+            len: 0,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    /// Cached positions so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum cacheable positions.
+    pub fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Drop all cached positions (start a fresh sequence).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Roll back to the first `len` positions (e.g. re-decode from a
+    /// shared prefix).
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate beyond cached length");
+        self.len = len;
+    }
+
+    /// Resident bytes of the cache buffers.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    #[inline]
+    fn at(&self, layer: usize, pos: usize) -> usize {
+        debug_assert!(layer < self.n_layers && pos < self.max_seq);
+        (layer * self.max_seq + pos) * self.d
+    }
+
+    #[inline]
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        let i = self.at(layer, pos);
+        &self.k[i..i + self.d]
+    }
+
+    #[inline]
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        let i = self.at(layer, pos);
+        &self.v[i..i + self.d]
+    }
+
+    #[inline]
+    fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let i = self.at(layer, pos);
+        self.k[i..i + self.d].copy_from_slice(k);
+        self.v[i..i + self.d].copy_from_slice(v);
+    }
+}
+
+/// Scratch buffers for the exec paths; `rows` capacity must cover both the
+/// longest prefill chunk and the largest decode batch.
+pub struct ExecState {
+    cfg: TransformerConfig,
+    cap: usize,
+    x: Vec<f32>,      // (rows × d)
+    normed: Vec<f32>, // (rows × d)
+    q: Vec<f32>,      // (rows × d)
+    k: Vec<f32>,      // (rows × d)
+    v: Vec<f32>,      // (rows × d)
+    attn: Vec<f32>,   // (rows × d)
+    proj: Vec<f32>,   // (rows × d)
+    gate: Vec<f32>,   // (rows × d_ff)
+    up: Vec<f32>,     // (rows × d_ff)
+    scores: Vec<f32>, // (max_seq)
+    cos: Vec<f32>,    // (max_seq × head_dim/2)
+    sin: Vec<f32>,
+    scratch: Vec<f32>, // LinearOp backend workspace
+}
+
+impl ExecState {
+    /// State sized for full-context prefill (rows = max_seq), which also
+    /// covers any decode batch up to max_seq requests.
+    pub fn new(cfg: TransformerConfig) -> Self {
+        Self::with_capacity(cfg, cfg.max_seq)
+    }
+
+    /// State with explicit row capacity (≥ prefill chunk length and ≥
+    /// decode batch size; max_seq-position RoPE/score tables regardless).
+    pub fn with_capacity(cfg: TransformerConfig, rows: usize) -> Self {
+        let cap = rows.max(1);
+        let (d, f, s) = (cfg.d_model, cfg.d_ff, cfg.max_seq);
+        let (cos, sin) = rope_tables(&cfg, s);
+        Self {
+            cfg,
+            cap,
+            x: vec![0.0; cap * d],
+            normed: vec![0.0; cap * d],
+            q: vec![0.0; cap * d],
+            k: vec![0.0; cap * d],
+            v: vec![0.0; cap * d],
+            attn: vec![0.0; cap * d],
+            proj: vec![0.0; cap * d],
+            gate: vec![0.0; cap * f],
+            up: vec![0.0; cap * f],
+            scores: vec![0.0; s],
+            cos,
+            sin,
+            scratch: Vec::new(),
+        }
+    }
+}
+
+/// Attention of one query row (`st.q[row]` at absolute `pos`) against the
+/// cached keys/values `0..=pos` of `layer`, mixed into `st.attn[row]`.
+fn attend_cached(st: &mut ExecState, cache: &KvCache, layer: usize, row: usize, pos: usize) {
+    let d = st.cfg.d_model;
+    let nh = st.cfg.n_heads;
+    let hd = st.cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    for h in 0..nh {
+        let off = h * hd;
+        for u in 0..=pos {
+            let krow = cache.k_row(layer, u);
+            let qrow = &st.q[row * d + off..row * d + off + hd];
+            let mut s = 0.0f32;
+            for i in 0..hd {
+                s += qrow[i] * krow[off + i];
+            }
+            st.scores[u] = s * scale;
+        }
+        let m = st.scores[..=pos].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for u in 0..=pos {
+            let e = (st.scores[u] - m).exp();
+            st.scores[u] = e;
+            z += e;
+        }
+        let inv_z = 1.0 / z;
+        let out = &mut st.attn[row * d + off..row * d + off + hd];
+        out.fill(0.0);
+        for u in 0..=pos {
+            let p = st.scores[u] * inv_z;
+            let vrow = cache.v_row(layer, u);
+            for i in 0..hd {
+                out[i] += p * vrow[off + i];
+            }
+        }
+    }
+}
+
+/// Final RMSNorm + LM head over `rows` hidden-state rows → logits.
+fn head_logits(model: &ExecModel, st: &mut ExecState, rows: usize) -> Matrix {
+    let cfg = &model.config;
+    let d = cfg.d_model;
+    rmsnorm(&st.x, &model.final_norm, cfg.eps, rows, d, &mut st.normed);
+    let mut logits = Matrix::zeros(rows, cfg.vocab);
+    model
+        .lm_head
+        .forward_into(&st.normed[..rows * d], rows, &mut logits.data, &mut st.scratch);
+    logits
+}
+
+/// Run `tokens` through the model starting at the cache's current length,
+/// appending K/V for every position; returns logits (seq × vocab). The
+/// cache advances by `tokens.len()`; call with a fresh/reset cache for a
+/// full-sequence forward.
+pub fn prefill(
+    model: &ExecModel,
+    cache: &mut KvCache,
+    tokens: &[u16],
+    st: &mut ExecState,
+) -> Matrix {
+    let cfg = &model.config;
+    assert_eq!(*cfg, st.cfg, "state built for a different config");
+    let seq = tokens.len();
+    let p0 = cache.len;
+    assert!(seq > 0 && seq <= st.cap, "prefill chunk {seq} exceeds state capacity {}", st.cap);
+    assert!(p0 + seq <= cache.max_seq, "prompt overflows KV cache ({p0}+{seq})");
+    assert_eq!(cache.n_layers, cfg.n_layers);
+    assert_eq!(cache.d, cfg.d_model);
+    let d = cfg.d_model;
+    let nh = cfg.n_heads;
+    let hd = cfg.head_dim();
+
+    for (t, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        assert!(tok < cfg.vocab, "token {tok} out of vocab");
+        st.x[t * d..(t + 1) * d].copy_from_slice(model.tok_embed.row(tok));
+    }
+
+    for (li, layer) in model.layers.iter().enumerate() {
+        // --- attention block ---
+        rmsnorm(&st.x, &layer.attn_norm, cfg.eps, seq, d, &mut st.normed);
+        layer.wq.forward_into(&st.normed, seq, &mut st.q, &mut st.scratch);
+        layer.wk.forward_into(&st.normed, seq, &mut st.k, &mut st.scratch);
+        layer.wv.forward_into(&st.normed, seq, &mut st.v, &mut st.scratch);
+        for t in 0..seq {
+            let pos = p0 + t;
+            rope_row(&mut st.q[t * d..(t + 1) * d], pos, &st.cos, &st.sin, nh, hd);
+            rope_row(&mut st.k[t * d..(t + 1) * d], pos, &st.cos, &st.sin, nh, hd);
+            cache.write(li, pos, &st.k[t * d..(t + 1) * d], &st.v[t * d..(t + 1) * d]);
+        }
+        for t in 0..seq {
+            attend_cached(st, cache, li, t, p0 + t);
+        }
+        layer.wo.forward_into(&st.attn[..seq * d], seq, &mut st.proj, &mut st.scratch);
+        for i in 0..seq * d {
+            st.x[i] += st.proj[i];
+        }
+
+        // --- MLP block ---
+        rmsnorm(&st.x, &layer.mlp_norm, cfg.eps, seq, d, &mut st.normed);
+        layer.w_gate.forward_into(&st.normed, seq, &mut st.gate, &mut st.scratch);
+        layer.w_up.forward_into(&st.normed, seq, &mut st.up, &mut st.scratch);
+        let f = cfg.d_ff;
+        for i in 0..seq * f {
+            st.gate[i] = silu(st.gate[i]) * st.up[i];
+        }
+        layer.w_down.forward_into(&st.gate[..seq * f], seq, &mut st.proj, &mut st.scratch);
+        for i in 0..seq * d {
+            st.x[i] += st.proj[i];
+        }
+    }
+    cache.len = p0 + seq;
+    head_logits(model, st, seq)
+}
+
+/// Advance a batch of requests by one token each: `tokens[b]` is appended
+/// to `caches[b]`. Returns next-token logits (batch × vocab). All batch
+/// rows go through each projection in a single `LinearOp` call, so packed
+/// weight columns are decoded once per step for the whole batch.
+pub fn decode_step(
+    model: &ExecModel,
+    caches: &mut [KvCache],
+    tokens: &[u16],
+    st: &mut ExecState,
+) -> Matrix {
+    let cfg = &model.config;
+    assert_eq!(*cfg, st.cfg, "state built for a different config");
+    let bn = tokens.len();
+    assert!(bn > 0 && bn == caches.len(), "batch/caches mismatch");
+    assert!(bn <= st.cap, "batch {bn} exceeds state capacity {}", st.cap);
+    let d = cfg.d_model;
+    let nh = cfg.n_heads;
+    let hd = cfg.head_dim();
+    for c in caches.iter() {
+        assert_eq!(c.n_layers, cfg.n_layers);
+        assert_eq!(c.d, d);
+        assert!(c.len < c.max_seq, "KV cache full");
+    }
+
+    for (b, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        assert!(tok < cfg.vocab, "token {tok} out of vocab");
+        st.x[b * d..(b + 1) * d].copy_from_slice(model.tok_embed.row(tok));
+    }
+
+    for (li, layer) in model.layers.iter().enumerate() {
+        // --- attention block ---
+        rmsnorm(&st.x, &layer.attn_norm, cfg.eps, bn, d, &mut st.normed);
+        layer.wq.forward_into(&st.normed, bn, &mut st.q, &mut st.scratch);
+        layer.wk.forward_into(&st.normed, bn, &mut st.k, &mut st.scratch);
+        layer.wv.forward_into(&st.normed, bn, &mut st.v, &mut st.scratch);
+        for b in 0..bn {
+            let pos = caches[b].len;
+            rope_row(&mut st.q[b * d..(b + 1) * d], pos, &st.cos, &st.sin, nh, hd);
+            rope_row(&mut st.k[b * d..(b + 1) * d], pos, &st.cos, &st.sin, nh, hd);
+            caches[b].write(li, pos, &st.k[b * d..(b + 1) * d], &st.v[b * d..(b + 1) * d]);
+        }
+        for b in 0..bn {
+            let pos = caches[b].len;
+            attend_cached(st, &caches[b], li, b, pos);
+        }
+        layer.wo.forward_into(&st.attn[..bn * d], bn, &mut st.proj, &mut st.scratch);
+        for i in 0..bn * d {
+            st.x[i] += st.proj[i];
+        }
+
+        // --- MLP block ---
+        rmsnorm(&st.x, &layer.mlp_norm, cfg.eps, bn, d, &mut st.normed);
+        layer.w_gate.forward_into(&st.normed, bn, &mut st.gate, &mut st.scratch);
+        layer.w_up.forward_into(&st.normed, bn, &mut st.up, &mut st.scratch);
+        let f = cfg.d_ff;
+        for i in 0..bn * f {
+            st.gate[i] = silu(st.gate[i]) * st.up[i];
+        }
+        layer.w_down.forward_into(&st.gate[..bn * f], bn, &mut st.proj, &mut st.scratch);
+        for i in 0..bn * d {
+            st.x[i] += st.proj[i];
+        }
+    }
+    for c in caches.iter_mut() {
+        c.len += 1;
+    }
+    head_logits(model, st, bn)
+}
+
+/// Greedy next-token choice from one logits row.
+pub fn argmax(row: &[f32]) -> u16 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::{forward, ForwardState};
+    use crate::util::rng::Rng;
+
+    fn small_model(seed: u64) -> Model {
+        let cfg = TransformerConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+            rope_theta: 10000.0,
+            eps: 1e-5,
+        };
+        Model::random(cfg, &mut Rng::new(seed))
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn dense_prefill_matches_forward() {
+        let m = small_model(1);
+        let em = ExecModel::dense(&m);
+        let toks = [3u16, 7, 1, 30, 12, 9, 9, 2];
+        let mut fstate = ForwardState::new(m.config);
+        let want = forward(&m, &toks, &mut fstate);
+        let mut st = ExecState::new(m.config);
+        let mut cache = KvCache::new(&m.config);
+        let got = prefill(&em, &mut cache, &toks, &mut st);
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        assert_eq!(cache.len(), toks.len());
+        close(&got.data, &want.data, 1e-5);
+    }
+
+    #[test]
+    fn decode_steps_match_full_prefill() {
+        // prefill(prefix) + decode_step per remaining token must reproduce
+        // the last-row logits of a full prefill at every position.
+        let m = small_model(2);
+        let em = ExecModel::dense(&m);
+        let toks: Vec<u16> = vec![5, 1, 8, 30, 2, 2, 17, 9, 4, 11];
+        let mut st = ExecState::new(m.config);
+
+        let mut full_cache = KvCache::new(&m.config);
+        let full = prefill(&em, &mut full_cache, &toks, &mut st);
+
+        let split = 4;
+        let mut cache = KvCache::new(&m.config);
+        let pre = prefill(&em, &mut cache, &toks[..split], &mut st);
+        close(pre.row(split - 1), full.row(split - 1), 1e-5);
+        let mut caches = vec![cache];
+        for (i, &tok) in toks[split..].iter().enumerate() {
+            let logits = decode_step(&em, &mut caches, &[tok], &mut st);
+            close(logits.row(0), full.row(split + i), 1e-5);
+        }
+        assert_eq!(caches[0].len(), toks.len());
+    }
+
+    #[test]
+    fn batched_decode_matches_single() {
+        let m = small_model(3);
+        let em = ExecModel::dense(&m);
+        let prompts: [&[u16]; 3] = [&[1, 2, 3], &[9, 8, 7, 6, 5], &[31, 0]];
+        let next = [4u16, 4, 4];
+        let mut st = ExecState::new(m.config);
+
+        // individually
+        let mut singles = Vec::new();
+        for (p, &n) in prompts.iter().zip(&next) {
+            let mut cache = KvCache::new(&m.config);
+            let _ = prefill(&em, &mut cache, p, &mut st);
+            let mut cs = vec![cache];
+            singles.push(decode_step(&em, &mut cs, &[n], &mut st));
+        }
+
+        // batched
+        let mut caches: Vec<KvCache> = prompts
+            .iter()
+            .map(|p| {
+                let mut c = KvCache::new(&m.config);
+                let _ = prefill(&em, &mut c, p, &mut st);
+                c
+            })
+            .collect();
+        let batched = decode_step(&em, &mut caches, &next, &mut st);
+        for (b, single) in singles.iter().enumerate() {
+            close(batched.row(b), single.row(0), 1e-6);
+            assert_eq!(caches[b].len(), prompts[b].len() + 1);
+        }
+    }
+
+    #[test]
+    fn cache_reset_and_truncate() {
+        let m = small_model(4);
+        let em = ExecModel::dense(&m);
+        let mut st = ExecState::new(m.config);
+        let mut cache = KvCache::new(&m.config);
+        let a = prefill(&em, &mut cache, &[1, 2, 3, 4], &mut st);
+        // truncate back to the 2-token prefix and replay: same logits
+        cache.truncate(2);
+        let b = prefill(&em, &mut cache, &[3, 4], &mut st);
+        close(b.row(1), a.row(3), 1e-6);
+        cache.reset();
+        assert!(cache.is_empty());
+        let c = prefill(&em, &mut cache, &[1, 2, 3, 4], &mut st);
+        close(&c.data, &a.data, 1e-6);
+    }
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.0, 3.0, -1.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

@@ -3,6 +3,7 @@
 //! the evaluation reference path; the PJRT runtime executes the identical
 //! computation lowered from JAX, and integration tests check the two agree.
 
+use super::linear::LinearOp;
 use super::{Model, TransformerConfig};
 use crate::tensor::{matmul_into, Matrix};
 use crate::util::stats::log_sum_exp;
@@ -23,13 +24,31 @@ pub struct ForwardState {
     scores: Vec<f32>,  // (seq) one query row at a time
     cos: Vec<f32>,     // (seq × head_dim/2) RoPE table
     sin: Vec<f32>,
+    scratch: Vec<f32>, // LinearOp backend workspace
+}
+
+/// Precompute the RoPE rotation table for positions `0..max_pos`:
+/// (cos, sin), each (max_pos × head_dim/2).
+pub(crate) fn rope_tables(cfg: &TransformerConfig, max_pos: usize) -> (Vec<f32>, Vec<f32>) {
+    let hd2 = cfg.head_dim() / 2;
+    let mut cos = vec![0.0f32; max_pos * hd2];
+    let mut sin = vec![0.0f32; max_pos * hd2];
+    for pos in 0..max_pos {
+        for i in 0..hd2 {
+            let freq = 1.0 / cfg.rope_theta.powf(2.0 * i as f32 / cfg.head_dim() as f32);
+            let angle = pos as f32 * freq;
+            cos[pos * hd2 + i] = angle.cos();
+            sin[pos * hd2 + i] = angle.sin();
+        }
+    }
+    (cos, sin)
 }
 
 impl ForwardState {
     pub fn new(cfg: TransformerConfig) -> Self {
         let (s, d, f) = (cfg.max_seq, cfg.d_model, cfg.d_ff);
-        let hd2 = cfg.head_dim() / 2;
-        let mut st = Self {
+        let (cos, sin) = rope_tables(&cfg, s);
+        Self {
             cfg,
             x: vec![0.0; s * d],
             normed: vec![0.0; s * d],
@@ -41,24 +60,15 @@ impl ForwardState {
             gate: vec![0.0; s * f],
             up: vec![0.0; s * f],
             scores: vec![0.0; s],
-            cos: vec![0.0; s * hd2],
-            sin: vec![0.0; s * hd2],
-        };
-        // Precompute the RoPE rotation table.
-        for pos in 0..s {
-            for i in 0..hd2 {
-                let freq = 1.0 / cfg.rope_theta.powf(2.0 * i as f32 / cfg.head_dim() as f32);
-                let angle = pos as f32 * freq;
-                st.cos[pos * hd2 + i] = angle.cos();
-                st.sin[pos * hd2 + i] = angle.sin();
-            }
+            cos,
+            sin,
+            scratch: Vec::new(),
         }
-        st
     }
 }
 
 /// y = rmsnorm(x) ⊙ w, row-wise over (seq × d).
-fn rmsnorm(x: &[f32], w: &[f32], eps: f32, seq: usize, d: usize, out: &mut [f32]) {
+pub(crate) fn rmsnorm(x: &[f32], w: &[f32], eps: f32, seq: usize, d: usize, out: &mut [f32]) {
     for t in 0..seq {
         let row = &x[t * d..(t + 1) * d];
         let ms: f32 = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
@@ -75,43 +85,41 @@ fn rmsnorm(x: &[f32], w: &[f32], eps: f32, seq: usize, d: usize, out: &mut [f32]
 /// uses the same one.
 fn rope(x: &mut [f32], cos: &[f32], sin: &[f32], seq: usize, n_heads: usize, head_dim: usize) {
     let d = n_heads * head_dim;
-    let hd2 = head_dim / 2;
     for t in 0..seq {
-        for h in 0..n_heads {
-            let base = t * d + h * head_dim;
-            for i in 0..hd2 {
-                let (c, s) = (cos[t * hd2 + i], sin[t * hd2 + i]);
-                let a = x[base + 2 * i];
-                let b = x[base + 2 * i + 1];
-                x[base + 2 * i] = a * c - b * s;
-                x[base + 2 * i + 1] = a * s + b * c;
-            }
+        rope_row(&mut x[t * d..(t + 1) * d], t, cos, sin, n_heads, head_dim);
+    }
+}
+
+/// Apply RoPE in place to a single (d)-row at absolute position `pos`.
+pub(crate) fn rope_row(
+    x: &mut [f32],
+    pos: usize,
+    cos: &[f32],
+    sin: &[f32],
+    n_heads: usize,
+    head_dim: usize,
+) {
+    let hd2 = head_dim / 2;
+    for h in 0..n_heads {
+        let base = h * head_dim;
+        for i in 0..hd2 {
+            let (c, s) = (cos[pos * hd2 + i], sin[pos * hd2 + i]);
+            let a = x[base + 2 * i];
+            let b = x[base + 2 * i + 1];
+            x[base + 2 * i] = a * c - b * s;
+            x[base + 2 * i + 1] = a * s + b * c;
         }
     }
 }
 
-/// Linear: out(seq × rows) = x(seq × cols) · Wᵀ(cols × rows).
-fn linear(x: &[f32], w: &Matrix, seq: usize, out: &mut [f32]) {
-    // W is (out_features × in_features); we iterate output rows of W.
-    let (rows, cols) = (w.rows, w.cols);
-    assert!(x.len() >= seq * cols);
-    assert!(out.len() >= seq * rows);
-    for t in 0..seq {
-        let xi = &x[t * cols..(t + 1) * cols];
-        let o = &mut out[t * rows..(t + 1) * rows];
-        for (r, ov) in o.iter_mut().enumerate() {
-            let wrow = w.row(r);
-            let mut acc = 0.0f32;
-            for (a, b) in xi.iter().zip(wrow) {
-                acc += a * b;
-            }
-            *ov = acc;
-        }
-    }
+/// Linear: out(seq × rows) = x(seq × cols) · Wᵀ(cols × rows), dispatched
+/// through the [`LinearOp`] backend (dense or packed).
+fn linear(x: &[f32], w: &dyn LinearOp, seq: usize, out: &mut [f32], scratch: &mut Vec<f32>) {
+    w.forward_into(x, seq, out, scratch)
 }
 
 #[inline]
-fn silu(x: f32) -> f32 {
+pub(crate) fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
@@ -181,9 +189,9 @@ fn forward_impl(
                 cap.seq = seq;
             }
         }
-        linear(&state.normed, &layer.wq, seq, &mut state.q);
-        linear(&state.normed, &layer.wk, seq, &mut state.k);
-        linear(&state.normed, &layer.wv, seq, &mut state.v);
+        linear(&state.normed, &layer.wq, seq, &mut state.q, &mut state.scratch);
+        linear(&state.normed, &layer.wk, seq, &mut state.k, &mut state.scratch);
+        linear(&state.normed, &layer.wv, seq, &mut state.v, &mut state.scratch);
         rope(&mut state.q, &state.cos, &state.sin, seq, nh, hd);
         rope(&mut state.k, &state.cos, &state.sin, seq, nh, hd);
 
@@ -227,7 +235,7 @@ fn forward_impl(
                 cap.wo_in = state.attn[..seq * d].to_vec();
             }
         }
-        linear(&state.attn[..seq * d], &layer.wo, seq, &mut state.proj);
+        linear(&state.attn[..seq * d], &layer.wo, seq, &mut state.proj, &mut state.scratch);
         for i in 0..seq * d {
             state.x[i] += state.proj[i];
         }
@@ -239,8 +247,8 @@ fn forward_impl(
                 cap.mlp_in = state.normed[..seq * d].to_vec();
             }
         }
-        linear(&state.normed, &layer.w_gate, seq, &mut state.gate);
-        linear(&state.normed, &layer.w_up, seq, &mut state.up);
+        linear(&state.normed, &layer.w_gate, seq, &mut state.gate, &mut state.scratch);
+        linear(&state.normed, &layer.w_up, seq, &mut state.up, &mut state.scratch);
         let f = cfg.d_ff;
         for i in 0..seq * f {
             state.gate[i] = silu(state.gate[i]) * state.up[i];
@@ -250,7 +258,7 @@ fn forward_impl(
                 cap.down_in = state.gate[..seq * f].to_vec();
             }
         }
-        linear(&state.gate[..seq * f], &layer.w_down, seq, &mut state.proj);
+        linear(&state.gate[..seq * f], &layer.w_down, seq, &mut state.proj, &mut state.scratch);
         for i in 0..seq * d {
             state.x[i] += state.proj[i];
         }
@@ -259,7 +267,7 @@ fn forward_impl(
     // Final norm + LM head.
     rmsnorm(&state.x, &model.final_norm, cfg.eps, seq, d, &mut state.normed);
     let mut logits = Matrix::zeros(seq, cfg.vocab);
-    linear(&state.normed[..seq * d], &model.lm_head, seq, &mut logits.data);
+    linear(&state.normed[..seq * d], &model.lm_head, seq, &mut logits.data, &mut state.scratch);
     logits
 }
 
@@ -300,9 +308,9 @@ pub fn layer_step(
         c.attn_in = state.normed[..seq * d].to_vec();
         c.seq = seq;
     }
-    linear(&state.normed, &layer.wq, seq, &mut state.q);
-    linear(&state.normed, &layer.wk, seq, &mut state.k);
-    linear(&state.normed, &layer.wv, seq, &mut state.v);
+    linear(&state.normed, &layer.wq, seq, &mut state.q, &mut state.scratch);
+    linear(&state.normed, &layer.wk, seq, &mut state.k, &mut state.scratch);
+    linear(&state.normed, &layer.wv, seq, &mut state.v, &mut state.scratch);
     rope(&mut state.q, &state.cos, &state.sin, seq, nh, hd);
     rope(&mut state.k, &state.cos, &state.sin, seq, nh, hd);
     for h in 0..nh {
@@ -339,7 +347,7 @@ pub fn layer_step(
     if let Some(c) = cap.as_deref_mut() {
         c.wo_in = state.attn[..seq * d].to_vec();
     }
-    linear(&state.attn[..seq * d], &layer.wo, seq, &mut state.proj);
+    linear(&state.attn[..seq * d], &layer.wo, seq, &mut state.proj, &mut state.scratch);
     for i in 0..seq * d {
         x[i] += state.proj[i];
     }
@@ -348,8 +356,8 @@ pub fn layer_step(
     if let Some(c) = cap.as_deref_mut() {
         c.mlp_in = state.normed[..seq * d].to_vec();
     }
-    linear(&state.normed, &layer.w_gate, seq, &mut state.gate);
-    linear(&state.normed, &layer.w_up, seq, &mut state.up);
+    linear(&state.normed, &layer.w_gate, seq, &mut state.gate, &mut state.scratch);
+    linear(&state.normed, &layer.w_up, seq, &mut state.up, &mut state.scratch);
     let f = cfg.d_ff;
     for i in 0..seq * f {
         state.gate[i] = silu(state.gate[i]) * state.up[i];
@@ -357,7 +365,7 @@ pub fn layer_step(
     if let Some(c) = cap.as_deref_mut() {
         c.down_in = state.gate[..seq * f].to_vec();
     }
-    linear(&state.gate[..seq * f], &layer.w_down, seq, &mut state.proj);
+    linear(&state.gate[..seq * f], &layer.w_down, seq, &mut state.proj, &mut state.scratch);
     for i in 0..seq * d {
         x[i] += state.proj[i];
     }

@@ -1,0 +1,354 @@
+//! The `LinearOp` abstraction: the forward pass no longer assumes dense
+//! f32 weights. A linear operator computes `out(seq × O) = x(seq × I) · Wᵀ`
+//! for a weight matrix W stored (O × I); how W is represented is the
+//! implementation's business:
+//!
+//! * [`DenseLinear`] / [`Matrix`] — the dense f32 reference path.
+//! * [`PackedLinear`] — the deployable CLAQ representation: per-column
+//!   bit-packed index planes + codebooks (`quant/packed.rs` layout), with
+//!   reserved outliers applied as a sparse per-column override and AWQ
+//!   activation scales folded in. No dense weight matrix is ever
+//!   materialized; the kernel decodes one column (input feature) at a time
+//!   into a reusable scratch buffer and accumulates a rank-1 update.
+//!
+//! Column-major traversal keeps the floating-point accumulation order
+//! identical to the dense row dot products, so the packed and dense paths
+//! agree to rounding error — the property `tests/packed_exec.rs` pins down.
+
+use crate::quant::gptq::QuantizedMatrix;
+use crate::quant::packed::{decode_plane_into, pack_indices, PackedMatrix};
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// A linear operator `y = x · Wᵀ` over a (rows=out × cols=in) weight.
+pub trait LinearOp: Send + Sync {
+    /// Output features (rows of W).
+    fn out_features(&self) -> usize;
+    /// Input features (cols of W).
+    fn in_features(&self) -> usize;
+    /// `out(seq × out_features) = x(seq × in_features) · Wᵀ`. `scratch` is a
+    /// caller-owned reusable buffer (backends that need per-call workspace
+    /// resize it; the dense path ignores it) so the hot loop allocates
+    /// nothing per token.
+    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut Vec<f32>);
+
+    /// Approximate resident bytes of the weight representation (for the
+    /// serving memory report).
+    fn weight_bytes(&self) -> usize;
+}
+
+/// Dense row-major f32 weights — the reference backend.
+impl LinearOp for Matrix {
+    fn out_features(&self) -> usize {
+        self.rows
+    }
+
+    fn in_features(&self) -> usize {
+        self.cols
+    }
+
+    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], _scratch: &mut Vec<f32>) {
+        let (rows, cols) = (self.rows, self.cols);
+        assert!(x.len() >= seq * cols, "x too short for seq={seq}");
+        assert!(out.len() >= seq * rows, "out too short for seq={seq}");
+        for t in 0..seq {
+            let xi = &x[t * cols..(t + 1) * cols];
+            let o = &mut out[t * rows..(t + 1) * rows];
+            for (r, ov) in o.iter_mut().enumerate() {
+                let wrow = self.row(r);
+                let mut acc = 0.0f32;
+                for (a, b) in xi.iter().zip(wrow) {
+                    acc += a * b;
+                }
+                *ov = acc;
+            }
+        }
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Owning dense backend (a [`Matrix`] behind the trait, for `Box<dyn
+/// LinearOp>` layers).
+pub struct DenseLinear {
+    pub w: Matrix,
+}
+
+impl DenseLinear {
+    pub fn new(w: Matrix) -> Self {
+        Self { w }
+    }
+}
+
+impl LinearOp for DenseLinear {
+    fn out_features(&self) -> usize {
+        self.w.rows
+    }
+
+    fn in_features(&self) -> usize {
+        self.w.cols
+    }
+
+    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut Vec<f32>) {
+        self.w.forward_into(x, seq, out, scratch)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.w.weight_bytes()
+    }
+}
+
+/// One quantized input feature: bit-packed row indices + decoded codebook.
+struct PackedColumn {
+    bits: u8,
+    /// Codebook centroids decoded to f32 (2^bits entries, ≤ 256).
+    centroids: Vec<f32>,
+    /// `rows` indices, `bits` wide, LSB-first (the container plane layout).
+    plane: Vec<u8>,
+}
+
+/// The packed CLAQ execution backend: computes `y = x · dequant(W)ᵀ`
+/// straight from the index planes, applying reserved outliers as a sparse
+/// override and folding AWQ per-column activation scales back out
+/// (quantized weights live in the scaled space; see `model/quantized.rs`).
+pub struct PackedLinear {
+    rows: usize,
+    cols: usize,
+    columns: Vec<PackedColumn>,
+    /// Reserved outliers in CSR-by-column form: for column c the entries
+    /// `out_start[c]..out_start[c+1]` of (out_rows, out_vals).
+    out_start: Vec<usize>,
+    out_rows: Vec<u32>,
+    out_vals: Vec<f32>,
+    /// AWQ per-column scales to divide back out (None for non-AWQ).
+    awq_scales: Option<Vec<f32>>,
+}
+
+impl PackedLinear {
+    /// Build from an in-memory quantized matrix (f32 codebooks — exact
+    /// parity with `QuantizedMatrix::dequantize`). `awq_scales` are the
+    /// per-input-column activation scales of the AWQ path, if any.
+    pub fn from_quantized(qm: &QuantizedMatrix, awq_scales: Option<&[f32]>) -> Self {
+        let (rows, cols) = (qm.rows, qm.cols);
+        assert_eq!(qm.columns.len(), cols);
+        if let Some(s) = awq_scales {
+            assert_eq!(s.len(), cols, "AWQ scales/columns mismatch");
+        }
+        let columns = qm
+            .columns
+            .iter()
+            .map(|qc| {
+                assert_eq!(qc.indices.len(), rows);
+                PackedColumn {
+                    bits: qc.bits,
+                    centroids: qc.codebook.centroids.clone(),
+                    plane: pack_indices(&qc.indices, qc.bits),
+                }
+            })
+            .collect();
+
+        // Outliers arrive sorted by (col, row); bucket them per column.
+        let mut out_start = vec![0usize; cols + 1];
+        for o in &qm.outliers {
+            out_start[o.col as usize + 1] += 1;
+        }
+        for c in 0..cols {
+            out_start[c + 1] += out_start[c];
+        }
+        let mut out_rows = Vec::with_capacity(qm.outliers.len());
+        let mut out_vals = Vec::with_capacity(qm.outliers.len());
+        let mut sorted: Vec<_> = qm.outliers.iter().collect();
+        sorted.sort_by_key(|o| (o.col, o.row));
+        for o in sorted {
+            out_rows.push(o.row);
+            out_vals.push(o.value);
+        }
+
+        Self {
+            rows,
+            cols,
+            columns,
+            out_start,
+            out_rows,
+            out_vals,
+            awq_scales: awq_scales.map(<[f32]>::to_vec),
+        }
+    }
+
+    /// Build from a serialized CLAQ container (codebooks come back through
+    /// f16, exactly as a deployment would see them).
+    pub fn from_container(pm: &PackedMatrix, awq_scales: Option<&[f32]>) -> Result<Self> {
+        let qm = crate::quant::packed::unpack(pm)?;
+        Ok(Self::from_quantized(&qm, awq_scales))
+    }
+
+    pub fn n_outliers(&self) -> usize {
+        self.out_rows.len()
+    }
+
+    /// Decode column `c` (dequant + outlier override + AWQ un-scaling) into
+    /// `out[..rows]` — the per-column gather at the heart of the kernel.
+    fn decode_column_into(&self, c: usize, out: &mut [f32]) {
+        let pc = &self.columns[c];
+        decode_plane_into(&pc.plane, pc.bits, &pc.centroids, &mut out[..self.rows]);
+        for i in self.out_start[c]..self.out_start[c + 1] {
+            out[self.out_rows[i] as usize] = self.out_vals[i];
+        }
+        if let Some(scales) = &self.awq_scales {
+            let s = scales[c];
+            if s != 1.0 {
+                for v in out[..self.rows].iter_mut() {
+                    *v /= s;
+                }
+            }
+        }
+    }
+}
+
+impl LinearOp for PackedLinear {
+    fn out_features(&self) -> usize {
+        self.rows
+    }
+
+    fn in_features(&self) -> usize {
+        self.cols
+    }
+
+    /// Fused codebook-gather matmul. For each input feature c, decode the
+    /// weight column once into scratch and accumulate `y[t,·] += x[t,c] ·
+    /// w_c` for every row of the batch, so plane unpacking is amortized
+    /// across the batch. Accumulation runs in ascending-c order — the same
+    /// order as the dense dot product, keeping the two paths bit-compatible.
+    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut Vec<f32>) {
+        let (rows, cols) = (self.rows, self.cols);
+        assert!(x.len() >= seq * cols, "x too short for seq={seq}");
+        assert!(out.len() >= seq * rows, "out too short for seq={seq}");
+        out[..seq * rows].fill(0.0);
+        if scratch.len() < rows {
+            scratch.resize(rows, 0.0);
+        }
+        for c in 0..cols {
+            self.decode_column_into(c, scratch);
+            let col = &scratch[..rows];
+            for t in 0..seq {
+                let xv = x[t * cols + c];
+                if xv == 0.0 {
+                    continue;
+                }
+                let o = &mut out[t * rows..(t + 1) * rows];
+                for (ov, &wv) in o.iter_mut().zip(col) {
+                    *ov += xv * wv;
+                }
+            }
+        }
+    }
+
+    fn weight_bytes(&self) -> usize {
+        let planes: usize = self
+            .columns
+            .iter()
+            .map(|c| c.plane.len() + c.centroids.len() * std::mem::size_of::<f32>() + 1)
+            .sum();
+        planes
+            + self.out_rows.len() * (std::mem::size_of::<u32>() + std::mem::size_of::<f32>())
+            + self.awq_scales.as_ref().map_or(0, |s| s.len() * std::mem::size_of::<f32>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
+    use crate::util::rng::Rng;
+
+    fn sample(seed: u64, rows: usize, cols: usize, bits: u8, reserve: usize) -> (Matrix, QuantizedMatrix) {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.1);
+        let mut plan = MatrixPlan::uniform(cols, bits, CentroidRule::KMeans, false);
+        plan.reserve = vec![reserve; cols];
+        let qm = quantize_matrix(&w, None, &plan);
+        (w, qm)
+    }
+
+    fn dense_ref(deq: &Matrix, x: &[f32], seq: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; seq * deq.rows];
+        let mut scratch = Vec::new();
+        deq.forward_into(x, seq, &mut out, &mut scratch);
+        out
+    }
+
+    #[test]
+    fn packed_matches_dense_dequant() {
+        let (_, qm) = sample(1, 33, 12, 3, 2);
+        let deq = qm.dequantize();
+        let packed = PackedLinear::from_quantized(&qm, None);
+        assert_eq!(packed.out_features(), 33);
+        assert_eq!(packed.in_features(), 12);
+        assert_eq!(packed.n_outliers(), 2 * 12);
+
+        let mut rng = Rng::new(2);
+        let seq = 5;
+        let mut x = vec![0.0f32; seq * 12];
+        rng.fill_normal(&mut x, 1.0);
+        let want = dense_ref(&deq, &x, seq);
+        let mut got = vec![0.0f32; seq * 33];
+        let mut scratch = Vec::new();
+        packed.forward_into(&x, seq, &mut got, &mut scratch);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn awq_scales_divided_out() {
+        let (_, qm) = sample(3, 20, 8, 4, 0);
+        let scales: Vec<f32> = (0..8).map(|i| 0.5 + 0.25 * i as f32).collect();
+        let mut deq = qm.dequantize();
+        for r in 0..deq.rows {
+            let row = deq.row_mut(r);
+            for (v, &s) in row.iter_mut().zip(&scales) {
+                *v /= s;
+            }
+        }
+        let packed = PackedLinear::from_quantized(&qm, Some(&scales));
+        let mut rng = Rng::new(4);
+        let mut x = vec![0.0f32; 8];
+        rng.fill_normal(&mut x, 1.0);
+        let want = dense_ref(&deq, &x, 1);
+        let mut got = vec![0.0f32; 20];
+        let mut scratch = Vec::new();
+        packed.forward_into(&x, 1, &mut got, &mut scratch);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn container_round_trip_backend() {
+        let (_, qm) = sample(5, 40, 10, 2, 2);
+        let (pm, _) = crate::quant::packed::pack(&qm);
+        let packed = PackedLinear::from_container(&pm, None).unwrap();
+        // container codebooks are f16: compare against the f16-rounded deq
+        let deq = crate::quant::packed::unpack(&pm).unwrap().dequantize();
+        let mut rng = Rng::new(6);
+        let mut x = vec![0.0f32; 3 * 10];
+        rng.fill_normal(&mut x, 1.0);
+        let want = dense_ref(&deq, &x, 3);
+        let mut got = vec![0.0f32; 3 * 40];
+        let mut scratch = Vec::new();
+        packed.forward_into(&x, 3, &mut got, &mut scratch);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn packed_is_smaller_than_dense() {
+        let (w, qm) = sample(7, 128, 64, 2, 2);
+        let packed = PackedLinear::from_quantized(&qm, None);
+        assert!(packed.weight_bytes() < w.weight_bytes() / 4);
+    }
+}

@@ -1,9 +1,13 @@
 //! The LLaMA-architecture transformer the experiments quantize: config,
 //! weight container with binary IO (shared format with the JAX trainer),
-//! a pure-Rust forward pass, and the quantized-model wrapper.
+//! a pure-Rust forward pass, the [`linear`] operator abstraction with its
+//! packed CLAQ execution backend, the KV-cached [`exec`] serving path, and
+//! the quantized-model wrapper.
 
+pub mod exec;
 pub mod forward;
 pub mod io;
+pub mod linear;
 pub mod quantized;
 
 use crate::tensor::Matrix;

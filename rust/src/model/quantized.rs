@@ -1,11 +1,17 @@
 //! The quantized model: every attention/MLP matrix replaced by its packed
 //! CLAQ representation (embedding, norms, and LM head stay FP, as in the
-//! paper). Evaluation dequantizes once into a dense [`Model`] — the CPU
-//! analog of loading a quantized checkpoint onto the accelerator — while
-//! the packed planes drive the size accounting and the fused
-//! dequant-matmul benches.
+//! paper). Two consumers:
+//!
+//! * [`QuantizedModel::to_dense`] materializes a dense [`Model`] — the
+//!   reference evaluation path.
+//! * [`QuantizedModel::to_exec`] builds a packed [`ExecModel`] whose
+//!   forward pass runs straight off the bit-packed planes via
+//!   [`PackedLinear`] — the serving path; no dense weight matrix is ever
+//!   materialized.
 
-use super::{MatrixId, Model};
+use super::exec::{ExecLayer, ExecModel};
+use super::linear::{DenseLinear, LinearOp, PackedLinear};
+use super::{MatrixId, MatrixKind, Model};
 use crate::quant::gptq::QuantizedMatrix;
 use crate::quant::packed::pack;
 use anyhow::Result;
@@ -50,6 +56,44 @@ impl QuantizedModel {
             *m.matrix_mut(id) = deq;
         }
         m
+    }
+
+    /// Build the packed execution model: every quantized matrix becomes a
+    /// [`PackedLinear`] operating on its bit-packed index planes (AWQ
+    /// scales folded in); anything left unquantized (and the LM head)
+    /// stays dense. This is the serving path — `to_dense` never runs.
+    pub fn to_exec(&self) -> ExecModel {
+        let m = &self.base;
+        let op = |id: MatrixId| -> Box<dyn LinearOp> {
+            match self.matrices.get(&id) {
+                Some(qm) => Box::new(PackedLinear::from_quantized(
+                    qm,
+                    self.awq_scales.get(&id).map(Vec::as_slice),
+                )),
+                None => Box::new(DenseLinear::new(m.matrix(id).clone())),
+            }
+        };
+        let layers = (0..m.config.n_layers)
+            .map(|layer| ExecLayer {
+                attn_norm: m.layers[layer].attn_norm.clone(),
+                wq: op(MatrixId { layer, kind: MatrixKind::Wq }),
+                wk: op(MatrixId { layer, kind: MatrixKind::Wk }),
+                wv: op(MatrixId { layer, kind: MatrixKind::Wv }),
+                wo: op(MatrixId { layer, kind: MatrixKind::Wo }),
+                mlp_norm: m.layers[layer].mlp_norm.clone(),
+                w_gate: op(MatrixId { layer, kind: MatrixKind::WGate }),
+                w_up: op(MatrixId { layer, kind: MatrixKind::WUp }),
+                w_down: op(MatrixId { layer, kind: MatrixKind::WDown }),
+            })
+            .collect();
+        ExecModel {
+            config: m.config,
+            tok_embed: m.tok_embed.clone(),
+            layers,
+            final_norm: m.final_norm.clone(),
+            lm_head: Box::new(DenseLinear::new(m.lm_head.clone())),
+            backend: "packed",
+        }
     }
 
     /// Pack every matrix and aggregate size accounting.
@@ -162,11 +206,46 @@ mod tests {
     fn save_dir_writes_files() {
         let m = small();
         let qm = quantize_all(&m, 3);
-        let dir = std::env::temp_dir().join("claq_qmodel_test");
+        // Unique per-run directory: parallel `cargo test` processes (and
+        // threads) must not collide on a shared temp path.
+        static UNIQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "claq_qmodel_test_{}_{}",
+            std::process::id(),
+            UNIQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
         let _ = std::fs::remove_dir_all(&dir);
         qm.save_dir(&dir).unwrap();
         let n = std::fs::read_dir(&dir).unwrap().count();
         assert_eq!(n, m.matrix_ids().len() + 1); // matrices + fp_parts.bin
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn packed_exec_matches_dense_forward() {
+        // Acceptance gate: the PackedLinear forward agrees with the
+        // dense-dequantized forward on a quantized tiny model.
+        use crate::model::exec::{prefill, ExecModel, ExecState, KvCache};
+        let m = small();
+        let qm = quantize_all(&m, 3);
+        let dense = ExecModel::dense(&qm.to_dense());
+        let packed = qm.to_exec();
+        assert_eq!(packed.backend, "packed");
+        // (tiny 16-row matrices amortize codebooks poorly; real shapes are
+        // checked in model/linear.rs — here just require a strict shrink)
+        assert!(packed.projection_bytes() < dense.projection_bytes());
+
+        let toks: Vec<u16> = (0..16).map(|i| (i * 5 % 32) as u16).collect();
+        let mut st = ExecState::new(m.config);
+        let mut c1 = KvCache::new(&m.config);
+        let mut c2 = KvCache::new(&m.config);
+        let a = prefill(&dense, &mut c1, &toks, &mut st);
+        let b = prefill(&packed, &mut c2, &toks, &mut st);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!(
+                (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+                "packed vs dense logits: {x} vs {y}"
+            );
+        }
     }
 }

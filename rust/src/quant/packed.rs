@@ -3,8 +3,8 @@
 //!
 //! The paper reports model sizes in "equivalent bits" (index bits + 16 per
 //! reserved outlier). A real deployment also pays for codebooks and outlier
-//! coordinates; both accountings are exposed so EXPERIMENTS.md can quote
-//! paper-comparable numbers *and* honest container sizes.
+//! coordinates; both accountings are exposed so the experiment tables can
+//! quote paper-comparable numbers *and* honest container sizes.
 //!
 //! Layout (little-endian):
 //! ```text
@@ -102,6 +102,28 @@ pub fn pack_indices(idx: &[u8], bits: u8) -> Vec<u8> {
         bitpos += bits as usize;
     }
     out
+}
+
+/// Fused unpack + codebook gather: decode `out.len()` indices of `bits`
+/// width from `packed` and map each through `centroids`. This is the inner
+/// loop of the packed execution backend (`model/linear.rs`): one weight
+/// column is decoded per call, so a forward pass touches only the packed
+/// planes and never materializes a dense matrix.
+pub fn decode_plane_into(packed: &[u8], bits: u8, centroids: &[f32], out: &mut [f32]) {
+    assert!((1..=8).contains(&bits));
+    let mask = ((1u16 << bits) - 1) as u8;
+    debug_assert!(centroids.len() >= (mask as usize) + 1, "codebook too small for bit width");
+    let mut bitpos = 0usize;
+    for o in out.iter_mut() {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = packed[byte] >> off;
+        if off + bits as usize > 8 {
+            v |= packed[byte + 1] << (8 - off);
+        }
+        *o = centroids[(v & mask) as usize];
+        bitpos += bits as usize;
+    }
 }
 
 /// Unpack `n` indices of `bits` width from a packed byte stream.
@@ -303,6 +325,23 @@ mod tests {
         let sub = f16_bits_to_f32(0x0001);
         assert!(sub > 0.0 && sub < 1e-7);
         assert_eq!(f32_to_f16_bits(sub), 0x0001);
+    }
+
+    #[test]
+    fn decode_plane_matches_unpack_then_lookup() {
+        check_default("decode plane", |rng| {
+            let bits = 1 + rng.below_usize(8) as u8;
+            let n = 1 + rng.below_usize(200);
+            let k = 1usize << bits;
+            let idx: Vec<u8> = (0..n).map(|_| rng.below(k as u64) as u8).collect();
+            let centroids: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            let packed = pack_indices(&idx, bits);
+            let mut out = vec![0.0f32; n];
+            decode_plane_into(&packed, bits, &centroids, &mut out);
+            for (o, &i) in out.iter().zip(&idx) {
+                assert_eq!(*o, centroids[i as usize]);
+            }
+        });
     }
 
     #[test]

@@ -9,11 +9,14 @@ use anyhow::{ensure, Context, Result};
 use std::path::PathBuf;
 
 /// Executes the `model_{l,xl}.hlo.txt` logits graph for a concrete model.
-/// Weight literals are materialized once at construction; each `logits`
-/// call only builds the (1, seq) token literal.
+/// The full argument vector (token slot + weight literals) is materialized
+/// once at construction; each `logits` call only rebuilds the (1, seq)
+/// token literal in slot 0 — weights are borrowed from the executor, never
+/// cloned per request.
 pub struct ModelExecutor {
     hlo_path: PathBuf,
-    weights: Vec<xla::Literal>,
+    /// `args[0]` is the token slot; `args[1..]` are the weight literals.
+    args: Vec<xla::Literal>,
     pub seq: usize,
     vocab: usize,
 }
@@ -23,29 +26,31 @@ impl ModelExecutor {
     /// (argument order: tokens, then CLAQWT01 tensor order).
     pub fn new(hlo_path: PathBuf, model: &Model) -> Result<Self> {
         let c = &model.config;
-        let mut weights: Vec<xla::Literal> = Vec::new();
         let d = c.d_model as i64;
         let f = c.d_ff as i64;
         let v = c.vocab as i64;
-        weights.push(literal_f32(&model.tok_embed.data, &[v, d])?);
+        let mut args: Vec<xla::Literal> = Vec::new();
+        // Placeholder token literal; overwritten by every `logits` call.
+        args.push(literal_i32(&vec![0i32; c.max_seq], &[1, c.max_seq as i64])?);
+        args.push(literal_f32(&model.tok_embed.data, &[v, d])?);
         for l in &model.layers {
-            weights.push(literal_f32(&l.attn_norm, &[d])?);
-            weights.push(literal_f32(&l.wq.data, &[d, d])?);
-            weights.push(literal_f32(&l.wk.data, &[d, d])?);
-            weights.push(literal_f32(&l.wv.data, &[d, d])?);
-            weights.push(literal_f32(&l.wo.data, &[d, d])?);
-            weights.push(literal_f32(&l.mlp_norm, &[d])?);
-            weights.push(literal_f32(&l.w_gate.data, &[f, d])?);
-            weights.push(literal_f32(&l.w_up.data, &[f, d])?);
-            weights.push(literal_f32(&l.w_down.data, &[d, f])?);
+            args.push(literal_f32(&l.attn_norm, &[d])?);
+            args.push(literal_f32(&l.wq.data, &[d, d])?);
+            args.push(literal_f32(&l.wk.data, &[d, d])?);
+            args.push(literal_f32(&l.wv.data, &[d, d])?);
+            args.push(literal_f32(&l.wo.data, &[d, d])?);
+            args.push(literal_f32(&l.mlp_norm, &[d])?);
+            args.push(literal_f32(&l.w_gate.data, &[f, d])?);
+            args.push(literal_f32(&l.w_up.data, &[f, d])?);
+            args.push(literal_f32(&l.w_down.data, &[d, f])?);
         }
-        weights.push(literal_f32(&model.final_norm, &[d])?);
-        weights.push(literal_f32(&model.lm_head.data, &[v, d])?);
-        Ok(Self { hlo_path, weights, seq: c.max_seq, vocab: c.vocab })
+        args.push(literal_f32(&model.final_norm, &[d])?);
+        args.push(literal_f32(&model.lm_head.data, &[v, d])?);
+        Ok(Self { hlo_path, args, seq: c.max_seq, vocab: c.vocab })
     }
 
     /// Run the graph on exactly `seq` tokens → logits (seq × vocab).
-    pub fn logits(&self, rt: &mut Runtime, tokens: &[u16]) -> Result<Matrix> {
+    pub fn logits(&mut self, rt: &mut Runtime, tokens: &[u16]) -> Result<Matrix> {
         ensure!(
             tokens.len() == self.seq,
             "AOT graph is fixed-shape: expected {} tokens, got {}",
@@ -53,12 +58,8 @@ impl ModelExecutor {
             tokens.len()
         );
         let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + self.weights.len());
-        args.push(literal_i32(&toks, &[1, self.seq as i64])?);
-        for w in &self.weights {
-            args.push(w.clone());
-        }
-        let out = rt.execute(&self.hlo_path, &args)?;
+        self.args[0] = literal_i32(&toks, &[1, self.seq as i64])?;
+        let out = rt.execute(&self.hlo_path, &self.args)?;
         let logits = out.into_iter().next().context("empty result")?;
         let data = super::literal_to_vec_f32(&logits)?;
         ensure!(data.len() == self.seq * self.vocab, "bad logits size {}", data.len());
@@ -67,7 +68,7 @@ impl ModelExecutor {
 
     /// Perplexity over a token stream using the PJRT graph (the runtime
     /// hot path; mirrors `eval::perplexity` on the Rust forward).
-    pub fn perplexity(&self, rt: &mut Runtime, stream: &[u16], max_windows: usize) -> Result<f64> {
+    pub fn perplexity(&mut self, rt: &mut Runtime, stream: &[u16], max_windows: usize) -> Result<f64> {
         let mut total_nll = 0.0f64;
         let mut total_tok = 0usize;
         let mut windows = 0usize;

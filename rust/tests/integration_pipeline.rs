@@ -62,7 +62,7 @@ fn four_bit_methods_close_to_fp16() {
 /// better than GPTQ-2 (paper Table 1's mechanism). On a *random* test
 /// model 2-bit PPL is saturated noise, so the assertion is on the
 /// deterministic reconstruction error; the PPL ordering on the *trained*
-/// model is reproduced by `claq table 1` (see EXPERIMENTS.md).
+/// model is reproduced by `claq table 1` (see DESIGN.md §5).
 #[test]
 fn two_bit_claq_beats_gptq() {
     let s = setup();

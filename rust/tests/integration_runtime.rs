@@ -26,7 +26,7 @@ fn pjrt_logits_match_rust_forward() {
     let Some(dir) = artifacts() else { return };
     let model = load_model(&dir.join("weights_l.bin")).unwrap();
     let mut rt = Runtime::cpu().unwrap();
-    let exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &model).unwrap();
+    let mut exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &model).unwrap();
 
     let stream = generate(CorpusKind::SynthC4, model.config.max_seq, 42);
     let mut state = ForwardState::new(model.config);
@@ -50,7 +50,7 @@ fn pjrt_perplexity_close_to_rust_eval() {
     let Some(dir) = artifacts() else { return };
     let model = load_model(&dir.join("weights_l.bin")).unwrap();
     let mut rt = Runtime::cpu().unwrap();
-    let exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &model).unwrap();
+    let mut exec = ModelExecutor::new(dir.join("model_l.hlo.txt"), &model).unwrap();
     let stream = generate(CorpusKind::SynthC4, model.config.max_seq * 4, 7);
     let pjrt_ppl = exec.perplexity(&mut rt, &stream, 0).unwrap();
     let rust_ppl = claq::eval::perplexity::perplexity(&model, &stream, 0).ppl;

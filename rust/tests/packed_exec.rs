@@ -1,0 +1,171 @@
+//! Cross-module properties of the packed execution backend: the fused
+//! codebook-gather kernel must agree with dequantize-then-dense-matmul for
+//! arbitrary bit maps, outlier reservations, and AWQ scales, and the f16
+//! container codec must honor IEEE 754 binary16 edge cases.
+
+use claq::model::linear::{LinearOp, PackedLinear};
+use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan, QuantizedMatrix};
+use claq::quant::packed::{f16_bits_to_f32, f32_to_f16_bits, pack};
+use claq::tensor::Matrix;
+use claq::util::proptest::{check, gen_column, Config};
+use claq::util::rng::Rng;
+
+fn random_quantized(rng: &mut Rng, with_outliers: bool) -> (Matrix, QuantizedMatrix) {
+    let rows = 4 + rng.below_usize(36);
+    let cols = 2 + rng.below_usize(18);
+    let mut w = Matrix::zeros(rows, cols);
+    for c in 0..cols {
+        let col = gen_column(rng, rows, 0.03);
+        w.set_col(c, &col);
+    }
+    let mut plan = MatrixPlan::uniform(cols, 2, CentroidRule::KMeans, false);
+    for c in 0..cols {
+        plan.bits[c] = 2 + rng.below_usize(7) as u8; // 2..=8 bits
+    }
+    if with_outliers {
+        plan.reserve = (0..cols).map(|_| rng.below_usize(4)).collect();
+    }
+    let qm = quantize_matrix(&w, None, &plan);
+    (w, qm)
+}
+
+fn dense_forward(deq: &Matrix, x: &[f32], seq: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; seq * deq.rows];
+    let mut scratch = Vec::new();
+    deq.forward_into(x, seq, &mut out, &mut scratch);
+    out
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+    for (a, b) in got.iter().zip(want) {
+        assert!(
+            (a - b).abs() <= tol * (1.0 + b.abs()),
+            "packed {a} vs dense {b} (tol {tol})"
+        );
+    }
+}
+
+/// PackedLinear output matches dequantize()-then-dense matmul to tight
+/// tolerance across random bit maps (2–8 bits), with and without outliers.
+#[test]
+fn prop_packed_matches_dense_dequant() {
+    for (seed, with_outliers) in [(201u64, false), (202, true)] {
+        check("packed kernel vs dense", Config { cases: 24, seed }, move |rng| {
+            let (_, qm) = random_quantized(rng, with_outliers);
+            let deq = qm.dequantize();
+            let packed = PackedLinear::from_quantized(&qm, None);
+            let seq = 1 + rng.below_usize(4);
+            let mut x = vec![0.0f32; seq * qm.cols];
+            rng.fill_normal(&mut x, 1.0);
+            let want = dense_forward(&deq, &x, seq);
+            let mut got = vec![0.0f32; seq * qm.rows];
+            let mut scratch = Vec::new();
+            packed.forward_into(&x, seq, &mut got, &mut scratch);
+            assert_close(&got, &want, 1e-5);
+        });
+    }
+}
+
+/// With AWQ scales folded in, the packed kernel matches the scaled dense
+/// reconstruction (`to_dense` semantics: dequantize, then divide columns).
+#[test]
+fn prop_packed_matches_dense_with_awq_scales() {
+    check("packed kernel + awq", Config { cases: 24, seed: 203 }, |rng| {
+        let (_, qm) = random_quantized(rng, true);
+        let scales: Vec<f32> = (0..qm.cols).map(|_| 0.5 + 1.5 * rng.next_f32()).collect();
+        let mut deq = qm.dequantize();
+        for r in 0..deq.rows {
+            let row = deq.row_mut(r);
+            for (v, &s) in row.iter_mut().zip(&scales) {
+                *v /= s;
+            }
+        }
+        let packed = PackedLinear::from_quantized(&qm, Some(&scales));
+        let seq = 1 + rng.below_usize(3);
+        let mut x = vec![0.0f32; seq * qm.cols];
+        rng.fill_normal(&mut x, 1.0);
+        let want = dense_forward(&deq, &x, seq);
+        let mut got = vec![0.0f32; seq * qm.rows];
+        let mut scratch = Vec::new();
+        packed.forward_into(&x, seq, &mut got, &mut scratch);
+        assert_close(&got, &want, 1e-5);
+    });
+}
+
+/// Built from a serialized container, the backend sees f16-rounded
+/// codebooks — exactly what `unpack().dequantize()` reconstructs.
+#[test]
+fn prop_container_backend_matches_unpacked_dense() {
+    check("container backend", Config { cases: 16, seed: 204 }, |rng| {
+        let (_, qm) = random_quantized(rng, true);
+        let (pm, _) = pack(&qm);
+        let packed = PackedLinear::from_container(&pm, None).unwrap();
+        let deq = claq::quant::packed::unpack(&pm).unwrap().dequantize();
+        let mut x = vec![0.0f32; qm.cols];
+        rng.fill_normal(&mut x, 1.0);
+        let want = dense_forward(&deq, &x, 1);
+        let mut got = vec![0.0f32; qm.rows];
+        let mut scratch = Vec::new();
+        packed.forward_into(&x, 1, &mut got, &mut scratch);
+        assert_close(&got, &want, 1e-5);
+    });
+}
+
+// ------------------------------------------------------------- f16 edges --
+
+#[test]
+fn f16_round_to_even_at_mantissa_boundary() {
+    // 1.0 + 2^-11 is exactly halfway between 1.0 (0x3C00) and the next
+    // representable (0x3C01): ties go to the even code.
+    assert_eq!(f32_to_f16_bits(1.0 + (-11f32).exp2()), 0x3C00);
+    // 1.0 + 3·2^-11 is halfway between 0x3C01 and 0x3C02: even is 0x3C02.
+    assert_eq!(f32_to_f16_bits(1.0 + 3.0 * (-11f32).exp2()), 0x3C02);
+}
+
+#[test]
+fn f16_subnormal_edges() {
+    let min_sub = (-24f32).exp2(); // smallest positive f16 subnormal
+    assert_eq!(f32_to_f16_bits(min_sub), 0x0001);
+    assert_eq!(f16_bits_to_f32(0x0001), min_sub);
+    // half the smallest subnormal: tie between 0 and 0x0001 → even (0)
+    assert_eq!(f32_to_f16_bits(min_sub / 2.0), 0x0000);
+    // 1.5× the smallest subnormal: tie between 0x0001 and 0x0002 → 0x0002
+    assert_eq!(f32_to_f16_bits(1.5 * min_sub), 0x0002);
+    // largest subnormal and smallest normal straddle 2^-14
+    assert_eq!(f32_to_f16_bits(1023.0 * min_sub), 0x03FF);
+    assert_eq!(f16_bits_to_f32(0x03FF), 1023.0 * min_sub);
+    assert_eq!(f32_to_f16_bits((-14f32).exp2()), 0x0400);
+    // below half the smallest subnormal flushes to signed zero
+    assert_eq!(f32_to_f16_bits(min_sub / 4.0), 0x0000);
+    assert_eq!(f32_to_f16_bits(-min_sub / 4.0), 0x8000);
+}
+
+#[test]
+fn f16_inf_nan_and_overflow() {
+    assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+    assert_eq!(f16_bits_to_f32(0xFC00), f32::NEG_INFINITY);
+    assert!(f16_bits_to_f32(0x7C01).is_nan());
+    let nan = f32_to_f16_bits(f32::NAN);
+    assert_eq!(nan & 0x7C00, 0x7C00);
+    assert_ne!(nan & 0x03FF, 0, "NaN must keep a nonzero mantissa");
+    let neg_nan = f32_to_f16_bits(f32::from_bits(0xFFC0_0000));
+    assert_eq!(neg_nan & 0x8000, 0x8000, "NaN sign preserved");
+    assert_ne!(neg_nan & 0x03FF, 0);
+    // max finite f16 survives; first value past the rounding boundary
+    // (65520 = midpoint to 65536) overflows to inf
+    assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+    assert_eq!(f16_bits_to_f32(0x7BFF), 65504.0);
+    assert_eq!(f32_to_f16_bits(65520.0), 0x7C00);
+    assert_eq!(f32_to_f16_bits(-65520.0), 0xFC00);
+}
+
+#[test]
+fn f16_round_trip_randoms_within_half_ulp() {
+    check("f16 round trip", Config { cases: 256, seed: 205 }, |rng| {
+        let x = rng.normal_f32() * 100.0;
+        let y = f16_bits_to_f32(f32_to_f16_bits(x));
+        if x.abs() > 1e-3 {
+            assert!(((x - y) / x).abs() <= 1.0 / 2048.0, "{x} -> {y}");
+        }
+    });
+}
