@@ -1,32 +1,64 @@
-//! Serving driver on the packed-execution backend: quantize once, then run
-//! a batched, KV-cached generation loop **directly off the CLAQ planes** —
-//! prefill each request once, decode token by token in batches — and
-//! compare against the dense-dequantized backend. This is the deployment
-//! story the paper defers to future CUDA kernels, exercised end to end on
-//! this stack: the packed path never materializes a dense weight matrix.
+//! Open-loop load generator for the continuous-batching serving runtime:
+//! quantize once, then fire Poisson-arrival requests at the
+//! [`Scheduler`] running **directly off the CLAQ planes** and report
+//! serving-grade metrics — time-to-first-token, per-token latency
+//! percentiles, and aggregate tokens/s — for continuous batching vs. the
+//! PR-1 lockstep (wave) baseline on the *same* engine and arrival trace.
+//! Open-loop means arrivals do not wait for the server: queueing delay is
+//! part of the measurement, as in real traffic.
 //!
 //! Run:
-//!   cargo run --release --example serve_quantized [n_requests] [gen_tokens] [batch]
+//!   cargo run --release --example serve_quantized \
+//!       [n_requests] [arrival_rate_per_s] [max_slots] [seed]
 //!
-//! Uses trained weights from `artifacts/` when present (`make artifacts`),
-//! otherwise a random tiny-L model (throughput numbers are equally valid).
+//! * `n_requests`        total requests in the trace        (default 32)
+//! * `arrival_rate_per_s` mean Poisson arrival rate          (default 8.0)
+//! * `max_slots`         live-batch bound of the scheduler  (default 8)
+//! * `seed`              trace seed (prompts, lengths, gaps) (default 17)
+//!
+//! Prompt lengths, generation budgets, and inter-arrival gaps are
+//! randomized per request; both policies replay the identical trace, and
+//! their token streams are checked to agree exactly (batch invariance).
+//! Uses trained weights from `artifacts/` when present (`make
+//! artifacts`), otherwise a random tiny-L model (throughput numbers are
+//! equally valid).
 
 use claq::coordinator::pipeline::{quantize_model, PipelineOpts};
 use claq::coordinator::registry::artifacts_dir;
 use claq::data::calibration::{sample_segments, CalibConfig};
 use claq::data::corpus::{generate, load_tokens, CorpusKind};
-use claq::model::exec::{argmax, decode_step, prefill, ExecModel, ExecState, KvCache};
+use claq::model::exec::{ExecModel, ExecState};
 use claq::model::io::load_model;
 use claq::model::{Model, TransformerConfig};
 use claq::quant::config::Method;
+use claq::runtime::scheduler::{
+    AdmissionPolicy, Completion, Request, Scheduler, SchedulerConfig,
+};
 use claq::util::rng::Rng;
+use claq::util::threadpool::ThreadPool;
 use std::time::Instant;
 
+/// One request of the trace, with its arrival offset in seconds.
+struct TracedRequest {
+    at_s: f64,
+    req: Request,
+}
+
+/// Per-policy serving report over one trace replay.
 struct ServeReport {
-    prefill_ms: Vec<f64>,
-    step_ms: Vec<f64>,
-    generated: usize,
+    policy: &'static str,
     wall_s: f64,
+    generated: usize,
+    ttft_s: Vec<f64>,
+    /// Mean seconds per generated token of each request (excluding the
+    /// prefill token; requests generating a single token contribute only
+    /// to TTFT).
+    tok_latency_s: Vec<f64>,
+    pool_hit_rate: f64,
+    pool_resident_mb: f64,
+    peak_live: usize,
+    /// id → generated tokens, for the cross-policy agreement check.
+    outputs: Vec<(u64, Vec<u16>)>,
 }
 
 fn pct(sorted: &[f64], p: f64) -> f64 {
@@ -36,82 +68,119 @@ fn pct(sorted: &[f64], p: f64) -> f64 {
     sorted[((sorted.len() - 1) as f64 * p) as usize]
 }
 
-/// Serve `prompts`: prefill each request, then greedy-decode `gen_tokens`
-/// continuation tokens, advancing requests in fixed batches of `batch`
-/// through the shared `decode_step`. Returns latency/throughput stats and
-/// the generated token streams.
-fn serve(
-    model: &ExecModel,
-    prompts: &[Vec<u16>],
-    gen_tokens: usize,
-    batch: usize,
-) -> (ServeReport, Vec<Vec<u16>>) {
-    let cfg = &model.config;
-    let n = prompts.len();
-    let mut state = ExecState::new(*cfg);
-    let mut caches: Vec<KvCache> = Vec::with_capacity(n);
-    let mut generated: Vec<Vec<u16>> = vec![Vec::with_capacity(gen_tokens); n];
-    let mut prefill_ms = Vec::with_capacity(n);
-    let mut step_ms = Vec::new();
-    let wall = Instant::now();
-
-    // Prefill: one pass over each prompt, caching K/V.
-    for (i, prompt) in prompts.iter().enumerate() {
-        assert!(prompt.len() + gen_tokens <= cfg.max_seq, "request exceeds context");
-        let mut cache = KvCache::new(cfg);
-        let t = Instant::now();
-        let logits = prefill(model, &mut cache, prompt, &mut state);
-        prefill_ms.push(t.elapsed().as_secs_f64() * 1e3);
-        generated[i].push(argmax(logits.row(prompt.len() - 1)));
-        caches.push(cache);
-    }
-
-    // Decode: requests advance together in batches; each decode_step call
-    // runs every projection once for the whole batch.
-    for _ in 1..gen_tokens {
-        let mut start = 0;
-        while start < n {
-            let end = (start + batch).min(n);
-            let toks: Vec<u16> = (start..end).map(|i| *generated[i].last().unwrap()).collect();
-            let t = Instant::now();
-            let logits = decode_step(model, &mut caches[start..end], &toks, &mut state);
-            step_ms.push(t.elapsed().as_secs_f64() * 1e3);
-            for (b, i) in (start..end).enumerate() {
-                generated[i].push(argmax(logits.row(b)));
-            }
-            start = end;
-        }
-    }
-
-    let report = ServeReport {
-        prefill_ms,
-        step_ms,
-        generated: n * gen_tokens,
-        wall_s: wall.elapsed().as_secs_f64(),
-    };
-    (report, generated)
+fn percentiles(mut xs: Vec<f64>) -> (f64, f64, f64) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (pct(&xs, 0.50), pct(&xs, 0.95), pct(&xs, 0.99))
 }
 
-fn print_report(backend: &str, r: &ServeReport, batch: usize) {
-    let mut steps = r.step_ms.clone();
-    steps.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mut pre = r.prefill_ms.clone();
-    pre.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    println!("\n[{backend}] {} tokens generated (decode batch {batch})", r.generated);
-    println!("  prefill p50:     {:>9.3} ms", pct(&pre, 0.50));
-    println!("  decode-step p50: {:>9.3} ms", pct(&steps, 0.50));
-    println!("  decode-step p90: {:>9.3} ms", pct(&steps, 0.90));
-    println!("  decode-step p99: {:>9.3} ms", pct(&steps, 0.99));
-    println!("  decode tok/s:    {:>9.0}", r.generated as f64 / r.wall_s);
+/// Replay `trace` against a fresh scheduler under `policy`. The driver
+/// owns the clock: requests are submitted once their arrival offset has
+/// passed, the engine steps whenever it has work, and it sleeps only when
+/// idle before the next arrival.
+fn serve_trace(
+    model: &ExecModel,
+    trace: &[TracedRequest],
+    max_slots: usize,
+    policy: AdmissionPolicy,
+    label: &'static str,
+) -> ServeReport {
+    let mut st = ExecState::new(model.config);
+    let mut sched = Scheduler::new(
+        model.config,
+        SchedulerConfig { max_slots, prefill_token_budget: 2 * model.config.max_seq, policy },
+    );
+    let mut arrival_by_id = vec![0.0f64; trace.len()];
+    let mut completions: Vec<Completion> = Vec::new();
+    let mut step_wall: Vec<f64> = Vec::new(); // engine step -> wall seconds
+    let mut next = 0usize;
+    let t0 = Instant::now();
+
+    while next < trace.len() || sched.has_work() {
+        let now = t0.elapsed().as_secs_f64();
+        while next < trace.len() && trace[next].at_s <= now {
+            let id = sched.submit(trace[next].req.clone()).expect("trace request valid");
+            arrival_by_id[id as usize] = trace[next].at_s;
+            next += 1;
+        }
+        if sched.has_work() {
+            completions.extend(sched.step(model, &mut st));
+            step_wall.push(t0.elapsed().as_secs_f64());
+        } else {
+            // idle: open-loop arrivals are in the future; sleep up to them
+            let wait = trace[next].at_s - now;
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(0.005)));
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut ttft_s = Vec::with_capacity(completions.len());
+    let mut tok_latency_s = Vec::new();
+    let mut generated = 0usize;
+    let mut outputs = Vec::with_capacity(completions.len());
+    for c in &completions {
+        // step numbers are 1-based; step_wall[s-1] is when step s ended
+        let first = step_wall[c.admitted_step as usize - 1];
+        let last = step_wall[c.finished_step as usize - 1];
+        ttft_s.push(first - arrival_by_id[c.id as usize]);
+        if c.tokens.len() > 1 {
+            tok_latency_s.push((last - first) / (c.tokens.len() - 1) as f64);
+        }
+        generated += c.tokens.len();
+        outputs.push((c.id, c.tokens.clone()));
+    }
+    outputs.sort_by_key(|(id, _)| *id);
+    let stats = sched.stats();
+    ServeReport {
+        policy: label,
+        wall_s,
+        generated,
+        ttft_s,
+        tok_latency_s,
+        pool_hit_rate: stats.pool_hit_rate,
+        pool_resident_mb: stats.pool_resident_bytes as f64 / 1e6,
+        peak_live: stats.peak_live,
+        outputs,
+    }
+}
+
+fn print_report(r: &ServeReport) {
+    let (t50, t95, t99) = percentiles(r.ttft_s.clone());
+    let (l50, l95, l99) = percentiles(r.tok_latency_s.clone());
+    println!(
+        "\n[{}] {} tokens in {:.2}s  ->  {:.0} tok/s aggregate",
+        r.policy,
+        r.generated,
+        r.wall_s,
+        r.generated as f64 / r.wall_s
+    );
+    println!(
+        "  ttft      p50/p95/p99: {:>7.1} / {:>7.1} / {:>7.1} ms",
+        t50 * 1e3,
+        t95 * 1e3,
+        t99 * 1e3
+    );
+    println!(
+        "  per-token p50/p95/p99: {:>7.2} / {:>7.2} / {:>7.2} ms",
+        l50 * 1e3,
+        l95 * 1e3,
+        l99 * 1e3
+    );
+    println!(
+        "  peak live batch: {}   kv-pool hit rate: {:.0}%   pooled: {:.2} MB",
+        r.peak_live,
+        r.pool_hit_rate * 100.0,
+        r.pool_resident_mb
+    );
 }
 
 fn main() -> anyhow::Result<()> {
-    let arg = |i: usize, default: usize| -> usize {
-        std::env::args().nth(i).and_then(|s| s.parse().ok()).unwrap_or(default)
-    };
-    let n_requests = arg(1, 16).max(1);
-    let gen_tokens = arg(2, 48).max(2); // ≥2 so the decode loop runs
-    let batch = arg(3, 4).max(1);
+    let arg = |i: usize| std::env::args().nth(i);
+    let n_requests: usize = arg(1).and_then(|s| s.parse().ok()).unwrap_or(32).max(1);
+    let rate: f64 = arg(2).and_then(|s| s.parse().ok()).unwrap_or(8.0).max(0.01);
+    let max_slots: usize = arg(3).and_then(|s| s.parse().ok()).unwrap_or(8).max(1);
+    let seed: u64 = arg(4).and_then(|s| s.parse().ok()).unwrap_or(17);
 
     let dir = artifacts_dir();
     let model = match load_model(&dir.join("weights_l.bin")) {
@@ -122,8 +191,9 @@ fn main() -> anyhow::Result<()> {
         }
     };
     let seq = model.config.max_seq;
-    anyhow::ensure!(gen_tokens >= 1 && gen_tokens < seq, "gen_tokens must leave room for a prompt");
-    let prompt_len = seq - gen_tokens;
+    anyhow::ensure!(seq >= 64, "serve example sizes its trace for max_seq >= 64 (got {seq})");
+    // ExecState::new has row capacity max_seq; more slots could never decode
+    let max_slots = max_slots.min(seq);
 
     // Quantize once at CLAQ*-2.12 (the paper's headline config).
     let train = match load_tokens(&dir.join("corpus_c4_train.bin")) {
@@ -140,39 +210,52 @@ fn main() -> anyhow::Result<()> {
         rep.container_bytes as f64 / 1e6,
         rep.container_bits_per_param
     );
-
-    // Two execution backends over the same quantized model.
     let packed = qm.to_exec();
-    let dense = ExecModel::dense(&qm.to_dense());
     println!(
-        "projection weights resident: packed {:.2} MB vs dense {:.2} MB ({:.1}× smaller)",
+        "packed projections resident: {:.2} MB — kernels sharded over {} threads",
         packed.projection_bytes() as f64 / 1e6,
-        dense.projection_bytes() as f64 / 1e6,
-        dense.projection_bytes() as f64 / packed.projection_bytes() as f64
+        ThreadPool::global().workers()
     );
 
-    // Request stream: random prompts; each request decodes gen_tokens.
-    let prompts: Vec<Vec<u16>> = (0..n_requests)
-        .map(|i| generate(CorpusKind::SynthC4, prompt_len, 1000 + i as u64))
-        .collect();
-
-    let (packed_rep, packed_out) = serve(&packed, &prompts, gen_tokens, batch);
-    let (dense_rep, dense_out) = serve(&dense, &prompts, gen_tokens, batch);
-    print_report(packed.backend, &packed_rep, batch);
-    print_report(dense.backend, &dense_rep, batch);
-
-    // The two backends decode the same quantized weights; greedy streams
-    // should agree everywhere (up to float-tie rounding).
-    let agree = packed_out
-        .iter()
-        .zip(&dense_out)
-        .flat_map(|(a, b)| a.iter().zip(b))
-        .filter(|(a, b)| a == b)
-        .count();
-    let total = n_requests * gen_tokens;
+    // Build the trace: Poisson arrivals, randomized prompt/generation
+    // lengths (both policies replay exactly this).
+    let mut rng = Rng::new(seed);
+    let mut trace = Vec::with_capacity(n_requests);
+    let mut at_s = 0.0f64;
+    for i in 0..n_requests {
+        at_s += -rng.next_f64().max(1e-12).ln() / rate; // Exp(rate) gap
+        let prompt_len = 16 + rng.below_usize(33); // 16..=48
+        let max_new = 8 + rng.below_usize((seq - prompt_len - 8).min(41)); // 8..≤48
+        trace.push(TracedRequest {
+            at_s,
+            req: Request {
+                prompt: generate(CorpusKind::SynthC4, prompt_len, 1000 + i as u64),
+                max_new_tokens: max_new,
+                stop_token: None,
+            },
+        });
+    }
     println!(
-        "\npacked/dense greedy agreement: {agree}/{total} tokens  |  packed speedup: {:.2}×",
-        dense_rep.wall_s / packed_rep.wall_s
+        "trace: {} requests, Poisson rate {:.1}/s, prompts 16–48 tokens, {} decode slots",
+        n_requests, rate, max_slots
+    );
+
+    let cont = serve_trace(&packed, &trace, max_slots, AdmissionPolicy::Continuous, "continuous");
+    let wave = serve_trace(&packed, &trace, max_slots, AdmissionPolicy::Wave, "lockstep-wave");
+    print_report(&cont);
+    print_report(&wave);
+
+    // Batch invariance across policies: identical token streams.
+    let agree = cont
+        .outputs
+        .iter()
+        .zip(&wave.outputs)
+        .filter(|((ia, ta), (ib, tb))| ia == ib && ta == tb)
+        .count();
+    println!(
+        "\ncontinuous/lockstep token-stream agreement: {agree}/{} requests  |  continuous speedup: {:.2}×",
+        n_requests,
+        (cont.generated as f64 / cont.wall_s) / (wave.generated as f64 / wave.wall_s)
     );
     Ok(())
 }

@@ -7,28 +7,8 @@ use claq::model::exec::{decode_step, prefill, ExecModel, ExecState, KvCache};
 use claq::model::quantized::QuantizedModel;
 use claq::model::{Model, TransformerConfig};
 use claq::quant::config::Method;
-use claq::quant::gptq::quantize_matrix;
 use claq::util::benchlib::{black_box, Bench};
 use claq::util::rng::Rng;
-use std::collections::HashMap;
-
-/// Quantize every projection with the CLAQ*-2.12 plan, calibration-free
-/// (identity Hessian) — representative planes/codebooks at bench speed.
-fn quantize_fast(model: &Model) -> QuantizedModel {
-    let method = Method::fusion_2_12();
-    let mut matrices = HashMap::new();
-    for id in model.matrix_ids() {
-        let w = model.matrix(id);
-        let plan = method.plan_for(w, None).expect("plan");
-        matrices.insert(id, quantize_matrix(w, None, &plan));
-    }
-    QuantizedModel {
-        base: model.clone(),
-        matrices,
-        awq_scales: HashMap::new(),
-        method_name: method.name(),
-    }
-}
 
 fn bench_backend(b: &mut Bench, em: &ExecModel, label: &str) {
     let cfg = em.config;
@@ -56,7 +36,8 @@ fn bench_backend(b: &mut Bench, em: &ExecModel, label: &str) {
                     c.truncate(prompt_len);
                 }
             }
-            black_box(decode_step(em, &mut caches, &toks, &mut state));
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            black_box(decode_step(em, &mut refs, &toks, &mut state));
         });
     }
 }
@@ -65,7 +46,7 @@ fn main() {
     let mut b = Bench::new("decode");
     let cfg = TransformerConfig::tiny_l();
     let model = Model::random(cfg, &mut Rng::new(6));
-    let qm = quantize_fast(&model);
+    let qm = QuantizedModel::quantize_uncalibrated(&model, &Method::fusion_2_12());
 
     let packed = qm.to_exec();
     let dense = ExecModel::dense(&qm.to_dense());

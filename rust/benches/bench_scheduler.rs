@@ -1,0 +1,150 @@
+//! Serving-runtime scenario bench: open-loop arrivals through the
+//! continuous-batching scheduler vs. the lockstep (wave) baseline, on the
+//! packed backend, at 1 / 8 / 32 concurrent slots.
+//!
+//! Arrivals are Poisson in the *step domain* (a request becomes visible
+//! just before a given engine step), with mean spacing chosen to keep the
+//! live batch saturated, so results don't depend on wall-clock/machine
+//! coupling; latency is still reported in wall time via a step→time map.
+//! Open-loop means arrivals never wait for the engine — queueing delay is
+//! part of p99. `CLAQ_BENCH_FAST=1` shrinks the trace. Results append to
+//! `target/claq-bench.csv` alongside the other bench groups.
+
+use claq::model::exec::{ExecModel, ExecState};
+use claq::model::quantized::QuantizedModel;
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::Method;
+use claq::runtime::scheduler::{AdmissionPolicy, Request, Scheduler, SchedulerConfig};
+use claq::util::benchlib::append_csv;
+use claq::util::rng::Rng;
+use claq::util::threadpool::ThreadPool;
+use std::time::Instant;
+
+struct ScenarioResult {
+    tok_per_s: f64,
+    ttft_p50_ms: f64,
+    tok_p99_ms: f64,
+}
+
+/// Replay one step-domain arrival trace and measure wall-side stats.
+fn run_scenario(
+    model: &ExecModel,
+    arrivals: &[(usize, Request)],
+    slots: usize,
+    policy: AdmissionPolicy,
+) -> ScenarioResult {
+    let mut st = ExecState::new(model.config);
+    let mut sched = Scheduler::new(
+        model.config,
+        SchedulerConfig {
+            max_slots: slots,
+            prefill_token_budget: 2 * model.config.max_seq,
+            policy,
+        },
+    );
+    let mut completions = Vec::new();
+    let mut step_wall = Vec::new();
+    let mut submit_wall = vec![0.0f64; arrivals.len()]; // indexed by id
+    let mut next = 0usize;
+    let mut step = 0usize;
+    let t0 = Instant::now();
+    while next < arrivals.len() || sched.has_work() {
+        while next < arrivals.len() && arrivals[next].0 <= step {
+            let id = sched.submit(arrivals[next].1.clone()).expect("bench request valid");
+            submit_wall[id as usize] = t0.elapsed().as_secs_f64();
+            next += 1;
+        }
+        if sched.has_work() {
+            completions.extend(sched.step(model, &mut st));
+            step_wall.push(t0.elapsed().as_secs_f64());
+        }
+        step += 1;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut generated = 0usize;
+    let mut ttft_ms = Vec::new();
+    let mut tok_ms = Vec::new();
+    for c in &completions {
+        let first = step_wall[c.admitted_step as usize - 1];
+        let last = step_wall[c.finished_step as usize - 1];
+        generated += c.tokens.len();
+        ttft_ms.push((first - submit_wall[c.id as usize]) * 1e3);
+        if c.tokens.len() > 1 {
+            tok_ms.push((last - first) * 1e3 / (c.tokens.len() - 1) as f64);
+        }
+    }
+    ttft_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    tok_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |xs: &[f64], p: f64| {
+        if xs.is_empty() {
+            f64::NAN
+        } else {
+            xs[((xs.len() - 1) as f64 * p) as usize]
+        }
+    };
+    ScenarioResult {
+        tok_per_s: generated as f64 / wall_s,
+        ttft_p50_ms: pick(&ttft_ms, 0.5),
+        tok_p99_ms: pick(&tok_ms, 0.99),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("CLAQ_BENCH_FAST").is_ok();
+    let cfg = TransformerConfig::tiny_l();
+    let model = Model::random(cfg, &mut Rng::new(6));
+    let packed =
+        QuantizedModel::quantize_uncalibrated(&model, &Method::fusion_2_12()).to_exec();
+    println!(
+        "== bench group: scheduler ==  (packed backend, {} kernel threads{})",
+        ThreadPool::global().workers(),
+        if fast { ", fast mode" } else { "" }
+    );
+
+    let mut csv_rows: Vec<String> = Vec::new();
+    for &conc in &[1usize, 8, 32] {
+        // Trace: enough requests to reach steady state; Poisson arrival
+        // gaps with mean ~ mean_service/conc keep the batch saturated.
+        let n_requests = conc * if fast { 3 } else { 6 };
+        let mut rng = Rng::new(40 + conc as u64);
+        let mut arrivals = Vec::with_capacity(n_requests);
+        let mut at = 0.0f64;
+        let mean_new = 24.0;
+        for i in 0..n_requests {
+            at += -rng.next_f64().max(1e-12).ln() * mean_new / conc as f64;
+            let prompt_len = 8 + rng.below_usize(25); // 8..=32
+            let max_new = 8 + rng.below_usize(33); // 8..=40
+            let prompt: Vec<u16> =
+                (0..prompt_len).map(|_| ((i * 31 + 7) % cfg.vocab) as u16).collect();
+            arrivals.push((
+                at as usize,
+                Request { prompt, max_new_tokens: max_new, stop_token: None },
+            ));
+        }
+
+        let cont = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous);
+        let wave = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Wave);
+        println!(
+            "concurrency {conc:>2}: continuous {:>8.0} tok/s (ttft p50 {:>6.1} ms, tok p99 {:>6.2} ms)",
+            cont.tok_per_s, cont.ttft_p50_ms, cont.tok_p99_ms
+        );
+        println!(
+            "                lockstep   {:>8.0} tok/s (ttft p50 {:>6.1} ms, tok p99 {:>6.2} ms)  ->  {:.2}× continuous",
+            wave.tok_per_s,
+            wave.ttft_p50_ms,
+            wave.tok_p99_ms,
+            cont.tok_per_s / wave.tok_per_s
+        );
+        for (policy, r) in [("continuous", &cont), ("lockstep", &wave)] {
+            // one row per scenario; the time column is ns per generated
+            // token so it is comparable with the decode bench rows
+            let ns_per_tok = 1e9 / r.tok_per_s;
+            csv_rows.push(format!(
+                "scheduler,{policy} conc={conc},{ns_per_tok:.1},0.0,{ns_per_tok:.1},1"
+            ));
+        }
+    }
+
+    append_csv(&csv_rows);
+}

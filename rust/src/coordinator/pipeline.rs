@@ -20,7 +20,7 @@ use crate::quant::gptq::quantize_matrix;
 use crate::quant::outliers::OutlierStats;
 use crate::quant::precision::BitPair;
 use crate::quant::search::{self, MatrixClass, SearchConfig};
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{host_threads, ThreadPool};
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -41,7 +41,7 @@ pub struct PipelineOpts {
 
 impl Default for PipelineOpts {
     fn default() -> Self {
-        Self { workers: ThreadPool::host().workers(), verbose: false, incremental: true }
+        Self { workers: host_threads(), verbose: false, incremental: true }
     }
 }
 

@@ -11,10 +11,13 @@
 //! * [`model`] — the LLaMA-style transformer the experiments quantize,
 //!   including the `LinearOp` execution backends (dense f32 and packed
 //!   CLAQ planes) and the KV-cached serving path (`model::exec`).
+//! * [`runtime`] — the serving layer: the continuous-batching scheduler
+//!   with pooled KV caches (`runtime::scheduler`) and the PJRT executor
+//!   for the AOT-compiled graphs.
 //! * [`data`] — synthetic corpora / calibration / zero-shot tasks.
 //! * [`eval`] — perplexity and zero-shot harnesses.
 //! * [`tensor`], [`util`] — from-scratch substrates (matrix/linalg, RNG,
-//!   stats, thread pool, property tests, bench harness, CLI).
+//!   stats, persistent thread pool, property tests, bench harness, CLI).
 
 pub mod coordinator;
 pub mod data;

@@ -7,9 +7,15 @@
 //! incremental decode path the scoring-only harness never needed:
 //!
 //! * [`KvCache`] — per-request key/value cache (n_layers × max_seq × d).
+//! * [`KvCachePool`] — recycling allocator for caches, so steady-state
+//!   serving does zero large allocations (the scheduler's cache source).
 //! * [`prefill`] — run a prompt chunk once, populating the cache and
 //!   returning logits for every prompt position.
-//! * [`decode_step`] — advance a *batch* of requests by one token each.
+//! * [`decode_step`] — advance a *batch* of requests by one token each,
+//!   each request at its own cache position (variable lengths; the
+//!   continuous-batching scheduler mixes requests at arbitrary depths).
+//!   Caches are passed as `&mut [&mut KvCache]` so a batch can be formed
+//!   over caches owned by different scheduler slots without moving them.
 //!   Batching matters for the packed backend: a weight column is decoded
 //!   once per step and the rank-1 update is applied to every sequence in
 //!   the batch, amortizing plane unpacking across the batch.
@@ -177,6 +183,91 @@ impl KvCache {
     }
 }
 
+/// Recycling allocator for [`KvCache`]s. A cache is ~n_layers × max_seq ×
+/// d × 8 bytes — the single biggest per-request allocation on the serving
+/// path — so the scheduler takes caches from a pool and returns them on
+/// retirement; once the pool is warm (≥ peak live batch), steady-state
+/// serving allocates nothing. Hit/miss counters and resident bytes feed
+/// the scheduler's stats report.
+pub struct KvCachePool {
+    cfg: TransformerConfig,
+    free: Vec<KvCache>,
+    hits: u64,
+    misses: u64,
+}
+
+impl KvCachePool {
+    pub fn new(cfg: TransformerConfig) -> Self {
+        Self { cfg, free: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    /// Pool pre-warmed with `n` caches (counted as neither hits nor
+    /// misses), so even the first requests allocate nothing.
+    pub fn with_capacity(cfg: TransformerConfig, n: usize) -> Self {
+        let free = (0..n).map(|_| KvCache::new(&cfg)).collect();
+        Self { cfg, free, hits: 0, misses: 0 }
+    }
+
+    /// Take a cache, recycled (reset to length 0) when one is free,
+    /// freshly allocated otherwise.
+    pub fn take(&mut self) -> KvCache {
+        match self.free.pop() {
+            Some(mut cache) => {
+                cache.reset();
+                self.hits += 1;
+                cache
+            }
+            None => {
+                self.misses += 1;
+                KvCache::new(&self.cfg)
+            }
+        }
+    }
+
+    /// Return a retired request's cache for reuse. The cache is reset
+    /// immediately; panics if it was built for a different config.
+    pub fn put(&mut self, mut cache: KvCache) {
+        assert!(
+            cache.n_layers == self.cfg.n_layers
+                && cache.d == self.cfg.d_model
+                && cache.max_seq == self.cfg.max_seq,
+            "cache returned to a pool of a different config"
+        );
+        cache.reset();
+        self.free.push(cache);
+    }
+
+    /// Free (recyclable) caches currently held.
+    pub fn free_caches(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Takes served from the free list.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Takes that had to allocate.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Fraction of takes served without allocating (1.0 before any take).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Resident bytes of the pooled (free) cache buffers.
+    pub fn resident_bytes(&self) -> usize {
+        self.free.iter().map(KvCache::bytes).sum()
+    }
+}
+
 /// Scratch buffers for the exec paths; `rows` capacity must cover both the
 /// longest prefill chunk and the largest decode batch.
 pub struct ExecState {
@@ -204,12 +295,22 @@ impl ExecState {
         Self::with_capacity(cfg, cfg.max_seq)
     }
 
+    /// Row capacity: the largest prefill chunk / decode batch this state
+    /// can run.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
     /// State with explicit row capacity (≥ prefill chunk length and ≥
     /// decode batch size; max_seq-position RoPE/score tables regardless).
     pub fn with_capacity(cfg: TransformerConfig, rows: usize) -> Self {
         let cap = rows.max(1);
         let (d, f, s) = (cfg.d_model, cfg.d_ff, cfg.max_seq);
         let (cos, sin) = rope_tables(&cfg, s);
+        // The LinearOp workspace (column-decode scratch + shard staging) is
+        // sized up front for the widest projection at full row capacity, so
+        // nothing on the decode hot path ever grows it.
+        let max_out = d.max(f).max(cfg.vocab);
         Self {
             cfg,
             cap,
@@ -225,7 +326,7 @@ impl ExecState {
             scores: vec![0.0; s],
             cos,
             sin,
-            scratch: Vec::new(),
+            scratch: vec![0.0; max_out * (cap + 1)],
         }
     }
 }
@@ -346,12 +447,16 @@ pub fn prefill(
 }
 
 /// Advance a batch of requests by one token each: `tokens[b]` is appended
-/// to `caches[b]`. Returns next-token logits (batch × vocab). All batch
-/// rows go through each projection in a single `LinearOp` call, so packed
-/// weight columns are decoded once per step for the whole batch.
+/// to `caches[b]`, each cache at its own position (`caches[b].len()`), so
+/// requests of arbitrary, unequal depths batch together — the form the
+/// continuous-batching scheduler needs. Returns next-token logits
+/// (batch × vocab). All batch rows go through each projection in a single
+/// `LinearOp` call, so packed weight columns are decoded once per step for
+/// the whole batch; per-row results do not depend on what else is in the
+/// batch (pinned by `tests/scheduler.rs`).
 pub fn decode_step(
     model: &ExecModel,
-    caches: &mut [KvCache],
+    caches: &mut [&mut KvCache],
     tokens: &[u16],
     st: &mut ExecState,
 ) -> Matrix {
@@ -389,7 +494,7 @@ pub fn decode_step(
         }
         for b in 0..bn {
             let pos = caches[b].len;
-            attend_cached(st, &caches[b], li, b, pos);
+            attend_cached(st, &*caches[b], li, b, pos);
         }
         layer.wo.forward_into(&st.attn[..bn * d], bn, &mut st.proj, &mut st.scratch);
         for i in 0..bn * d {
@@ -415,8 +520,13 @@ pub fn decode_step(
     head_logits(model, st, bn)
 }
 
-/// Greedy next-token choice from one logits row.
+/// Greedy next-token choice from one logits row. Ties break to the
+/// *lowest* index — the strict `>` never replaces an equal best — so
+/// greedy decode is reproducible across backends, batch compositions, and
+/// thread counts; NaN entries never win (every comparison against NaN is
+/// false). Pinned by `argmax_tie_breaks_to_lowest_index` below.
 pub fn argmax(row: &[f32]) -> u16 {
+    debug_assert!(!row.is_empty(), "argmax of empty logits row");
     let mut best = 0usize;
     let mut best_v = f32::NEG_INFINITY;
     for (i, &v) in row.iter().enumerate() {
@@ -486,12 +596,11 @@ mod tests {
         let mut cache = KvCache::new(&m.config);
         let pre = prefill(&em, &mut cache, &toks[..split], &mut st);
         close(pre.row(split - 1), full.row(split - 1), 1e-5);
-        let mut caches = vec![cache];
         for (i, &tok) in toks[split..].iter().enumerate() {
-            let logits = decode_step(&em, &mut caches, &[tok], &mut st);
+            let logits = decode_step(&em, &mut [&mut cache], &[tok], &mut st);
             close(logits.row(0), full.row(split + i), 1e-5);
         }
-        assert_eq!(caches[0].len(), toks.len());
+        assert_eq!(cache.len(), toks.len());
     }
 
     #[test]
@@ -507,11 +616,10 @@ mod tests {
         for (p, &n) in prompts.iter().zip(&next) {
             let mut cache = KvCache::new(&m.config);
             let _ = prefill(&em, &mut cache, p, &mut st);
-            let mut cs = vec![cache];
-            singles.push(decode_step(&em, &mut cs, &[n], &mut st));
+            singles.push(decode_step(&em, &mut [&mut cache], &[n], &mut st));
         }
 
-        // batched
+        // batched, each request at its own depth
         let mut caches: Vec<KvCache> = prompts
             .iter()
             .map(|p| {
@@ -520,7 +628,8 @@ mod tests {
                 c
             })
             .collect();
-        let batched = decode_step(&em, &mut caches, &next, &mut st);
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        let batched = decode_step(&em, &mut refs, &next, &mut st);
         for (b, single) in singles.iter().enumerate() {
             close(batched.row(b), single.row(0), 1e-6);
             assert_eq!(caches[b].len(), prompts[b].len() + 1);
@@ -548,5 +657,42 @@ mod tests {
     fn argmax_picks_peak() {
         assert_eq!(argmax(&[0.0, 3.0, -1.0, 2.0]), 1);
         assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn argmax_tie_breaks_to_lowest_index() {
+        // exact ties resolve to the lowest index, so greedy decode is
+        // reproducible no matter which backend produced the logits
+        assert_eq!(argmax(&[0.0, 7.5, 2.0, 7.5, 7.5]), 1);
+        assert_eq!(argmax(&[3.25, 3.25]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        // NaN never wins, wherever it sits
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+    }
+
+    #[test]
+    fn pool_recycles_and_resets() {
+        let m = small_model(6);
+        let em = ExecModel::dense(&m);
+        let mut st = ExecState::new(m.config);
+        let mut pool = KvCachePool::new(m.config);
+
+        let mut a = pool.take(); // cold: allocates
+        assert_eq!((pool.hits(), pool.misses()), (0, 1));
+        let logits1 = prefill(&em, &mut a, &[1, 2, 3], &mut st);
+        assert_eq!(a.len(), 3);
+        pool.put(a);
+        assert_eq!(pool.free_caches(), 1);
+        assert!(pool.resident_bytes() > 0);
+
+        let mut b = pool.take(); // warm: recycled, reset to empty
+        assert_eq!((pool.hits(), pool.misses()), (1, 1));
+        assert_eq!(pool.free_caches(), 0);
+        assert!(b.is_empty(), "recycled cache must start a fresh sequence");
+        let logits2 = prefill(&em, &mut b, &[1, 2, 3], &mut st);
+        close(&logits2.data, &logits1.data, 0.0);
+        assert!((pool.hit_rate() - 0.5).abs() < 1e-9);
+        pool.put(b);
     }
 }

@@ -14,11 +14,22 @@
 //! Column-major traversal keeps the floating-point accumulation order
 //! identical to the dense row dot products, so the packed and dense paths
 //! agree to rounding error — the property `tests/packed_exec.rs` pins down.
+//!
+//! Both backends shard their output rows across the process-wide
+//! [`ThreadPool`] (see [`run_row_sharded`]): every shard computes a
+//! disjoint block of output features for the whole batch, decoding only
+//! its own row range of each packed column. Because each output element is
+//! still accumulated in ascending-column order, results are bit-identical
+//! to the serial kernel for any thread count, shard partition, or batch
+//! composition — the invariant the scheduler's batch-invariance property
+//! (`tests/scheduler.rs`) relies on.
 
 use crate::quant::gptq::QuantizedMatrix;
-use crate::quant::packed::{decode_plane_into, pack_indices, PackedMatrix};
+use crate::quant::packed::{decode_plane_range_into, pack_indices, PackedMatrix};
 use crate::tensor::Matrix;
+use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
+use std::sync::Mutex;
 
 /// A linear operator `y = x · Wᵀ` over a (rows=out × cols=in) weight.
 pub trait LinearOp: Send + Sync {
@@ -27,14 +38,97 @@ pub trait LinearOp: Send + Sync {
     /// Input features (cols of W).
     fn in_features(&self) -> usize;
     /// `out(seq × out_features) = x(seq × in_features) · Wᵀ`. `scratch` is a
-    /// caller-owned reusable buffer (backends that need per-call workspace
-    /// resize it; the dense path ignores it) so the hot loop allocates
-    /// nothing per token.
+    /// caller-owned reusable buffer for per-call workspace (column-decode
+    /// and shard staging; resized on first use, e.g. pre-sized by
+    /// `ExecState`) so the hot loop never reallocates its large buffers
+    /// (parallel dispatch still makes O(shards) small bookkeeping
+    /// allocations per call).
     fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut Vec<f32>);
 
     /// Approximate resident bytes of the weight representation (for the
     /// serving memory report).
     fn weight_bytes(&self) -> usize;
+}
+
+/// Below this many multiply-accumulates (`seq × rows × cols`) a forward
+/// runs serially: pool dispatch costs more than it buys.
+const PAR_MIN_MACS: usize = 32 * 1024;
+/// Minimum output rows per shard; smaller blocks don't amortize dispatch.
+const PAR_MIN_ROWS: usize = 16;
+
+/// Shard an output-rows kernel across [`ThreadPool::global`].
+///
+/// `kernel(r0, r1, decode, stage)` must compute output features
+/// `[r0, r1)` for all `seq` batch rows into `stage`, laid out block-local
+/// row-major (`seq × (r1-r0)`), using `decode` (`r1-r0` floats) as
+/// column-decode scratch. Shards get disjoint sub-slices of `scratch`, so
+/// the float buffers are never reallocated once `scratch` is warm (the
+/// dispatch itself costs O(shards) small allocations); the staged
+/// blocks are scattered into `out` afterwards. The serial path points
+/// `stage` directly at `out` (block-local layout == output layout when the
+/// block is all rows), so nothing is copied.
+///
+/// Every output element is produced by exactly one shard with the same
+/// instruction stream as the serial kernel, so parallel and serial results
+/// are bit-identical.
+fn run_row_sharded<K>(
+    rows: usize,
+    cols: usize,
+    seq: usize,
+    out: &mut [f32],
+    scratch: &mut Vec<f32>,
+    kernel: K,
+) where
+    K: Fn(usize, usize, &mut [f32], &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), seq * rows);
+    let pool = ThreadPool::global();
+    let shards = pool.workers().min(rows / PAR_MIN_ROWS).max(1);
+    if shards <= 1 || seq * rows * cols < PAR_MIN_MACS {
+        if scratch.len() < rows {
+            scratch.resize(rows, 0.0);
+        }
+        kernel(0, rows, &mut scratch[..rows], out);
+        return;
+    }
+
+    // Scratch layout: [decode: rows] ++ [stage: seq × rows], carved into
+    // one disjoint (decode, stage) pair per shard.
+    let need = rows + seq * rows;
+    if scratch.len() < need {
+        scratch.resize(need, 0.0);
+    }
+    let (decode_all, stage_all) = scratch[..need].split_at_mut(rows);
+    let per_shard = rows.div_ceil(shards);
+    let mut decode_rest = decode_all;
+    let mut stage_rest = stage_all;
+    let mut parts: Vec<Mutex<(usize, usize, &mut [f32], &mut [f32])>> = Vec::new();
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + per_shard).min(rows);
+        let bl = r1 - r0;
+        let (decode, rest) = std::mem::take(&mut decode_rest).split_at_mut(bl);
+        decode_rest = rest;
+        let (stage, rest) = std::mem::take(&mut stage_rest).split_at_mut(seq * bl);
+        stage_rest = rest;
+        parts.push(Mutex::new((r0, r1, decode, stage)));
+        r0 = r1;
+    }
+
+    pool.run(parts.len(), |i| {
+        // Uncontended: each job locks only its own part.
+        let mut part = parts[i].lock().unwrap();
+        let (r0, r1, ref mut decode, ref mut stage) = *part;
+        kernel(r0, r1, &mut **decode, &mut **stage);
+    });
+
+    for part in parts {
+        let (r0, r1, _, stage) = part.into_inner().unwrap();
+        let bl = r1 - r0;
+        for t in 0..seq {
+            out[t * rows + r0..t * rows + r1].copy_from_slice(&stage[t * bl..(t + 1) * bl]);
+        }
+    }
 }
 
 /// Dense row-major f32 weights — the reference backend.
@@ -47,22 +141,25 @@ impl LinearOp for Matrix {
         self.cols
     }
 
-    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], _scratch: &mut Vec<f32>) {
+    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut Vec<f32>) {
         let (rows, cols) = (self.rows, self.cols);
         assert!(x.len() >= seq * cols, "x too short for seq={seq}");
         assert!(out.len() >= seq * rows, "out too short for seq={seq}");
-        for t in 0..seq {
-            let xi = &x[t * cols..(t + 1) * cols];
-            let o = &mut out[t * rows..(t + 1) * rows];
-            for (r, ov) in o.iter_mut().enumerate() {
-                let wrow = self.row(r);
-                let mut acc = 0.0f32;
-                for (a, b) in xi.iter().zip(wrow) {
-                    acc += a * b;
+        run_row_sharded(rows, cols, seq, &mut out[..seq * rows], scratch, |r0, r1, _, stage| {
+            let bl = r1 - r0;
+            for t in 0..seq {
+                let xi = &x[t * cols..(t + 1) * cols];
+                let o = &mut stage[t * bl..(t + 1) * bl];
+                for (j, ov) in o.iter_mut().enumerate() {
+                    let wrow = self.row(r0 + j);
+                    let mut acc = 0.0f32;
+                    for (a, b) in xi.iter().zip(wrow) {
+                        acc += a * b;
+                    }
+                    *ov = acc;
                 }
-                *ov = acc;
             }
-        }
+        });
     }
 
     fn weight_bytes(&self) -> usize {
@@ -188,19 +285,26 @@ impl PackedLinear {
         self.out_rows.len()
     }
 
-    /// Decode column `c` (dequant + outlier override + AWQ un-scaling) into
-    /// `out[..rows]` — the per-column gather at the heart of the kernel.
-    fn decode_column_into(&self, c: usize, out: &mut [f32]) {
+    /// Decode rows `[r0, r1)` of column `c` (dequant + outlier override +
+    /// AWQ un-scaling) into `out[..r1-r0]` — the per-column gather at the
+    /// heart of the kernel, in the row-block form the sharded forward
+    /// needs. Outliers of one column are sorted by row, so the block's
+    /// overrides are found by binary search.
+    fn decode_column_range_into(&self, c: usize, r0: usize, r1: usize, out: &mut [f32]) {
         let pc = &self.columns[c];
-        decode_plane_into(&pc.plane, pc.bits, &pc.centroids, &mut out[..self.rows]);
-        for i in self.out_start[c]..self.out_start[c + 1] {
-            out[self.out_rows[i] as usize] = self.out_vals[i];
+        let bl = r1 - r0;
+        decode_plane_range_into(&pc.plane, pc.bits, &pc.centroids, r0, &mut out[..bl]);
+        let (start, end) = (self.out_start[c], self.out_start[c + 1]);
+        let lo = start + self.out_rows[start..end].partition_point(|&r| (r as usize) < r0);
+        let hi = start + self.out_rows[start..end].partition_point(|&r| (r as usize) < r1);
+        for i in lo..hi {
+            out[self.out_rows[i] as usize - r0] = self.out_vals[i];
         }
         if let Some(scales) = &self.awq_scales {
-            let s = scales[c];
-            if s != 1.0 {
-                for v in out[..self.rows].iter_mut() {
-                    *v /= s;
+            let scale = scales[c];
+            if scale != 1.0 {
+                for v in out[..bl].iter_mut() {
+                    *v /= scale;
                 }
             }
         }
@@ -216,33 +320,35 @@ impl LinearOp for PackedLinear {
         self.cols
     }
 
-    /// Fused codebook-gather matmul. For each input feature c, decode the
-    /// weight column once into scratch and accumulate `y[t,·] += x[t,c] ·
-    /// w_c` for every row of the batch, so plane unpacking is amortized
-    /// across the batch. Accumulation runs in ascending-c order — the same
-    /// order as the dense dot product, keeping the two paths bit-compatible.
+    /// Fused codebook-gather matmul, sharded over output rows. For each
+    /// input feature c, a shard decodes its row block of the weight column
+    /// once into scratch and accumulates `y[t, r0..r1] += x[t,c] · w_c`
+    /// for every row of the batch, so plane unpacking is amortized across
+    /// the batch and split (not duplicated) across threads. Accumulation
+    /// runs in ascending-c order — the same order as the dense dot
+    /// product, keeping the two paths bit-compatible.
     fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut Vec<f32>) {
         let (rows, cols) = (self.rows, self.cols);
         assert!(x.len() >= seq * cols, "x too short for seq={seq}");
         assert!(out.len() >= seq * rows, "out too short for seq={seq}");
-        out[..seq * rows].fill(0.0);
-        if scratch.len() < rows {
-            scratch.resize(rows, 0.0);
-        }
-        for c in 0..cols {
-            self.decode_column_into(c, scratch);
-            let col = &scratch[..rows];
-            for t in 0..seq {
-                let xv = x[t * cols + c];
-                if xv == 0.0 {
-                    continue;
-                }
-                let o = &mut out[t * rows..(t + 1) * rows];
-                for (ov, &wv) in o.iter_mut().zip(col) {
-                    *ov += xv * wv;
+        run_row_sharded(rows, cols, seq, &mut out[..seq * rows], scratch, |r0, r1, decode, stage| {
+            let bl = r1 - r0;
+            stage[..seq * bl].fill(0.0);
+            for c in 0..cols {
+                self.decode_column_range_into(c, r0, r1, decode);
+                let col = &decode[..bl];
+                for t in 0..seq {
+                    let xv = x[t * cols + c];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let o = &mut stage[t * bl..(t + 1) * bl];
+                    for (ov, &wv) in o.iter_mut().zip(col) {
+                        *ov += xv * wv;
+                    }
                 }
             }
-        }
+        });
     }
 
     fn weight_bytes(&self) -> usize {
@@ -350,5 +456,43 @@ mod tests {
         let (w, qm) = sample(7, 128, 64, 2, 2);
         let packed = PackedLinear::from_quantized(&qm, None);
         assert!(packed.weight_bytes() < w.weight_bytes() / 4);
+    }
+
+    /// Shapes large enough to cross the parallel threshold must produce
+    /// bit-identical output to the serial kernel: each output element is
+    /// accumulated in the same ascending-column order by exactly one
+    /// shard. (Batch invariance of the scheduler rests on this.)
+    #[test]
+    fn sharded_forward_is_bit_identical_to_serial() {
+        let (_, qm) = sample(9, 160, 96, 3, 2);
+        let packed = PackedLinear::from_quantized(&qm, None);
+        let mut rng = Rng::new(10);
+        let seq = 8; // 8 × 160 × 96 MACs — well over PAR_MIN_MACS
+        let mut x = vec![0.0f32; seq * 96];
+        rng.fill_normal(&mut x, 1.0);
+
+        // serial reference: run each batch row alone (below the MAC
+        // threshold, so run_row_sharded takes the serial path)
+        let mut want = vec![0.0f32; seq * 160];
+        let mut scratch = Vec::new();
+        for t in 0..seq {
+            let row = &x[t * 96..(t + 1) * 96];
+            packed.forward_into(row, 1, &mut want[t * 160..(t + 1) * 160], &mut scratch);
+        }
+
+        let mut got = vec![0.0f32; seq * 160];
+        packed.forward_into(&x, seq, &mut got, &mut scratch);
+        assert_eq!(got, want, "sharded kernel diverged from serial");
+
+        // dense backend: same invariant
+        let deq = qm.dequantize();
+        let mut want_d = vec![0.0f32; seq * 160];
+        for t in 0..seq {
+            let row = &x[t * 96..(t + 1) * 96];
+            deq.forward_into(row, 1, &mut want_d[t * 160..(t + 1) * 160], &mut scratch);
+        }
+        let mut got_d = vec![0.0f32; seq * 160];
+        deq.forward_into(&x, seq, &mut got_d, &mut scratch);
+        assert_eq!(got_d, want_d);
     }
 }

@@ -58,6 +58,26 @@ impl QuantizedModel {
         m
     }
 
+    /// Quantize every projection with `method`, calibration-free (identity
+    /// Hessian, no AWQ) — representative planes/codebooks without the
+    /// pipeline's calibration cost. This is what benches and tests use to
+    /// get a packed model fast; real runs go through
+    /// `coordinator::pipeline::quantize_model`.
+    pub fn quantize_uncalibrated(model: &Model, method: &crate::quant::config::Method) -> Self {
+        let mut matrices = HashMap::new();
+        for id in model.matrix_ids() {
+            let w = model.matrix(id);
+            let plan = method.plan_for(w, None).expect("method yields a plan for every matrix");
+            matrices.insert(id, crate::quant::gptq::quantize_matrix(w, None, &plan));
+        }
+        Self {
+            base: model.clone(),
+            matrices,
+            awq_scales: HashMap::new(),
+            method_name: method.name(),
+        }
+    }
+
     /// Build the packed execution model: every quantized matrix becomes a
     /// [`PackedLinear`] operating on its bit-packed index planes (AWQ
     /// scales folded in); anything left unquantized (and the LM head)

@@ -110,10 +110,25 @@ pub fn pack_indices(idx: &[u8], bits: u8) -> Vec<u8> {
 /// column is decoded per call, so a forward pass touches only the packed
 /// planes and never materializes a dense matrix.
 pub fn decode_plane_into(packed: &[u8], bits: u8, centroids: &[f32], out: &mut [f32]) {
+    decode_plane_range_into(packed, bits, centroids, 0, out)
+}
+
+/// Row-block variant of [`decode_plane_into`]: decode the `out.len()`
+/// indices starting at row `start` (an arbitrary bit offset into the
+/// plane). This is what lets the thread-sharded kernel of
+/// `model/linear.rs` split one column across workers without any shard
+/// re-decoding rows it does not own.
+pub fn decode_plane_range_into(
+    packed: &[u8],
+    bits: u8,
+    centroids: &[f32],
+    start: usize,
+    out: &mut [f32],
+) {
     assert!((1..=8).contains(&bits));
     let mask = ((1u16 << bits) - 1) as u8;
     debug_assert!(centroids.len() >= (mask as usize) + 1, "codebook too small for bit width");
-    let mut bitpos = 0usize;
+    let mut bitpos = start * bits as usize;
     for o in out.iter_mut() {
         let byte = bitpos / 8;
         let off = bitpos % 8;
@@ -341,6 +356,26 @@ mod tests {
             for (o, &i) in out.iter().zip(&idx) {
                 assert_eq!(*o, centroids[i as usize]);
             }
+        });
+    }
+
+    #[test]
+    fn decode_plane_range_matches_full_decode() {
+        check_default("decode plane range", |rng| {
+            let bits = 1 + rng.below_usize(8) as u8;
+            let n = 1 + rng.below_usize(200);
+            let k = 1usize << bits;
+            let idx: Vec<u8> = (0..n).map(|_| rng.below(k as u64) as u8).collect();
+            let centroids: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            let packed = pack_indices(&idx, bits);
+            let mut full = vec![0.0f32; n];
+            decode_plane_into(&packed, bits, &centroids, &mut full);
+            // an arbitrary [start, start+len) window decodes the same rows
+            let start = rng.below_usize(n);
+            let len = 1 + rng.below_usize(n - start);
+            let mut window = vec![0.0f32; len];
+            decode_plane_range_into(&packed, bits, &centroids, start, &mut window);
+            assert_eq!(window, full[start..start + len]);
         });
     }
 

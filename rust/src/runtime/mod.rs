@@ -1,8 +1,16 @@
-//! PJRT runtime: loads the AOT-lowered HLO text artifacts (produced once
-//! by `python/compile/aot.py`) and executes them from the Rust side via
-//! the `xla` crate. Python is never on this path.
+//! Runtime layer: everything that *serves* the model rather than builds
+//! it.
+//!
+//! * [`scheduler`] — the continuous-batching serving engine (request
+//!   admission, pooled KV caches, fused variable-length decode) over the
+//!   `model::exec` execution backends.
+//! * [`executor`] / [`Runtime`] — the PJRT path: loads the AOT-lowered
+//!   HLO text artifacts (produced once by `python/compile/aot.py`) and
+//!   executes them from the Rust side via the `xla` crate. Python is
+//!   never on this path.
 
 pub mod executor;
+pub mod scheduler;
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;

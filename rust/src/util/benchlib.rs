@@ -145,19 +145,34 @@ impl Bench {
 
     /// Write accumulated samples to the CSV log.
     pub fn finish(self) {
-        let path = std::path::Path::new("target").join("claq-bench.csv");
-        let exists = path.exists();
-        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
-            if !exists {
-                let _ = writeln!(f, "group,name,median_ns,mad_ns,mean_ns,iters");
-            }
-            for s in &self.samples {
-                let _ = writeln!(
-                    f,
+        let rows: Vec<String> = self
+            .samples
+            .iter()
+            .map(|s| {
+                format!(
                     "{},{},{:.1},{:.1},{:.1},{}",
                     self.group, s.name, s.median_ns, s.mad_ns, s.mean_ns, s.iters
-                );
-            }
+                )
+            })
+            .collect();
+        append_csv(&rows);
+    }
+}
+
+/// Append pre-formatted rows (`group,name,median_ns,mad_ns,mean_ns,iters`)
+/// to the shared bench log `target/claq-bench.csv`, creating it with the
+/// header if absent. Scenario benches that time whole serving traces
+/// rather than per-iteration closures (e.g. `bench_scheduler`) use this to
+/// land in the same log as [`Bench::finish`].
+pub fn append_csv(rows: &[String]) {
+    let path = std::path::Path::new("target").join("claq-bench.csv");
+    let exists = path.exists();
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        if !exists {
+            let _ = writeln!(f, "group,name,median_ns,mad_ns,mean_ns,iters");
+        }
+        for row in rows {
+            let _ = writeln!(f, "{row}");
         }
     }
 }

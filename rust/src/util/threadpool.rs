@@ -1,34 +1,194 @@
-//! A small scoped thread pool over `std::thread` (no rayon/tokio in the
-//! offline sandbox). The coordinator uses it to quantize independent weight
-//! matrices in parallel and the harness uses it for method-grid fan-out.
+//! A persistent-worker thread pool over `std::thread` (no rayon/tokio in
+//! the offline sandbox).
+//!
+//! PR 1's pool spawned fresh scoped threads on every [`ThreadPool::run`]
+//! call, which is fine for the coordinator's coarse per-matrix jobs but far
+//! too expensive for the serving hot path, where the packed kernels shard
+//! every projection of every decode step (`model/linear.rs`). This version
+//! keeps workers parked on a condvar between tasks, so a dispatch costs a
+//! mutex hand-off instead of `workers` thread spawns. The submitting thread
+//! also claims job indices itself while it waits, so a pool of `n` workers
+//! delivers `n`-way parallelism with `n - 1` spawned threads and no
+//! oversubscription.
+//!
+//! Jobs may borrow from the submitting stack frame: `run` publishes a
+//! lifetime-erased pointer to the closure and does not return (or unwind)
+//! until every job index has finished, which is the invariant that makes
+//! the erasure sound. Panics inside jobs are caught, the pool is drained to
+//! quiescence, and the first payload is re-raised on the submitter.
+//!
+//! The serving path shares one process-wide pool ([`ThreadPool::global`],
+//! sized by `CLAQ_THREADS` or the host); the coordinator keeps building
+//! private pools for its own fan-out.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::any::Any;
+use std::cell::Cell;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Fixed-size pool executing `FnOnce` jobs. Jobs submitted through
-/// [`ThreadPool::scope`] may borrow from the enclosing stack frame.
+thread_local! {
+    /// Whether the current thread is executing a pool job. A nested `run`
+    /// from inside a job executes inline instead of dispatching: the outer
+    /// task holds the submit lock until it drains, so dispatching from a
+    /// worker would deadlock.
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Lifetime-erased job: called with a job index in `0..n_jobs`.
+///
+/// Safety contract: the pointee outlives the task because `run` blocks
+/// until `outstanding == 0` before its closure goes out of scope.
+struct Task {
+    job: *const (dyn Fn(usize) + Sync),
+    n_jobs: usize,
+}
+
+// SAFETY: `job` is only dereferenced while the submitting `run` call keeps
+// the closure alive (it waits for all claimed indices to finish), and the
+// pointee is `Sync`, so shared calls from worker threads are fine.
+unsafe impl Send for Task {}
+
+#[derive(Default)]
+struct Shared {
+    /// Current task; `None` between submissions.
+    task: Option<Task>,
+    /// Next unclaimed job index of the current task.
+    next: usize,
+    /// Claimed-or-unclaimed job indices not yet finished.
+    outstanding: usize,
+    /// First panic payload raised by a job of the current task.
+    panic: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+struct Inner {
+    shared: Mutex<Shared>,
+    /// Workers park here between tasks.
+    work: Condvar,
+    /// The submitter parks here until `outstanding` hits zero.
+    done: Condvar,
+}
+
+impl Inner {
+    /// Claim one job index of the current task, if any remain.
+    fn claim(&self) -> Option<(*const (dyn Fn(usize) + Sync), usize)> {
+        let mut s = self.shared.lock().unwrap();
+        match &s.task {
+            Some(t) if s.next < t.n_jobs => {
+                let idx = s.next;
+                let job = t.job;
+                s.next += 1;
+                Some((job, idx))
+            }
+            _ => None,
+        }
+    }
+
+    /// Run one claimed job, catching panics, and retire it.
+    fn execute(&self, job: *const (dyn Fn(usize) + Sync), idx: usize) {
+        // SAFETY: see the Task contract — the closure is alive until the
+        // submitter observes outstanding == 0, which cannot happen before
+        // this job retires below.
+        let f = unsafe { &*job };
+        let was_in_job = IN_POOL_JOB.with(|flag| flag.replace(true));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(idx)));
+        IN_POOL_JOB.with(|flag| flag.set(was_in_job));
+        let mut s = self.shared.lock().unwrap();
+        if let Err(payload) = result {
+            if s.panic.is_none() {
+                s.panic = Some(payload);
+            }
+        }
+        s.outstanding -= 1;
+        if s.outstanding == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let claimed = {
+                let mut s = self.shared.lock().unwrap();
+                loop {
+                    if s.shutdown {
+                        return;
+                    }
+                    match &s.task {
+                        Some(t) if s.next < t.n_jobs => break,
+                        _ => s = self.work.wait(s).unwrap(),
+                    }
+                }
+                let job = s.task.as_ref().unwrap().job;
+                let idx = s.next;
+                s.next += 1;
+                (job, idx)
+            };
+            self.execute(claimed.0, claimed.1);
+        }
+    }
+}
+
+/// Fixed-size pool with persistent workers. `workers` is the delivered
+/// parallelism: `workers - 1` threads are spawned and the submitting thread
+/// contributes the last lane during [`ThreadPool::run`].
 pub struct ThreadPool {
     workers: usize,
+    inner: Arc<Inner>,
+    /// Serializes concurrent `run` calls (one task in flight at a time).
+    submit: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
-    /// Create a pool sized to the host (at least 1).
+    /// Create a pool delivering `workers`-way parallelism (at least 1).
+    /// `new(1)` spawns no threads and runs jobs inline.
     pub fn new(workers: usize) -> Self {
-        Self { workers: workers.max(1) }
+        let workers = workers.max(1);
+        let inner = Arc::new(Inner {
+            shared: Mutex::new(Shared::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..workers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("claq-pool-{i}"))
+                    .spawn(move || inner.worker_loop())
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { workers, inner, submit: Mutex::new(()), handles }
     }
 
     /// Pool sized from available parallelism.
     pub fn host() -> Self {
-        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        Self::new(n)
+        Self::new(host_threads())
+    }
+
+    /// The process-wide pool the execution kernels shard onto. Sized by
+    /// `CLAQ_THREADS` when set (use `CLAQ_THREADS=1` to force serial
+    /// kernels), otherwise by the host; never torn down.
+    pub fn global() -> &'static ThreadPool {
+        static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let n = std::env::var("CLAQ_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or_else(host_threads);
+            ThreadPool::new(n)
+        })
     }
 
     pub fn workers(&self) -> usize {
         self.workers
     }
 
-    /// Run `jobs` (indexed closures) across the pool and wait for all.
-    /// Results are returned in job order.
+    /// Run `n_jobs` indexed closures across the pool and wait for all.
+    /// Results are returned in job order. The submitting thread executes
+    /// jobs too, and a `run` issued from *inside* a pool job executes
+    /// inline (the nested-dispatch case that would otherwise deadlock on
+    /// the submit lock), so the call cannot hang on a busy pool.
     pub fn run<T, F>(&self, n_jobs: usize, job: F) -> Vec<T>
     where
         T: Send,
@@ -37,21 +197,56 @@ impl ThreadPool {
         if n_jobs == 0 {
             return Vec::new();
         }
-        let next = AtomicUsize::new(0);
+        if n_jobs == 1 || self.handles.is_empty() || IN_POOL_JOB.with(Cell::get) {
+            return (0..n_jobs).map(&job).collect();
+        }
+
         let results: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
-        let workers = self.workers.min(n_jobs);
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n_jobs {
-                        break;
-                    }
-                    let out = job(i);
-                    *results[i].lock().unwrap() = Some(out);
-                });
+        let wrapper = |i: usize| {
+            let out = job(i);
+            *results[i].lock().unwrap() = Some(out);
+        };
+        let erased: &(dyn Fn(usize) + Sync) = &wrapper;
+        // SAFETY: lifetime erasure to 'static; sound because this function
+        // waits for outstanding == 0 before `wrapper` (and everything it
+        // borrows) goes out of scope — see the Task contract.
+        let job_ptr: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(erased)
+        };
+
+        let guard = self.submit.lock().unwrap();
+        {
+            let mut s = self.inner.shared.lock().unwrap();
+            s.task = Some(Task { job: job_ptr, n_jobs });
+            s.next = 0;
+            s.outstanding = n_jobs;
+            s.panic = None;
+        }
+        // Wake only as many workers as there are jobs beyond the one the
+        // submitter will take itself — notify_all would stampede every
+        // parked worker through the mutex on each decode-step dispatch.
+        for _ in 0..(n_jobs - 1).min(self.handles.len()) {
+            self.inner.work.notify_one();
+        }
+
+        // Contribute the submitting thread as the last parallel lane.
+        while let Some((job, idx)) = self.inner.claim() {
+            self.inner.execute(job, idx);
+        }
+
+        let panic = {
+            let mut s = self.inner.shared.lock().unwrap();
+            while s.outstanding > 0 {
+                s = self.inner.done.wait(s).unwrap();
             }
-        });
+            s.task = None;
+            s.panic.take()
+        };
+        drop(guard);
+        if let Some(payload) = panic {
+            std::panic::resume_unwind(payload);
+        }
+
         results
             .into_iter()
             .map(|m| m.into_inner().unwrap().expect("job did not produce a result"))
@@ -69,36 +264,28 @@ impl ThreadPool {
     }
 }
 
-/// A simple counting semaphore used for backpressure in the serving example.
-pub struct Semaphore {
-    permits: Mutex<usize>,
-    cv: Condvar,
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut s = self.inner.shared.lock().unwrap();
+            s.shutdown = true;
+        }
+        self.inner.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
-impl Semaphore {
-    pub fn new(permits: usize) -> Arc<Self> {
-        Arc::new(Self { permits: Mutex::new(permits), cv: Condvar::new() })
-    }
-
-    pub fn acquire(&self) {
-        let mut p = self.permits.lock().unwrap();
-        while *p == 0 {
-            p = self.cv.wait(p).unwrap();
-        }
-        *p -= 1;
-    }
-
-    pub fn release(&self) {
-        let mut p = self.permits.lock().unwrap();
-        *p += 1;
-        self.cv.notify_one();
-    }
+/// Host parallelism (at least 1) without building a pool.
+pub fn host_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
     #[test]
     fn run_returns_in_order() {
@@ -135,13 +322,67 @@ mod tests {
     }
 
     #[test]
-    fn semaphore_counts() {
-        let sem = Semaphore::new(2);
-        sem.acquire();
-        sem.acquire();
-        sem.release();
-        sem.acquire(); // would deadlock if release didn't restore a permit
-        sem.release();
-        sem.release();
+    fn single_worker_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.workers(), 1);
+        let out = pool.run(10, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_is_reusable_across_tasks() {
+        // The point of persistent workers: many dispatches on one pool.
+        let pool = ThreadPool::new(4);
+        for round in 0..50usize {
+            let out = pool.run(16, |i| i * round);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * round);
+            }
+        }
+    }
+
+    #[test]
+    fn jobs_borrow_submitter_stack() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..64).collect();
+        let sums = pool.run(8, |i| data[i * 8..(i + 1) * 8].iter().sum::<u64>());
+        assert_eq!(sums.iter().sum::<u64>(), (0..64).sum());
+    }
+
+    #[test]
+    fn panic_in_job_propagates_after_drain() {
+        let pool = ThreadPool::new(4);
+        let ran = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(32, |i| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                if i == 7 {
+                    panic!("job 7 failed");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        // The pool must still be usable afterwards (drained to quiescence).
+        let out = pool.run(4, |i| i);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert!(ran.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn nested_run_executes_inline_instead_of_deadlocking() {
+        let pool = ThreadPool::new(4);
+        let out = pool.run(4, |i| {
+            // dispatching from inside a job must fall back to inline
+            pool.run(3, move |j| i * 10 + j).iter().sum::<usize>()
+        });
+        assert_eq!(out, vec![3, 33, 63, 93]);
+    }
+
+    #[test]
+    fn global_pool_exists() {
+        let pool = ThreadPool::global();
+        assert!(pool.workers() >= 1);
+        let out = pool.run(8, |i| i);
+        assert_eq!(out.len(), 8);
     }
 }

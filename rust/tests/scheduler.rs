@@ -1,0 +1,187 @@
+//! Cross-module properties of the continuous-batching serving runtime.
+//!
+//! The load-bearing one is **batch invariance**: whatever mix of requests
+//! the scheduler packs into a fused decode step — staggered arrivals,
+//! mid-stream backfill, wave drains — every request's greedy token stream
+//! must be identical to running that request alone through
+//! `prefill` + one-row `decode_step`. This holds because (a) each decode
+//! row only attends to its own cache, (b) the sharded kernels accumulate
+//! every output element in the same ascending-column order regardless of
+//! batch shape or thread count, and (c) `argmax` tie-breaks
+//! deterministically. It is what makes serving results reproducible and
+//! lets the bench compare policies by throughput alone.
+
+use claq::model::exec::{
+    argmax, decode_step, prefill, ExecModel, ExecState, KvCache, KvCachePool,
+};
+use claq::model::quantized::QuantizedModel;
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::Method;
+use claq::runtime::scheduler::{AdmissionPolicy, Request, Scheduler, SchedulerConfig};
+use claq::util::proptest::{check, Config};
+use claq::util::rng::Rng;
+use std::collections::HashMap;
+
+fn test_config() -> TransformerConfig {
+    TransformerConfig {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 32,
+        rope_theta: 10000.0,
+        eps: 1e-5,
+    }
+}
+
+/// The single-request reference: prefill once, then one-row decode steps.
+fn reference_generate(model: &ExecModel, st: &mut ExecState, req: &Request) -> Vec<u16> {
+    let mut cache = KvCache::new(&model.config);
+    let logits = prefill(model, &mut cache, &req.prompt, st);
+    let mut toks = vec![argmax(logits.row(req.prompt.len() - 1))];
+    while toks.len() < req.max_new_tokens && req.stop_token != Some(*toks.last().unwrap()) {
+        let last = *toks.last().unwrap();
+        let logits = decode_step(model, &mut [&mut cache], &[last], st);
+        toks.push(argmax(logits.row(0)));
+    }
+    toks
+}
+
+/// Drive a scheduler over step-domain arrivals: request `i` is submitted
+/// just before engine step `arrivals[i].0`. Returns tokens by request
+/// index.
+fn staggered_serve(
+    model: &ExecModel,
+    st: &mut ExecState,
+    cfg: SchedulerConfig,
+    arrivals: &[(usize, Request)],
+) -> Vec<Vec<u16>> {
+    let mut sched = Scheduler::new(model.config, cfg);
+    let mut ids = Vec::new();
+    let mut tokens_by_id: HashMap<u64, Vec<u16>> = HashMap::new();
+    let mut next = 0usize;
+    let mut step = 0usize;
+    while next < arrivals.len() || sched.has_work() {
+        while next < arrivals.len() && arrivals[next].0 <= step {
+            ids.push(sched.submit(arrivals[next].1.clone()).unwrap());
+            next += 1;
+        }
+        if sched.has_work() {
+            for c in sched.step(model, st) {
+                tokens_by_id.insert(c.id, c.tokens);
+            }
+        }
+        step += 1;
+    }
+    assert_eq!(tokens_by_id.len(), arrivals.len(), "every request must complete");
+    ids.iter().map(|id| tokens_by_id.remove(id).unwrap()).collect()
+}
+
+fn random_arrivals(rng: &mut Rng, cfg: &TransformerConfig, n: usize) -> Vec<(usize, Request)> {
+    let mut arrivals: Vec<(usize, Request)> = (0..n)
+        .map(|_| {
+            let plen = 1 + rng.below_usize(6);
+            let prompt: Vec<u16> = (0..plen).map(|_| rng.below(cfg.vocab as u64) as u16).collect();
+            let max_new = 1 + rng.below_usize(6);
+            let stop_token = if rng.next_f64() < 0.33 {
+                Some(rng.below(cfg.vocab as u64) as u16)
+            } else {
+                None
+            };
+            (rng.below_usize(6), Request { prompt, max_new_tokens: max_new, stop_token })
+        })
+        .collect();
+    arrivals.sort_by_key(|(step, _)| *step);
+    arrivals
+}
+
+/// `build` is a fn pointer (not a capture) so the property closure stays
+/// `RefUnwindSafe`; the test models are small enough to rebuild per case.
+fn check_batch_invariance(build: fn() -> ExecModel, seed: u64, cases: usize) {
+    check("scheduler batch invariance", Config { cases, seed }, move |rng| {
+        let model = build();
+        let model = &model;
+        let cfg = model.config;
+        let mut st = ExecState::new(cfg);
+        let n = 2 + rng.below_usize(4);
+        let arrivals = random_arrivals(rng, &cfg, n);
+        let sched_cfg = SchedulerConfig {
+            max_slots: 1 + rng.below_usize(3),
+            prefill_token_budget: 4 + rng.below_usize(12),
+            policy: if rng.next_f64() < 0.5 {
+                AdmissionPolicy::Continuous
+            } else {
+                AdmissionPolicy::Wave
+            },
+        };
+        let served = staggered_serve(model, &mut st, sched_cfg.clone(), &arrivals);
+        for (i, (_, req)) in arrivals.iter().enumerate() {
+            let want = reference_generate(model, &mut st, req);
+            assert_eq!(
+                served[i], want,
+                "request {i} diverged under {:?} (prompt {:?})",
+                sched_cfg.policy, req.prompt
+            );
+        }
+    });
+}
+
+fn build_dense() -> ExecModel {
+    ExecModel::dense(&Model::random(test_config(), &mut Rng::new(71)))
+}
+
+fn build_packed() -> ExecModel {
+    let model = Model::random(test_config(), &mut Rng::new(72));
+    let em = QuantizedModel::quantize_uncalibrated(&model, &Method::fusion_2_12()).to_exec();
+    assert_eq!(em.backend, "packed");
+    em
+}
+
+/// N staggered requests through the scheduler are token-identical to N
+/// independent single-request runs — dense backend, both policies.
+#[test]
+fn prop_scheduler_matches_single_request_dense() {
+    check_batch_invariance(build_dense, 301, 12);
+}
+
+/// Same property straight off the packed CLAQ planes (exercises the
+/// thread-sharded fused codebook-gather kernel under mixed batches).
+#[test]
+fn prop_scheduler_matches_single_request_packed() {
+    check_batch_invariance(build_packed, 302, 6);
+}
+
+/// A recycled pool cache behaves exactly like a fresh one, including
+/// truncate-replay, and the pool accounts for its resident bytes.
+#[test]
+fn pool_reuse_preserves_cache_semantics() {
+    let cfg = test_config();
+    let model = Model::random(cfg, &mut Rng::new(73));
+    let em = ExecModel::dense(&model);
+    let mut st = ExecState::new(cfg);
+    let mut pool = KvCachePool::with_capacity(cfg, 1);
+    let one_cache_bytes = pool.resident_bytes();
+    assert!(one_cache_bytes > 0);
+
+    // use a cache, return it, take it back: must start empty
+    let mut c = pool.take();
+    let full = prefill(&em, &mut c, &[1, 2, 3, 4], &mut st);
+    pool.put(c);
+    assert_eq!(pool.resident_bytes(), one_cache_bytes);
+    let mut c = pool.take();
+    assert!(c.is_empty());
+    assert_eq!(pool.resident_bytes(), 0, "taken caches leave the pool");
+
+    // recycled cache supports prefix truncation exactly like a fresh one
+    let again = prefill(&em, &mut c, &[1, 2, 3, 4], &mut st);
+    assert_eq!(again.data, full.data);
+    c.truncate(2);
+    let replay = prefill(&em, &mut c, &[3, 4], &mut st);
+    assert_eq!(replay.row(1), full.row(3));
+    assert_eq!(c.len(), 4);
+    pool.put(c);
+
+    assert_eq!((pool.hits(), pool.misses()), (2, 0));
+    assert!((pool.hit_rate() - 1.0).abs() < 1e-12);
+}
