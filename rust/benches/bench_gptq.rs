@@ -1,13 +1,27 @@
 //! L3 hot-path bench: the GPTQ engine end to end on one matrix — Hessian
 //! factorization + per-column quantize + OBS error propagation, the inner
 //! loop behind every Table-1 row. Cells cover the model's real matrix
-//! shapes and both centroid rules.
+//! shapes plus production-size ≥512-column shapes, where the blocked
+//! lazy-batch OBS path (DESIGN.md §8) is compared against the unblocked
+//! baseline (`block_size = 0`) — the tracked single-matrix speedup.
+//! Results land in `target/claq-bench.csv` and `BENCH_gptq.json` at the
+//! repo root (CI runs this bench in `CLAQ_BENCH_FAST` mode every push).
 
-use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
+use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan, DEFAULT_BLOCK};
 use claq::tensor::linalg::gram;
 use claq::tensor::Matrix;
 use claq::util::benchlib::{black_box, Bench};
 use claq::util::rng::Rng;
+
+fn hessian(cols: usize, samples: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut x = Matrix::zeros(samples, cols);
+    rng.fill_normal(&mut x.data, 1.0);
+    let mut h = gram(&x, 0.0);
+    for v in h.iter_mut() {
+        *v *= 2.0;
+    }
+    h
+}
 
 fn main() {
     let mut b = Bench::new("gptq");
@@ -16,12 +30,9 @@ fn main() {
     for &(rows, cols) in &[(128usize, 128usize), (352, 128), (192, 192)] {
         let mut w = Matrix::zeros(rows, cols);
         rng.fill_normal(&mut w.data, 0.02);
-        let mut x = Matrix::zeros(256, cols);
-        rng.fill_normal(&mut x.data, 1.0);
-        let mut h = gram(&x, 0.0);
-        for v in h.iter_mut() {
-            *v *= 2.0;
-        }
+        // 256 calibration samples, matching the pre-blocking bench cells so
+        // the target/claq-bench.csv history stays comparable.
+        let h = hessian(cols, 256, &mut rng);
         let elems = (rows * cols) as u64;
         for (name, rule) in [("kmeans", CentroidRule::KMeans), ("uniform", CentroidRule::UniformMinMax)] {
             let plan = MatrixPlan::uniform(cols, 2, rule, true);
@@ -42,6 +53,32 @@ fn main() {
                 black_box(quantize_matrix(black_box(&w), None, &plan_rtn));
             },
         );
+    }
+
+    // Production-size cells: the unblocked baseline re-sweeps the whole
+    // rows×trailing working set for every column (cache-hostile once it
+    // spills L2), while the blocked path keeps a B-column window resident
+    // and row-shards one trailing rank-B update per block. Adjacent cells
+    // record the tracked blocked-vs-unblocked speedup.
+    for &(rows, cols) in &[(512usize, 512usize), (2048, 512)] {
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.02);
+        // 2·cols samples keep the gram full rank at these widths
+        let h = hessian(cols, 2 * cols, &mut rng);
+        let elems = (rows * cols) as u64;
+        let mut plan = MatrixPlan::uniform(cols, 2, CentroidRule::KMeans, true);
+        for (label, block) in
+            [("unblocked", 0usize), ("b16", 16), ("b64", DEFAULT_BLOCK), ("b256", 256)]
+        {
+            plan.block_size = block;
+            b.run_with_elems(
+                &format!("quantize {rows}x{cols} 2b kmeans+OBS {label}"),
+                Some(elems),
+                || {
+                    black_box(quantize_matrix(black_box(&w), Some(&h), &plan));
+                },
+            );
+        }
     }
     b.finish();
 }

@@ -27,7 +27,13 @@ use std::time::Instant;
 /// Pipeline options.
 #[derive(Clone, Debug)]
 pub struct PipelineOpts {
-    /// Worker threads for intra-layer matrix fan-out.
+    /// Worker threads for intra-layer matrix fan-out. Parallelism nests
+    /// one level deep: with `workers > 1` this fan-out occupies the pool
+    /// and the quantizer's row-sharded trailing OBS updates fall back
+    /// inline (the thread pool's nested-dispatch rule); with
+    /// `workers == 1` matrices quantize sequentially and each trailing
+    /// update fans out across `ThreadPool::global` instead — the right
+    /// mode for few huge matrices.
     pub workers: usize,
     /// Progress logging to stderr.
     pub verbose: bool,
@@ -37,11 +43,20 @@ pub struct PipelineOpts {
     /// layer). Same math, ~L/2× less calibration work — see DESIGN.md §5.
     /// The non-incremental path is kept for the ablation bench.
     pub incremental: bool,
+    /// OBS lazy-update block width handed to every `MatrixPlan`
+    /// (DESIGN.md §8). Purely a performance knob — any value, 0 meaning
+    /// unblocked, yields bit-identical quantization.
+    pub quant_block: usize,
 }
 
 impl Default for PipelineOpts {
     fn default() -> Self {
-        Self { workers: host_threads(), verbose: false, incremental: true }
+        Self {
+            workers: host_threads(),
+            verbose: false,
+            incremental: true,
+            quant_block: crate::quant::gptq::DEFAULT_BLOCK,
+        }
     }
 }
 
@@ -243,7 +258,8 @@ pub fn quantize_model(
                 }
                 m => {
                     let hd = h.map(|h| hess_diag(h, w.cols));
-                    let plan = m.plan_for(w, hd.as_deref()).expect("plan");
+                    let mut plan = m.plan_for(w, hd.as_deref()).expect("plan");
+                    plan.block_size = opts.quant_block;
                     let q = quantize_matrix(w, h, &plan);
                     let deq = q.dequantize();
                     (id, Some((q, None)), deq)
@@ -350,7 +366,8 @@ pub fn quantize_model_heuristic(
                     s,
                 },
             };
-            let plan = method.plan_for(w, None).unwrap();
+            let mut plan = method.plan_for(w, None).unwrap();
+            plan.block_size = opts.quant_block;
             let q = quantize_matrix(w, Some(h), &plan);
             let deq = q.dequantize();
             (id, q, deq)
@@ -480,6 +497,26 @@ mod tests {
         let deq = qm.matrices[&id].dequantize();
         assert_eq!(qm.base.matrix(id).data, deq.data);
         assert_ne!(model.matrix(id).data, deq.data);
+    }
+
+    #[test]
+    fn quant_block_size_is_invisible() {
+        // The blocked quantizer is pinned bit-identical to the unblocked
+        // path at the matrix level (tests/property_quant.rs); this checks
+        // the same discipline survives the whole sequential pipeline,
+        // where layer k's calibration depends on layers < k bit for bit.
+        let (model, calib, _) = setup();
+        let tiny = PipelineOpts { quant_block: 3, ..PipelineOpts::default() };
+        let unblocked = PipelineOpts { quant_block: 0, ..PipelineOpts::default() };
+        let (a, _) = quantize_model(&model, &Method::Claq { bits: 2 }, &calib, &tiny);
+        let (b, _) = quantize_model(&model, &Method::Claq { bits: 2 }, &calib, &unblocked);
+        for id in model.matrix_ids() {
+            let (da, db) = (a.matrices[&id].dequantize(), b.matrices[&id].dequantize());
+            let bits = |m: &crate::tensor::Matrix| {
+                m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            };
+            assert_eq!(bits(&da), bits(&db), "{} differs across block sizes", id.name());
+        }
     }
 
     #[test]

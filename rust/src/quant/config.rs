@@ -2,7 +2,7 @@
 //! the paper expressed as a [`Method`], plus the Appendix F fusion presets
 //! (CLAQ* 2.12 / 2.24 / 3.12 / 3.23).
 
-use crate::quant::gptq::{CentroidRule, MatrixPlan};
+use crate::quant::gptq::{CentroidRule, MatrixPlan, DEFAULT_BLOCK};
 use crate::quant::outliers::{ColumnMetric, OutlierStats};
 use crate::quant::precision::{allocate_ap, BitPair, BitPlan};
 use crate::quant::reservation::{allocate_fixed, allocate_or, OrSetting, ReservePlan};
@@ -173,6 +173,7 @@ impl Method {
                     rule: CentroidRule::KMeans,
                     propagate: true,
                     damp_pct: 0.01,
+                    block_size: DEFAULT_BLOCK,
                 })
             }
             Method::ClaqOr { bits, budget_bits, setting, s } => {
@@ -201,6 +202,7 @@ fn plan_with_reserve(bits: BitPlan, reserve: ReservePlan) -> MatrixPlan {
         rule: CentroidRule::KMeans,
         propagate: true,
         damp_pct: 0.01,
+        block_size: DEFAULT_BLOCK,
     }
 }
 

@@ -13,12 +13,23 @@
 //! (H⁻¹ = Uᵀ·U). Quantizing column j to q introduces residual
 //! e = (w_j − q)/U[j,j]; every not-yet-quantized column k > j is updated by
 //! w_k −= e · U[j,k], which is optimal in the OBS sense.
+//!
+//! The propagation is **block-lazy** (GPTQ's "lazy batch" trick, DESIGN.md
+//! §8): columns are processed in blocks of [`MatrixPlan::block_size`];
+//! inside a block the error is propagated eagerly (the working set is B
+//! columns and stays cache-resident), while the scaled residuals E (rows×B)
+//! are accumulated and applied to the trailing columns once per block as a
+//! rank-B update, row-sharded across the thread pool. Every output element
+//! still receives its updates one at a time in ascending source-column
+//! order, so serial, parallel, and every block size are bit-identical —
+//! the same discipline the packed decode kernels pin (`model/linear.rs`).
 
 use crate::quant::codebook::{uniform_codebook, Codebook};
-use crate::quant::kmeans::{kmeans_1d, KMeansOpts};
-use crate::quant::reservation::pick_reserved_rows;
-use crate::tensor::linalg::{dampen, gptq_inverse_factor};
+use crate::quant::kmeans::{kmeans_1d_into, KMeansOpts, KMeansScratch};
+use crate::quant::reservation::pick_reserved_rows_into;
+use crate::tensor::linalg::stabilized_inverse_factor;
 use crate::tensor::Matrix;
+use crate::util::threadpool::ThreadPool;
 
 /// How codebook centroids are chosen per column.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,6 +39,11 @@ pub enum CentroidRule {
     /// Min–max uniform levels (RTN / GPTQ baselines).
     UniformMinMax,
 }
+
+/// Default OBS lazy-update block width. 64 columns × f32 keeps a block's
+/// working set (rows × 256 B) inside L2 for every production shape while
+/// amortizing one trailing sweep over 64 columns.
+pub const DEFAULT_BLOCK: usize = 64;
 
 /// Full quantization plan for one weight matrix (rows × cols, columns are
 /// the quantization groups — for a Linear stored (out × in) each group is
@@ -44,6 +60,12 @@ pub struct MatrixPlan {
     pub propagate: bool,
     /// Hessian dampening (GPTQ default 0.01).
     pub damp_pct: f64,
+    /// OBS lazy-update block width B: error is propagated eagerly within a
+    /// B-column block and batched into one row-parallel rank-B update of
+    /// the trailing columns at block end. 0 means unblocked (B = cols).
+    /// Purely a performance knob — every value produces bit-identical
+    /// output.
+    pub block_size: usize,
 }
 
 impl MatrixPlan {
@@ -54,6 +76,7 @@ impl MatrixPlan {
             rule,
             propagate,
             damp_pct: 0.01,
+            block_size: DEFAULT_BLOCK,
         }
     }
 
@@ -100,11 +123,14 @@ pub struct QuantizedMatrix {
 
 impl QuantizedMatrix {
     /// Reconstruct the dense matrix (codebook decode + outlier overwrite).
+    /// Row-major traversal: each output row is filled contiguously instead
+    /// of striding a whole column of cache lines per codebook.
     pub fn dequantize(&self) -> Matrix {
         let mut m = Matrix::zeros(self.rows, self.cols);
-        for (c, qc) in self.columns.iter().enumerate() {
-            for r in 0..self.rows {
-                m.data[r * self.cols + c] = qc.codebook.dequantize(qc.indices[r]);
+        for r in 0..self.rows {
+            let row = &mut m.data[r * self.cols..(r + 1) * self.cols];
+            for (out, qc) in row.iter_mut().zip(&self.columns) {
+                *out = qc.codebook.dequantize(qc.indices[r]);
             }
         }
         for o in &self.outliers {
@@ -128,10 +154,106 @@ impl QuantizedMatrix {
     }
 }
 
+/// Reusable workspace for [`quantize_matrix_pooled`]: every buffer the
+/// per-column loop needs, allocated once and recycled, so the loop runs
+/// with zero heap allocations in steady state (the per-column outputs —
+/// index vector and codebook — are the only allocations left, and the
+/// stable index sort behind outlier reservation may allocate its merge
+/// buffer on columns that actually reserve).
+#[derive(Default)]
+pub struct QuantScratch {
+    /// Current (already-updated) column, `rows` long.
+    col: Vec<f32>,
+    /// Per-entry quantization error of the current column.
+    err: Vec<f32>,
+    /// Reserved-row mask of the current column.
+    reserved: Vec<bool>,
+    /// Reserved row indices (ascending) of the current column.
+    reserved_rows: Vec<usize>,
+    /// Index sort buffer for `pick_reserved_rows_into`.
+    sort_idx: Vec<usize>,
+    /// Non-reserved entries handed to the codebook builder.
+    clusterable: Vec<f32>,
+    /// Scaled residuals E of the current block, row-major rows × B.
+    eblock: Vec<f64>,
+    /// K-Means working buffers (sorted values, d2, centroids, counts, sums).
+    kmeans: KMeansScratch,
+}
+
+impl QuantScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Below this many f64 multiply-accumulates (rows × block × trailing) a
+/// trailing update runs serially: pool dispatch costs more than it buys.
+const PAR_MIN_MACS: usize = 64 * 1024;
+/// Minimum rows per shard; smaller blocks don't amortize dispatch.
+const PAR_MIN_ROWS: usize = 8;
+
+/// Apply the deferred rank-B update `W[:, b1..] −= E · U[b0..b1, b1..]` at
+/// block end, sharding rows across `pool` (rows are independent). Each
+/// element receives its B subtractions one at a time in ascending
+/// source-column order — the exact instruction stream of the eager serial
+/// loop — so thread count and shard partition are invisible in the result.
+fn apply_trailing_update(
+    work: &mut [f32],
+    cols: usize,
+    b0: usize,
+    b1: usize,
+    eblock: &[f64],
+    u: &[f64],
+    pool: &ThreadPool,
+) {
+    let bw = b1 - b0;
+    let rows = work.len() / cols;
+    debug_assert_eq!(eblock.len(), rows * bw);
+    debug_assert_eq!(work.len(), rows * cols);
+    let kernel = |r0: usize, chunk: &mut [f32]| {
+        for (lr, row) in chunk.chunks_exact_mut(cols).enumerate() {
+            let r = r0 + lr;
+            let erow = &eblock[r * bw..(r + 1) * bw];
+            for (jb, &e) in erow.iter().enumerate() {
+                if e == 0.0 {
+                    continue;
+                }
+                let urow = &u[(b0 + jb) * cols..(b0 + jb + 1) * cols];
+                for (x, &uv) in row[b1..].iter_mut().zip(&urow[b1..]) {
+                    *x -= (e * uv) as f32;
+                }
+            }
+        }
+    };
+
+    let macs = rows * bw * (cols - b1);
+    let shards = if macs < PAR_MIN_MACS {
+        1
+    } else {
+        pool.workers().min(rows / PAR_MIN_ROWS).max(1)
+    };
+    pool.run_row_chunks(work, cols, shards, kernel);
+}
+
 /// Quantize `w` under `plan`, optionally compensating error through the
 /// calibration Hessian `h` (cols × cols, row-major f64). Returns the packed
-/// representation; `w` itself is not modified.
+/// representation; `w` itself is not modified. Trailing OBS updates shard
+/// across [`ThreadPool::global`]; when called from inside another pool's
+/// job (the coordinator's per-matrix fan-out) they fall back inline.
 pub fn quantize_matrix(w: &Matrix, h: Option<&[f64]>, plan: &MatrixPlan) -> QuantizedMatrix {
+    quantize_matrix_pooled(w, h, plan, ThreadPool::global(), &mut QuantScratch::new())
+}
+
+/// [`quantize_matrix`] with an explicit pool and reusable scratch — the
+/// zero-steady-state-allocation entry point for callers quantizing many
+/// matrices (and the handle tests use to pin thread-count invariance).
+pub fn quantize_matrix_pooled(
+    w: &Matrix,
+    h: Option<&[f64]>,
+    plan: &MatrixPlan,
+    pool: &ThreadPool,
+    scratch: &mut QuantScratch,
+) -> QuantizedMatrix {
     let (rows, cols) = (w.rows, w.cols);
     assert_eq!(plan.bits.len(), cols, "plan/matrix column mismatch");
 
@@ -152,114 +274,169 @@ pub fn quantize_matrix(w: &Matrix, h: Option<&[f64]>, plan: &MatrixPlan) -> Quan
                 id
             }
         };
-        dampen(&mut hd, cols, plan.damp_pct);
-        // Increase dampening until the factorization succeeds (rank-deficient
-        // calibration sets at small sample counts).
-        let mut pct = plan.damp_pct;
-        loop {
-            match gptq_inverse_factor(&hd, cols) {
-                Some(u) => break Some(u),
-                None => {
-                    pct *= 10.0;
-                    assert!(pct < 1e6, "Hessian cannot be stabilized");
-                    dampen(&mut hd, cols, pct);
-                }
-            }
-        }
+        Some(stabilized_inverse_factor(&mut hd, cols, plan.damp_pct))
     } else {
         None
     };
 
+    let block = if plan.block_size == 0 { cols.max(1) } else { plan.block_size };
     let mut work = w.clone(); // updated in place by propagation
     let mut columns: Vec<QuantizedColumn> = Vec::with_capacity(cols);
     let mut outliers: Vec<Outlier> = Vec::new();
     let mut proxy_loss = 0.0f64;
-    let mut col_buf: Vec<f32> = vec![0.0; rows];
-    let mut err: Vec<f32> = vec![0.0; rows];
+    // Metrics fold: ‖W − Ŵ‖² / ‖W‖² accumulated per column as each one is
+    // finalized, so no full-matrix dequantize() round-trip is needed. The
+    // fold order is fixed (column-outer) regardless of block size, so the
+    // metric is part of the bit-identity contract across blocks/threads —
+    // but it sums in a different order than the row-major pass it
+    // replaced, so the scalar may differ in final ULPs from pre-blocking
+    // releases (the quantized payload itself is unchanged).
+    let mut err_sq = 0.0f64;
+    let mut w_sq = 0.0f64;
     let kopts = KMeansOpts::default();
 
-    for j in 0..cols {
-        // Extract the current (already-updated) column.
-        for r in 0..rows {
-            col_buf[r] = work.data[r * cols + j];
+    scratch.col.resize(rows, 0.0);
+    scratch.err.resize(rows, 0.0);
+
+    let mut b0 = 0usize;
+    while b0 < cols {
+        let b1 = (b0 + block).min(cols);
+        let bw = b1 - b0;
+        // Residuals are accumulated only when this block has trailing
+        // columns to lazily update; the final (or only, when unblocked)
+        // block would write a rows×bw buffer nobody reads.
+        let defer = u.is_some() && b1 < cols;
+        if defer {
+            // Fully overwritten below (every column writes every row), but
+            // resize needs a fill value for fresh capacity.
+            scratch.eblock.clear();
+            scratch.eblock.resize(rows * bw, 0.0);
         }
 
-        // Outlier reservation: pick rows kept in FP16 for this column.
-        let n_reserve = plan.reserve_at(j);
-        let reserved = pick_reserved_rows(&col_buf, n_reserve);
-        let mut is_reserved = vec![false; rows];
-        for &r in &reserved {
-            is_reserved[r] = true;
-            outliers.push(Outlier { row: r as u32, col: j as u32, value: col_buf[r] });
-        }
-
-        // Codebook over the non-reserved entries.
-        let clusterable: Vec<f32> = if reserved.is_empty() {
-            col_buf.clone()
-        } else {
-            col_buf
-                .iter()
-                .enumerate()
-                .filter(|(r, _)| !is_reserved[*r])
-                .map(|(_, &v)| v)
-                .collect()
-        };
-        let k = 1usize << plan.bits[j];
-        let codebook = match plan.rule {
-            CentroidRule::KMeans => kmeans_1d(&clusterable, k, &kopts).codebook,
-            CentroidRule::UniformMinMax => uniform_codebook(&clusterable, k),
-        };
-
-        // Quantize + error.
-        let mut indices = vec![0u8; rows];
-        for r in 0..rows {
-            if is_reserved[r] {
-                err[r] = 0.0; // reserved entries are exact
-                continue;
-            }
-            let q = codebook.quantize(col_buf[r]);
-            indices[r] = q;
-            err[r] = col_buf[r] - codebook.dequantize(q);
-        }
-
-        // OBS update of the not-yet-quantized columns.
-        if let Some(u) = &u {
-            let ujj = u[j * cols + j];
-            debug_assert!(ujj > 0.0);
-            let inv = 1.0 / ujj;
-            let mut e2 = 0.0f64;
+        for j in b0..b1 {
+            // Extract the current (already-updated) column.
             for r in 0..rows {
-                let e = err[r] as f64 * inv;
-                e2 += e * e;
-                if e != 0.0 {
-                    let row = &mut work.data[r * cols..(r + 1) * cols];
-                    for kcol in (j + 1)..cols {
-                        row[kcol] -= (e * u[j * cols + kcol]) as f32;
+                scratch.col[r] = work.data[r * cols + j];
+            }
+
+            // Outlier reservation: pick rows kept in FP16 for this column.
+            // `reserved_rows` comes back ascending, so pushing here keeps
+            // the outlier list in (col, row) order with no final sort.
+            let n_reserve = plan.reserve_at(j);
+            pick_reserved_rows_into(
+                &scratch.col,
+                n_reserve,
+                &mut scratch.sort_idx,
+                &mut scratch.reserved_rows,
+            );
+            scratch.reserved.clear();
+            scratch.reserved.resize(rows, false);
+            for &r in &scratch.reserved_rows {
+                scratch.reserved[r] = true;
+                outliers.push(Outlier { row: r as u32, col: j as u32, value: scratch.col[r] });
+            }
+
+            // Codebook over the non-reserved entries.
+            let clusterable: &[f32] = if scratch.reserved_rows.is_empty() {
+                &scratch.col
+            } else {
+                scratch.clusterable.clear();
+                scratch.clusterable.extend(
+                    scratch
+                        .col
+                        .iter()
+                        .zip(&scratch.reserved)
+                        .filter(|(_, &m)| !m)
+                        .map(|(&v, _)| v),
+                );
+                &scratch.clusterable
+            };
+            let k = 1usize << plan.bits[j];
+            let codebook = match plan.rule {
+                CentroidRule::KMeans => {
+                    kmeans_1d_into(clusterable, k, &kopts, &mut scratch.kmeans).codebook
+                }
+                CentroidRule::UniformMinMax => uniform_codebook(clusterable, k),
+            };
+
+            // Quantize + error.
+            let mut indices = vec![0u8; rows];
+            for r in 0..rows {
+                if scratch.reserved[r] {
+                    scratch.err[r] = 0.0; // reserved entries are exact
+                    continue;
+                }
+                let q = codebook.quantize(scratch.col[r]);
+                indices[r] = q;
+                scratch.err[r] = scratch.col[r] - codebook.dequantize(q);
+            }
+
+            // Metrics contribution of this now-final column, against the
+            // ORIGINAL weights (reserved entries reconstruct the updated
+            // value exactly, which is what dequantize() stores).
+            for r in 0..rows {
+                let orig = w.data[r * cols + j];
+                let deq = if scratch.reserved[r] {
+                    scratch.col[r]
+                } else {
+                    codebook.dequantize(indices[r])
+                };
+                let d = (orig - deq) as f64;
+                err_sq += d * d;
+                w_sq += orig as f64 * orig as f64;
+            }
+
+            // Eager OBS update inside the block; residuals accumulate in E
+            // for the lazy trailing update at block end.
+            if let Some(u) = &u {
+                let jb = j - b0;
+                let urow = &u[j * cols..(j + 1) * cols];
+                let ujj = urow[j];
+                debug_assert!(ujj > 0.0);
+                let inv = 1.0 / ujj;
+                let mut e2 = 0.0f64;
+                for r in 0..rows {
+                    let e = scratch.err[r] as f64 * inv;
+                    e2 += e * e;
+                    if defer {
+                        scratch.eblock[r * bw + jb] = e;
+                    }
+                    if e != 0.0 {
+                        let row = &mut work.data[r * cols..(r + 1) * cols];
+                        for (x, &uv) in row[j + 1..b1].iter_mut().zip(&urow[j + 1..b1]) {
+                            *x -= (e * uv) as f32;
+                        }
                     }
                 }
+                proxy_loss += e2;
             }
-            proxy_loss += e2;
+
+            columns.push(QuantizedColumn { codebook, indices, bits: plan.bits[j] });
         }
 
-        columns.push(QuantizedColumn { codebook, indices, bits: plan.bits[j] });
+        // Lazy batched propagation into the trailing columns.
+        if defer {
+            let u = u.as_ref().expect("defer implies propagation");
+            apply_trailing_update(&mut work.data, cols, b0, b1, &scratch.eblock, u, pool);
+        }
+        b0 = b1;
     }
 
-    outliers.sort_by_key(|o| (o.col, o.row));
+    debug_assert!(
+        outliers.windows(2).all(|p| (p[0].col, p[0].row) < (p[1].col, p[1].row)),
+        "outliers must be emitted in (col, row) order"
+    );
 
-    let mut qm = QuantizedMatrix { rows, cols, columns, outliers, metrics: QuantMetrics::default() };
-    let deq = qm.dequantize();
-    let mut num = 0.0f64;
-    let mut den = 0.0f64;
-    for (a, b) in w.data.iter().zip(&deq.data) {
-        let d = (*a - *b) as f64;
-        num += d * d;
-        den += (*a as f64) * (*a as f64);
+    QuantizedMatrix {
+        rows,
+        cols,
+        columns,
+        outliers,
+        metrics: QuantMetrics {
+            rel_frobenius_err: if w_sq > 0.0 { (err_sq / w_sq).sqrt() } else { 0.0 },
+            proxy_loss,
+        },
     }
-    qm.metrics = QuantMetrics {
-        rel_frobenius_err: if den > 0.0 { (num / den).sqrt() } else { 0.0 },
-        proxy_loss,
-    };
-    qm
 }
 
 #[cfg(test)]
@@ -288,6 +465,10 @@ mod tests {
             *v *= 2.0;
         }
         h
+    }
+
+    fn bits_of(m: &Matrix) -> Vec<u32> {
+        m.data.iter().map(|v| v.to_bits()).collect()
     }
 
     #[test]
@@ -398,6 +579,19 @@ mod tests {
     }
 
     #[test]
+    fn outliers_emitted_in_col_row_order() {
+        let w = random_w(96, 12, 13);
+        let mut plan = MatrixPlan::uniform(12, 2, CentroidRule::KMeans, true);
+        plan.reserve = (0..12).map(|c| (c % 4) * 2).collect();
+        plan.block_size = 5;
+        let q = quantize_matrix(&w, Some(&random_h(12, 14)), &plan);
+        assert!(!q.outliers.is_empty());
+        for p in q.outliers.windows(2) {
+            assert!((p[0].col, p[0].row) < (p[1].col, p[1].row), "unsorted outliers");
+        }
+    }
+
+    #[test]
     fn reservation_lowers_error() {
         let w = random_w(128, 16, 7);
         let base = quantize_matrix(&w, None, &MatrixPlan::uniform(16, 2, CentroidRule::KMeans, false));
@@ -416,6 +610,7 @@ mod tests {
             rule: CentroidRule::KMeans,
             propagate: false,
             damp_pct: 0.01,
+            block_size: DEFAULT_BLOCK,
         };
         let q = quantize_matrix(&w, None, &plan);
         assert_eq!(q.columns[0].codebook.len(), 16);
@@ -458,5 +653,95 @@ mod tests {
             let b = quantize_matrix(&w, Some(&h), &plan);
             assert_eq!(a.dequantize().data, b.dequantize().data);
         });
+    }
+
+    /// Quick in-crate version of the tests/property_quant.rs pin: block
+    /// size is invisible in the output, bit for bit, metrics included.
+    #[test]
+    fn block_size_bit_identical_smoke() {
+        let cols = 20;
+        let w = random_w(40, cols, 21);
+        let h = random_h(cols, 22);
+        for rule in [CentroidRule::KMeans, CentroidRule::UniformMinMax] {
+            let mut plan = MatrixPlan::uniform(cols, 2, rule, true);
+            plan.reserve = vec![2; cols];
+            plan.block_size = 0; // unblocked reference
+            let reference = quantize_matrix(&w, Some(&h), &plan);
+            for bs in [1usize, 3, 7, cols] {
+                plan.block_size = bs;
+                let q = quantize_matrix(&w, Some(&h), &plan);
+                assert_eq!(bits_of(&reference.dequantize()), bits_of(&q.dequantize()), "B={bs}");
+                assert_eq!(reference.outliers, q.outliers, "B={bs}");
+                assert_eq!(
+                    reference.metrics.rel_frobenius_err.to_bits(),
+                    q.metrics.rel_frobenius_err.to_bits(),
+                    "B={bs}"
+                );
+                assert_eq!(
+                    reference.metrics.proxy_loss.to_bits(),
+                    q.metrics.proxy_loss.to_bits(),
+                    "B={bs}"
+                );
+            }
+        }
+    }
+
+    /// A shape big enough to clear the sharding gates (rows / 8 shards,
+    /// ≥ 64Ki MACs per trailing update), so the pool-dispatched kernel is
+    /// actually exercised: every worker count must match serial, bit for
+    /// bit, for both centroid rules and with reservations in play.
+    #[test]
+    fn parallel_trailing_update_bit_identical_to_serial() {
+        let (rows, cols) = (600, 40);
+        let w = random_w(rows, cols, 51);
+        let h = random_h(cols, 52);
+        for rule in [CentroidRule::UniformMinMax, CentroidRule::KMeans] {
+            for reserve in [0usize, 4] {
+                let mut plan = MatrixPlan::uniform(cols, 2, rule, true);
+                plan.reserve = vec![reserve; cols];
+                plan.block_size = 8;
+                let serial = quantize_matrix_pooled(
+                    &w,
+                    Some(&h),
+                    &plan,
+                    &ThreadPool::new(1),
+                    &mut QuantScratch::new(),
+                );
+                for workers in [2usize, 4, 7] {
+                    let pool = ThreadPool::new(workers);
+                    let par =
+                        quantize_matrix_pooled(&w, Some(&h), &plan, &pool, &mut QuantScratch::new());
+                    assert_eq!(
+                        bits_of(&serial.dequantize()),
+                        bits_of(&par.dequantize()),
+                        "{rule:?} reserve={reserve} workers={workers}"
+                    );
+                    assert_eq!(serial.outliers, par.outliers);
+                    assert_eq!(
+                        serial.metrics.proxy_loss.to_bits(),
+                        par.metrics.proxy_loss.to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    /// One scratch reused across matrices of different shapes must not
+    /// leak state between calls.
+    #[test]
+    fn scratch_reuse_is_clean() {
+        let mut scratch = QuantScratch::new();
+        let pool = ThreadPool::new(2);
+        for (rows, cols, seed) in [(48usize, 20usize, 31u64), (16, 9, 32), (64, 28, 33)] {
+            let w = random_w(rows, cols, seed);
+            let h = random_h(cols, seed ^ 0xFF);
+            let mut plan = MatrixPlan::uniform(cols, 2, CentroidRule::KMeans, true);
+            plan.reserve = vec![2; cols];
+            plan.block_size = 6;
+            let reused = quantize_matrix_pooled(&w, Some(&h), &plan, &pool, &mut scratch);
+            let fresh = quantize_matrix_pooled(&w, Some(&h), &plan, &pool, &mut QuantScratch::new());
+            assert_eq!(bits_of(&reused.dequantize()), bits_of(&fresh.dequantize()));
+            assert_eq!(reused.outliers, fresh.outliers);
+        }
     }
 }

@@ -6,6 +6,11 @@
 //! from-scratch implementation: k-means++ seeding followed by Lloyd
 //! iterations, specialized for 1-D where sorting the inputs makes each
 //! Lloyd step a linear merge instead of an O(n·k) nearest-centroid scan.
+//!
+//! The quantizer calls this once per column, so the working buffers matter:
+//! [`kmeans_1d_into`] runs entirely out of a caller-owned
+//! [`KMeansScratch`], making repeat calls allocation-free in steady state
+//! (the output codebook is the one remaining allocation).
 
 use crate::quant::codebook::Codebook;
 use crate::util::rng::Rng;
@@ -33,20 +38,39 @@ pub struct KMeansResult {
     pub iters: usize,
 }
 
-/// K-means++ seeding on sorted values. Returns `k` initial centroids
-/// (ascending). `values` must be non-empty and sorted.
-fn kmeanspp_init(sorted: &[f32], k: usize, rng: &mut Rng) -> Vec<f64> {
+/// Reusable clustering workspace: sorted input copy, k-means++ distance
+/// table, and the Lloyd accumulators. One instance serves any sequence of
+/// [`kmeans_1d_into`] calls; buffers grow to the largest column seen and
+/// are then recycled.
+#[derive(Default)]
+pub struct KMeansScratch {
+    sorted: Vec<f32>,
+    /// d2[i] = squared distance of point i to its nearest chosen centroid.
+    d2: Vec<f64>,
+    centroids: Vec<f64>,
+    counts: Vec<usize>,
+    sums: Vec<f64>,
+}
+
+impl KMeansScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// K-means++ seeding on sorted values: writes `k` initial centroids
+/// (ascending) into `centroids`, using `d2` as the distance table.
+/// `sorted` must be non-empty and sorted.
+fn kmeanspp_init(sorted: &[f32], k: usize, rng: &mut Rng, centroids: &mut Vec<f64>, d2: &mut Vec<f64>) {
     let n = sorted.len();
-    let mut centroids: Vec<f64> = Vec::with_capacity(k);
+    centroids.clear();
+    centroids.reserve(k);
     centroids.push(sorted[rng.below_usize(n)] as f64);
-    // d2[i] = squared distance of point i to its nearest chosen centroid
-    let mut d2: Vec<f64> = sorted
-        .iter()
-        .map(|&x| {
-            let d = x as f64 - centroids[0];
-            d * d
-        })
-        .collect();
+    d2.clear();
+    d2.extend(sorted.iter().map(|&x| {
+        let d = x as f64 - centroids[0];
+        d * d
+    }));
     while centroids.len() < k {
         let total: f64 = d2.iter().sum();
         let next = if total <= 0.0 {
@@ -73,8 +97,7 @@ fn kmeanspp_init(sorted: &[f32], k: usize, rng: &mut Rng) -> Vec<f64> {
             }
         }
     }
-    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    centroids
+    centroids.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
 }
 
 /// One Lloyd step over sorted values with sorted centroids. Assignment
@@ -112,50 +135,94 @@ fn lloyd_step(sorted: &[f32], centroids: &mut Vec<f64>, counts: &mut Vec<usize>,
     (inertia, moved)
 }
 
-/// Reseed any empty cluster at the point farthest from its centroid within
-/// the largest cluster — standard Lloyd empty-cluster repair, 1-D flavour:
-/// split the widest cluster at its extreme.
+/// Reseed empty clusters by splitting the widest populated cluster at its
+/// extreme: the repaired centroid is placed exactly on the member of that
+/// cluster farthest from its centroid, so the donor sheds its worst-fit
+/// point at the next assignment. Cluster `i` owns the contiguous run of
+/// `sorted` given by the prefix sums of `counts` (assignment is monotone
+/// over sorted input), so the candidate extremes are the run's endpoints.
+/// Each donor is used at most once per pass; when no populated cluster has
+/// ≥ 2 members and nonzero spread (fewer distinct points than clusters),
+/// the centroid falls back to the smallest data point, which keeps the
+/// codebook well-formed without counting as a repair.
 fn repair_empty(sorted: &[f32], centroids: &mut [f64], counts: &[usize]) -> bool {
+    let k = centroids.len();
+    debug_assert_eq!(counts.len(), k);
+    if counts.iter().all(|&c| c > 0) {
+        return false;
+    }
+    let mut consumed = vec![false; k]; // rare path: empty clusters only
     let mut repaired = false;
-    for i in 0..centroids.len() {
-        if counts[i] == 0 {
-            // find the largest-spread cluster boundary pair to split
-            let (mut best_j, mut best_spread) = (0usize, -1.0f64);
-            for j in 0..centroids.len() {
-                if counts[j] > 1 {
-                    let spread = counts[j] as f64;
-                    if spread > best_spread {
-                        best_spread = spread;
-                        best_j = j;
-                    }
+    for i in 0..k {
+        if counts[i] > 0 {
+            continue;
+        }
+        // Widest donor: the populated cluster whose extreme member lies
+        // farthest from its (freshly updated) centroid.
+        let mut best: Option<(usize, f64, f64)> = None; // (donor, spread, extreme)
+        let mut start = 0usize;
+        for (j, &cnt) in counts.iter().enumerate() {
+            if cnt >= 2 && !consumed[j] {
+                let lo = sorted[start] as f64;
+                let hi = sorted[start + cnt - 1] as f64;
+                let c = centroids[j];
+                let (spread, extreme) = if (hi - c).abs() >= (c - lo).abs() {
+                    ((hi - c).abs(), hi)
+                } else {
+                    ((c - lo).abs(), lo)
+                };
+                if spread > 0.0 && best.is_none_or(|(_, bs, _)| spread > bs) {
+                    best = Some((j, spread, extreme));
                 }
             }
-            if best_spread <= 0.0 {
-                // Degenerate (fewer distinct points than clusters); place at
-                // an arbitrary data point to keep the codebook well-formed.
-                centroids[i] = sorted[0] as f64;
-                continue;
+            start += cnt;
+        }
+        match best {
+            Some((donor, _, extreme)) => {
+                centroids[i] = extreme;
+                consumed[donor] = true;
+                repaired = true;
             }
-            centroids[i] = centroids[best_j] + 1e-6 + (i as f64) * 1e-9;
-            repaired = true;
+            // Degenerate (fewer distinct points than clusters); place at
+            // an arbitrary data point to keep the codebook well-formed.
+            // Doesn't count as a repair (no reassignment worth iterating
+            // for), but still needs the re-sort below.
+            None => centroids[i] = sorted[0] as f64,
         }
     }
-    if repaired {
-        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    }
+    // At least one empty cluster was filled (the early return above rules
+    // out the none-empty case), and any placement can break the ascending
+    // order the Lloyd sweep depends on — a degenerate placement lands the
+    // minimum at an arbitrary index — so always restore it.
+    centroids.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
     repaired
 }
 
 /// Cluster `values` into `k` centroids. Not-a-number inputs are rejected by
 /// debug assertion; empty input yields a single zero centroid codebook.
+/// Allocates a fresh workspace per call — hot loops should hold a
+/// [`KMeansScratch`] and call [`kmeans_1d_into`] instead.
 pub fn kmeans_1d(values: &[f32], k: usize, opts: &KMeansOpts) -> KMeansResult {
+    kmeans_1d_into(values, k, opts, &mut KMeansScratch::new())
+}
+
+/// [`kmeans_1d`] running out of a caller-owned workspace: zero heap
+/// allocations in steady state besides the returned codebook.
+pub fn kmeans_1d_into(
+    values: &[f32],
+    k: usize,
+    opts: &KMeansOpts,
+    scratch: &mut KMeansScratch,
+) -> KMeansResult {
     assert!(k >= 1, "k must be >= 1");
     if values.is_empty() {
         return KMeansResult { codebook: Codebook::new(vec![0.0; k]), inertia: 0.0, iters: 0 };
     }
     debug_assert!(values.iter().all(|v| v.is_finite()), "non-finite weight");
-    let mut sorted: Vec<f32> = values.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let KMeansScratch { sorted, d2, centroids, counts, sums } = scratch;
+    sorted.clear();
+    sorted.extend_from_slice(values);
+    sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
 
     // Degenerate: constant column → all centroids equal that value.
     if sorted[0] == sorted[sorted.len() - 1] {
@@ -167,21 +234,19 @@ pub fn kmeans_1d(values: &[f32], k: usize, opts: &KMeansOpts) -> KMeansResult {
     }
 
     let mut rng = Rng::new(opts.seed ^ (values.len() as u64).rotate_left(17));
-    let mut centroids = kmeanspp_init(&sorted, k, &mut rng);
-    let mut counts: Vec<usize> = Vec::with_capacity(k);
-    let mut sums: Vec<f64> = Vec::with_capacity(k);
+    kmeanspp_init(sorted, k, &mut rng, centroids, d2);
     let mut inertia = f64::INFINITY;
     let mut iters = 0usize;
     for it in 0..opts.max_iters {
         iters = it + 1;
-        let (in_, moved) = lloyd_step(&sorted, &mut centroids, &mut counts, &mut sums);
+        let (in_, moved) = lloyd_step(sorted, centroids, counts, sums);
         inertia = in_;
-        let repaired = repair_empty(&sorted, &mut centroids, &counts);
+        let repaired = repair_empty(sorted, centroids, counts);
         if !repaired && moved < opts.tol {
             break;
         }
     }
-    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    centroids.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
     KMeansResult {
         codebook: Codebook::new(centroids.iter().map(|&c| c as f32).collect()),
         inertia,
@@ -271,13 +336,71 @@ mod tests {
     }
 
     #[test]
+    fn scratch_reuse_matches_fresh_alloc() {
+        // kmeans_1d_into with a recycled workspace (columns of varying
+        // sizes, in sequence) must equal kmeans_1d exactly.
+        check_default("kmeans scratch reuse", |rng| {
+            let mut scratch = KMeansScratch::new();
+            for _ in 0..4 {
+                let n = 8 + rng.below_usize(300);
+                let col = gen_column(rng, n, 0.02);
+                let k = 1 << (1 + rng.below_usize(4));
+                let a = kmeans_1d(&col, k, &KMeansOpts::default());
+                let b = kmeans_1d_into(&col, k, &KMeansOpts::default(), &mut scratch);
+                assert_eq!(a.codebook.centroids, b.codebook.centroids);
+                assert_eq!(a.inertia.to_bits(), b.inertia.to_bits());
+                assert_eq!(a.iters, b.iters);
+            }
+        });
+    }
+
+    #[test]
+    fn repair_places_centroid_on_widest_cluster_extreme() {
+        // Cluster layout (assignment boundaries are centroid midpoints):
+        // centroid 2.0 owns {0,1,2,3,4}, centroid 30.0 owns {20},
+        // centroid 100.0 is empty. The widest populated cluster is the
+        // first one; its extreme member (farthest from 2.0, ties toward
+        // the high end) is 4.0 — the repaired centroid must land exactly
+        // on that data point.
+        let sorted = [0.0f32, 1.0, 2.0, 3.0, 4.0, 20.0];
+        let mut centroids = vec![2.0f64, 30.0, 100.0];
+        let counts = vec![5usize, 1, 0];
+        let repaired = repair_empty(&sorted, &mut centroids, &counts);
+        assert!(repaired);
+        assert!(centroids.contains(&4.0), "expected split at 4.0, got {centroids:?}");
+        for w in centroids.windows(2) {
+            assert!(w[0] <= w[1], "centroids must stay sorted: {centroids:?}");
+        }
+        // and the new centroid is a data point, not an epsilon-offset copy
+        for &c in &centroids {
+            assert!(
+                sorted.iter().any(|&x| x as f64 == c) || [2.0, 30.0].contains(&c),
+                "repaired centroid {c} is neither a data point nor a survivor"
+            );
+        }
+    }
+
+    #[test]
+    fn repair_prefers_farther_tail() {
+        // One populated cluster whose low tail is farther from the mean
+        // than the high tail: the repair must pick the low extreme.
+        let sorted = [-10.0f32, 1.0, 2.0, 3.0];
+        let mut centroids = vec![-1.0f64, 50.0];
+        let counts = vec![4usize, 0];
+        assert!(repair_empty(&sorted, &mut centroids, &counts));
+        assert!(centroids.contains(&-10.0), "expected split at -10, got {centroids:?}");
+    }
+
+    #[test]
     fn lloyd_never_increases_inertia() {
         check_default("lloyd monotone", |rng| {
             let n = 128 + rng.below_usize(128);
             let col = gen_column(rng, n, 0.02);
             let mut sorted = col.clone();
             sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let mut centroids = kmeanspp_init(&sorted, 8, rng);
+            let mut centroids = Vec::new();
+            let mut d2 = Vec::new();
+            kmeanspp_init(&sorted, 8, rng, &mut centroids, &mut d2);
             let mut counts = Vec::new();
             let mut sums = Vec::new();
             let mut prev = f64::INFINITY;

@@ -17,5 +17,8 @@ pub mod search;
 
 pub use codebook::Codebook;
 pub use config::Method;
-pub use gptq::{quantize_matrix, CentroidRule, MatrixPlan, QuantizedMatrix};
+pub use gptq::{
+    quantize_matrix, quantize_matrix_pooled, CentroidRule, MatrixPlan, QuantScratch,
+    QuantizedMatrix, DEFAULT_BLOCK,
+};
 pub use outliers::OutlierStats;

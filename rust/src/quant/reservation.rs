@@ -151,19 +151,36 @@ fn make_even(n: usize) -> usize {
 /// `count/2` smallest values (by signed value — reserving both tails is the
 /// paper's rule). Returns row indices.
 pub fn pick_reserved_rows(column: &[f32], count: usize) -> Vec<usize> {
+    let mut idx = Vec::new();
+    let mut out = Vec::new();
+    pick_reserved_rows_into(column, count, &mut idx, &mut out);
+    out
+}
+
+/// [`pick_reserved_rows`] writing into caller-owned buffers: `idx` is the
+/// index sort buffer, `out` receives the ascending reserved row indices.
+/// Allocation-free once the buffers are warm, except that the stable index
+/// sort (stability is load-bearing: ties between equal values must resolve
+/// to the lowest rows) may allocate its merge buffer.
+pub fn pick_reserved_rows_into(
+    column: &[f32],
+    count: usize,
+    idx: &mut Vec<usize>,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
     let count = count.min(make_even(column.len()));
     if count == 0 {
-        return Vec::new();
+        return;
     }
     let half = count / 2;
-    let mut idx: Vec<usize> = (0..column.len()).collect();
+    idx.clear();
+    idx.extend(0..column.len());
     idx.sort_by(|&a, &b| column[a].partial_cmp(&column[b]).unwrap());
-    let mut out: Vec<usize> = Vec::with_capacity(count);
     out.extend_from_slice(&idx[..half]); // smallest
     out.extend_from_slice(&idx[idx.len() - half..]); // largest
     out.sort_unstable();
     out.dedup();
-    out
 }
 
 #[cfg(test)]
@@ -248,6 +265,22 @@ mod tests {
     #[test]
     fn pick_reserved_zero() {
         assert!(pick_reserved_rows(&[1.0, 2.0], 0).is_empty());
+    }
+
+    #[test]
+    fn pick_reserved_into_reuses_buffers() {
+        let mut idx = Vec::new();
+        let mut out = Vec::new();
+        // successive calls with different columns must match the
+        // allocating variant exactly (including tie-breaks to low rows)
+        for (col, count) in [
+            (vec![-5.0f32, -0.1, 0.0, 0.2, 7.0, 0.05], 2usize),
+            (vec![1.0f32, 1.0, 1.0, 1.0], 2),
+            (vec![3.0f32, -3.0], 100),
+        ] {
+            pick_reserved_rows_into(&col, count, &mut idx, &mut out);
+            assert_eq!(out, pick_reserved_rows(&col, count));
+        }
     }
 
     #[test]

@@ -92,6 +92,26 @@ pub fn gptq_inverse_factor(h: &[f64], n: usize) -> Option<Vec<f64>> {
     Some(u)
 }
 
+/// The full GPTQ preamble in one call: dampen `h` in place with `damp_pct`
+/// and factor it, escalating the dampening ×10 until the factorization
+/// succeeds (rank-deficient calibration sets at small sample counts).
+/// Panics once the cumulative dampening exceeds 1e6 — at that point the
+/// Hessian is garbage, not merely ill-conditioned.
+pub fn stabilized_inverse_factor(h: &mut [f64], n: usize, damp_pct: f64) -> Vec<f64> {
+    dampen(h, n, damp_pct);
+    let mut pct = damp_pct;
+    loop {
+        match gptq_inverse_factor(h, n) {
+            Some(u) => return u,
+            None => {
+                pct *= 10.0;
+                assert!(pct < 1e6, "Hessian cannot be stabilized");
+                dampen(h, n, pct);
+            }
+        }
+    }
+}
+
 /// Dampen a (near-)SPD matrix in place: H += mean(diag(H)) * pct * I.
 /// GPTQ uses pct = 0.01. Also replaces exactly-zero diagonal entries
 /// ("dead" input features that never activated) with 1.0, matching the
@@ -244,6 +264,35 @@ mod tests {
         for i in 0..n {
             for j in 0..i {
                 assert_eq!(u[i * n + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn stabilized_factor_matches_plain_path_when_spd() {
+        let n = 6;
+        let a = random_spd(n, 5);
+        // reference: dampen once, factor directly
+        let mut ref_h = a.clone();
+        dampen(&mut ref_h, n, 0.01);
+        let want = gptq_inverse_factor(&ref_h, n).unwrap();
+        let mut h = a;
+        let got = stabilized_inverse_factor(&mut h, n, 0.01);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn stabilized_factor_escalates_on_indefinite_input() {
+        // Eigenvalues 3 and -1: the initial 1% dampening cannot rescue the
+        // factorization, so the ×10 escalation must kick in and eventually
+        // deliver a valid upper-triangular factor.
+        let n = 2;
+        let mut h = vec![1.0, 2.0, 2.0, 1.0];
+        let u = stabilized_inverse_factor(&mut h, n, 0.01);
+        for i in 0..n {
+            assert!(u[i * n + i] > 0.0, "diagonal must be positive");
+            for j in 0..i {
+                assert_eq!(u[i * n + j], 0.0, "U must be upper triangular");
             }
         }
     }

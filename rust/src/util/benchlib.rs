@@ -3,7 +3,10 @@
 //! `cargo bench` targets are declared with `harness = false` and call
 //! [`Bench::run`] per case: adaptive warm-up, fixed-duration measurement,
 //! and robust statistics (median + MAD) printed in a criterion-like format.
-//! Results are also appended to `target/claq-bench.csv` for the §Perf log.
+//! Results are also appended to `target/claq-bench.csv` for the §Perf log,
+//! and each group writes a machine-readable `BENCH_<group>.json` at the
+//! repo root (name, ns/elem, elems/s per cell) so CI can track the perf
+//! trajectory run over run.
 
 use std::hint::black_box as bb;
 use std::io::Write;
@@ -143,7 +146,8 @@ impl Bench {
         self.samples.push(s);
     }
 
-    /// Write accumulated samples to the CSV log.
+    /// Write accumulated samples to the CSV log and the tracked
+    /// `BENCH_<group>.json` at the repo root.
     pub fn finish(self) {
         let rows: Vec<String> = self
             .samples
@@ -156,7 +160,57 @@ impl Bench {
             })
             .collect();
         append_csv(&rows);
+        let path = bench_json_path(&self.group);
+        if let Err(e) = std::fs::write(&path, render_json(&self.group, &self.samples)) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        }
     }
+}
+
+/// `BENCH_<group>.json` lives at the repo root: benches run with CWD =
+/// `rust/` (the crate), so the root is the manifest's parent. Outside
+/// cargo, fall back to the current directory.
+fn bench_json_path(group: &str) -> std::path::PathBuf {
+    let root = std::env::var_os("CARGO_MANIFEST_DIR")
+        .map(|d| std::path::PathBuf::from(d).join(".."))
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    root.join(format!("BENCH_{group}.json"))
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render the per-cell JSON document: median ns, iteration count, and —
+/// for throughput cells — ns/elem and elems/s. Hand-rolled (no serde in
+/// the offline sandbox); keys are stable so downstream diffing works.
+fn render_json(group: &str, samples: &[Sample]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"group\": \"{}\",\n", json_escape(group)));
+    out.push_str("  \"cells\": [\n");
+    for (i, s) in samples.iter().enumerate() {
+        let (ns_per_elem, elems_per_s) = match (s.elems, s.throughput()) {
+            (Some(e), Some(t)) if e > 0 => {
+                (format!("{:.4}", s.median_ns / e as f64), format!("{t:.1}"))
+            }
+            _ => ("null".to_string(), "null".to_string()),
+        };
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"median_ns\": {:.1}, \"mad_ns\": {:.1}, \"iters\": {}, \
+             \"elems\": {}, \"ns_per_elem\": {}, \"elems_per_s\": {}}}{}\n",
+            json_escape(&s.name),
+            s.median_ns,
+            s.mad_ns,
+            s.iters,
+            s.elems.map_or("null".to_string(), |e| e.to_string()),
+            ns_per_elem,
+            elems_per_s,
+            if i + 1 < samples.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
 }
 
 /// Append pre-formatted rows (`group,name,median_ns,mad_ns,mean_ns,iters`)
@@ -191,6 +245,40 @@ mod tests {
         });
         assert!(b.samples[0].median_ns > 0.0);
         assert!(b.samples[0].iters > 0);
+    }
+
+    #[test]
+    fn json_has_throughput_fields() {
+        let samples = vec![
+            Sample {
+                name: "quantize 512x512 2b kmeans+OBS".into(),
+                iters: 10,
+                median_ns: 2.0e6,
+                mad_ns: 1.0e3,
+                mean_ns: 2.1e6,
+                elems: Some(512 * 512),
+            },
+            Sample {
+                name: "no-elems \"cell\"".into(),
+                iters: 3,
+                median_ns: 5.0,
+                mad_ns: 0.5,
+                mean_ns: 5.0,
+                elems: None,
+            },
+        ];
+        let json = render_json("gptq", &samples);
+        assert!(json.contains("\"group\": \"gptq\""));
+        // 2e6 ns over 262144 elems = 7.6294 ns/elem
+        assert!(json.contains("\"ns_per_elem\": 7.6294"), "{json}");
+        assert!(json.contains("\"elems\": 262144"), "{json}");
+        // quotes in names must be escaped, elem-less cells go null
+        assert!(json.contains("no-elems \\\"cell\\\""), "{json}");
+        assert!(json.contains("\"ns_per_elem\": null"), "{json}");
+        // comma between the two cells, none trailing before the close
+        assert!(json.contains("},\n"), "{json}");
+        assert!(json.contains("}\n  ]"), "{json}");
+        assert!(!json.contains(",\n  ]"), "{json}");
     }
 
     #[test]

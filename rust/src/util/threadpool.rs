@@ -262,6 +262,45 @@ impl ThreadPool {
     {
         self.run(items.len(), |i| f(&items[i]))
     }
+
+    /// Run `kernel(first_row, chunk)` over disjoint contiguous row-chunks
+    /// of `data` (rows of `row_len` elements each), at most `shards`
+    /// chunks — the in-place flavour of the row-sharding idiom
+    /// (`model/linear.rs::run_row_sharded` is the staging flavour). Rows
+    /// are never split across chunks, so kernels that own whole rows need
+    /// no synchronization; `shards <= 1` runs inline on the caller.
+    /// Callers pick `shards` (and thereby the serial/parallel cutoff)
+    /// because the profitable grain size is theirs to judge.
+    pub fn run_row_chunks<K>(&self, data: &mut [f32], row_len: usize, shards: usize, kernel: K)
+    where
+        K: Fn(usize, &mut [f32]) + Sync,
+    {
+        debug_assert_eq!(data.len() % row_len.max(1), 0);
+        let rows = data.len() / row_len.max(1);
+        if shards <= 1 || rows <= 1 {
+            kernel(0, data);
+            return;
+        }
+        // Each job locks only its own part (uncontended); the Mutex is the
+        // fence that hands the &mut chunk to whichever worker claims the
+        // job index.
+        let per_shard = rows.div_ceil(shards.min(rows));
+        let mut parts: Vec<Mutex<(usize, &mut [f32])>> = Vec::with_capacity(shards);
+        let mut rest = data;
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + per_shard).min(rows);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * row_len);
+            rest = tail;
+            parts.push(Mutex::new((r0, chunk)));
+            r0 = r1;
+        }
+        self.run(parts.len(), |i| {
+            let mut part = parts[i].lock().unwrap();
+            let (r0, ref mut chunk) = *part;
+            kernel(r0, &mut **chunk);
+        });
+    }
 }
 
 impl Drop for ThreadPool {
@@ -376,6 +415,29 @@ mod tests {
             pool.run(3, move |j| i * 10 + j).iter().sum::<usize>()
         });
         assert_eq!(out, vec![3, 33, 63, 93]);
+    }
+
+    #[test]
+    fn run_row_chunks_covers_every_row_once() {
+        let pool = ThreadPool::new(4);
+        let row_len = 8;
+        let rows = 37; // not a multiple of the shard count
+        let mut data = vec![0.0f32; rows * row_len];
+        for shards in [1usize, 2, 4, 16, 64] {
+            data.fill(0.0);
+            pool.run_row_chunks(&mut data, row_len, shards, |r0, chunk| {
+                for (lr, row) in chunk.chunks_exact_mut(row_len).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (r0 + lr + 1) as f32; // row index, exactly once
+                    }
+                }
+            });
+            for r in 0..rows {
+                for c in 0..row_len {
+                    assert_eq!(data[r * row_len + c], (r + 1) as f32, "shards={shards} row {r}");
+                }
+            }
+        }
     }
 
     #[test]

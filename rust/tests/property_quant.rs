@@ -4,7 +4,10 @@
 
 use claq::quant::codebook::{uniform_codebook, Codebook};
 use claq::quant::config::Method;
-use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
+use claq::quant::gptq::{
+    quantize_matrix, quantize_matrix_pooled, CentroidRule, MatrixPlan, QuantScratch,
+    QuantizedMatrix,
+};
 use claq::quant::kmeans::{inertia, kmeans_1d, KMeansOpts};
 use claq::quant::outliers::OutlierStats;
 use claq::quant::packed::{pack, unpack};
@@ -159,6 +162,90 @@ fn prop_obs_no_worse_output_error() {
             e_on <= e_off * 1.25,
             "OBS output error {e_on} ≫ plain {e_off}"
         );
+    });
+}
+
+/// The tentpole invariant of the blocked quantizer: for dense random W and
+/// real (gram) Hessians, every block size and every thread count produces
+/// output bit-identical to the unblocked serial path — indices, codebooks,
+/// outliers, dequantized weights, and metrics alike — for both centroid
+/// rules, with and without outlier reservations.
+#[test]
+fn prop_blocked_quantizer_bit_identical() {
+    fn assert_bit_identical(a: &QuantizedMatrix, b: &QuantizedMatrix, ctx: &str) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{ctx}: shape");
+        for (c, (ca, cb)) in a.columns.iter().zip(&b.columns).enumerate() {
+            assert_eq!(ca.bits, cb.bits, "{ctx}: bits col {c}");
+            assert_eq!(ca.indices, cb.indices, "{ctx}: indices col {c}");
+            let bits_a: Vec<u32> = ca.codebook.centroids.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = cb.codebook.centroids.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "{ctx}: codebook col {c}");
+        }
+        assert_eq!(a.outliers, b.outliers, "{ctx}: outliers");
+        let (da, db) = (a.dequantize(), b.dequantize());
+        for (i, (x, y)) in da.data.iter().zip(&db.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: weight elem {i}");
+        }
+        assert_eq!(
+            a.metrics.rel_frobenius_err.to_bits(),
+            b.metrics.rel_frobenius_err.to_bits(),
+            "{ctx}: rel_frobenius_err"
+        );
+        assert_eq!(
+            a.metrics.proxy_loss.to_bits(),
+            b.metrics.proxy_loss.to_bits(),
+            "{ctx}: proxy_loss"
+        );
+    }
+
+    check("blocked == unblocked", Config { cases: 8, seed: 108 }, |rng| {
+        // Mostly small shapes for breadth; ~1 in 4 cases grows rows past
+        // the quantizer's parallel-dispatch gates (64Ki MACs, 8 rows per
+        // shard), so the sharded trailing kernel is exercised with real
+        // Hessians, K-Means, and reservations — not just the serial path.
+        let tall = if rng.next_f64() < 0.25 { 600 } else { 0 };
+        let rows = 16 + tall + rng.below_usize(48);
+        let cols = 8 + rng.below_usize(24);
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.02);
+        let mut x = Matrix::zeros(2 * cols, cols);
+        rng.fill_normal(&mut x.data, 1.0);
+        let mut h = claq::tensor::linalg::gram(&x, 0.0);
+        for v in h.iter_mut() {
+            *v *= 2.0;
+        }
+        let pools = [
+            claq::util::threadpool::ThreadPool::new(1),
+            claq::util::threadpool::ThreadPool::new(2),
+            claq::util::threadpool::ThreadPool::new(5),
+        ];
+        for rule in [CentroidRule::KMeans, CentroidRule::UniformMinMax] {
+            for reserve in [0usize, 2] {
+                let mut plan = MatrixPlan::uniform(cols, 2, rule, true);
+                if reserve > 0 {
+                    plan.reserve = (0..cols).map(|c| (c % 3) * reserve).collect();
+                }
+                plan.block_size = 0; // unblocked serial reference
+                let reference = quantize_matrix(&w, Some(&h), &plan);
+                for bs in [1usize, 7, 64, cols] {
+                    plan.block_size = bs;
+                    for pool in &pools {
+                        let q = quantize_matrix_pooled(
+                            &w,
+                            Some(&h),
+                            &plan,
+                            pool,
+                            &mut QuantScratch::new(),
+                        );
+                        let ctx = format!(
+                            "{rows}x{cols} {rule:?} reserve={reserve} B={bs} threads={}",
+                            pool.workers()
+                        );
+                        assert_bit_identical(&reference, &q, &ctx);
+                    }
+                }
+            }
+        }
     });
 }
 
