@@ -9,12 +9,19 @@
 //!
 //! Run:
 //!   cargo run --release --example serve_quantized \
-//!       [n_requests] [arrival_rate_per_s] [max_slots] [seed]
+//!       [n_requests] [arrival_rate_per_s] [max_slots] [seed] \
+//!       [--checkpoint model.claq] [--save model.claq]
 //!
 //! * `n_requests`        total requests in the trace        (default 32)
 //! * `arrival_rate_per_s` mean Poisson arrival rate          (default 8.0)
 //! * `max_slots`         live-batch bound of the scheduler  (default 8)
 //! * `seed`              trace seed (prompts, lengths, gaps) (default 17)
+//! * `--checkpoint PATH` cold-start from a CLAQMD01 checkpoint instead of
+//!                       quantizing (quantize-once / serve-many; measures
+//!                       load-to-ready latency). Make one with `--save` or
+//!                       `claq pack`.
+//! * `--save PATH`       after quantizing, write the checkpoint so later
+//!                       runs can `--checkpoint` it.
 //!
 //! Prompt lengths, generation budgets, and inter-arrival gaps are
 //! randomized per request; both policies replay the identical trace, and
@@ -25,17 +32,19 @@
 
 use claq::coordinator::pipeline::{quantize_model, PipelineOpts};
 use claq::coordinator::registry::artifacts_dir;
-use claq::data::calibration::{sample_segments, CalibConfig};
-use claq::data::corpus::{generate, load_tokens, CorpusKind};
+use claq::data::calibration::default_calibration;
+use claq::data::corpus::{generate, CorpusKind};
 use claq::model::exec::{ExecModel, ExecState};
 use claq::model::io::load_model;
 use claq::model::{Model, TransformerConfig};
 use claq::quant::config::Method;
+use claq::runtime::executor::ColdStart;
 use claq::runtime::scheduler::{
     AdmissionPolicy, Completion, Request, Scheduler, SchedulerConfig,
 };
 use claq::util::rng::Rng;
 use claq::util::threadpool::ThreadPool;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// One request of the trace, with its arrival offset in seconds.
@@ -176,41 +185,100 @@ fn print_report(r: &ServeReport) {
 }
 
 fn main() -> anyhow::Result<()> {
-    let arg = |i: usize| std::env::args().nth(i);
-    let n_requests: usize = arg(1).and_then(|s| s.parse().ok()).unwrap_or(32).max(1);
-    let rate: f64 = arg(2).and_then(|s| s.parse().ok()).unwrap_or(8.0).max(0.01);
-    let max_slots: usize = arg(3).and_then(|s| s.parse().ok()).unwrap_or(8).max(1);
-    let seed: u64 = arg(4).and_then(|s| s.parse().ok()).unwrap_or(17);
+    // Flags (--checkpoint/--save) are filtered out; the remaining
+    // positionals keep their historical order.
+    let mut checkpoint: Option<PathBuf> = None;
+    let mut save: Option<PathBuf> = None;
+    let mut pos: Vec<String> = Vec::new();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--checkpoint" => {
+                checkpoint =
+                    Some(it.next().expect("--checkpoint expects a path").into())
+            }
+            "--save" => save = Some(it.next().expect("--save expects a path").into()),
+            _ => pos.push(a),
+        }
+    }
+    anyhow::ensure!(
+        !(checkpoint.is_some() && save.is_some()),
+        "--save writes the artifact of a fresh quantization; it cannot be combined with \
+         --checkpoint, which skips quantization entirely"
+    );
+    let arg = |i: usize| pos.get(i);
+    let n_requests: usize = arg(0).and_then(|s| s.parse().ok()).unwrap_or(32).max(1);
+    let rate: f64 = arg(1).and_then(|s| s.parse().ok()).unwrap_or(8.0).max(0.01);
+    let max_slots: usize = arg(2).and_then(|s| s.parse().ok()).unwrap_or(8).max(1);
+    let seed: u64 = arg(3).and_then(|s| s.parse().ok()).unwrap_or(17);
 
-    let dir = artifacts_dir();
-    let model = match load_model(&dir.join("weights_l.bin")) {
-        Ok(m) => m,
-        Err(_) => {
-            println!("(no trained artifacts — serving a random tiny-L model; run `make artifacts` for trained weights)");
-            Model::random(TransformerConfig::tiny_l(), &mut Rng::new(17))
+    let packed = if let Some(path) = &checkpoint {
+        // Quantize-once / serve-many: cold-start straight off the packed
+        // planes — no calibration, no quantization, no dense weights.
+        let cold = ColdStart::from_path(path)?;
+        println!(
+            "cold start: {} ({:.2} MB, method {}) -> packed ExecModel in {:.1} ms",
+            path.display(),
+            cold.checkpoint_bytes as f64 / 1e6,
+            cold.method_name,
+            cold.load_seconds * 1e3
+        );
+        cold.exec
+    } else {
+        let dir = artifacts_dir();
+        let model = match load_model(&dir.join("weights_l.bin")) {
+            Ok(m) => m,
+            Err(_) => {
+                println!("(no trained artifacts — serving a random tiny-L model; run `make artifacts` for trained weights)");
+                Model::random(TransformerConfig::tiny_l(), &mut Rng::new(17))
+            }
+        };
+        let seq = model.config.max_seq;
+
+        // Quantize once at CLAQ*-2.12 (the paper's headline config), on
+        // the shared calibration recipe (`data::calibration`).
+        let calib = default_calibration(&dir, seq, 24);
+        let t0 = Instant::now();
+        let opts = PipelineOpts { save_checkpoint: save.clone(), ..PipelineOpts::default() };
+        let (qm, stats) = quantize_model(&model, &Method::fusion_2_12(), &calib, &opts);
+        let rep = qm.size_report();
+        println!(
+            "quantized to CLAQ*-2.12 in {:.1}s — container {:.2} MB ({:.2} bits/param, honest accounting)",
+            t0.elapsed().as_secs_f64(),
+            rep.container_bytes as f64 / 1e6,
+            rep.container_bits_per_param
+        );
+        if let Some(path) = &save {
+            match (stats.checkpoint_bytes, stats.checkpoint_error) {
+                (Some(bytes), _) => println!(
+                    "checkpoint: {} ({:.2} MB) — next time: --checkpoint {}",
+                    path.display(),
+                    bytes as f64 / 1e6,
+                    path.display()
+                ),
+                (None, err) => anyhow::bail!(
+                    "checkpoint save failed: {}",
+                    err.unwrap_or_else(|| "unknown".into())
+                ),
+            }
+            // Serve the deployed engine (f16 container codebooks, exactly
+            // what the written artifact holds) so a later --checkpoint run
+            // of the same trace is bit-identical to this one.
+            qm.to_exec_deployed()?
+        } else {
+            qm.to_exec()
         }
     };
-    let seq = model.config.max_seq;
+    let seq = packed.config.max_seq;
     anyhow::ensure!(seq >= 64, "serve example sizes its trace for max_seq >= 64 (got {seq})");
+    anyhow::ensure!(
+        packed.config.vocab >= claq::data::corpus::VOCAB,
+        "trace prompts use the synthetic corpus vocab ({}); the model covers only {}",
+        claq::data::corpus::VOCAB,
+        packed.config.vocab
+    );
     // ExecState::new has row capacity max_seq; more slots could never decode
     let max_slots = max_slots.min(seq);
-
-    // Quantize once at CLAQ*-2.12 (the paper's headline config).
-    let train = match load_tokens(&dir.join("corpus_c4_train.bin")) {
-        Ok(t) => t,
-        Err(_) => generate(CorpusKind::SynthC4, 16_384, 3),
-    };
-    let calib = sample_segments(&train, &CalibConfig { n_segments: 24, seq_len: seq, seed: 2 });
-    let t0 = Instant::now();
-    let (qm, _) = quantize_model(&model, &Method::fusion_2_12(), &calib, &PipelineOpts::default());
-    let rep = qm.size_report();
-    println!(
-        "quantized to CLAQ*-2.12 in {:.1}s — container {:.2} MB ({:.2} bits/param, honest accounting)",
-        t0.elapsed().as_secs_f64(),
-        rep.container_bytes as f64 / 1e6,
-        rep.container_bits_per_param
-    );
-    let packed = qm.to_exec();
     println!(
         "packed projections resident: {:.2} MB — kernels sharded over {} threads",
         packed.projection_bytes() as f64 / 1e6,

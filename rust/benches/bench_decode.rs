@@ -1,12 +1,18 @@
 //! Decode-path bench: packed vs dense KV-cached decode throughput
 //! (tokens/s at batch 1/4/16) — tracks the serving hot path of
 //! `examples/serve_quantized.rs` in `target/claq-bench.csv` (throughput is
-//! reported as Melem/s where an "elem" is one decoded token).
+//! reported as Melem/s where an "elem" is one decoded token) — plus the
+//! cold-start cells: the model is packed into a single-file CLAQMD01
+//! checkpoint, reloaded, smoke-tested with a 3-step decode, and timed
+//! load→ready and load→first-token. The `coldstart` cells carry the
+//! checkpoint file size as their `elems`, so `BENCH_decode.json` tracks
+//! artifact-size regressions alongside latency (CI uploads it).
 
 use claq::model::exec::{decode_step, prefill, ExecModel, ExecState, KvCache};
 use claq::model::quantized::QuantizedModel;
 use claq::model::{Model, TransformerConfig};
 use claq::quant::config::Method;
+use claq::runtime::executor::ColdStart;
 use claq::util::benchlib::{black_box, Bench};
 use claq::util::rng::Rng;
 
@@ -58,5 +64,47 @@ fn main() {
 
     bench_backend(&mut b, &packed, "packed");
     bench_backend(&mut b, &dense, "dense");
+
+    // --- cold start: checkpoint -> packed engine ---------------------------
+    let ckpt_path = claq::util::tmp::unique_path("bench_decode_ckpt").with_extension("claq");
+    let bytes = {
+        qm.save(&ckpt_path).expect("write bench checkpoint");
+        std::fs::metadata(&ckpt_path).expect("stat bench checkpoint").len()
+    };
+    println!(
+        "checkpoint on disk: {:.2} MB ({bytes} bytes) — coldstart cells report bytes as elems",
+        bytes as f64 / 1e6
+    );
+
+    // reload + 3-step decode smoke: the artifact must serve, not just parse
+    {
+        let cold = ColdStart::from_path(&ckpt_path).expect("cold start");
+        assert_eq!(cold.checkpoint_bytes, bytes);
+        let mut st = ExecState::new(cold.exec.config);
+        let mut cache = KvCache::new(&cold.exec.config);
+        let logits = prefill(&cold.exec, &mut cache, &[1, 2, 3, 4], &mut st);
+        let mut tok = claq::model::exec::argmax(logits.row(3));
+        for _ in 0..3 {
+            let logits = decode_step(&cold.exec, &mut [&mut cache], &[tok], &mut st);
+            assert!(logits.data.iter().all(|v| v.is_finite()), "cold-start decode produced non-finite logits");
+            tok = claq::model::exec::argmax(logits.row(0));
+        }
+    }
+
+    // load -> ready ExecModel (elems/s here is effective load bandwidth)
+    b.run_with_elems("coldstart load->exec", Some(bytes), || {
+        black_box(ColdStart::from_path(&ckpt_path).expect("cold start"));
+    });
+
+    // load -> first token: checkpoint read, plane parse, engine build, and
+    // one single-token prefill — the serve-from-zero latency
+    b.run_with_elems("coldstart load->first-token", Some(bytes), || {
+        let cold = ColdStart::from_path(&ckpt_path).expect("cold start");
+        let mut st = ExecState::new(cold.exec.config);
+        let mut cache = KvCache::new(&cold.exec.config);
+        black_box(prefill(&cold.exec, &mut cache, &[1u16], &mut st));
+    });
+
+    let _ = std::fs::remove_file(&ckpt_path);
     b.finish();
 }

@@ -31,9 +31,9 @@ fn main() {
     let qm = quantize_matrix(&w, None, &plan);
     let elems = (128 * 128) as u64;
     b.run_with_elems("pack 128x128 fusion", Some(elems), || {
-        black_box(pack(black_box(&qm)));
+        black_box(pack(black_box(&qm)).unwrap());
     });
-    let (pm, _) = pack(&qm);
+    let (pm, _) = pack(&qm).unwrap();
     b.run_with_elems("unpack 128x128 fusion", Some(elems), || {
         black_box(unpack(black_box(&pm)).unwrap());
     });

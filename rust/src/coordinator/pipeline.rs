@@ -47,6 +47,11 @@ pub struct PipelineOpts {
     /// (DESIGN.md §8). Purely a performance knob — any value, 0 meaning
     /// unblocked, yields bit-identical quantization.
     pub quant_block: usize,
+    /// Save-after-quantize: write the single-file `CLAQMD01` checkpoint
+    /// here once quantization finishes (quantize once, cold-start serve
+    /// many — DESIGN.md §9). Outcome lands in
+    /// `PipelineStats::checkpoint_bytes` / `checkpoint_error`.
+    pub save_checkpoint: Option<std::path::PathBuf>,
 }
 
 impl Default for PipelineOpts {
@@ -56,6 +61,7 @@ impl Default for PipelineOpts {
             verbose: false,
             incremental: true,
             quant_block: crate::quant::gptq::DEFAULT_BLOCK,
+            save_checkpoint: None,
         }
     }
 }
@@ -66,6 +72,34 @@ pub struct PipelineStats {
     pub calib_seconds: f64,
     pub quant_seconds: f64,
     pub per_matrix_err: Vec<(String, f64)>,
+    /// Bytes written by the save-after-quantize option (None when not
+    /// requested or failed).
+    pub checkpoint_bytes: Option<u64>,
+    /// Why the save-after-quantize write failed, if it did (e.g. an FP16
+    /// run has nothing to checkpoint, or the path is unwritable).
+    pub checkpoint_error: Option<String>,
+}
+
+/// Run the save-after-quantize option, recording the outcome in `stats`.
+fn save_checkpoint_if_requested(
+    qm: &QuantizedModel,
+    opts: &PipelineOpts,
+    stats: &mut PipelineStats,
+) {
+    let Some(path) = &opts.save_checkpoint else { return };
+    match crate::model::checkpoint::save_checkpoint(qm, path) {
+        Ok(bytes) => {
+            stats.checkpoint_bytes = Some(bytes);
+            if opts.verbose {
+                eprintln!("[pipeline] checkpoint: {} ({bytes} bytes)", path.display());
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            eprintln!("[pipeline] checkpoint save to {} failed: {msg}", path.display());
+            stats.checkpoint_error = Some(msg);
+        }
+    }
 }
 
 /// Accumulated Hessians for the matrices of one layer.
@@ -214,15 +248,16 @@ pub fn quantize_model(
     let mut matrices = HashMap::new();
     let mut awq_scales = HashMap::new();
     if matches!(method, Method::Fp16) {
-        return (
-            QuantizedModel {
-                base: work,
-                matrices,
-                awq_scales,
-                method_name: method.name(),
-            },
-            stats,
-        );
+        let qm = QuantizedModel {
+            base: work,
+            matrices,
+            awq_scales,
+            method_name: method.name(),
+        };
+        // An FP16 run has nothing to checkpoint; the attempt records a
+        // clear error instead of silently skipping the requested save.
+        save_checkpoint_if_requested(&qm, opts, &mut stats);
+        return (qm, stats);
     }
     let pool = ThreadPool::new(opts.workers);
     let mut state = ForwardState::new(model.config);
@@ -294,10 +329,9 @@ pub fn quantize_model(
         }
     }
 
-    (
-        QuantizedModel { base: work, matrices, awq_scales, method_name: method.name() },
-        stats,
-    )
+    let qm = QuantizedModel { base: work, matrices, awq_scales, method_name: method.name() };
+    save_checkpoint_if_requested(&qm, opts, &mut stats);
+    (qm, stats)
 }
 
 /// Appendix G: heuristic adaptive-precision search across all matrices,
@@ -382,16 +416,14 @@ pub fn quantize_model_heuristic(
             ic.advance(&work, segments, layer, &mut state);
         }
     }
-    (
-        QuantizedModel {
-            base: work,
-            matrices,
-            awq_scales: HashMap::new(),
-            method_name: format!("CLAQ+AP(search)-{:.2}", result.achieved_bits),
-        },
-        stats,
-        result,
-    )
+    let qm = QuantizedModel {
+        base: work,
+        matrices,
+        awq_scales: HashMap::new(),
+        method_name: format!("CLAQ+AP(search)-{:.2}", result.achieved_bits),
+    };
+    save_checkpoint_if_requested(&qm, opts, &mut stats);
+    (qm, stats, result)
 }
 
 #[cfg(test)]
@@ -497,6 +529,33 @@ mod tests {
         let deq = qm.matrices[&id].dequantize();
         assert_eq!(qm.base.matrix(id).data, deq.data);
         assert_ne!(model.matrix(id).data, deq.data);
+    }
+
+    #[test]
+    fn save_after_quantize_writes_checkpoint() {
+        use crate::model::exec::{prefill, ExecModel, ExecState, KvCache};
+        let (model, calib, _) = setup();
+        let path = crate::util::tmp::unique_path("pipeline_ckpt").with_extension("claq");
+        let _ = std::fs::remove_file(&path);
+        let opts = PipelineOpts { save_checkpoint: Some(path.clone()), ..Default::default() };
+        let (qm, stats) = quantize_model(&model, &Method::Claq { bits: 3 }, &calib, &opts);
+        assert!(stats.checkpoint_error.is_none(), "{:?}", stats.checkpoint_error);
+        assert_eq!(stats.checkpoint_bytes, Some(std::fs::metadata(&path).unwrap().len()));
+        assert_eq!(stats.checkpoint_bytes, Some(qm.size_report().checkpoint_bytes as u64));
+
+        // the written artifact cold-starts into a working packed model
+        let ckpt = crate::model::checkpoint::Checkpoint::load(&path).unwrap();
+        let exec = ExecModel::from_checkpoint(ckpt).unwrap();
+        let mut st = ExecState::new(model.config);
+        let mut cache = KvCache::new(&model.config);
+        let logits = prefill(&exec, &mut cache, &[1, 2, 3], &mut st);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        let _ = std::fs::remove_file(&path);
+
+        // FP16 has nothing to checkpoint: the option fails loudly in stats
+        let (_, stats) = quantize_model(&model, &Method::Fp16, &calib, &opts);
+        assert!(stats.checkpoint_bytes.is_none());
+        assert!(stats.checkpoint_error.is_some());
     }
 
     #[test]

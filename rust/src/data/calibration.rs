@@ -19,6 +19,22 @@ impl Default for CalibConfig {
     }
 }
 
+/// The shared default calibration source of the serving entry points
+/// (`claq pack`, `examples/serve_quantized.rs`): the trained C4 corpus
+/// from `dir` when present, a synthetic stand-in stream otherwise, sampled
+/// with the standard seed. One definition so the CLI artifact and the
+/// example artifact cannot silently diverge on the calibration recipe.
+pub fn default_calibration(
+    dir: &std::path::Path,
+    seq_len: usize,
+    n_segments: usize,
+) -> Vec<Vec<u16>> {
+    use crate::data::corpus::{generate, load_tokens, CorpusKind};
+    let train = load_tokens(&dir.join("corpus_c4_train.bin"))
+        .unwrap_or_else(|_| generate(CorpusKind::SynthC4, 16_384, 3));
+    sample_segments(&train, &CalibConfig { n_segments, seq_len, seed: 2 })
+}
+
 /// Sample `n_segments` windows of `seq_len` tokens.
 pub fn sample_segments(stream: &[u16], cfg: &CalibConfig) -> Vec<Vec<u16>> {
     assert!(

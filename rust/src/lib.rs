@@ -10,7 +10,9 @@
 //!   the GPTQ substrate and the RTN/GPTQ/AWQ baselines.
 //! * [`model`] — the LLaMA-style transformer the experiments quantize,
 //!   including the `LinearOp` execution backends (dense f32 and packed
-//!   CLAQ planes) and the KV-cached serving path (`model::exec`).
+//!   CLAQ planes), the KV-cached serving path (`model::exec`), and the
+//!   single-file `CLAQMD01` deployment checkpoint with cold-start loading
+//!   (`model::checkpoint`, DESIGN.md §9).
 //! * [`runtime`] — the serving layer: the continuous-batching scheduler
 //!   with pooled KV caches (`runtime::scheduler`) and the PJRT executor
 //!   for the AOT-compiled graphs.

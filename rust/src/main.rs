@@ -5,6 +5,10 @@
 //!                 the JAX trainer consumes these files).
 //! * `quantize`  — quantize a trained model with a chosen method and
 //!                 report size + perplexity.
+//! * `pack`      — quantize once and write the single-file CLAQMD01
+//!                 checkpoint (the quantize-once / serve-many artifact).
+//! * `serve`     — cold-start the continuous-batching engine from a
+//!                 checkpoint, skipping quantization entirely.
 //! * `table <n>` — regenerate paper table n (1–13).
 //! * `figure <n>`— regenerate paper figure n (3–5).
 //! * `outliers`  — print outlier-order diagnostics for a model.
@@ -16,7 +20,7 @@ use claq::util::cli::Args;
 
 const VALUE_FLAGS: &[&str] = &[
     "out", "model", "method", "bits", "s", "segments", "windows", "items", "tokens", "seed",
-    "setting", "calib", "target", "workers", "artifacts",
+    "setting", "calib", "target", "workers", "artifacts", "checkpoint", "requests", "slots",
 ];
 
 fn usage() -> &'static str {
@@ -25,6 +29,8 @@ fn usage() -> &'static str {
 USAGE:
   claq datagen  [--out artifacts] [--tokens N]
   claq quantize --model artifacts/weights_l.bin --method claq --bits 2.12
+  claq pack     --out model.claq [--model l|xl|PATH] [--method claq --bits 2.12] [--random] [--fast]
+  claq serve    --checkpoint model.claq [--requests 16] [--slots 4] [--seed 17]
   claq table    <1|2|3|4|5|6|7|8|10|12|13> [--fast]
   claq figure   <3|4|5>
   claq outliers [--model PATH] [--s 13]
@@ -47,6 +53,8 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "datagen" => claq::tables::bootstrap::datagen(&args),
         "quantize" => claq::tables::cli_entry::quantize(&args),
+        "pack" => claq::tables::cli_entry::pack(&args),
+        "serve" => claq::tables::cli_entry::serve(&args),
         "eval" => claq::tables::cli_entry::eval(&args),
         "table" => claq::tables::cli_entry::table(&args),
         "figure" => claq::tables::cli_entry::figure(&args),

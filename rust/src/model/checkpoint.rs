@@ -1,0 +1,599 @@
+//! Single-file CLAQ model checkpoint (`CLAQMD01`) — the quantize-once /
+//! serve-many deployment artifact.
+//!
+//! The pre-checkpoint `save_dir` had two defects this module fixes:
+//! it silently **dropped the AWQ activation scales** (an AWQ model saved to
+//! disk could never dequantize correctly again), and it serialized the FP
+//! side through `save_model`, which writes the full dense model *including
+//! the stale quantized projection weights* — making the "deployment
+//! artifact" larger than the FP checkpoint it replaces. `CLAQMD01` stores
+//! only what cold-start serving needs: the FP parts (token embedding,
+//! norms, LM head), one `CLAQPK01` container per projection, the AWQ
+//! scales, and the method name. `ExecModel::from_checkpoint`
+//! (`model/exec.rs`) builds `PackedLinear` ops straight from the loaded
+//! containers without ever materializing a dense projection matrix.
+//!
+//! Layout (little-endian; see DESIGN.md §9 for the byte table):
+//! ```text
+//! magic "CLAQMD01"
+//! method_len u32 | method UTF-8
+//! FP block (CLAQFP01 body, model/io.rs): config | tok_embed |
+//!   per layer: attn_norm, mlp_norm | final_norm | lm_head
+//! n_entries u32
+//! per entry (write order: layer-major, MatrixKind::ALL order):
+//!   layer u32 | kind u8
+//!   awq_len u32 | awq scales f32 × awq_len      (0 = no AWQ)
+//!   container_len u32 | CLAQPK01 bytes
+//! ```
+//! Strict reads: unknown magic, bad kind tags, shape mismatches against the
+//! config, duplicate or missing matrices, and trailing bytes are all
+//! rejected (`bail!`), mirroring the container-level
+//! `corrupt_containers_rejected` discipline.
+//!
+//! The deprecated `save_dir`/`load_dir` directory layout survives as a shim
+//! over the same codecs (per-matrix `.claq` files + `fp_parts.bin` +
+//! `method.txt` + `awq_scales.bin`); loading a directory that cannot prove
+//! its AWQ scales fails loudly instead of silently mis-dequantizing.
+
+use super::io::{fp_parts_byte_len, FpParts};
+use super::quantized::QuantizedModel;
+use super::{MatrixId, MatrixKind};
+use crate::quant::packed::{self, PackedMatrix};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CLAQMD01";
+const CONTAINER_MAGIC: &[u8; 8] = b"CLAQPK01";
+const AWQ_MAGIC: &[u8; 8] = b"CLAQAW01";
+
+/// File names of the deprecated directory layout.
+pub const METHOD_FILE: &str = "method.txt";
+pub const FP_FILE: &str = "fp_parts.bin";
+pub const AWQ_FILE: &str = "awq_scales.bin";
+
+/// Fixed per-entry framing bytes: layer u32 + kind u8 + awq_len u32 +
+/// container_len u32.
+pub const ENTRY_FRAMING_BYTES: usize = 13;
+
+/// Fixed header framing bytes: magic + method length field + method name +
+/// entry count field.
+pub fn header_bytes(method_name: &str) -> usize {
+    8 + 4 + method_name.len() + 4
+}
+
+/// Does this method name carry AWQ activation scales? (`Method::Awq`
+/// renders as `AWQ-{bits}`.)
+pub fn method_uses_awq(method_name: &str) -> bool {
+    method_name.starts_with("AWQ")
+}
+
+/// One packed projection of the checkpoint.
+#[derive(Clone, Debug)]
+pub struct CheckpointEntry {
+    pub id: MatrixId,
+    /// AWQ per-input-column activation scales (None for non-AWQ methods).
+    pub awq_scales: Option<Vec<f32>>,
+    /// The `CLAQPK01` matrix container.
+    pub container: PackedMatrix,
+}
+
+/// A loaded (or to-be-saved) single-file model checkpoint.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub method_name: String,
+    /// FP parts: config, token embedding, norms, LM head.
+    pub fp: FpParts,
+    /// One entry per quantizable matrix, layer-major in
+    /// [`MatrixKind::ALL`] order.
+    pub entries: Vec<CheckpointEntry>,
+}
+
+fn u32_len(n: usize, what: &str) -> Result<u32> {
+    u32::try_from(n).map_err(|_| anyhow!("{what} too large for the u32 length field ({n} bytes)"))
+}
+
+/// Cheap container-header validation (magic + dims) without a full unpack
+/// — a mismatched plane fails at load, not at first forward.
+fn validate_container_header(bytes: &[u8], id: MatrixId, want: (usize, usize)) -> Result<()> {
+    ensure!(bytes.len() >= 20, "{}: container truncated ({} bytes)", id.name(), bytes.len());
+    ensure!(&bytes[..8] == CONTAINER_MAGIC, "{}: bad container magic", id.name());
+    let rows = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let cols = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    ensure!(
+        (rows, cols) == want,
+        "{}: container is {rows}x{cols} but the config expects {}x{}",
+        id.name(),
+        want.0,
+        want.1
+    );
+    Ok(())
+}
+
+impl Checkpoint {
+    pub fn config(&self) -> &super::TransformerConfig {
+        &self.fp.config
+    }
+
+    /// Build a checkpoint from a quantized model: pack every matrix and
+    /// carry its AWQ scales. Requires a **fully** quantized model (the
+    /// checkpoint has no dense-projection fallback); an FP16/partial model
+    /// is rejected, and an AWQ model missing scales for any matrix is
+    /// rejected rather than silently saved lossy (the old `save_dir` bug).
+    pub fn from_quantized(qm: &QuantizedModel) -> Result<Self> {
+        ensure!(
+            !qm.matrices.is_empty(),
+            "nothing to checkpoint for method {}: CLAQMD01 stores packed planes only — \
+             use model::io::save_model for FP models",
+            qm.method_name
+        );
+        ensure!(
+            !method_uses_awq(&qm.method_name) || !qm.awq_scales.is_empty(),
+            "method {} is AWQ but the model carries no activation scales — refusing to \
+             save a checkpoint that cannot dequantize",
+            qm.method_name
+        );
+        let mut entries = Vec::with_capacity(qm.base.matrix_ids().len());
+        for id in qm.base.matrix_ids() {
+            let m = qm.matrices.get(&id).with_context(|| {
+                format!(
+                    "matrix {} is not quantized — checkpoints require a fully quantized model",
+                    id.name()
+                )
+            })?;
+            let (container, _) =
+                packed::pack(m).with_context(|| format!("pack {}", id.name()))?;
+            let awq_scales = qm.awq_scales.get(&id).cloned();
+            if let Some(s) = &awq_scales {
+                ensure!(s.len() == m.cols, "{}: AWQ scales/columns mismatch", id.name());
+            } else {
+                ensure!(
+                    qm.awq_scales.is_empty(),
+                    "{}: AWQ model is missing activation scales — refusing to save a \
+                     checkpoint that cannot dequantize",
+                    id.name()
+                );
+            }
+            entries.push(CheckpointEntry { id, awq_scales, container });
+        }
+        Ok(Self {
+            method_name: qm.method_name.clone(),
+            fp: FpParts::from_model(&qm.base),
+            entries,
+        })
+    }
+
+    /// Exact serialized size in bytes. Pinned equal to `encode().len()`
+    /// (and therefore to the on-disk file size) by tests.
+    pub fn byte_len(&self) -> usize {
+        let entry_bytes: usize = self
+            .entries
+            .iter()
+            .map(|e| {
+                ENTRY_FRAMING_BYTES
+                    + 4 * e.awq_scales.as_ref().map_or(0, Vec::len)
+                    + e.container.bytes.len()
+            })
+            .sum();
+        header_bytes(&self.method_name) + fp_parts_byte_len(&self.fp.config) + entry_bytes
+    }
+
+    /// Serialize to the single-file byte layout.
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(self.byte_len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&u32_len(self.method_name.len(), "method name")?.to_le_bytes());
+        out.extend_from_slice(self.method_name.as_bytes());
+        self.fp.write_to(&mut out)?;
+        out.extend_from_slice(&u32_len(self.entries.len(), "entry count")?.to_le_bytes());
+        for e in &self.entries {
+            out.extend_from_slice(&(e.id.layer as u32).to_le_bytes());
+            out.push(e.id.kind.to_u8());
+            let scales = e.awq_scales.as_deref().unwrap_or(&[]);
+            out.extend_from_slice(&u32_len(scales.len(), "awq scales")?.to_le_bytes());
+            for &s in scales {
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+            out.extend_from_slice(&u32_len(e.container.bytes.len(), "container")?.to_le_bytes());
+            out.extend_from_slice(&e.container.bytes);
+        }
+        debug_assert_eq!(out.len(), self.byte_len(), "byte_len accounting out of sync");
+        Ok(out)
+    }
+
+    /// Strict inverse of [`Checkpoint::encode`].
+    pub fn decode(b: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > b.len() {
+                bail!("truncated checkpoint at offset {pos}");
+            }
+            let s = &b[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let read_u32 =
+            |pos: &mut usize| -> Result<u32> { Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap())) };
+
+        if take(&mut pos, 8)? != MAGIC {
+            bail!("bad magic (not a CLAQMD01 checkpoint)");
+        }
+        let mlen = read_u32(&mut pos)? as usize;
+        ensure!(mlen <= 4096, "implausible method-name length {mlen}");
+        let method_name = std::str::from_utf8(take(&mut pos, mlen)?)
+            .context("method name is not UTF-8")?
+            .to_string();
+
+        let mut rdr = &b[pos..];
+        let fp = FpParts::read_from(&mut rdr).context("FP parts block")?;
+        pos = b.len() - rdr.len();
+        let cfg = fp.config;
+
+        let n_entries = read_u32(&mut pos)? as usize;
+        let expected = cfg.n_layers * MatrixKind::ALL.len();
+        ensure!(
+            n_entries == expected,
+            "checkpoint has {n_entries} matrices but the config requires {expected} — \
+             partial checkpoints are not valid"
+        );
+        let mut seen: HashSet<MatrixId> = HashSet::with_capacity(n_entries);
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let layer = read_u32(&mut pos)? as usize;
+            ensure!(layer < cfg.n_layers, "entry layer {layer} out of range");
+            let tag = take(&mut pos, 1)?[0];
+            let kind =
+                MatrixKind::from_u8(tag).ok_or_else(|| anyhow!("invalid matrix kind tag {tag}"))?;
+            let id = MatrixId { layer, kind };
+            ensure!(seen.insert(id), "duplicate checkpoint entry for {}", id.name());
+            let shape = kind.shape(&cfg);
+            let awq_len = read_u32(&mut pos)? as usize;
+            ensure!(
+                awq_len == 0 || awq_len == shape.1,
+                "{}: {awq_len} AWQ scales for {} columns",
+                id.name(),
+                shape.1
+            );
+            let mut awq_scales = None;
+            if awq_len > 0 {
+                let raw = take(&mut pos, 4 * awq_len)?;
+                awq_scales = Some(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                );
+            }
+            let clen = read_u32(&mut pos)? as usize;
+            let cbytes = take(&mut pos, clen)?;
+            validate_container_header(cbytes, id, shape)?;
+            entries.push(CheckpointEntry {
+                id,
+                awq_scales,
+                container: PackedMatrix { bytes: cbytes.to_vec() },
+            });
+        }
+        if pos != b.len() {
+            bail!("trailing bytes ({} unread)", b.len() - pos);
+        }
+        // The dir shim's discipline applies to the single file too: an
+        // AWQ-method checkpoint without scales would cold-start into an
+        // engine that serves scaled weights it never unscales.
+        if method_uses_awq(&method_name) {
+            for e in &entries {
+                ensure!(
+                    e.awq_scales.is_some(),
+                    "{}: AWQ-method checkpoint carries no activation scales for this \
+                     matrix — refusing to serve mis-dequantized weights",
+                    e.id.name()
+                );
+            }
+        }
+        Ok(Self { method_name, fp, entries })
+    }
+
+    /// Write the single-file checkpoint; returns the bytes written.
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        let bytes = self.encode()?;
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&bytes)?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Read + decode a single-file checkpoint.
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        Self::decode(&bytes).with_context(|| format!("decode {}", path.display()))
+    }
+}
+
+/// Convenience: pack + save `qm` as a single-file checkpoint; returns the
+/// bytes written (what the pipeline's save-after-quantize option records).
+pub fn save_checkpoint(qm: &QuantizedModel, path: &Path) -> Result<u64> {
+    Checkpoint::from_quantized(qm)?.save(path)
+}
+
+// -------------------------------------------- deprecated directory shim ----
+
+/// Deprecated: the pre-checkpoint one-file-per-matrix layout, now written
+/// through the same codecs (per-matrix `CLAQPK01` files, a `CLAQFP01`
+/// `fp_parts.bin` — FP parts only, no stale dense projections — plus
+/// `method.txt` and, for AWQ models, `awq_scales.bin`). Prefer
+/// [`Checkpoint::save`] / [`save_checkpoint`].
+pub fn save_dir(qm: &QuantizedModel, dir: &Path) -> Result<()> {
+    let ckpt = Checkpoint::from_quantized(qm)?;
+    std::fs::create_dir_all(dir)?;
+    for e in &ckpt.entries {
+        packed::save(&e.container, &dir.join(format!("{}.claq", e.id.name())))?;
+    }
+    ckpt.fp.save(&dir.join(FP_FILE))?;
+    std::fs::write(dir.join(METHOD_FILE), &ckpt.method_name)?;
+    if ckpt.entries.iter().any(|e| e.awq_scales.is_some()) {
+        let mut out = Vec::new();
+        out.extend_from_slice(AWQ_MAGIC);
+        let n = ckpt.entries.iter().filter(|e| e.awq_scales.is_some()).count();
+        out.extend_from_slice(&(n as u32).to_le_bytes());
+        for e in &ckpt.entries {
+            if let Some(s) = &e.awq_scales {
+                out.extend_from_slice(&(e.id.layer as u32).to_le_bytes());
+                out.push(e.id.kind.to_u8());
+                out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                for &v in s {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        std::fs::write(dir.join(AWQ_FILE), out)?;
+    }
+    Ok(())
+}
+
+fn load_awq_file(path: &Path) -> Result<HashMap<MatrixId, Vec<f32>>> {
+    let b = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    ensure!(b.len() >= 12 && &b[..8] == AWQ_MAGIC, "bad AWQ scales file");
+    let n = u32::from_le_bytes(b[8..12].try_into().unwrap()) as usize;
+    let mut pos = 12usize;
+    let mut out = HashMap::with_capacity(n);
+    for _ in 0..n {
+        ensure!(pos + 9 <= b.len(), "truncated AWQ scales file");
+        let layer = u32::from_le_bytes(b[pos..pos + 4].try_into().unwrap()) as usize;
+        let kind = MatrixKind::from_u8(b[pos + 4])
+            .ok_or_else(|| anyhow!("invalid matrix kind in AWQ scales file"))?;
+        let len = u32::from_le_bytes(b[pos + 5..pos + 9].try_into().unwrap()) as usize;
+        pos += 9;
+        ensure!(pos + 4 * len <= b.len(), "truncated AWQ scales file");
+        let scales = b[pos..pos + 4 * len]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        pos += 4 * len;
+        ensure!(
+            out.insert(MatrixId { layer, kind }, scales).is_none(),
+            "duplicate AWQ scales entry"
+        );
+    }
+    ensure!(pos == b.len(), "trailing bytes in AWQ scales file");
+    Ok(out)
+}
+
+/// Deprecated inverse of [`save_dir`]. Fails loudly on the legacy
+/// pre-checkpoint layout (no `method.txt` — those directories dropped AWQ
+/// scales at save time), and on any AWQ-method directory whose
+/// `awq_scales.bin` is missing: such a model cannot dequantize correctly,
+/// so refusing beats silently serving wrong weights.
+pub fn load_dir(dir: &Path) -> Result<Checkpoint> {
+    let method_name = std::fs::read_to_string(dir.join(METHOD_FILE))
+        .map_err(|_| {
+            anyhow!(
+                "{} has no {METHOD_FILE}: this is the legacy pre-checkpoint save_dir layout, \
+                 which dropped AWQ scales and wrote stale dense projections — requantize and \
+                 re-save with the current format",
+                dir.display()
+            )
+        })?
+        .trim()
+        .to_string();
+    let fp = FpParts::load(&dir.join(FP_FILE))?;
+    let cfg = fp.config;
+    let mut awq = if dir.join(AWQ_FILE).exists() {
+        load_awq_file(&dir.join(AWQ_FILE))?
+    } else {
+        HashMap::new()
+    };
+    if method_uses_awq(&method_name) && awq.is_empty() {
+        bail!(
+            "{} holds AWQ model '{}' but no {AWQ_FILE}: without activation scales the \
+             quantized weights cannot be dequantized — requantize and re-save",
+            dir.display(),
+            method_name
+        );
+    }
+    let mut entries = Vec::with_capacity(cfg.n_layers * MatrixKind::ALL.len());
+    for layer in 0..cfg.n_layers {
+        for kind in MatrixKind::ALL {
+            let id = MatrixId { layer, kind };
+            let pm = packed::load(&dir.join(format!("{}.claq", id.name())))?;
+            validate_container_header(&pm.bytes, id, kind.shape(&cfg))?;
+            entries.push(CheckpointEntry { id, awq_scales: awq.remove(&id), container: pm });
+        }
+    }
+    ensure!(awq.is_empty(), "AWQ scales present for matrices not in the model");
+    Ok(Checkpoint { method_name, fp, entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Model, TransformerConfig};
+    use crate::quant::config::Method;
+    use crate::util::rng::Rng;
+
+    fn small() -> Model {
+        let cfg = TransformerConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+            rope_theta: 10000.0,
+            eps: 1e-5,
+        };
+        Model::random(cfg, &mut Rng::new(9))
+    }
+
+    fn quantized(method: &Method) -> QuantizedModel {
+        QuantizedModel::quantize_uncalibrated(&small(), method)
+    }
+
+    /// Attach synthetic AWQ scales to every matrix (the codec does not care
+    /// how scales were computed, only that they round-trip).
+    fn with_awq_scales(mut qm: QuantizedModel) -> QuantizedModel {
+        let mut rng = Rng::new(11);
+        for id in qm.base.matrix_ids() {
+            let cols = qm.base.matrix(id).cols;
+            let scales: Vec<f32> = (0..cols).map(|_| 0.5 + rng.next_f32()).collect();
+            qm.awq_scales.insert(id, scales);
+        }
+        qm.method_name = "AWQ-4".into();
+        qm
+    }
+
+    fn uniq_path(tag: &str) -> std::path::PathBuf {
+        crate::util::tmp::unique_path(&format!("ckpt_{tag}"))
+    }
+
+    #[test]
+    fn encode_decode_round_trip_exact() {
+        for qm in [
+            quantized(&Method::Claq { bits: 3 }),
+            with_awq_scales(quantized(&Method::Claq { bits: 4 })),
+        ] {
+            let ckpt = Checkpoint::from_quantized(&qm).unwrap();
+            let bytes = ckpt.encode().unwrap();
+            assert_eq!(bytes.len(), ckpt.byte_len(), "byte accounting must be exact");
+            let back = Checkpoint::decode(&bytes).unwrap();
+            assert_eq!(back.method_name, ckpt.method_name);
+            assert_eq!(back.fp.config, ckpt.fp.config);
+            assert_eq!(back.fp.lm_head.data, ckpt.fp.lm_head.data);
+            assert_eq!(back.entries.len(), ckpt.entries.len());
+            for (a, b) in back.entries.iter().zip(&ckpt.entries) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.awq_scales, b.awq_scales);
+                assert_eq!(a.container.bytes, b.container.bytes);
+            }
+            // re-encode is byte-identical (deterministic codec)
+            assert_eq!(back.encode().unwrap(), bytes);
+        }
+    }
+
+    #[test]
+    fn corrupt_checkpoints_rejected() {
+        let ckpt = Checkpoint::from_quantized(&quantized(&Method::Claq { bits: 2 })).unwrap();
+        let bytes = ckpt.encode().unwrap();
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Checkpoint::decode(&bad).is_err());
+        // truncated
+        assert!(Checkpoint::decode(&bytes[..bytes.len() - 5]).is_err());
+        // trailing bytes
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(Checkpoint::decode(&long).is_err());
+        // partial checkpoint (one entry dropped) is invalid
+        let mut partial = ckpt.clone();
+        partial.entries.pop();
+        assert!(Checkpoint::decode(&partial.encode().unwrap()).is_err());
+        // duplicate entry is invalid
+        let mut dup = ckpt.clone();
+        let e = dup.entries[0].clone();
+        *dup.entries.last_mut().unwrap() = e;
+        assert!(Checkpoint::decode(&dup.encode().unwrap()).is_err());
+    }
+
+    #[test]
+    fn fp16_and_partial_models_refused() {
+        let m = small();
+        let fp = QuantizedModel {
+            base: m.clone(),
+            matrices: std::collections::HashMap::new(),
+            awq_scales: std::collections::HashMap::new(),
+            method_name: "FP16".into(),
+        };
+        assert!(Checkpoint::from_quantized(&fp).is_err());
+        let mut partial = quantized(&Method::Claq { bits: 2 });
+        let id = partial.base.matrix_ids()[0];
+        partial.matrices.remove(&id);
+        let err = Checkpoint::from_quantized(&partial).unwrap_err();
+        assert!(format!("{err:#}").contains(&id.name()), "{err:#}");
+    }
+
+    #[test]
+    fn awq_scales_survive_the_file_and_missing_scales_fail_loudly() {
+        let qm = with_awq_scales(quantized(&Method::Claq { bits: 4 }));
+        let path = uniq_path("awq");
+        let written = save_checkpoint(&qm, &path).unwrap();
+        assert_eq!(written, std::fs::metadata(&path).unwrap().len());
+        let back = Checkpoint::load(&path).unwrap();
+        for e in &back.entries {
+            assert_eq!(
+                e.awq_scales.as_ref(),
+                qm.awq_scales.get(&e.id),
+                "{} scales must survive the round trip",
+                e.id.name()
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+
+        // an AWQ model with a scale map missing one matrix must not save
+        let mut lossy = with_awq_scales(quantized(&Method::Claq { bits: 4 }));
+        let id = lossy.base.matrix_ids()[3];
+        lossy.awq_scales.remove(&id);
+        assert!(Checkpoint::from_quantized(&lossy).is_err());
+
+        // an AWQ-named model with NO scales at all must not save either
+        let mut no_scales = quantized(&Method::Claq { bits: 4 });
+        no_scales.method_name = "AWQ-4".into();
+        assert!(Checkpoint::from_quantized(&no_scales).is_err());
+
+        // and a foreign AWQ-method *file* with its scales stripped must
+        // not decode — same contract as the dir shim's missing-scales bail
+        let mut stripped = Checkpoint::from_quantized(&with_awq_scales(quantized(
+            &Method::Claq { bits: 4 },
+        )))
+        .unwrap();
+        for e in &mut stripped.entries {
+            e.awq_scales = None;
+        }
+        let err = Checkpoint::decode(&stripped.encode().unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("scales"), "{err:#}");
+    }
+
+    #[test]
+    fn dir_shim_round_trips_and_legacy_is_refused() {
+        let qm = with_awq_scales(quantized(&Method::Claq { bits: 3 }));
+        let dir = uniq_path("dir");
+        save_dir(&qm, &dir).unwrap();
+        let back = load_dir(&dir).unwrap();
+        assert_eq!(back.method_name, "AWQ-4");
+        assert_eq!(back.entries.len(), qm.matrices.len());
+        for e in &back.entries {
+            assert_eq!(e.awq_scales.as_ref(), qm.awq_scales.get(&e.id));
+        }
+
+        // deleting the scales file simulates the legacy lossy layout: an
+        // AWQ directory without scales must be refused, not half-loaded
+        std::fs::remove_file(dir.join(AWQ_FILE)).unwrap();
+        let err = load_dir(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("scales"), "{err:#}");
+
+        // a directory without method.txt is the legacy layout: refused
+        std::fs::remove_file(dir.join(METHOD_FILE)).unwrap();
+        let err = load_dir(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("legacy"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

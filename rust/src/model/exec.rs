@@ -24,10 +24,12 @@
 //! dense ExecModel agrees with [`forward`](super::forward::forward) to
 //! rounding error (pinned by tests below).
 
+use super::checkpoint::Checkpoint;
 use super::forward::{rmsnorm, rope_row, rope_tables, silu};
-use super::linear::{DenseLinear, LinearOp};
-use super::{Model, TransformerConfig};
+use super::linear::{DenseLinear, LinearOp, PackedLinear};
+use super::{MatrixId, MatrixKind, Model, TransformerConfig};
 use crate::tensor::Matrix;
+use anyhow::{ensure, Context, Result};
 
 /// One decoder layer with backend-agnostic projections.
 pub struct ExecLayer {
@@ -82,6 +84,67 @@ impl ExecModel {
             lm_head: Box::new(DenseLinear::new(model.lm_head.clone())),
             backend: "dense",
         }
+    }
+
+    /// Cold-start path: build the packed execution model straight from a
+    /// loaded `CLAQMD01` checkpoint — every projection becomes a
+    /// [`PackedLinear`] over the serialized container (f16 codebooks, AWQ
+    /// scales folded in) and **no dense projection matrix is ever
+    /// materialized**. Consumes the checkpoint so the FP parts (embedding,
+    /// norms, LM head — the largest FP blocks) are moved in, not copied:
+    /// copies would double peak FP memory and land straight in the
+    /// cold-start latency `bench_decode` tracks. Bit-identical to
+    /// `QuantizedModel::to_exec_deployed` on the model that saved the
+    /// checkpoint (pinned by `tests/checkpoint_roundtrip.rs`).
+    pub fn from_checkpoint(ckpt: Checkpoint) -> Result<Self> {
+        let Checkpoint { fp, entries, .. } = ckpt;
+        let cfg = fp.config;
+        let by_id: std::collections::HashMap<MatrixId, &super::checkpoint::CheckpointEntry> =
+            entries.iter().map(|e| (e.id, e)).collect();
+        let super::io::FpParts { tok_embed, attn_norms, mlp_norms, final_norm, lm_head, .. } = fp;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for (layer, (attn_norm, mlp_norm)) in
+            attn_norms.into_iter().zip(mlp_norms).enumerate()
+        {
+            let op = |kind: MatrixKind| -> Result<Box<dyn LinearOp>> {
+                let id = MatrixId { layer, kind };
+                let e = by_id
+                    .get(&id)
+                    .with_context(|| format!("checkpoint is missing {}", id.name()))?;
+                let lin = PackedLinear::from_container(&e.container, e.awq_scales.as_deref())
+                    .with_context(|| format!("build packed op for {}", id.name()))?;
+                let want = kind.shape(&cfg);
+                ensure!(
+                    (lin.out_features(), lin.in_features()) == want,
+                    "{}: container is {}x{} but the config expects {}x{}",
+                    id.name(),
+                    lin.out_features(),
+                    lin.in_features(),
+                    want.0,
+                    want.1
+                );
+                Ok(Box::new(lin))
+            };
+            layers.push(ExecLayer {
+                attn_norm,
+                wq: op(MatrixKind::Wq)?,
+                wk: op(MatrixKind::Wk)?,
+                wv: op(MatrixKind::Wv)?,
+                wo: op(MatrixKind::Wo)?,
+                mlp_norm,
+                w_gate: op(MatrixKind::WGate)?,
+                w_up: op(MatrixKind::WUp)?,
+                w_down: op(MatrixKind::WDown)?,
+            });
+        }
+        Ok(Self {
+            config: cfg,
+            tok_embed,
+            layers,
+            final_norm,
+            lm_head: Box::new(DenseLinear::new(lm_head)),
+            backend: "packed",
+        })
     }
 
     /// Resident bytes of the quantizable projections (the part the packed

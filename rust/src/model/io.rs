@@ -12,6 +12,25 @@
 //! final_norm d
 //! lm_head (vocab×d)
 //! ```
+//!
+//! The module also defines [`FpParts`] — the **FP-only** subset of a model
+//! (config, token embedding, norms, LM head; no attention/MLP projection
+//! weights). It is the FP block of the single-file CLAQMD01 checkpoint
+//! (`model/checkpoint.rs`) and, with the `CLAQFP01` magic, a standalone
+//! file in the deprecated `save_dir` layout. Serializing a quantized
+//! model's FP side through `FpParts` instead of `save_model` is what keeps
+//! checkpoints smaller than the FP artifact: the dense projections (stale
+//! copies for a quantized model) are never written.
+//!
+//! ```text
+//! CLAQFP01 block (after the optional magic):
+//! vocab u32 | d_model u32 | n_layers u32 | n_heads u32 | d_ff u32 |
+//! max_seq u32 | rope_theta f32 | eps f32
+//! tok_embed (vocab×d f32)
+//! per layer: attn_norm d | mlp_norm d
+//! final_norm d
+//! lm_head (vocab×d)
+//! ```
 
 use super::{LayerWeights, Model, TransformerConfig};
 use crate::tensor::Matrix;
@@ -20,6 +39,8 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"CLAQWT01";
+/// Magic of a standalone FP-parts file (deprecated `save_dir` layout).
+pub const FP_MAGIC: &[u8; 8] = b"CLAQFP01";
 
 fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
     // bulk conversion: f32 slice -> LE bytes
@@ -52,17 +73,38 @@ fn read_f32(r: &mut impl Read) -> Result<f32> {
     Ok(f32::from_le_bytes(b))
 }
 
-/// Serialize a model.
-pub fn save_model(model: &Model, path: &Path) -> Result<()> {
-    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
-    let mut w = std::io::BufWriter::new(f);
-    let c = &model.config;
-    w.write_all(MAGIC)?;
+/// Write the 32-byte config block (shared by CLAQWT01, CLAQFP01, and the
+/// checkpoint codec).
+fn write_config(w: &mut impl Write, c: &TransformerConfig) -> Result<()> {
     for v in [c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.max_seq] {
         w.write_all(&(v as u32).to_le_bytes())?;
     }
     w.write_all(&c.rope_theta.to_le_bytes())?;
     w.write_all(&c.eps.to_le_bytes())?;
+    Ok(())
+}
+
+/// Read + validate the 32-byte config block.
+fn read_config(r: &mut impl Read) -> Result<TransformerConfig> {
+    let vocab = read_u32(r)? as usize;
+    let d_model = read_u32(r)? as usize;
+    let n_layers = read_u32(r)? as usize;
+    let n_heads = read_u32(r)? as usize;
+    let d_ff = read_u32(r)? as usize;
+    let max_seq = read_u32(r)? as usize;
+    let rope_theta = read_f32(r)?;
+    let eps = read_f32(r)?;
+    let config = TransformerConfig { vocab, d_model, n_layers, n_heads, d_ff, max_seq, rope_theta, eps };
+    config.validate()?;
+    Ok(config)
+}
+
+/// Serialize a model.
+pub fn save_model(model: &Model, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    write_config(&mut w, &model.config)?;
     write_f32s(&mut w, &model.tok_embed.data)?;
     for l in &model.layers {
         write_f32s(&mut w, &l.attn_norm)?;
@@ -90,16 +132,8 @@ pub fn load_model(path: &Path) -> Result<Model> {
     if &magic != MAGIC {
         bail!("bad magic in {}", path.display());
     }
-    let vocab = read_u32(&mut r)? as usize;
-    let d_model = read_u32(&mut r)? as usize;
-    let n_layers = read_u32(&mut r)? as usize;
-    let n_heads = read_u32(&mut r)? as usize;
-    let d_ff = read_u32(&mut r)? as usize;
-    let max_seq = read_u32(&mut r)? as usize;
-    let rope_theta = read_f32(&mut r)?;
-    let eps = read_f32(&mut r)?;
-    let config = TransformerConfig { vocab, d_model, n_layers, n_heads, d_ff, max_seq, rope_theta, eps };
-    config.validate()?;
+    let config = read_config(&mut r)?;
+    let TransformerConfig { vocab, d_model, n_layers, d_ff, .. } = config;
 
     let d = d_model;
     let tok_embed = Matrix::from_vec(vocab, d, read_f32s(&mut r, vocab * d)?);
@@ -127,6 +161,124 @@ pub fn load_model(path: &Path) -> Result<Model> {
     Ok(Model { config, tok_embed, layers, final_norm, lm_head })
 }
 
+// ------------------------------------------------------------ FP parts ----
+
+/// The FP-only subset of a model: config, token embedding, per-layer RMSNorm
+/// gains, final norm, and LM head. This is everything a packed execution
+/// model needs besides the CLAQ planes — the dense projection weights are
+/// deliberately absent (for a quantized model they are stale copies, and
+/// writing them made the old `save_dir` artifact *larger* than the FP
+/// checkpoint it was meant to replace).
+#[derive(Clone, Debug)]
+pub struct FpParts {
+    pub config: TransformerConfig,
+    /// (vocab × d_model)
+    pub tok_embed: Matrix,
+    /// Per-layer attention-block RMSNorm gains (each `d_model` long).
+    pub attn_norms: Vec<Vec<f32>>,
+    /// Per-layer MLP-block RMSNorm gains (each `d_model` long).
+    pub mlp_norms: Vec<Vec<f32>>,
+    pub final_norm: Vec<f32>,
+    /// (vocab × d_model)
+    pub lm_head: Matrix,
+}
+
+/// Exact serialized size of an [`FpParts`] block (config block + tensors,
+/// excluding any magic): the checkpoint size accounting depends on this
+/// being byte-accurate, which `model/checkpoint.rs` tests pin.
+pub fn fp_parts_byte_len(cfg: &TransformerConfig) -> usize {
+    let floats = 2 * cfg.vocab * cfg.d_model // tok_embed + lm_head
+        + (2 * cfg.n_layers + 1) * cfg.d_model; // per-layer norms + final
+    32 + 4 * floats
+}
+
+/// Exact serialized size of a full `CLAQWT01` model file ([`save_model`]):
+/// magic + config block + every parameter as f32. The single source of
+/// truth for "how big is the FP artifact" comparisons (pinned equal to the
+/// real file size by the round-trip test below).
+pub fn model_file_byte_len(cfg: &TransformerConfig) -> usize {
+    8 + 32 + 4 * cfg.n_params()
+}
+
+impl FpParts {
+    /// Extract (clone) the FP parts of a model.
+    pub fn from_model(model: &Model) -> Self {
+        Self {
+            config: model.config,
+            tok_embed: model.tok_embed.clone(),
+            attn_norms: model.layers.iter().map(|l| l.attn_norm.clone()).collect(),
+            mlp_norms: model.layers.iter().map(|l| l.mlp_norm.clone()).collect(),
+            final_norm: model.final_norm.clone(),
+            lm_head: model.lm_head.clone(),
+        }
+    }
+
+    /// Write the config block + tensors (no magic — the enclosing format
+    /// owns framing).
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        write_config(w, &self.config)?;
+        write_f32s(w, &self.tok_embed.data)?;
+        for (a, m) in self.attn_norms.iter().zip(&self.mlp_norms) {
+            write_f32s(w, a)?;
+            write_f32s(w, m)?;
+        }
+        write_f32s(w, &self.final_norm)?;
+        write_f32s(w, &self.lm_head.data)?;
+        Ok(())
+    }
+
+    /// Read the block written by [`FpParts::write_to`].
+    pub fn read_from(r: &mut impl Read) -> Result<Self> {
+        let config = read_config(r)?;
+        let (v, d) = (config.vocab, config.d_model);
+        let tok_embed = Matrix::from_vec(v, d, read_f32s(r, v * d)?);
+        let mut attn_norms = Vec::with_capacity(config.n_layers);
+        let mut mlp_norms = Vec::with_capacity(config.n_layers);
+        for _ in 0..config.n_layers {
+            attn_norms.push(read_f32s(r, d)?);
+            mlp_norms.push(read_f32s(r, d)?);
+        }
+        let final_norm = read_f32s(r, d)?;
+        let lm_head = Matrix::from_vec(v, d, read_f32s(r, v * d)?);
+        Ok(Self { config, tok_embed, attn_norms, mlp_norms, final_norm, lm_head })
+    }
+
+    /// Save as a standalone `CLAQFP01` file (the `save_dir` shim's
+    /// `fp_parts.bin`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        w.write_all(FP_MAGIC)?;
+        self.write_to(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a standalone FP-parts file. Accepts `CLAQFP01` (the current
+    /// layout) and, as a migration path, a full `CLAQWT01` model file —
+    /// the layout the pre-checkpoint `save_dir` wrote — from which only
+    /// the FP parts are kept.
+    pub fn load(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut r = std::io::BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic == MAGIC {
+            drop(r);
+            return Ok(Self::from_model(&load_model(path)?));
+        }
+        if &magic != FP_MAGIC {
+            bail!("bad magic in {} (expected CLAQFP01 or CLAQWT01)", path.display());
+        }
+        let parts = Self::read_from(&mut r)?;
+        let mut probe = [0u8; 1];
+        if r.read(&mut probe)? != 0 {
+            bail!("trailing bytes in {}", path.display());
+        }
+        Ok(parts)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +302,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("m.bin");
         save_model(&m, &path).unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len() as usize, model_file_byte_len(&cfg));
         let back = load_model(&path).unwrap();
         assert_eq!(back.config, m.config);
         assert_eq!(back.tok_embed.data, m.tok_embed.data);
@@ -157,6 +310,54 @@ mod tests {
         assert_eq!(back.final_norm, m.final_norm);
         assert_eq!(back.lm_head.data, m.lm_head.data);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fp_parts_round_trip_and_byte_len_exact() {
+        let cfg = TransformerConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+            rope_theta: 10000.0,
+            eps: 1e-5,
+        };
+        let mut rng = Rng::new(7);
+        let m = Model::random(cfg, &mut rng);
+        let parts = FpParts::from_model(&m);
+
+        // in-memory block length matches the analytic accounting exactly
+        let mut buf = Vec::new();
+        parts.write_to(&mut buf).unwrap();
+        assert_eq!(buf.len(), fp_parts_byte_len(&cfg));
+        let back = FpParts::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.config, cfg);
+        assert_eq!(back.tok_embed.data, m.tok_embed.data);
+        assert_eq!(back.attn_norms[1], m.layers[1].attn_norm);
+        assert_eq!(back.mlp_norms[0], m.layers[0].mlp_norm);
+        assert_eq!(back.final_norm, m.final_norm);
+        assert_eq!(back.lm_head.data, m.lm_head.data);
+
+        // standalone file round trip, and the legacy CLAQWT01 migration path
+        let fp_path = crate::util::tmp::unique_path("io_fp").with_extension("bin");
+        parts.save(&fp_path).unwrap();
+        assert_eq!(std::fs::metadata(&fp_path).unwrap().len() as usize, 8 + buf.len());
+        let from_file = FpParts::load(&fp_path).unwrap();
+        assert_eq!(from_file.lm_head.data, m.lm_head.data);
+        let full_path = crate::util::tmp::unique_path("io_full").with_extension("bin");
+        save_model(&m, &full_path).unwrap();
+        let from_full = FpParts::load(&full_path).unwrap();
+        assert_eq!(from_full.tok_embed.data, m.tok_embed.data);
+        assert_eq!(from_full.attn_norms.len(), cfg.n_layers);
+        // the FP-parts file is strictly smaller than the full model file
+        assert!(
+            std::fs::metadata(&fp_path).unwrap().len()
+                < std::fs::metadata(&full_path).unwrap().len()
+        );
+        let _ = std::fs::remove_file(&fp_path);
+        let _ = std::fs::remove_file(&full_path);
     }
 
     #[test]

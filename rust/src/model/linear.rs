@@ -435,7 +435,7 @@ mod tests {
     #[test]
     fn container_round_trip_backend() {
         let (_, qm) = sample(5, 40, 10, 2, 2);
-        let (pm, _) = crate::quant::packed::pack(&qm);
+        let (pm, _) = crate::quant::packed::pack(&qm).unwrap();
         let packed = PackedLinear::from_container(&pm, None).unwrap();
         // container codebooks are f16: compare against the f16-rounded deq
         let deq = crate::quant::packed::unpack(&pm).unwrap().dequantize();

@@ -4,6 +4,7 @@
 //! packed CLAQ execution backend, the KV-cached [`exec`] serving path, and
 //! the quantized-model wrapper.
 
+pub mod checkpoint;
 pub mod exec;
 pub mod forward;
 pub mod io;
@@ -151,6 +152,28 @@ impl MatrixKind {
             MatrixKind::WDown => "w_down",
         }
     }
+
+    /// Stable wire tag (the index in [`MatrixKind::ALL`]) — the checkpoint
+    /// codec (`model/checkpoint.rs`) serializes kinds by this byte.
+    pub fn to_u8(self) -> u8 {
+        MatrixKind::ALL.iter().position(|&k| k == self).unwrap() as u8
+    }
+
+    /// Inverse of [`MatrixKind::to_u8`]; `None` for out-of-range tags.
+    pub fn from_u8(tag: u8) -> Option<MatrixKind> {
+        MatrixKind::ALL.get(tag as usize).copied()
+    }
+
+    /// (rows, cols) of this projection under `cfg` — the shape a serialized
+    /// container must decode to.
+    pub fn shape(&self, cfg: &TransformerConfig) -> (usize, usize) {
+        let (d, f) = (cfg.d_model, cfg.d_ff);
+        match self {
+            MatrixKind::Wq | MatrixKind::Wk | MatrixKind::Wv | MatrixKind::Wo => (d, d),
+            MatrixKind::WGate | MatrixKind::WUp => (f, d),
+            MatrixKind::WDown => (d, f),
+        }
+    }
 }
 
 impl MatrixId {
@@ -284,6 +307,21 @@ mod tests {
             let mat = m.matrix(id);
             assert!(mat.rows > 0 && mat.cols > 0);
         }
+    }
+
+    #[test]
+    fn kind_tags_round_trip_and_shapes_match() {
+        let cfg = TransformerConfig::tiny_l();
+        let mut rng = Rng::new(3);
+        let m = Model::random(cfg, &mut rng);
+        for (i, kind) in MatrixKind::ALL.into_iter().enumerate() {
+            assert_eq!(kind.to_u8(), i as u8);
+            assert_eq!(MatrixKind::from_u8(i as u8), Some(kind));
+            let mat = m.matrix(MatrixId { layer: 0, kind });
+            assert_eq!(kind.shape(&cfg), (mat.rows, mat.cols), "{}", kind.name());
+        }
+        assert_eq!(MatrixKind::from_u8(7), None);
+        assert_eq!(MatrixKind::from_u8(255), None);
     }
 
     #[test]

@@ -9,12 +9,13 @@
 //!   [`PackedLinear`] — the serving path; no dense weight matrix is ever
 //!   materialized.
 
+use super::checkpoint::{self, Checkpoint};
 use super::exec::{ExecLayer, ExecModel};
 use super::linear::{DenseLinear, LinearOp, PackedLinear};
-use super::{MatrixId, MatrixKind, Model};
+use super::{LayerWeights, MatrixId, MatrixKind, Model};
 use crate::quant::gptq::QuantizedMatrix;
-use crate::quant::packed::pack;
-use anyhow::Result;
+use crate::quant::packed::{pack, unpack};
+use anyhow::{Context, Result};
 use std::collections::HashMap;
 
 /// A fully quantized model plus bookkeeping.
@@ -29,7 +30,9 @@ pub struct QuantizedModel {
     pub method_name: String,
 }
 
-/// Aggregated size accounting over all quantized matrices.
+/// Aggregated size accounting over all quantized matrices, plus the exact
+/// byte budget of the single-file `CLAQMD01` checkpoint this model would
+/// save (`model/checkpoint.rs`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ModelSizeReport {
     pub quantized_params: usize,
@@ -37,6 +40,15 @@ pub struct ModelSizeReport {
     pub paper_equivalent_bits: f64,
     pub container_bits_per_param: f64,
     pub total_outliers: usize,
+    /// Bytes of the FP block (config + tok_embed + norms + LM head) —
+    /// identical for every method on a given config.
+    pub fp_bytes: usize,
+    /// Bytes of serialized AWQ activation scales (0 for non-AWQ methods).
+    pub awq_scale_bytes: usize,
+    /// Exact size of the single-file checkpoint (`QuantizedModel::save`):
+    /// header + method name + FP block + per-matrix framing + containers +
+    /// AWQ scales. Pinned equal to the on-disk file size by tests.
+    pub checkpoint_bytes: usize,
 }
 
 impl QuantizedModel {
@@ -116,35 +128,116 @@ impl QuantizedModel {
         }
     }
 
-    /// Pack every matrix and aggregate size accounting.
+    /// Pack every matrix and aggregate size accounting, including the
+    /// exact byte budget of the single-file checkpoint.
     pub fn size_report(&self) -> ModelSizeReport {
         let mut rep = ModelSizeReport::default();
         let mut weighted_bits = 0.0f64;
-        for qm in self.matrices.values() {
-            let (_, r) = pack(qm);
+        let mut entry_bytes = 0usize;
+        for (id, qm) in &self.matrices {
+            let (_, r) = pack(qm).expect("size_report: un-packable quantized matrix");
             rep.quantized_params += r.params;
             rep.container_bytes += r.container_bytes();
             weighted_bits += r.paper_equivalent_bits * r.params as f64;
             rep.total_outliers += qm.outliers.len();
+            let awq_len = self.awq_scales.get(id).map_or(0, Vec::len);
+            rep.awq_scale_bytes += 4 * awq_len;
+            entry_bytes += checkpoint::ENTRY_FRAMING_BYTES + 4 * awq_len + r.container_bytes();
         }
         if rep.quantized_params > 0 {
             rep.paper_equivalent_bits = weighted_bits / rep.quantized_params as f64;
             rep.container_bits_per_param =
                 rep.container_bytes as f64 * 8.0 / rep.quantized_params as f64;
         }
+        rep.fp_bytes = super::io::fp_parts_byte_len(&self.base.config);
+        rep.checkpoint_bytes =
+            checkpoint::header_bytes(&self.method_name) + rep.fp_bytes + entry_bytes;
         rep
     }
 
-    /// Serialize all packed matrices into one directory (one file per
-    /// matrix), plus the FP parts as a weights file.
-    pub fn save_dir(&self, dir: &std::path::Path) -> Result<()> {
-        std::fs::create_dir_all(dir)?;
-        for (&id, qm) in &self.matrices {
-            let (pm, _) = pack(qm);
-            crate::quant::packed::save(&pm, &dir.join(format!("{}.claq", id.name())))?;
+    /// Save the single-file `CLAQMD01` checkpoint (FP parts + packed
+    /// planes + AWQ scales + method metadata); returns the bytes written.
+    /// See `model/checkpoint.rs` for the format and [`QuantizedModel::load`]
+    /// for the inverse.
+    pub fn save(&self, path: &std::path::Path) -> Result<u64> {
+        checkpoint::save_checkpoint(self, path)
+    }
+
+    /// Inverse of [`QuantizedModel::save`]: rebuild a `QuantizedModel` from
+    /// a checkpoint. The dense projections of `base` are rebuilt by
+    /// dequantizing the loaded planes (f16-rounded codebooks, AWQ scales
+    /// divided back out) — the same values the sequential pipeline leaves
+    /// in `base` — so `to_dense`, evaluation, and re-quantization flows
+    /// work. **Serving should not pay for this densification**: cold-start
+    /// straight into the packed backend with
+    /// [`ExecModel::from_checkpoint`] instead.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let Checkpoint { method_name, fp, entries } = Checkpoint::load(path)?;
+        let cfg = fp.config;
+        let mut matrices = HashMap::new();
+        let mut awq_scales = HashMap::new();
+        for e in entries {
+            let qm = unpack(&e.container)
+                .with_context(|| format!("unpack {}", e.id.name()))?;
+            matrices.insert(e.id, qm);
+            if let Some(s) = e.awq_scales {
+                awq_scales.insert(e.id, s);
+            }
         }
-        super::io::save_model(&self.base, &dir.join("fp_parts.bin"))?;
-        Ok(())
+        // Rebuild base with dequantized (original-space) projections; the
+        // FP tensors are moved out of the checkpoint, not copied — the
+        // token embedding and LM head are the largest FP blocks.
+        let super::io::FpParts { tok_embed, attn_norms, mlp_norms, final_norm, lm_head, .. } = fp;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for (layer, (attn_norm, mlp_norm)) in
+            attn_norms.into_iter().zip(mlp_norms).enumerate()
+        {
+            let deq = |kind: MatrixKind| {
+                let id = MatrixId { layer, kind };
+                let mut m = matrices[&id].dequantize();
+                if let Some(scales) = awq_scales.get(&id) {
+                    for r in 0..m.rows {
+                        let row = m.row_mut(r);
+                        for (v, &s) in row.iter_mut().zip(scales) {
+                            *v /= s;
+                        }
+                    }
+                }
+                m
+            };
+            layers.push(LayerWeights {
+                attn_norm,
+                wq: deq(MatrixKind::Wq),
+                wk: deq(MatrixKind::Wk),
+                wv: deq(MatrixKind::Wv),
+                wo: deq(MatrixKind::Wo),
+                mlp_norm,
+                w_gate: deq(MatrixKind::WGate),
+                w_up: deq(MatrixKind::WUp),
+                w_down: deq(MatrixKind::WDown),
+            });
+        }
+        let base = Model { config: cfg, tok_embed, layers, final_norm, lm_head };
+        Ok(Self { base, matrices, awq_scales, method_name })
+    }
+
+    /// The packed execution model exactly as a deployment sees it: every
+    /// projection goes through the `CLAQPK01` codec, so codebooks are
+    /// f16-rounded. Bit-identical to an [`ExecModel`] cold-started from a
+    /// checkpoint of this model ([`ExecModel::from_checkpoint`]) — the
+    /// property `tests/checkpoint_roundtrip.rs` pins. `to_exec` keeps the
+    /// in-memory f32 codebooks (exact parity with `dequantize`).
+    pub fn to_exec_deployed(&self) -> Result<ExecModel> {
+        ExecModel::from_checkpoint(Checkpoint::from_quantized(self)?)
+    }
+
+    /// Deprecated: the one-file-per-matrix directory layout, kept as a
+    /// shim over the checkpoint codecs (`model/checkpoint.rs::save_dir`).
+    /// Unlike the pre-checkpoint version, AWQ scales are serialized and
+    /// the FP file holds only tok_embed/norms/LM head — never the stale
+    /// dense projections. Prefer [`QuantizedModel::save`].
+    pub fn save_dir(&self, dir: &std::path::Path) -> Result<()> {
+        checkpoint::save_dir(self, dir)
     }
 
     /// Mean relative Frobenius error across quantized matrices (diagnostic).
@@ -222,23 +315,78 @@ mod tests {
         assert!(r4.container_bytes > r2.container_bytes);
     }
 
+    fn uniq_path(tag: &str) -> std::path::PathBuf {
+        crate::util::tmp::unique_path(&format!("qmodel_test_{tag}"))
+    }
+
     #[test]
     fn save_dir_writes_files() {
         let m = small();
         let qm = quantize_all(&m, 3);
-        // Unique per-run directory: parallel `cargo test` processes (and
-        // threads) must not collide on a shared temp path.
-        static UNIQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-        let dir = std::env::temp_dir().join(format!(
-            "claq_qmodel_test_{}_{}",
-            std::process::id(),
-            UNIQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
-        ));
+        let dir = uniq_path("dir");
         let _ = std::fs::remove_dir_all(&dir);
         qm.save_dir(&dir).unwrap();
         let n = std::fs::read_dir(&dir).unwrap().count();
-        assert_eq!(n, m.matrix_ids().len() + 1); // matrices + fp_parts.bin
+        // matrices + fp_parts.bin + method.txt (no awq_scales.bin here)
+        assert_eq!(n, m.matrix_ids().len() + 2);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The old save_dir serialized the *full dense model* (stale quantized
+    /// projections included) as its FP file, making the artifact larger
+    /// than the FP checkpoint. The single-file checkpoint must be strictly
+    /// smaller than `save_model` of the FP model for every low-bit plan,
+    /// and the size report's accounting must match the file exactly.
+    #[test]
+    fn checkpoint_smaller_than_fp_model_and_accounting_exact() {
+        let m = small();
+        let fp_path = uniq_path("fp");
+        super::super::io::save_model(&m, &fp_path).unwrap();
+        let fp_len = std::fs::metadata(&fp_path).unwrap().len();
+        for bits in [2u8, 3, 4] {
+            let qm = quantize_all(&m, bits);
+            let ckpt_path = uniq_path("ckpt");
+            let written = qm.save(&ckpt_path).unwrap();
+            let file_len = std::fs::metadata(&ckpt_path).unwrap().len();
+            assert_eq!(written, file_len);
+            let rep = qm.size_report();
+            assert_eq!(rep.checkpoint_bytes as u64, file_len, "{bits}-bit accounting");
+            assert!(
+                file_len < fp_len,
+                "{bits}-bit checkpoint ({file_len} B) must be smaller than the FP model ({fp_len} B)"
+            );
+            assert!(rep.fp_bytes > 0 && rep.fp_bytes < rep.checkpoint_bytes);
+            assert_eq!(rep.awq_scale_bytes, 0);
+            let _ = std::fs::remove_file(&ckpt_path);
+        }
+        let _ = std::fs::remove_file(&fp_path);
+    }
+
+    /// save -> load round trip: quantized planes, scales, and method name
+    /// survive; the loaded model's packed exec path is bit-identical to
+    /// the deployed in-memory path (f16 codebooks both sides).
+    #[test]
+    fn checkpoint_load_inverse_path() {
+        let m = small();
+        let qm = quantize_all(&m, 3);
+        let path = uniq_path("inv");
+        qm.save(&path).unwrap();
+        let back = QuantizedModel::load(&path).unwrap();
+        assert_eq!(back.method_name, qm.method_name);
+        assert_eq!(back.matrices.len(), qm.matrices.len());
+        for (id, orig) in &qm.matrices {
+            let loaded = &back.matrices[id];
+            assert_eq!(loaded.outliers, orig.outliers);
+            for (a, b) in loaded.columns.iter().zip(&orig.columns) {
+                assert_eq!(a.bits, b.bits);
+                assert_eq!(a.indices, b.indices);
+            }
+        }
+        // base projections are dequantized values — close to the source
+        // weights at 3 bits, not the FP originals
+        let id = MatrixId { layer: 0, kind: MatrixKind::Wq };
+        assert_ne!(back.base.matrix(id).data, m.matrix(id).data);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -195,7 +195,33 @@ impl SizeReport {
 /// Serialize a quantized matrix. Codebook centroids are stored f16 (the
 /// deployment format; dequantization error from f16 codebooks is part of
 /// the measured pipeline, as it would be on device).
-pub fn pack(qm: &QuantizedMatrix) -> (PackedMatrix, SizeReport) {
+///
+/// The writer enforces the container invariants the reader assumes:
+/// [`unpack`] reads exactly `1 << bits` centroids per column, so a column
+/// whose codebook is shorter (or longer) would silently desync the byte
+/// stream — every later column would be decoded from the wrong offset.
+/// Such a matrix is rejected here with a clear error instead.
+pub fn pack(qm: &QuantizedMatrix) -> Result<(PackedMatrix, SizeReport)> {
+    if qm.columns.len() != qm.cols {
+        bail!("matrix has {} columns but {} quantized planes", qm.cols, qm.columns.len());
+    }
+    for (c, col) in qm.columns.iter().enumerate() {
+        if !(1..=8).contains(&col.bits) {
+            bail!("column {c}: invalid bit width {}", col.bits);
+        }
+        let want = 1usize << col.bits;
+        if col.codebook.len() != want {
+            bail!(
+                "column {c}: codebook has {} centroids but bit width {} requires exactly {want} \
+                 (a shorter codebook would desync the container byte stream)",
+                col.codebook.len(),
+                col.bits
+            );
+        }
+        if col.indices.len() != qm.rows {
+            bail!("column {c}: {} indices for {} rows", col.indices.len(), qm.rows);
+        }
+    }
     let mut bytes = Vec::new();
     bytes.extend_from_slice(MAGIC);
     bytes.extend_from_slice(&(qm.rows as u32).to_le_bytes());
@@ -232,7 +258,7 @@ pub fn pack(qm: &QuantizedMatrix) -> (PackedMatrix, SizeReport) {
         header_bytes,
         paper_equivalent_bits: (index_bits + 16.0 * qm.outliers.len() as f64) / params as f64,
     };
-    (PackedMatrix { bytes }, report)
+    Ok((PackedMatrix { bytes }, report))
 }
 
 /// Deserialize a container produced by [`pack`].
@@ -405,7 +431,7 @@ mod tests {
     #[test]
     fn container_round_trip() {
         let qm = sample_qm(1);
-        let (pm, _) = pack(&qm);
+        let (pm, _) = pack(&qm).unwrap();
         let back = unpack(&pm).unwrap();
         assert_eq!(back.rows, qm.rows);
         assert_eq!(back.cols, qm.cols);
@@ -423,7 +449,7 @@ mod tests {
     #[test]
     fn size_report_consistent() {
         let qm = sample_qm(2);
-        let (pm, rep) = pack(&qm);
+        let (pm, rep) = pack(&qm).unwrap();
         assert_eq!(pm.bytes.len(), rep.container_bytes());
         assert_eq!(rep.params, 40 * 12);
         assert!((rep.paper_equivalent_bits - qm.equivalent_bits_paper()).abs() < 1e-12);
@@ -434,7 +460,7 @@ mod tests {
     #[test]
     fn corrupt_containers_rejected() {
         let qm = sample_qm(3);
-        let (pm, _) = pack(&qm);
+        let (pm, _) = pack(&qm).unwrap();
         // bad magic
         let mut bad = pm.clone();
         bad.bytes[0] = b'X';
@@ -449,10 +475,42 @@ mod tests {
         assert!(unpack(&long).is_err());
     }
 
+    /// The reader consumes exactly `1 << bits` centroids per column, so a
+    /// hand-built matrix whose codebook is shorter (a degenerate column
+    /// with fewer distinct values than levels) must be rejected at pack
+    /// time — writing it would silently desync every later column.
+    #[test]
+    fn short_codebook_rejected_at_pack() {
+        let make = |centroids: Vec<f32>, bits: u8| QuantizedMatrix {
+            rows: 4,
+            cols: 1,
+            columns: vec![QuantizedColumn {
+                codebook: Codebook::new(centroids),
+                indices: vec![0, 1, 1, 0],
+                bits,
+            }],
+            outliers: Vec::new(),
+            metrics: Default::default(),
+        };
+        // 3-bit column with only 5 centroids: under-full codebook
+        let err = pack(&make(vec![-1.0, -0.5, 0.0, 0.5, 1.0], 3)).unwrap_err();
+        assert!(err.to_string().contains("codebook"), "{err}");
+        // over-full codebook is just as much of a desync
+        assert!(pack(&make(vec![0.0, 0.25, 0.5, 0.75, 1.0], 2)).is_err());
+        // the well-formed versions of both pack fine
+        let ok2 = make(vec![-1.0, 0.0, 0.5, 1.0], 2);
+        let (pm, _) = pack(&ok2).unwrap();
+        assert_eq!(unpack(&pm).unwrap().columns[0].indices, ok2.columns[0].indices);
+        // row-count mismatch is caught too
+        let mut bad_rows = make(vec![-1.0, 0.0, 0.5, 1.0], 2);
+        bad_rows.columns[0].indices.pop();
+        assert!(pack(&bad_rows).is_err());
+    }
+
     #[test]
     fn disk_round_trip() {
         let qm = sample_qm(4);
-        let (pm, _) = pack(&qm);
+        let (pm, _) = pack(&qm).unwrap();
         let dir = std::env::temp_dir().join("claq_packed_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("m.claq");

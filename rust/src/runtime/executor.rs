@@ -1,12 +1,55 @@
 //! Typed executors over the AOT artifacts: the transformer logits graph
 //! (weights passed as PJRT literals, built once per model) and the
-//! standalone kernels (fused dequant-matmul, K-Means step).
+//! standalone kernels (fused dequant-matmul, K-Means step) — plus
+//! [`ColdStart`], the checkpoint-to-serving entry point of the Rust
+//! execution path (no PJRT involved): one `CLAQMD01` file in, a packed
+//! [`ExecModel`] out, with the load latency measured for the cold-start
+//! benches.
 
 use super::{literal_f32, literal_i32, Runtime};
+use crate::model::checkpoint::Checkpoint;
+use crate::model::exec::ExecModel;
 use crate::model::Model;
 use crate::tensor::Matrix;
 use anyhow::{ensure, Context, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// A serving engine cold-started from a single-file checkpoint: the
+/// quantize-once / serve-many path. Skips calibration and quantization
+/// entirely — the dominant cost of bringing up a `serve_quantized`
+/// process — and never materializes a dense projection matrix
+/// (`ExecModel::from_checkpoint`). `bench_decode` tracks
+/// load-to-first-token latency through this type.
+pub struct ColdStart {
+    /// The packed execution model, ready for the scheduler.
+    pub exec: ExecModel,
+    /// Method recorded in the checkpoint (e.g. `CLAQ*-2.12`).
+    pub method_name: String,
+    /// On-disk size of the checkpoint file.
+    pub checkpoint_bytes: u64,
+    /// Wall seconds from open to a ready `ExecModel`.
+    pub load_seconds: f64,
+}
+
+impl ColdStart {
+    /// Load a `CLAQMD01` checkpoint and build the packed execution model.
+    pub fn from_path(path: &Path) -> Result<Self> {
+        let t0 = Instant::now();
+        let checkpoint_bytes = std::fs::metadata(path)
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        let ckpt = Checkpoint::load(path)?;
+        let method_name = ckpt.method_name.clone();
+        let exec = ExecModel::from_checkpoint(ckpt)?;
+        Ok(Self {
+            exec,
+            method_name,
+            checkpoint_bytes,
+            load_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
 
 /// Executes the `model_{l,xl}.hlo.txt` logits graph for a concrete model.
 /// The full argument vector (token slot + weight literals) is materialized

@@ -1,21 +1,41 @@
 //! CLI subcommand implementations: dispatch to the table/figure
-//! generators, plus ad-hoc `quantize` / `eval` / `outliers` commands.
+//! generators, ad-hoc `quantize` / `eval` / `outliers` commands, and the
+//! deployment pair `pack` (quantize once → single-file CLAQMD01
+//! checkpoint) / `serve` (cold-start the packed engine from a checkpoint,
+//! skipping calibration and quantization entirely).
 
 use super::runner::{emit, render_table, Harness, ModelKey};
 use super::{figures, tables_ablation, tables_appendix, tables_main};
+use crate::coordinator::pipeline::{quantize_model, PipelineOpts};
+use crate::coordinator::registry::artifacts_dir;
+use crate::data::calibration::default_calibration;
 use crate::data::corpus::CorpusKind;
-use crate::model::{MatrixId, MatrixKind};
+use crate::model::exec::ExecState;
+use crate::model::io::load_model;
+use crate::model::{MatrixId, MatrixKind, Model, TransformerConfig};
 use crate::quant::config::{Method, DEFAULT_S};
 use crate::quant::outliers::{ColumnMetric, OutlierStats};
 use crate::quant::precision::BitPair;
 use crate::quant::reservation::OrSetting;
+use crate::runtime::executor::ColdStart;
+use crate::runtime::scheduler::{AdmissionPolicy, Request, Scheduler, SchedulerConfig};
 use crate::util::cli::Args;
+use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 /// Parse a `--method NAME --bits B [--s S] [--setting N]` triple.
 pub fn parse_method(args: &Args) -> Result<Method> {
     let name = args.get_or("method", "claq");
     let bits: f64 = args.get_parse_or("bits", 4.0).map_err(anyhow::Error::msg)?;
+    // The container packs 1..=8-bit index planes; reject degenerate widths
+    // here instead of panicking deep in the quantizer/pack path. FP16
+    // ignores --bits entirely (16 is a natural thing to type for it).
+    anyhow::ensure!(
+        name == "fp16" || (1.0..=8.0).contains(&bits),
+        "--bits must be in [1, 8] for method {name} (got {bits})"
+    );
     let s: f64 = args.get_parse_or("s", DEFAULT_S).map_err(anyhow::Error::msg)?;
     let setting: usize = args.get_parse_or("setting", 2).map_err(anyhow::Error::msg)?;
     let ibits = bits.round() as u8;
@@ -132,6 +152,138 @@ pub fn figure(args: &Args) -> Result<()> {
         5 => figures::figure5(&h),
         other => bail!("no generator for figure {other} (3-5; 1-2 are architecture diagrams)"),
     }
+}
+
+/// `claq pack --out model.claq [--model l|xl|PATH] [--method M --bits B]
+/// [--random] [--fast]` — quantize once and write the single-file
+/// CLAQMD01 checkpoint (the quantize-once / serve-many artifact).
+pub fn pack(args: &Args) -> Result<()> {
+    let method = parse_method(args)?;
+    if matches!(method, Method::Fp16) {
+        bail!("FP16 has nothing to pack — choose a quantized method (see `claq help`)");
+    }
+    let out = PathBuf::from(args.get_or("out", "model.claq"));
+    let dir = artifacts_dir();
+    let model = if args.has("random") {
+        // toolchain smoke path: no artifacts needed
+        Model::random(TransformerConfig::tiny_l(), &mut Rng::new(17))
+    } else {
+        let path = match args.get_or("model", "l") {
+            "l" | "tiny-l" => dir.join(ModelKey::TinyL.weights_file()),
+            "xl" | "tiny-xl" => dir.join(ModelKey::TinyXl.weights_file()),
+            p => PathBuf::from(p),
+        };
+        load_model(&path).with_context(|| {
+            format!(
+                "load weights from {} — run `make artifacts`, pass --model PATH, or use --random",
+                path.display()
+            )
+        })?
+    };
+    let n_segments = if args.has("fast") { 8 } else { 24 };
+    let calib = default_calibration(&dir, model.config.max_seq, n_segments);
+
+    let opts = PipelineOpts {
+        save_checkpoint: Some(out.clone()),
+        verbose: args.has("verbose"),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let (qm, stats) = quantize_model(&model, &method, &calib, &opts);
+    if let Some(err) = stats.checkpoint_error {
+        bail!("checkpoint save to {} failed: {err}", out.display());
+    }
+    let rep = qm.size_report();
+    let fp_artifact_bytes = crate::model::io::model_file_byte_len(&model.config);
+    println!(
+        "packed {} with {} in {:.1}s -> {}",
+        model.config.n_params(),
+        qm.method_name,
+        t0.elapsed().as_secs_f64(),
+        out.display()
+    );
+    println!(
+        "  checkpoint: {} B  (FP parts {} B, containers {} B, AWQ scales {} B)",
+        rep.checkpoint_bytes, rep.fp_bytes, rep.container_bytes, rep.awq_scale_bytes
+    );
+    println!(
+        "  {:.2} bits/param paper accounting, {:.2} bits/param container; {:.1}% of the {} B FP artifact",
+        rep.paper_equivalent_bits,
+        rep.container_bits_per_param,
+        100.0 * rep.checkpoint_bytes as f64 / fp_artifact_bytes as f64,
+        fp_artifact_bytes
+    );
+    println!("  cold-start it with: claq serve --checkpoint {}", out.display());
+    Ok(())
+}
+
+/// `claq serve --checkpoint model.claq [--requests N --slots S --seed K]`
+/// — cold-start the continuous-batching engine from a checkpoint (no
+/// calibration, no quantization, no dense weights) and drive a short
+/// greedy-decode workload.
+pub fn serve(args: &Args) -> Result<()> {
+    let path = args
+        .get("checkpoint")
+        .context("usage: claq serve --checkpoint <model.claq> [--requests N --slots S --seed K]")?;
+    let cold = ColdStart::from_path(Path::new(path))?;
+    let cfg = cold.exec.config;
+    println!(
+        "cold start: {} ({:.2} MB, method {}) -> packed ExecModel in {:.1} ms",
+        path,
+        cold.checkpoint_bytes as f64 / 1e6,
+        cold.method_name,
+        cold.load_seconds * 1e3
+    );
+
+    let n_requests: usize = args.get_parse_or("requests", 16).map_err(anyhow::Error::msg)?;
+    let n_requests = n_requests.max(1);
+    let slots: usize = args.get_parse_or("slots", 4).map_err(anyhow::Error::msg)?;
+    let slots = slots.clamp(1, cfg.max_seq);
+    let seed: u64 = args.get_parse_or("seed", 17).map_err(anyhow::Error::msg)?;
+
+    let mut sched = Scheduler::new(
+        cfg,
+        SchedulerConfig {
+            max_slots: slots,
+            prefill_token_budget: 2 * cfg.max_seq,
+            policy: AdmissionPolicy::Continuous,
+        },
+    );
+    // Prompts are sized to the checkpoint's own config (vocab, max_seq).
+    let mut rng = Rng::new(seed);
+    for _ in 0..n_requests {
+        let prompt_len = 1 + rng.below_usize((cfg.max_seq / 2).clamp(1, 16));
+        let max_new = 1 + rng.below_usize((cfg.max_seq - prompt_len).clamp(1, 16));
+        let prompt = (0..prompt_len).map(|_| rng.below(cfg.vocab as u64) as u16).collect();
+        sched.submit(Request { prompt, max_new_tokens: max_new, stop_token: None })?;
+    }
+
+    let mut st = ExecState::new(cfg);
+    let t0 = Instant::now();
+    let mut first_token_s = f64::NAN;
+    let mut completions = Vec::new();
+    while sched.has_work() {
+        completions.extend(sched.step(&cold.exec, &mut st));
+        if first_token_s.is_nan() {
+            first_token_s = t0.elapsed().as_secs_f64();
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let generated: usize = completions.iter().map(|c| c.tokens.len()).sum();
+    let stats = sched.stats();
+    println!(
+        "served {n_requests} requests / {generated} tokens in {:.2}s ({:.0} tok/s, peak batch {})",
+        wall,
+        generated as f64 / wall.max(1e-9),
+        stats.peak_live
+    );
+    println!(
+        "load -> first token: {:.1} ms  (load {:.1} ms + first engine step {:.1} ms)",
+        (cold.load_seconds + first_token_s) * 1e3,
+        cold.load_seconds * 1e3,
+        first_token_s * 1e3
+    );
+    Ok(())
 }
 
 /// `claq outliers [--s S] [--model l|xl]` — Outlier Order diagnostics.

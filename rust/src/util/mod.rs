@@ -8,3 +8,4 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+pub mod tmp;

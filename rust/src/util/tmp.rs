@@ -1,0 +1,30 @@
+//! Unique per-process temp paths for tests and benches. Parallel `cargo
+//! test` processes (and threads within one process) must not collide on a
+//! shared temp name, so every caller gets `claq_<tag>_<pid>_<counter>`;
+//! one definition keeps the uniqueness discipline in one place.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A temp-dir path unique to this process and call (never created).
+pub fn unique_path(tag: &str) -> PathBuf {
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "claq_{tag}_{}_{}",
+        std::process::id(),
+        UNIQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paths_are_distinct_and_tagged() {
+        let a = unique_path("x");
+        let b = unique_path("x");
+        assert_ne!(a, b);
+        assert!(a.file_name().unwrap().to_string_lossy().starts_with("claq_x_"));
+    }
+}

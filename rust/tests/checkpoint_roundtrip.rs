@@ -1,0 +1,196 @@
+//! End-to-end property of the single-file CLAQMD01 checkpoint: quantize
+//! (AWQ scales, outlier reservation, mixed per-column `BitPlan` bits) →
+//! checkpoint → load → `ExecModel`, asserting **bit-identical** logits
+//! against the in-memory deployed packed path
+//! (`QuantizedModel::to_exec_deployed`, which routes every projection
+//! through the same `CLAQPK01` codec). Thread-count and batch-composition
+//! invariance of the kernels is pinned separately
+//! (`model/linear.rs::sharded_forward_is_bit_identical_to_serial`,
+//! `tests/scheduler.rs`); on top of it, this test varies the batch shape
+//! (prefill, decode at batch 1 and 3) so the equality holds on every
+//! dispatch path a server exercises.
+//!
+//! Also: checkpoint files must be strictly smaller than `save_model` of
+//! the FP model, and corrupt/truncated/trailing-byte files must be
+//! rejected (mirroring `corrupt_containers_rejected`).
+
+use claq::coordinator::pipeline::{quantize_model, PipelineOpts};
+use claq::data::calibration::{sample_segments, CalibConfig};
+use claq::data::corpus::{generate, CorpusKind, VOCAB};
+use claq::model::checkpoint::Checkpoint;
+use claq::model::exec::{argmax, decode_step, prefill, ExecModel, ExecState, KvCache};
+use claq::model::io::save_model;
+use claq::model::quantized::QuantizedModel;
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::Method;
+use claq::util::rng::Rng;
+
+fn test_cfg() -> TransformerConfig {
+    TransformerConfig {
+        vocab: VOCAB,
+        d_model: 24,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 32,
+        rope_theta: 10000.0,
+        eps: 1e-5,
+    }
+}
+
+fn quantized(method: &Method) -> (Model, QuantizedModel) {
+    let model = Model::random(test_cfg(), &mut Rng::new(23));
+    let stream = generate(CorpusKind::SynthC4, 4000, 1);
+    let calib = sample_segments(&stream, &CalibConfig { n_segments: 6, seq_len: 32, seed: 4 });
+    let (qm, _) = quantize_model(&model, method, &calib, &PipelineOpts::default());
+    (model, qm)
+}
+
+fn uniq_path(tag: &str) -> std::path::PathBuf {
+    claq::util::tmp::unique_path(&format!("rt_{tag}"))
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: shape");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: logit {i}: {x} vs {y}");
+    }
+}
+
+/// Full prefill + greedy decode comparison between two exec models: every
+/// logit bit-identical, hence every greedy token identical.
+fn assert_exec_bit_identical(a: &ExecModel, b: &ExecModel, ctx: &str) {
+    let cfg = a.config;
+    let mut st = ExecState::new(cfg);
+    let toks: Vec<u16> = (0..16u16).map(|i| (i * 37) % VOCAB as u16).collect();
+
+    let mut ca = KvCache::new(&cfg);
+    let mut cb = KvCache::new(&cfg);
+    let la = prefill(a, &mut ca, &toks, &mut st);
+    let lb = prefill(b, &mut cb, &toks, &mut st);
+    assert_bits_equal(&la.data, &lb.data, &format!("{ctx}: prefill"));
+
+    // greedy decode, batch 1: token streams must not diverge
+    let mut ta = argmax(la.row(toks.len() - 1));
+    let mut tb = argmax(lb.row(toks.len() - 1));
+    for step in 0..6 {
+        assert_eq!(ta, tb, "{ctx}: greedy token diverged at step {step}");
+        let la = decode_step(a, &mut [&mut ca], &[ta], &mut st);
+        let lb = decode_step(b, &mut [&mut cb], &[tb], &mut st);
+        assert_bits_equal(&la.data, &lb.data, &format!("{ctx}: decode step {step}"));
+        ta = argmax(la.row(0));
+        tb = argmax(lb.row(0));
+    }
+
+    // batch-3 decode (mixed depths) goes down the batched dispatch path
+    let prompts: [&[u16]; 3] = [&[1, 2, 3], &[9, 8, 7, 6, 5], &[40, 0]];
+    let mk = |m: &ExecModel, st: &mut ExecState| -> Vec<KvCache> {
+        prompts
+            .iter()
+            .map(|p| {
+                let mut c = KvCache::new(&cfg);
+                let _ = prefill(m, &mut c, p, st);
+                c
+            })
+            .collect()
+    };
+    let mut caches_a = mk(a, &mut st);
+    let mut caches_b = mk(b, &mut st);
+    let next = [4u16, 11, 200];
+    let mut refs_a: Vec<&mut KvCache> = caches_a.iter_mut().collect();
+    let mut refs_b: Vec<&mut KvCache> = caches_b.iter_mut().collect();
+    let la = decode_step(a, &mut refs_a, &next, &mut st);
+    let lb = decode_step(b, &mut refs_b, &next, &mut st);
+    assert_bits_equal(&la.data, &lb.data, &format!("{ctx}: batch-3 decode"));
+}
+
+fn round_trip(method: &Method, tag: &str) {
+    let (fp_model, qm) = quantized(method);
+    let ctx = qm.method_name.clone();
+
+    // save → strictly smaller than the FP artifact
+    let ckpt_path = uniq_path(tag);
+    let written = qm.save(&ckpt_path).unwrap();
+    let fp_path = uniq_path(&format!("{tag}_fp"));
+    save_model(&fp_model, &fp_path).unwrap();
+    let fp_len = std::fs::metadata(&fp_path).unwrap().len();
+    assert!(
+        written < fp_len,
+        "{ctx}: checkpoint ({written} B) must be smaller than the FP artifact ({fp_len} B)"
+    );
+    assert_eq!(written, qm.size_report().checkpoint_bytes as u64, "{ctx}: exact accounting");
+
+    // load → cold-start exec must be bit-identical to the in-memory
+    // deployed path (both sides see f16 container codebooks)
+    let ckpt = Checkpoint::load(&ckpt_path).unwrap();
+    assert_eq!(ckpt.method_name, qm.method_name);
+    let cold = ExecModel::from_checkpoint(ckpt).unwrap();
+    assert_eq!(cold.backend, "packed");
+    let deployed = qm.to_exec_deployed().unwrap();
+    assert_exec_bit_identical(&cold, &deployed, &format!("{ctx}: cold vs deployed"));
+
+    // the QuantizedModel::load inverse path serves identically as well
+    let loaded = QuantizedModel::load(&ckpt_path).unwrap();
+    assert_eq!(loaded.method_name, qm.method_name);
+    assert_eq!(loaded.awq_scales.len(), qm.awq_scales.len());
+    assert_exec_bit_identical(&loaded.to_exec(), &cold, &format!("{ctx}: loaded vs cold"));
+
+    let _ = std::fs::remove_file(&ckpt_path);
+    let _ = std::fs::remove_file(&fp_path);
+}
+
+/// CLAQ*-2.12: adaptive precision (mixed per-column bits) + outlier
+/// reservation — the paper's headline low-bit configuration.
+#[test]
+fn fusion_checkpoint_round_trip_bit_identical() {
+    round_trip(&Method::fusion_2_12(), "fusion");
+}
+
+/// AWQ: per-column activation scales must survive the file and fold into
+/// the cold-started kernels exactly (the bug that motivated this format —
+/// the old save_dir dropped them).
+#[test]
+fn awq_checkpoint_round_trip_bit_identical() {
+    round_trip(&Method::Awq { bits: 4 }, "awq");
+}
+
+/// Plain CLAQ at 3 bits (uniform plan, no scales, no reservation).
+#[test]
+fn claq3_checkpoint_round_trip_bit_identical() {
+    round_trip(&Method::Claq { bits: 3 }, "claq3");
+}
+
+#[test]
+fn corrupt_checkpoint_files_rejected() {
+    let (_, qm) = quantized(&Method::Claq { bits: 2 });
+    let path = uniq_path("corrupt");
+    qm.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // bad magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(Checkpoint::load(&path).is_err(), "bad magic accepted");
+
+    // truncated mid-entry
+    std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+    assert!(Checkpoint::load(&path).is_err(), "truncated file accepted");
+
+    // trailing garbage
+    let mut long = bytes.clone();
+    long.extend_from_slice(b"xx");
+    std::fs::write(&path, &long).unwrap();
+    assert!(Checkpoint::load(&path).is_err(), "trailing bytes accepted");
+
+    // an entry claiming an out-of-range matrix kind
+    // (entries start right after the FP block; corrupt the first kind tag)
+    let ok = Checkpoint::decode(&bytes).unwrap();
+    let mut evil = ok.clone();
+    evil.entries.swap(0, 1); // order is not part of the contract...
+    assert!(Checkpoint::decode(&evil.encode().unwrap()).is_ok());
+    evil.entries[0].id.layer = 999; // ...but out-of-range layers are
+    assert!(Checkpoint::decode(&evil.encode().unwrap()).is_err());
+
+    let _ = std::fs::remove_file(&path);
+}

@@ -26,7 +26,7 @@ fn quantized_model_survives_disk_round_trip() {
     let calib = sample_segments(&stream, &CalibConfig { n_segments: 6, seq_len: 32, seed: 1 });
     let (qm, _) = quantize_model(&model, &Method::fusion_2_12(), &calib, &PipelineOpts::default());
 
-    let dir = std::env::temp_dir().join("claq_container_it");
+    let dir = claq::util::tmp::unique_path("container_it");
     let _ = std::fs::remove_dir_all(&dir);
     qm.save_dir(&dir).unwrap();
 
@@ -44,8 +44,13 @@ fn quantized_model_survives_disk_round_trip() {
         }
         assert!(max_rel < 1.0 / 512.0, "{}: f16 codebook error too large {max_rel}", id.name());
         // and the bytes round-trip exactly
-        let (pm2, _) = pack(&back);
+        let (pm2, _) = pack(&back).unwrap();
         assert_eq!(pm.bytes, pm2.bytes);
     }
+
+    // the deprecated directory shim reloads as a full checkpoint, too
+    let ckpt = claq::model::checkpoint::load_dir(&dir).unwrap();
+    assert_eq!(ckpt.entries.len(), qm.matrices.len());
+    assert_eq!(ckpt.method_name, qm.method_name);
     let _ = std::fs::remove_dir_all(&dir);
 }

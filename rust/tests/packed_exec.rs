@@ -98,7 +98,7 @@ fn prop_packed_matches_dense_with_awq_scales() {
 fn prop_container_backend_matches_unpacked_dense() {
     check("container backend", Config { cases: 16, seed: 204 }, |rng| {
         let (_, qm) = random_quantized(rng, true);
-        let (pm, _) = pack(&qm);
+        let (pm, _) = pack(&qm).unwrap();
         let packed = PackedLinear::from_container(&pm, None).unwrap();
         let deq = claq::quant::packed::unpack(&pm).unwrap().dequantize();
         let mut x = vec![0.0f32; qm.cols];

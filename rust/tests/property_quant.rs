@@ -72,7 +72,7 @@ fn prop_container_round_trip() {
         }
         plan.reserve = (0..w.cols).map(|_| rng.below_usize(4) * 2).collect();
         let q = quantize_matrix(&w, None, &plan);
-        let (pm, report) = pack(&q);
+        let (pm, report) = pack(&q).unwrap();
         assert_eq!(pm.bytes.len(), report.container_bytes());
         let back = unpack(&pm).unwrap();
         assert_eq!(back.outliers, q.outliers);
