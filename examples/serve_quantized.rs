@@ -10,7 +10,8 @@
 //! Run:
 //!   cargo run --release --example serve_quantized \
 //!       [n_requests] [arrival_rate_per_s] [max_slots] [seed] \
-//!       [--checkpoint model.claq] [--save model.claq]
+//!       [--checkpoint model.claq] [--save model.claq] \
+//!       [--prefix-cache] [--prefix-cache-mb MB] [--shared-prefix N]
 //!
 //! * `n_requests`        total requests in the trace        (default 32)
 //! * `arrival_rate_per_s` mean Poisson arrival rate          (default 8.0)
@@ -22,10 +23,22 @@
 //!                       `claq pack`.
 //! * `--save PATH`       after quantizing, write the checkpoint so later
 //!                       runs can `--checkpoint` it.
+//! * `--prefix-cache`    shared-system-prompt workload mode: every prompt
+//!                       opens with the same system prefix, and the
+//!                       continuous policy is replayed a second time with
+//!                       the prefix-sharing KV cache enabled. The report
+//!                       compares TTFT and prefill tokens per request and
+//!                       checks both token streams agree exactly.
+//! * `--prefix-cache-mb MB` byte budget for the prefix cache (default 64;
+//!                       implies `--prefix-cache`).
+//! * `--shared-prefix N` length of the shared system prefix (default 24
+//!                       under `--prefix-cache`, else 0; `0` keeps fully
+//!                       independent prompts).
 //!
 //! Prompt lengths, generation budgets, and inter-arrival gaps are
-//! randomized per request; both policies replay the identical trace, and
-//! their token streams are checked to agree exactly (batch invariance).
+//! randomized per request; every policy replays the identical trace, and
+//! their token streams are checked to agree exactly (batch invariance;
+//! with the prefix cache, bit-identical prefix reuse — DESIGN.md §10).
 //! Uses trained weights from `artifacts/` when present (`make
 //! artifacts`), otherwise a random tiny-L model (throughput numbers are
 //! equally valid).
@@ -66,6 +79,11 @@ struct ServeReport {
     pool_hit_rate: f64,
     pool_resident_mb: f64,
     peak_live: usize,
+    /// Prompt tokens actually prefilled / served by prefix-cache forks.
+    prefill_in: u64,
+    prefill_saved: u64,
+    prefix_hits: u64,
+    prefix_lookups: u64,
     /// id → generated tokens, for the cross-policy agreement check.
     outputs: Vec<(u64, Vec<u16>)>,
 }
@@ -91,12 +109,18 @@ fn serve_trace(
     trace: &[TracedRequest],
     max_slots: usize,
     policy: AdmissionPolicy,
+    prefix_cache_bytes: usize,
     label: &'static str,
 ) -> ServeReport {
     let mut st = ExecState::new(model.config);
     let mut sched = Scheduler::new(
         model.config,
-        SchedulerConfig { max_slots, prefill_token_budget: 2 * model.config.max_seq, policy },
+        SchedulerConfig {
+            max_slots,
+            prefill_token_budget: 2 * model.config.max_seq,
+            policy,
+            prefix_cache_bytes,
+        },
     );
     let mut arrival_by_id = vec![0.0f64; trace.len()];
     let mut completions: Vec<Completion> = Vec::new();
@@ -150,6 +174,10 @@ fn serve_trace(
         pool_hit_rate: stats.pool_hit_rate,
         pool_resident_mb: stats.pool_resident_bytes as f64 / 1e6,
         peak_live: stats.peak_live,
+        prefill_in: stats.prefill_tokens_in,
+        prefill_saved: stats.prefill_tokens_saved,
+        prefix_hits: stats.prefix_hits,
+        prefix_lookups: stats.prefix_lookups,
         outputs,
     }
 }
@@ -182,13 +210,28 @@ fn print_report(r: &ServeReport) {
         r.pool_hit_rate * 100.0,
         r.pool_resident_mb
     );
+    if r.prefix_lookups > 0 {
+        let n = r.outputs.len().max(1) as f64;
+        println!(
+            "  prefix cache: {} hits / {} lookups, {} prompt tokens saved \
+             ({:.1}/req prefilled vs {:.1}/req saved)",
+            r.prefix_hits,
+            r.prefix_lookups,
+            r.prefill_saved,
+            r.prefill_in as f64 / n,
+            r.prefill_saved as f64 / n
+        );
+    }
 }
 
 fn main() -> anyhow::Result<()> {
-    // Flags (--checkpoint/--save) are filtered out; the remaining
-    // positionals keep their historical order.
+    // Flags are filtered out; the remaining positionals keep their
+    // historical order.
     let mut checkpoint: Option<PathBuf> = None;
     let mut save: Option<PathBuf> = None;
+    let mut prefix_cache = false;
+    let mut prefix_cache_mb: f64 = 64.0;
+    let mut shared_prefix: Option<usize> = None;
     let mut pos: Vec<String> = Vec::new();
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -198,6 +241,21 @@ fn main() -> anyhow::Result<()> {
                     Some(it.next().expect("--checkpoint expects a path").into())
             }
             "--save" => save = Some(it.next().expect("--save expects a path").into()),
+            "--prefix-cache" => prefix_cache = true,
+            "--prefix-cache-mb" => {
+                prefix_cache = true;
+                prefix_cache_mb = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--prefix-cache-mb expects a number");
+            }
+            "--shared-prefix" => {
+                shared_prefix = Some(
+                    it.next()
+                        .and_then(|v| v.parse().ok())
+                        .expect("--shared-prefix expects a token count"),
+                )
+            }
             _ => pos.push(a),
         }
     }
@@ -211,6 +269,9 @@ fn main() -> anyhow::Result<()> {
     let rate: f64 = arg(1).and_then(|s| s.parse().ok()).unwrap_or(8.0).max(0.01);
     let max_slots: usize = arg(2).and_then(|s| s.parse().ok()).unwrap_or(8).max(1);
     let seed: u64 = arg(3).and_then(|s| s.parse().ok()).unwrap_or(17);
+    // shared-system-prompt workload: defaults to a 24-token prefix when
+    // the prefix cache is exercised, else fully independent prompts
+    let shared_prefix = shared_prefix.unwrap_or(if prefix_cache { 24 } else { 0 });
 
     let packed = if let Some(path) = &checkpoint {
         // Quantize-once / serve-many: cold-start straight off the packed
@@ -277,6 +338,13 @@ fn main() -> anyhow::Result<()> {
         claq::data::corpus::VOCAB,
         packed.config.vocab
     );
+    // longest prompt is shared_prefix + 48 tail tokens, and every request
+    // needs ≥ 8 generation tokens of headroom inside the context window
+    anyhow::ensure!(
+        shared_prefix + 48 + 9 <= seq,
+        "--shared-prefix {shared_prefix} leaves no room for tails in a {seq}-token context \
+         (needs shared_prefix + 57 <= max_seq)"
+    );
     // ExecState::new has row capacity max_seq; more slots could never decode
     let max_slots = max_slots.min(seq);
     println!(
@@ -286,43 +354,83 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Build the trace: Poisson arrivals, randomized prompt/generation
-    // lengths (both policies replay exactly this).
+    // lengths, optionally opening with a shared system prefix (every
+    // policy replays exactly this).
+    let system = generate(CorpusKind::SynthC4, shared_prefix, 999);
     let mut rng = Rng::new(seed);
     let mut trace = Vec::with_capacity(n_requests);
     let mut at_s = 0.0f64;
     for i in 0..n_requests {
         at_s += -rng.next_f64().max(1e-12).ln() / rate; // Exp(rate) gap
-        let prompt_len = 16 + rng.below_usize(33); // 16..=48
+        let tail_len = 16 + rng.below_usize(33); // 16..=48
+        let prompt_len = shared_prefix + tail_len;
         let max_new = 8 + rng.below_usize((seq - prompt_len - 8).min(41)); // 8..≤48
+        let mut prompt = system.clone();
+        prompt.extend(generate(CorpusKind::SynthC4, tail_len, 1000 + i as u64));
         trace.push(TracedRequest {
             at_s,
-            req: Request {
-                prompt: generate(CorpusKind::SynthC4, prompt_len, 1000 + i as u64),
-                max_new_tokens: max_new,
-                stop_token: None,
-            },
+            req: Request { prompt, max_new_tokens: max_new, stop_token: None },
         });
     }
     println!(
-        "trace: {} requests, Poisson rate {:.1}/s, prompts 16–48 tokens, {} decode slots",
-        n_requests, rate, max_slots
+        "trace: {} requests, Poisson rate {:.1}/s, {} shared-prefix + 16–48 tail tokens, {} decode slots",
+        n_requests, rate, shared_prefix, max_slots
     );
 
-    let cont = serve_trace(&packed, &trace, max_slots, AdmissionPolicy::Continuous, "continuous");
-    let wave = serve_trace(&packed, &trace, max_slots, AdmissionPolicy::Wave, "lockstep-wave");
+    let cont =
+        serve_trace(&packed, &trace, max_slots, AdmissionPolicy::Continuous, 0, "continuous");
+    let wave =
+        serve_trace(&packed, &trace, max_slots, AdmissionPolicy::Wave, 0, "lockstep-wave");
     print_report(&cont);
     print_report(&wave);
 
-    // Batch invariance across policies: identical token streams.
-    let agree = cont
-        .outputs
-        .iter()
-        .zip(&wave.outputs)
-        .filter(|((ia, ta), (ib, tb))| ia == ib && ta == tb)
-        .count();
+    let budget = (prefix_cache_mb * 1e6) as usize;
+    let cached = prefix_cache.then(|| {
+        serve_trace(
+            &packed,
+            &trace,
+            max_slots,
+            AdmissionPolicy::Continuous,
+            budget.max(1),
+            "continuous+prefix-cache",
+        )
+    });
+    if let Some(c) = &cached {
+        print_report(c);
+        let (cold50, _, _) = percentiles(cont.ttft_s.clone());
+        let (warm50, _, _) = percentiles(c.ttft_s.clone());
+        println!(
+            "\nprefix cache vs cold continuous: ttft p50 {:.1} -> {:.1} ms ({:+.1}%), \
+             prefill tokens/request {:.1} -> {:.1} ({} total saved)",
+            cold50 * 1e3,
+            warm50 * 1e3,
+            (warm50 / cold50 - 1.0) * 100.0,
+            cont.prefill_in as f64 / n_requests as f64,
+            c.prefill_in as f64 / n_requests as f64,
+            c.prefill_saved
+        );
+    }
+
+    // Batch invariance across policies — and bit-identical prefix reuse
+    // when the cache ran: identical token streams everywhere.
+    let mut runs: Vec<&ServeReport> = vec![&cont, &wave];
+    if let Some(c) = &cached {
+        runs.push(c);
+    }
+    for other in &runs[1..] {
+        let agree = cont
+            .outputs
+            .iter()
+            .zip(&other.outputs)
+            .filter(|((ia, ta), (ib, tb))| ia == ib && ta == tb)
+            .count();
+        println!(
+            "continuous/{} token-stream agreement: {agree}/{} requests",
+            other.policy, n_requests
+        );
+    }
     println!(
-        "\ncontinuous/lockstep token-stream agreement: {agree}/{} requests  |  continuous speedup: {:.2}×",
-        n_requests,
+        "continuous speedup over lockstep: {:.2}×",
         (cont.generated as f64 / cont.wall_s) / (wave.generated as f64 / wave.wall_s)
     );
     Ok(())

@@ -1,6 +1,8 @@
 //! Serving-runtime scenario bench: open-loop arrivals through the
 //! continuous-batching scheduler vs. the lockstep (wave) baseline, on the
-//! packed backend, at 1 / 8 / 32 concurrent slots.
+//! packed backend, at 1 / 8 / 32 concurrent slots — plus **shared-prefix**
+//! cells where every prompt opens with the same system prompt, replayed
+//! with the prefix cache off and on.
 //!
 //! Arrivals are Poisson in the *step domain* (a request becomes visible
 //! just before a given engine step), with mean spacing chosen to keep the
@@ -8,14 +10,19 @@
 //! coupling; latency is still reported in wall time via a step→time map.
 //! Open-loop means arrivals never wait for the engine — queueing delay is
 //! part of p99. `CLAQ_BENCH_FAST=1` shrinks the trace. Results append to
-//! `target/claq-bench.csv` alongside the other bench groups.
+//! `target/claq-bench.csv` and land in `BENCH_scheduler.json` at the repo
+//! root (CI runs this bench and uploads the JSON; the shared-prefix cells
+//! carry `prefill_in_per_req` / `saved_per_req` / `prefix_hits` extras so
+//! the prefill-compute reduction at equal output is tracked run over run).
 
 use claq::model::exec::{ExecModel, ExecState};
 use claq::model::quantized::QuantizedModel;
 use claq::model::{Model, TransformerConfig};
 use claq::quant::config::Method;
-use claq::runtime::scheduler::{AdmissionPolicy, Request, Scheduler, SchedulerConfig};
-use claq::util::benchlib::append_csv;
+use claq::runtime::scheduler::{
+    AdmissionPolicy, Request, Scheduler, SchedulerConfig, SchedulerStats,
+};
+use claq::util::benchlib::{append_csv, write_bench_json, Sample};
 use claq::util::rng::Rng;
 use claq::util::threadpool::ThreadPool;
 use std::time::Instant;
@@ -24,6 +31,12 @@ struct ScenarioResult {
     tok_per_s: f64,
     ttft_p50_ms: f64,
     tok_p99_ms: f64,
+    wall_ns: f64,
+    generated: u64,
+    requests: u64,
+    stats: SchedulerStats,
+    /// id → tokens, for cross-scenario agreement checks.
+    outputs: Vec<(u64, Vec<u16>)>,
 }
 
 /// Replay one step-domain arrival trace and measure wall-side stats.
@@ -32,6 +45,7 @@ fn run_scenario(
     arrivals: &[(usize, Request)],
     slots: usize,
     policy: AdmissionPolicy,
+    prefix_cache_bytes: usize,
 ) -> ScenarioResult {
     let mut st = ExecState::new(model.config);
     let mut sched = Scheduler::new(
@@ -40,6 +54,7 @@ fn run_scenario(
             max_slots: slots,
             prefill_token_budget: 2 * model.config.max_seq,
             policy,
+            prefix_cache_bytes,
         },
     );
     let mut completions = Vec::new();
@@ -65,6 +80,7 @@ fn run_scenario(
     let mut generated = 0usize;
     let mut ttft_ms = Vec::new();
     let mut tok_ms = Vec::new();
+    let mut outputs = Vec::with_capacity(completions.len());
     for c in &completions {
         let first = step_wall[c.admitted_step as usize - 1];
         let last = step_wall[c.finished_step as usize - 1];
@@ -73,7 +89,9 @@ fn run_scenario(
         if c.tokens.len() > 1 {
             tok_ms.push((last - first) * 1e3 / (c.tokens.len() - 1) as f64);
         }
+        outputs.push((c.id, c.tokens.clone()));
     }
+    outputs.sort_by_key(|(id, _)| *id);
     ttft_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
     tok_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pick = |xs: &[f64], p: f64| {
@@ -87,6 +105,33 @@ fn run_scenario(
         tok_per_s: generated as f64 / wall_s,
         ttft_p50_ms: pick(&ttft_ms, 0.5),
         tok_p99_ms: pick(&tok_ms, 0.99),
+        wall_ns: wall_s * 1e9,
+        generated: generated as u64,
+        requests: arrivals.len() as u64,
+        stats: sched.stats(),
+        outputs,
+    }
+}
+
+/// One JSON cell: total scenario wall time over generated tokens, so
+/// `ns_per_elem` is ns per generated token — comparable with the decode
+/// bench rows.
+fn sample(name: &str, r: &ScenarioResult) -> Sample {
+    let per_req = |x: u64| x as f64 / r.requests as f64;
+    Sample {
+        name: name.to_string(),
+        iters: 1,
+        median_ns: r.wall_ns,
+        mad_ns: 0.0,
+        mean_ns: r.wall_ns,
+        elems: Some(r.generated),
+        extra: vec![
+            ("requests".into(), r.requests as f64),
+            ("generated_per_req".into(), per_req(r.generated)),
+            ("prefill_in_per_req".into(), per_req(r.stats.prefill_tokens_in)),
+            ("saved_per_req".into(), per_req(r.stats.prefill_tokens_saved)),
+            ("prefix_hits".into(), r.stats.prefix_hits as f64),
+        ],
     }
 }
 
@@ -103,6 +148,7 @@ fn main() {
     );
 
     let mut csv_rows: Vec<String> = Vec::new();
+    let mut samples: Vec<Sample> = Vec::new();
     for &conc in &[1usize, 8, 32] {
         // Trace: enough requests to reach steady state; Poisson arrival
         // gaps with mean ~ mean_service/conc keep the batch saturated.
@@ -123,8 +169,8 @@ fn main() {
             ));
         }
 
-        let cont = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous);
-        let wave = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Wave);
+        let cont = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous, 0);
+        let wave = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Wave, 0);
         println!(
             "concurrency {conc:>2}: continuous {:>8.0} tok/s (ttft p50 {:>6.1} ms, tok p99 {:>6.2} ms)",
             cont.tok_per_s, cont.ttft_p50_ms, cont.tok_p99_ms
@@ -143,8 +189,53 @@ fn main() {
             csv_rows.push(format!(
                 "scheduler,{policy} conc={conc},{ns_per_tok:.1},0.0,{ns_per_tok:.1},1"
             ));
+            samples.push(sample(&format!("{policy} conc={conc}"), r));
         }
     }
 
+    // --- shared-prefix cells: identical system prompt, cache off vs on ---
+    // Requests arrive staggered so retirements can seed later admissions;
+    // outputs must be token-identical either way (the prefix cache only
+    // changes *where* prompt K/V comes from), while prefill tokens per
+    // request drop by roughly the shared-prefix length.
+    let conc = 8usize;
+    let n_requests = conc * if fast { 3 } else { 6 };
+    let sys_len = 24usize;
+    let mut rng = Rng::new(77);
+    let system: Vec<u16> = (0..sys_len).map(|_| rng.below(cfg.vocab as u64) as u16).collect();
+    let mut arrivals = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let tail_len = 4 + rng.below_usize(9); // 4..=12
+        let mut prompt = system.clone();
+        prompt.extend((0..tail_len).map(|_| rng.below(cfg.vocab as u64) as u16));
+        let max_new = 8 + rng.below_usize(17); // 8..=24
+        // arrivals spaced a few steps apart: the first retirement lands
+        // before the trace ends, so later admissions can hit
+        arrivals.push((3 * i, Request { prompt, max_new_tokens: max_new, stop_token: None }));
+    }
+    let cold = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous, 0);
+    let warm = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous, 64 << 20);
+    assert_eq!(cold.outputs, warm.outputs, "prefix cache changed token streams");
+    assert!(warm.stats.prefix_hits > 0, "shared-prefix trace produced no prefix hits");
+    for (label, r) in [("cache=off", &cold), ("cache=on", &warm)] {
+        println!(
+            "shared-prefix conc={conc} {label}: {:>8.0} tok/s, prefill in/req {:>5.1}, \
+             saved/req {:>5.1}, hits {}",
+            r.tok_per_s,
+            r.stats.prefill_tokens_in as f64 / r.requests as f64,
+            r.stats.prefill_tokens_saved as f64 / r.requests as f64,
+            r.stats.prefix_hits
+        );
+        let ns_per_tok = 1e9 / r.tok_per_s;
+        csv_rows.push(format!(
+            "scheduler,sharedprefix conc={conc} {label},{ns_per_tok:.1},0.0,{ns_per_tok:.1},1"
+        ));
+        samples.push(sample(&format!("sharedprefix conc={conc} {label}"), r));
+    }
+
     append_csv(&csv_rows);
+    match write_bench_json("scheduler", &samples) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write BENCH_scheduler.json: {e}"),
+    }
 }

@@ -12,6 +12,9 @@
 //! * `table <n>` — regenerate paper table n (1–13).
 //! * `figure <n>`— regenerate paper figure n (3–5).
 //! * `outliers`  — print outlier-order diagnostics for a model.
+//! * `bench-check` — compare fresh `BENCH_*.json` bench results against
+//!                 the committed `ci/bench_baseline/` and fail on
+//!                 regressions beyond tolerance (the CI perf gate).
 //!
 //! Run `claq help` for flags.
 
@@ -21,6 +24,7 @@ use claq::util::cli::Args;
 const VALUE_FLAGS: &[&str] = &[
     "out", "model", "method", "bits", "s", "segments", "windows", "items", "tokens", "seed",
     "setting", "calib", "target", "workers", "artifacts", "checkpoint", "requests", "slots",
+    "baseline", "fresh", "tol",
 ];
 
 fn usage() -> &'static str {
@@ -35,6 +39,7 @@ USAGE:
   claq figure   <3|4|5>
   claq outliers [--model PATH] [--s 13]
   claq eval     --model PATH [--method METHOD --bits B]
+  claq bench-check [--baseline ci/bench_baseline] [--fresh .] [--tol 0.25] [--update]
   claq help
 
 METHODS (for --method): fp16, rtn, gptq, awq, claq, claq-ap, claq-or,
@@ -59,6 +64,7 @@ fn main() -> Result<()> {
         "table" => claq::tables::cli_entry::table(&args),
         "figure" => claq::tables::cli_entry::figure(&args),
         "outliers" => claq::tables::cli_entry::outliers(&args),
+        "bench-check" => claq::tables::cli_entry::bench_check(&args),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
             Ok(())

@@ -215,6 +215,46 @@ impl KvCache {
         self.len = len;
     }
 
+    /// Clone the first `len` cached positions of `src` into a new cache.
+    /// K/V rows of a position depend only on the tokens at or before it,
+    /// so a fork at `len` is bit-identical to a cold prefill of those
+    /// `len` tokens — the property the prefix-sharing cache
+    /// (`runtime/prefix_cache.rs`) is built on. Serving paths should
+    /// prefer [`copy_prefix_from`](KvCache::copy_prefix_from) onto a
+    /// pooled cache to avoid the allocation.
+    pub fn fork_from(src: &KvCache, len: usize) -> KvCache {
+        let mut cache = KvCache {
+            n_layers: src.n_layers,
+            d: src.d,
+            max_seq: src.max_seq,
+            len: 0,
+            k: vec![0.0; src.k.len()],
+            v: vec![0.0; src.v.len()],
+        };
+        cache.copy_prefix_from(src, len);
+        cache
+    }
+
+    /// Overwrite this cache with the first `len` positions of `src` and
+    /// set the length to `len` — the allocation-free fork used by the
+    /// prefix cache on pool-recycled destinations. A partial `prefill`
+    /// afterwards appends at position `len`, exactly as if the prefix had
+    /// just been prefilled here.
+    pub fn copy_prefix_from(&mut self, src: &KvCache, len: usize) {
+        assert!(len <= src.len, "fork beyond source length ({len} > {})", src.len);
+        assert!(
+            self.n_layers == src.n_layers && self.d == src.d && self.max_seq == src.max_seq,
+            "fork between caches of different configs"
+        );
+        for layer in 0..self.n_layers {
+            let base = layer * self.max_seq * self.d;
+            let n = len * self.d;
+            self.k[base..base + n].copy_from_slice(&src.k[base..base + n]);
+            self.v[base..base + n].copy_from_slice(&src.v[base..base + n]);
+        }
+        self.len = len;
+    }
+
     /// Resident bytes of the cache buffers.
     pub fn bytes(&self) -> usize {
         (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
@@ -447,7 +487,12 @@ fn head_logits(model: &ExecModel, st: &mut ExecState, rows: usize) -> Matrix {
 /// Run `tokens` through the model starting at the cache's current length,
 /// appending K/V for every position; returns logits (seq × vocab). The
 /// cache advances by `tokens.len()`; call with a fresh/reset cache for a
-/// full-sequence forward.
+/// full-sequence forward. The start offset is the cache's length itself:
+/// positions, RoPE angles, and attention spans all begin at `cache.len()`,
+/// which is what makes partial prefill over a forked prefix
+/// ([`KvCache::copy_prefix_from`], used by the prefix-sharing cache in
+/// `runtime/prefix_cache.rs`) bit-identical to prefilling the whole
+/// prompt cold.
 pub fn prefill(
     model: &ExecModel,
     cache: &mut KvCache,
@@ -732,6 +777,86 @@ mod tests {
         // NaN never wins, wherever it sits
         assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2);
         assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+    }
+
+    #[test]
+    fn fork_from_matches_cold_prefix() {
+        let m = small_model(7);
+        let em = ExecModel::dense(&m);
+        let mut st = ExecState::new(m.config);
+        let toks = [2u16, 9, 4, 4, 1, 7];
+
+        let mut full = KvCache::new(&m.config);
+        let want = prefill(&em, &mut full, &toks, &mut st);
+
+        // fork at every interior depth and prefill the tail: logits for
+        // the tail positions must be bit-identical to the cold prefill
+        for depth in 1..toks.len() {
+            let mut fork = KvCache::fork_from(&full, depth);
+            assert_eq!(fork.len(), depth);
+            let got = prefill(&em, &mut fork, &toks[depth..], &mut st);
+            for (r, pos) in (depth..toks.len()).enumerate() {
+                assert_eq!(got.row(r), want.row(pos), "fork depth {depth}, position {pos}");
+            }
+            assert_eq!(fork.len(), toks.len());
+        }
+
+        // the allocation-free flavour over a recycled cache is the same
+        let mut dst = KvCache::new(&m.config);
+        let _ = prefill(&em, &mut dst, &[5, 5, 5, 5, 5, 5, 5], &mut st); // dirty it
+        dst.reset();
+        dst.copy_prefix_from(&full, 3);
+        let got = prefill(&em, &mut dst, &toks[3..], &mut st);
+        assert_eq!(got.row(toks.len() - 3 - 1), want.row(toks.len() - 1));
+    }
+
+    /// Pool accounting stays exact while the prefix cache pins and evicts
+    /// caches: pins take buffers out of circulation (visible as misses
+    /// once the free list drains), evictions hand them back.
+    #[test]
+    fn pool_accounting_under_fork_and_pin() {
+        use crate::runtime::prefix_cache::PrefixCache;
+        let m = small_model(8);
+        let em = ExecModel::dense(&m);
+        let mut st = ExecState::new(m.config);
+        let mut pool = KvCachePool::with_capacity(m.config, 2);
+        let cache_bytes = KvCache::new(&m.config).bytes();
+        assert_eq!(pool.resident_bytes(), 2 * cache_bytes);
+        let mut pc = PrefixCache::new(cache_bytes); // room for exactly one pin
+
+        // take both pre-warmed caches (hits), pin one under its prompt
+        let mut a = pool.take();
+        let mut b = pool.take();
+        assert_eq!((pool.hits(), pool.misses()), (2, 0));
+        assert_eq!(pool.resident_bytes(), 0);
+        let _ = prefill(&em, &mut a, &[1, 2, 3], &mut st);
+        let _ = prefill(&em, &mut b, &[1, 2, 4], &mut st);
+        pc.insert(&[1, 2, 3], a, &mut pool);
+        assert_eq!(pc.resident_bytes(), cache_bytes);
+        assert_eq!(pool.free_caches(), 0, "pinned caches live outside the pool");
+
+        // a third take must allocate: one buffer is pinned, one is out
+        let c = pool.take();
+        assert_eq!((pool.hits(), pool.misses()), (2, 1));
+
+        // pinning a second prompt evicts the first back into the pool
+        pc.insert(&[1, 2, 4], b, &mut pool);
+        assert_eq!(pc.evictions(), 1);
+        assert_eq!(pc.resident_bytes(), cache_bytes);
+        assert_eq!(pool.free_caches(), 1);
+        assert_eq!(pool.resident_bytes(), cache_bytes);
+
+        // forking copies: the pinned entry stays resident, the fork is a
+        // pool cache, and the books balance
+        let mut dst = pool.take();
+        assert_eq!((pool.hits(), pool.misses()), (3, 1));
+        let depth = pc.fork_into(&[1, 2, 4], &mut dst);
+        assert_eq!(depth, 2);
+        assert_eq!(pc.resident_bytes(), cache_bytes);
+        pool.put(dst);
+        pool.put(c);
+        assert_eq!(pool.free_caches(), 2);
+        assert_eq!(pool.resident_bytes(), 2 * cache_bytes);
     }
 
     #[test]

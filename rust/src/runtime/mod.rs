@@ -4,12 +4,16 @@
 //! * [`scheduler`] — the continuous-batching serving engine (request
 //!   admission, pooled KV caches, fused variable-length decode) over the
 //!   `model::exec` execution backends.
+//! * [`prefix_cache`] — prefix-sharing KV reuse: a token trie pinning
+//!   retired requests' KV prefixes so shared-prompt admissions prefill
+//!   only their tail (DESIGN.md §10).
 //! * [`executor`] / [`Runtime`] — the PJRT path: loads the AOT-lowered
 //!   HLO text artifacts (produced once by `python/compile/aot.py`) and
 //!   executes them from the Rust side via the `xla` crate. Python is
 //!   never on this path.
 
 pub mod executor;
+pub mod prefix_cache;
 pub mod scheduler;
 
 use anyhow::{Context, Result};

@@ -1,0 +1,424 @@
+//! Prefix-sharing KV reuse: a token-sequence trie that pins retired
+//! requests' KV caches so later requests with a shared prompt prefix skip
+//! most of their prefill.
+//!
+//! Real serving fleets overwhelmingly share prompt prefixes (system
+//! prompts, few-shot templates). Cold admission pays a full `prefill` for
+//! every prompt token, yet the K/V rows of a position depend only on the
+//! tokens at or before it (causal attention; RoPE is a function of the
+//! absolute position). Two prompts that agree on their first `d` tokens
+//! therefore produce **bit-identical** K/V rows for positions `0..d` —
+//! the kernels are deterministic and batch/thread-invariant (DESIGN.md
+//! §7) — so those rows can be copied out of a previously computed cache
+//! instead of recomputed. Copying is a pair of `memcpy`s per layer; a
+//! prefill is seven projections, attention, and an MLP per layer per
+//! token. That asymmetry is the entire win.
+//!
+//! **Structure.** A radix trie keyed on prompt tokens ([`Node`] per
+//! token). When the scheduler retires a request it offers the prompt and
+//! the request's [`KvCache`]; the cache is truncated back to the prompt
+//! (decoded-token positions are dropped) and pinned at the trie node at
+//! that depth. Each node's `subtree_entries` counts the pinned caches at
+//! or below it — the ref-count that keeps interior nodes alive and lets
+//! eviction prune paths that no longer lead to an entry.
+//!
+//! **Lookup.** [`probe`](PrefixCache::probe) walks a new prompt down the
+//! trie and returns the deepest match, capped at `prompt.len() - 1`: the
+//! last prompt position is always prefilled, because its logits produce
+//! the request's first token. [`fork_into`](PrefixCache::fork_into) then
+//! copies the matched prefix out of *any* pinned entry below the matched
+//! node (they all share those tokens, so their leading rows are
+//! bit-identical) into a pool-provided destination cache via
+//! [`KvCache::copy_prefix_from`], and the scheduler prefills only the
+//! prompt tail on top of it.
+//!
+//! **Eviction.** Pinned caches are full-size buffers, so the cache is
+//! byte-budgeted: inserts beyond `budget_bytes` evict the least-recently
+//! used entry (clock ticks are unique, so the order is total) and return
+//! its cache to the [`KvCachePool`] — pinning borrows from the pool's
+//! working set, eviction pays it back. A duplicate insert refreshes the
+//! existing entry's LRU stamp and returns the new cache to the pool.
+//!
+//! The trie uses `BTreeMap` children so every walk (including the
+//! pick-any-entry descent in `fork_into`) is deterministic: serving
+//! output never depends on it (any entry yields identical bytes), but
+//! stats and eviction order stay reproducible run over run.
+//! `tests/prefix_cache.rs` pins the end-to-end property: prefix-hit
+//! serving is token-identical to cold prefill for both backends and both
+//! admission policies.
+
+use crate::model::exec::{KvCache, KvCachePool};
+use std::collections::BTreeMap;
+
+/// One pinned KV prefix. `cache.len()` equals the depth of the node that
+/// owns the entry (the number of prompt tokens whose K/V rows it holds).
+struct Entry {
+    cache: KvCache,
+    /// LRU clock tick of the last fork or insert that touched this entry.
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Node {
+    children: BTreeMap<u16, Node>,
+    /// A cache pinned at exactly this node's depth, if any.
+    entry: Option<Entry>,
+    /// Pinned entries at or below this node. Every live node has ≥ 1
+    /// (nodes are pruned when their last entry is evicted), which is what
+    /// makes any `probe` depth forkable.
+    subtree_entries: usize,
+}
+
+/// The prefix-sharing KV cache. See the module docs for the design.
+pub struct PrefixCache {
+    root: Node,
+    budget_bytes: usize,
+    resident_bytes: usize,
+    entries: usize,
+    clock: u64,
+    lookups: u64,
+    hits: u64,
+    saved_tokens: u64,
+    evictions: u64,
+}
+
+impl PrefixCache {
+    /// Byte budget covers the pinned caches' buffers; a single cache
+    /// larger than the budget is never pinned (the cache degrades to a
+    /// no-op rather than thrash).
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            root: Node::default(),
+            budget_bytes,
+            resident_bytes: 0,
+            entries: 0,
+            clock: 0,
+            lookups: 0,
+            hits: 0,
+            saved_tokens: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Longest reusable prefix of `prompt`, capped at `prompt.len() - 1`
+    /// so the final prompt position (whose logits yield the first output
+    /// token) is always prefilled. Read-only: no LRU touch, no counters —
+    /// the scheduler probes for budget accounting before committing to an
+    /// admission, then forks.
+    pub fn probe(&self, prompt: &[u16]) -> usize {
+        let cap = prompt.len().saturating_sub(1);
+        let mut node = &self.root;
+        let mut depth = 0;
+        while depth < cap {
+            match node.children.get(&prompt[depth]) {
+                Some(child) => {
+                    node = child;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        depth
+    }
+
+    /// Copy the longest cached prefix of `prompt` into `dst` (a fresh or
+    /// reset cache from the pool) and return its length; `dst` ends at
+    /// exactly that depth, ready for a tail prefill. Returns 0 on a miss
+    /// (`dst` untouched). Counts the lookup, the hit, and the saved
+    /// prefill tokens, and refreshes the source entry's LRU stamp.
+    pub fn fork_into(&mut self, prompt: &[u16], dst: &mut KvCache) -> usize {
+        self.lookups += 1;
+        let depth = self.probe(prompt);
+        if depth == 0 {
+            return 0;
+        }
+        let mut node = &mut self.root;
+        for &t in &prompt[..depth] {
+            node = node.children.get_mut(&t).expect("probed path exists");
+        }
+        // Any entry below the matched node shares the first `depth`
+        // tokens, so its leading rows are bit-identical; take the
+        // smallest-token descent for determinism.
+        while node.entry.is_none() {
+            node = node
+                .children
+                .values_mut()
+                .next()
+                .expect("interior trie node with no entry below it");
+        }
+        let e = node.entry.as_mut().unwrap();
+        debug_assert!(e.cache.len() >= depth, "pinned entry shorter than its trie depth");
+        dst.copy_prefix_from(&e.cache, depth);
+        e.last_used = self.clock;
+        self.clock += 1;
+        self.hits += 1;
+        self.saved_tokens += depth as u64;
+        depth
+    }
+
+    /// Pin a retired request's cache under its prompt. The cache is
+    /// truncated back to the prompt (generated-token positions dropped);
+    /// if an entry for this exact prompt already exists, or the cache
+    /// alone exceeds the budget, the cache goes straight back to `pool`.
+    /// Inserting may evict least-recently-used entries into `pool` until
+    /// the byte budget holds again.
+    pub fn insert(&mut self, prompt: &[u16], mut cache: KvCache, pool: &mut KvCachePool) {
+        if prompt.is_empty() || cache.bytes() > self.budget_bytes {
+            pool.put(cache);
+            return;
+        }
+        assert!(
+            cache.len() >= prompt.len(),
+            "pinned cache ({} positions) must cover the prompt ({})",
+            cache.len(),
+            prompt.len()
+        );
+        cache.truncate(prompt.len());
+        let bytes = cache.bytes();
+        let stamp = self.clock;
+        self.clock += 1;
+        match insert_rec(&mut self.root, prompt, cache, stamp) {
+            Ok(()) => {
+                self.entries += 1;
+                self.resident_bytes += bytes;
+                self.evict_to_budget(pool);
+            }
+            // Exact prompt already pinned: its LRU stamp was refreshed;
+            // the offered cache is surplus.
+            Err(dup) => pool.put(dup),
+        }
+    }
+
+    fn evict_to_budget(&mut self, pool: &mut KvCachePool) {
+        while self.resident_bytes > self.budget_bytes {
+            let mut path = Vec::new();
+            let mut lru: Option<(u64, Vec<u16>)> = None;
+            find_lru(&self.root, &mut path, &mut lru);
+            let (_, key) = lru.expect("over budget implies at least one entry");
+            let e = remove_rec(&mut self.root, &key).expect("LRU path resolves to an entry");
+            self.resident_bytes -= e.cache.bytes();
+            self.entries -= 1;
+            self.evictions += 1;
+            pool.put(e.cache);
+        }
+    }
+
+    /// Pinned caches currently held.
+    pub fn entries(&self) -> usize {
+        self.entries
+    }
+
+    /// Bytes of the pinned caches' buffers.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Forks attempted (one per admission when the cache is enabled).
+    pub fn lookups(&self) -> u64 {
+        self.lookups
+    }
+
+    /// Forks that reused a non-empty prefix.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Prompt tokens served by copy instead of prefill.
+    pub fn saved_tokens(&self) -> u64 {
+        self.saved_tokens
+    }
+
+    /// Entries evicted back into the pool to hold the byte budget.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+/// Returns `Err(cache)` when an entry for this exact key already exists
+/// (its LRU stamp is refreshed); `Ok` increments `subtree_entries` along
+/// the inserted path on unwind.
+fn insert_rec(node: &mut Node, key: &[u16], cache: KvCache, stamp: u64) -> Result<(), KvCache> {
+    let inserted = if key.is_empty() {
+        if let Some(e) = &mut node.entry {
+            e.last_used = stamp;
+            return Err(cache);
+        }
+        node.entry = Some(Entry { cache, last_used: stamp });
+        Ok(())
+    } else {
+        let child = node.children.entry(key[0]).or_default();
+        insert_rec(child, &key[1..], cache, stamp)
+    };
+    if inserted.is_ok() {
+        node.subtree_entries += 1;
+    }
+    inserted
+}
+
+fn find_lru(node: &Node, path: &mut Vec<u16>, best: &mut Option<(u64, Vec<u16>)>) {
+    if let Some(e) = &node.entry {
+        if best.as_ref().is_none_or(|(t, _)| e.last_used < *t) {
+            *best = Some((e.last_used, path.clone()));
+        }
+    }
+    for (&tok, child) in &node.children {
+        path.push(tok);
+        find_lru(child, path, best);
+        path.pop();
+    }
+}
+
+/// Remove the entry at `key`, decrementing `subtree_entries` on the way
+/// out and pruning child nodes whose subtree no longer holds any entry.
+fn remove_rec(node: &mut Node, key: &[u16]) -> Option<Entry> {
+    let removed = if key.is_empty() {
+        node.entry.take()
+    } else {
+        let child = node.children.get_mut(&key[0])?;
+        let e = remove_rec(child, &key[1..]);
+        if e.is_some() && child.subtree_entries == 0 {
+            node.children.remove(&key[0]);
+        }
+        e
+    };
+    if removed.is_some() {
+        node.subtree_entries -= 1;
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::exec::{prefill, ExecModel, ExecState};
+    use crate::model::{Model, TransformerConfig};
+    use crate::util::rng::Rng;
+
+    fn setup() -> (ExecModel, ExecState, KvCachePool) {
+        let cfg = TransformerConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 32,
+            rope_theta: 10000.0,
+            eps: 1e-5,
+        };
+        let m = Model::random(cfg, &mut Rng::new(90));
+        (ExecModel::dense(&m), ExecState::new(cfg), KvCachePool::new(cfg))
+    }
+
+    fn pinned(
+        model: &ExecModel,
+        st: &mut ExecState,
+        pool: &mut KvCachePool,
+        prompt: &[u16],
+    ) -> KvCache {
+        let mut c = pool.take();
+        let _ = prefill(model, &mut c, prompt, st);
+        c
+    }
+
+    #[test]
+    fn probe_finds_longest_shared_prefix_capped_at_len_minus_one() {
+        let (model, mut st, mut pool) = setup();
+        let cache_bytes = KvCache::new(&model.config).bytes();
+        let mut pc = PrefixCache::new(4 * cache_bytes);
+        let c = pinned(&model, &mut st, &mut pool, &[1, 2, 3, 4]);
+        pc.insert(&[1, 2, 3, 4], c, &mut pool);
+        assert_eq!(pc.entries(), 1);
+        assert_eq!(pc.resident_bytes(), cache_bytes);
+
+        // identical prompt: full depth minus the mandatory final prefill
+        assert_eq!(pc.probe(&[1, 2, 3, 4]), 3);
+        // longer prompt sharing the whole key: the key's full depth
+        assert_eq!(pc.probe(&[1, 2, 3, 4, 9, 9]), 4);
+        // divergence mid-key
+        assert_eq!(pc.probe(&[1, 2, 9, 9]), 2);
+        // single-token prompts never reuse (their one position is the
+        // logits source)
+        assert_eq!(pc.probe(&[1]), 0);
+        assert_eq!(pc.probe(&[7, 7]), 0);
+    }
+
+    #[test]
+    fn fork_reproduces_cold_prefill_bitwise() {
+        let (model, mut st, mut pool) = setup();
+        let mut pc = PrefixCache::new(8 * KvCache::new(&model.config).bytes());
+        let prompt = [3u16, 1, 4, 1, 5, 9, 2, 6];
+        let donor = pinned(&model, &mut st, &mut pool, &prompt);
+        pc.insert(&prompt, donor, &mut pool);
+
+        // cold reference over the same prompt
+        let mut cold = KvCache::new(&model.config);
+        let want = prefill(&model, &mut cold, &prompt, &mut st);
+
+        let mut dst = pool.take();
+        let depth = pc.fork_into(&prompt, &mut dst);
+        assert_eq!(depth, prompt.len() - 1);
+        assert_eq!(dst.len(), depth);
+        let got = prefill(&model, &mut dst, &prompt[depth..], &mut st);
+        // tail prefill over the forked prefix is bit-identical to the
+        // cold last-row logits
+        assert_eq!(got.row(0), want.row(prompt.len() - 1));
+        assert_eq!((pc.lookups(), pc.hits()), (1, 1));
+        assert_eq!(pc.saved_tokens(), depth as u64);
+    }
+
+    #[test]
+    fn duplicate_insert_returns_cache_to_pool() {
+        let (model, mut st, mut pool) = setup();
+        let mut pc = PrefixCache::new(8 * KvCache::new(&model.config).bytes());
+        let a = pinned(&model, &mut st, &mut pool, &[5, 6, 7]);
+        let b = pinned(&model, &mut st, &mut pool, &[5, 6, 7]);
+        pc.insert(&[5, 6, 7], a, &mut pool);
+        assert_eq!(pool.free_caches(), 0);
+        pc.insert(&[5, 6, 7], b, &mut pool);
+        assert_eq!(pc.entries(), 1, "duplicate prompt must not pin twice");
+        assert_eq!(pool.free_caches(), 1, "surplus cache returns to the pool");
+    }
+
+    #[test]
+    fn lru_eviction_holds_budget_and_refills_pool() {
+        let (model, mut st, mut pool) = setup();
+        let cache_bytes = KvCache::new(&model.config).bytes();
+        let mut pc = PrefixCache::new(2 * cache_bytes);
+
+        let c1 = pinned(&model, &mut st, &mut pool, &[1, 1, 1]);
+        let c2 = pinned(&model, &mut st, &mut pool, &[2, 2, 2]);
+        let c3 = pinned(&model, &mut st, &mut pool, &[3, 3, 3]);
+        pc.insert(&[1, 1, 1], c1, &mut pool);
+        pc.insert(&[2, 2, 2], c2, &mut pool);
+        // touch [1,1,1] so [2,2,2] becomes the LRU entry
+        let mut scratch = pool.take();
+        assert_eq!(pc.fork_into(&[1, 1, 1, 4], &mut scratch), 3);
+        pool.put(scratch);
+
+        let free_before = pool.free_caches();
+        pc.insert(&[3, 3, 3], c3, &mut pool);
+        assert_eq!(pc.entries(), 2);
+        assert_eq!(pc.resident_bytes(), 2 * cache_bytes);
+        assert_eq!(pc.evictions(), 1);
+        assert_eq!(pool.free_caches(), free_before + 1, "evicted cache rejoins the pool");
+        // the LRU victim was [2,2,2]; the touched and the new entries remain
+        assert_eq!(pc.probe(&[2, 2, 2, 9]), 0);
+        assert_eq!(pc.probe(&[1, 1, 1, 9]), 3);
+        assert_eq!(pc.probe(&[3, 3, 3, 9]), 3);
+    }
+
+    #[test]
+    fn oversized_cache_is_never_pinned() {
+        let (model, mut st, mut pool) = setup();
+        let mut pc = PrefixCache::new(KvCache::new(&model.config).bytes() / 2);
+        let c = pinned(&model, &mut st, &mut pool, &[4, 5]);
+        pc.insert(&[4, 5], c, &mut pool);
+        assert_eq!(pc.entries(), 0);
+        assert_eq!(pc.resident_bytes(), 0);
+        assert_eq!(pool.free_caches(), 1);
+    }
+}

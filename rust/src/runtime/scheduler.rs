@@ -22,6 +22,16 @@
 //! the same engine — the baseline the example and the scheduler bench
 //! compare against.
 //!
+//! With [`SchedulerConfig::prefix_cache_bytes`] > 0, admission consults a
+//! [`PrefixCache`]: retired requests pin their prompt's KV prefix in a
+//! token trie, and a new request whose prompt shares a cached prefix
+//! forks that KV state (a per-layer `memcpy`) and prefills **only the
+//! prompt tail**. Because prefill and decode are deterministic and
+//! batch-invariant, prefix-hit serving is token-identical to cold
+//! prefill (`tests/prefix_cache.rs` pins this); only the step at which a
+//! request is admitted can shift, since saved tokens free prefill
+//! budget. Hit and saved-token counters surface in [`SchedulerStats`].
+//!
 //! The scheduler is deliberately synchronous and single-threaded: one
 //! `step` call is one unit of engine work, and the caller owns the clock
 //! (wall-time arrivals in `examples/serve_quantized.rs`, step-domain
@@ -29,6 +39,7 @@
 //! thread-sharded `LinearOp` kernels, which keeps admission decisions
 //! deterministic and testable.
 
+use super::prefix_cache::PrefixCache;
 use crate::model::exec::{
     argmax, decode_step, prefill, ExecModel, ExecState, KvCache, KvCachePool,
 };
@@ -91,14 +102,24 @@ pub struct SchedulerConfig {
     pub max_slots: usize,
     /// Soft cap on prompt tokens prefilled per engine step; admission
     /// stops once the budget is spent. The first prefill of a step always
-    /// goes through, so an oversized prompt cannot starve.
+    /// goes through, so an oversized prompt cannot starve. Prefix-cache
+    /// hits charge only the prompt tail they actually prefill.
     pub prefill_token_budget: usize,
     pub policy: AdmissionPolicy,
+    /// Byte budget for the prefix-sharing KV cache (`0` disables it).
+    /// Pinned prefixes borrow full-size caches from the pool's working
+    /// set, so the budget bounds the extra KV memory serving holds.
+    pub prefix_cache_bytes: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { max_slots: 8, prefill_token_budget: 512, policy: AdmissionPolicy::Continuous }
+        Self {
+            max_slots: 8,
+            prefill_token_budget: 512,
+            policy: AdmissionPolicy::Continuous,
+            prefix_cache_bytes: 0,
+        }
     }
 }
 
@@ -113,21 +134,32 @@ pub struct SchedulerStats {
     pub decoded_tokens: u64,
     /// Tokens produced by prefill (one per admission).
     pub prefill_tokens_out: u64,
-    /// Prompt tokens prefilled.
+    /// Prompt tokens actually prefilled (prefix-cache hits skip the
+    /// shared prefix, so this counts only the tails that ran).
     pub prefill_tokens_in: u64,
+    /// Prompt tokens served by prefix-cache forks instead of prefill.
+    pub prefill_tokens_saved: u64,
     pub completed: u64,
     pub peak_live: usize,
     pub pool_hits: u64,
     pub pool_misses: u64,
     pub pool_resident_bytes: usize,
     pub pool_hit_rate: f64,
+    /// Prefix-cache probes (one per admission when enabled).
+    pub prefix_lookups: u64,
+    /// Admissions that reused a non-empty cached prefix.
+    pub prefix_hits: u64,
+    pub prefix_entries: usize,
+    pub prefix_resident_bytes: usize,
+    pub prefix_evictions: u64,
 }
 
-/// A live request occupying one batch slot.
+/// A live request occupying one batch slot. The prompt is kept so the
+/// retired cache can be pinned under it in the prefix cache.
 struct Slot {
     id: u64,
     cache: KvCache,
-    prompt_len: usize,
+    prompt: Vec<u16>,
     max_new: usize,
     stop: Option<u16>,
     generated: Vec<u16>,
@@ -149,6 +181,7 @@ pub struct Scheduler {
     queue: VecDeque<(u64, Request)>,
     slots: Vec<Slot>,
     pool: KvCachePool,
+    prefix: Option<PrefixCache>,
     next_id: u64,
     step_no: u64,
     decode_batches: u64,
@@ -164,14 +197,17 @@ impl Scheduler {
         assert!(cfg.max_slots >= 1, "scheduler needs at least one slot");
         assert!(cfg.prefill_token_budget >= 1, "zero prefill budget admits nothing");
         // Pre-warm the pool to the live-batch bound: steady-state serving
-        // then allocates no caches at all.
+        // then allocates no caches at all. (Prefix pins borrow from this
+        // working set; the pool simply allocates replacements on demand.)
         let pool = KvCachePool::with_capacity(model_cfg, cfg.max_slots);
+        let prefix = (cfg.prefix_cache_bytes > 0).then(|| PrefixCache::new(cfg.prefix_cache_bytes));
         Self {
             model_cfg,
             cfg,
             queue: VecDeque::new(),
             slots: Vec::new(),
             pool,
+            prefix,
             next_id: 0,
             step_no: 0,
             decode_batches: 0,
@@ -217,18 +253,25 @@ impl Scheduler {
     }
 
     pub fn stats(&self) -> SchedulerStats {
+        let p = self.prefix.as_ref();
         SchedulerStats {
             steps: self.step_no,
             decode_batches: self.decode_batches,
             decoded_tokens: self.decoded_tokens,
             prefill_tokens_out: self.prefill_tokens_out,
             prefill_tokens_in: self.prefill_tokens_in,
+            prefill_tokens_saved: p.map_or(0, PrefixCache::saved_tokens),
             completed: self.completed,
             peak_live: self.peak_live,
             pool_hits: self.pool.hits(),
             pool_misses: self.pool.misses(),
             pool_resident_bytes: self.pool.resident_bytes(),
             pool_hit_rate: self.pool.hit_rate(),
+            prefix_lookups: p.map_or(0, PrefixCache::lookups),
+            prefix_hits: p.map_or(0, PrefixCache::hits),
+            prefix_entries: p.map_or(0, PrefixCache::entries),
+            prefix_resident_bytes: p.map_or(0, PrefixCache::resident_bytes),
+            prefix_evictions: p.map_or(0, PrefixCache::evictions),
         }
     }
 
@@ -280,9 +323,11 @@ impl Scheduler {
         out
     }
 
-    /// Admit queued requests into free slots, prefilling each. A request
-    /// whose first token already completes it (stop token, or
-    /// `max_new_tokens == 1`) retires without ever holding a slot.
+    /// Admit queued requests into free slots, prefilling each (only the
+    /// prompt tail past the longest cached prefix when the prefix cache
+    /// is enabled). A request whose first token already completes it
+    /// (stop token, or `max_new_tokens == 1`) retires without ever
+    /// holding a slot.
     fn admit(
         &mut self,
         model: &ExecModel,
@@ -297,23 +342,32 @@ impl Scheduler {
         while self.slots.len() < self.cfg.max_slots {
             let Some((_, front)) = self.queue.front() else { break };
             let prompt_len = front.prompt.len();
-            if prompt_len > *budget && *admitted_any {
+            // Budget is a compute throttle, so a cached prefix (a memcpy,
+            // not a forward pass) charges only the tail it will prefill.
+            let reusable = self.prefix.as_ref().map_or(0, |p| p.probe(&front.prompt));
+            if prompt_len - reusable > *budget && *admitted_any {
                 break; // budget spent; the rest waits for the next step
             }
             *admitted_any = true;
-            *budget = budget.saturating_sub(prompt_len);
+            *budget = budget.saturating_sub(prompt_len - reusable);
 
             let (id, req) = self.queue.pop_front().unwrap();
             let mut cache = self.pool.take();
-            let logits = prefill(model, &mut cache, &req.prompt, st);
-            let first = argmax(logits.row(prompt_len - 1));
-            self.prefill_tokens_in += prompt_len as u64;
+            let depth = match &mut self.prefix {
+                Some(p) => p.fork_into(&req.prompt, &mut cache),
+                None => 0,
+            };
+            debug_assert_eq!(depth, reusable, "probe and fork must agree within one admission");
+            let tail = &req.prompt[depth..];
+            let logits = prefill(model, &mut cache, tail, st);
+            let first = argmax(logits.row(tail.len() - 1));
+            self.prefill_tokens_in += tail.len() as u64;
             self.prefill_tokens_out += 1;
 
             let slot = Slot {
                 id,
                 cache,
-                prompt_len,
+                prompt: req.prompt,
                 max_new: req.max_new_tokens,
                 stop: req.stop_token,
                 generated: vec![first],
@@ -328,7 +382,8 @@ impl Scheduler {
         }
     }
 
-    /// Retire every finished slot, releasing its cache to the pool.
+    /// Retire every finished slot, releasing its cache to the prefix
+    /// cache (when enabled) or the pool.
     fn retire(&mut self, done: &mut Vec<Completion>) {
         let mut i = 0;
         while i < self.slots.len() {
@@ -342,17 +397,24 @@ impl Scheduler {
     }
 
     fn complete(&mut self, slot: Slot) -> Completion {
-        let last = *slot.generated.last().unwrap();
-        let reason =
-            if slot.stop == Some(last) { FinishReason::Stop } else { FinishReason::Length };
-        self.pool.put(slot.cache);
+        let Slot { id, cache, prompt, stop, generated, admitted_step, .. } = slot;
+        let last = *generated.last().unwrap();
+        let reason = if stop == Some(last) { FinishReason::Stop } else { FinishReason::Length };
+        // Retirement feeds the prefix cache: the cache (truncated back to
+        // the prompt) is pinned for future shared-prefix admissions, or
+        // recycled straight into the pool when the cache is disabled /
+        // the prompt is already pinned.
+        match &mut self.prefix {
+            Some(p) => p.insert(&prompt, cache, &mut self.pool),
+            None => self.pool.put(cache),
+        }
         self.completed += 1;
         Completion {
-            id: slot.id,
-            prompt_len: slot.prompt_len,
-            tokens: slot.generated,
+            id,
+            prompt_len: prompt.len(),
+            tokens: generated,
             reason,
-            admitted_step: slot.admitted_step,
+            admitted_step,
             finished_step: self.step_no,
         }
     }
@@ -462,6 +524,7 @@ mod tests {
                 max_slots: 4,
                 prefill_token_budget: 5,
                 policy: AdmissionPolicy::Continuous,
+                prefix_cache_bytes: 0,
             },
         );
         // 10-token prompt exceeds the whole budget: admitted anyway (first
@@ -481,6 +544,88 @@ mod tests {
         let done = s.run_to_completion(&model, &mut st);
         assert_eq!(done.len(), 4);
         assert_eq!(s.stats().completed, 4);
+    }
+
+    #[test]
+    fn prefix_cache_reuses_shared_prefixes_without_changing_tokens() {
+        let (model, mut st) = small_setup();
+        let system = [7u16, 3, 9, 1, 4, 4, 2, 8]; // shared "system prompt"
+        let mk = |tail: &[u16]| Request {
+            prompt: system.iter().copied().chain(tail.iter().copied()).collect(),
+            max_new_tokens: 4,
+            stop_token: None,
+        };
+        let tails: [&[u16]; 4] = [&[5, 6], &[6, 5], &[1], &[9, 9, 9]];
+
+        // serve sequentially so each retirement can seed the next
+        // admission; cold run is the reference
+        let serve = |prefix_cache_bytes: usize| {
+            let mut s = Scheduler::new(
+                model.config,
+                SchedulerConfig { prefix_cache_bytes, ..SchedulerConfig::default() },
+            );
+            let mut out = Vec::new();
+            for t in tails {
+                s.submit(mk(t)).unwrap();
+                out.extend(s.run_to_completion(&model, &mut st));
+            }
+            (out, s.stats())
+        };
+        let (cold, cold_stats) = serve(0);
+        let (warm, warm_stats) = serve(1 << 20);
+
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.tokens, w.tokens, "prefix hit changed request {} tokens", c.id);
+            assert_eq!(c.reason, w.reason);
+        }
+        assert_eq!(cold_stats.prefix_lookups, 0, "disabled cache must not probe");
+        assert_eq!(cold_stats.prefill_tokens_saved, 0);
+        assert_eq!(warm_stats.prefix_lookups, 4);
+        // requests 2..4 all share the 8-token system prefix of request 1
+        assert_eq!(warm_stats.prefix_hits, 3);
+        assert_eq!(warm_stats.prefill_tokens_saved, 3 * system.len() as u64);
+        assert_eq!(
+            warm_stats.prefill_tokens_in + warm_stats.prefill_tokens_saved,
+            cold_stats.prefill_tokens_in,
+            "saved + prefilled must cover every prompt token"
+        );
+        assert!(warm_stats.prefix_entries >= 1);
+        assert!(warm_stats.prefix_resident_bytes > 0);
+    }
+
+    #[test]
+    fn prefix_hits_extend_the_prefill_budget() {
+        let (model, mut st) = small_setup();
+        // Budget 6 admits one 6-token cold prompt per step; once the
+        // 5-token prefix is cached, a hit costs only its 1-token tail, so
+        // two more requests fit in a single step's budget.
+        let mut s = Scheduler::new(
+            model.config,
+            SchedulerConfig {
+                max_slots: 4,
+                prefill_token_budget: 6,
+                policy: AdmissionPolicy::Continuous,
+                prefix_cache_bytes: 1 << 20,
+            },
+        );
+        let mk = |last: u16| Request {
+            prompt: vec![3, 1, 4, 1, 5, last],
+            max_new_tokens: 3,
+            stop_token: None,
+        };
+        s.submit(mk(0)).unwrap();
+        let done = s.run_to_completion(&model, &mut st);
+        assert_eq!(done.len(), 1);
+
+        for last in [1, 2, 3] {
+            s.submit(mk(last)).unwrap();
+        }
+        s.step(&model, &mut st);
+        assert_eq!(s.live(), 3, "three 1-token tails fit the 6-token budget at once");
+        let stats = s.stats();
+        assert_eq!(stats.prefix_hits, 3);
+        assert_eq!(stats.prefill_tokens_saved, 15);
+        s.run_to_completion(&model, &mut st);
     }
 
     #[test]

@@ -247,6 +247,7 @@ pub fn serve(args: &Args) -> Result<()> {
             max_slots: slots,
             prefill_token_budget: 2 * cfg.max_seq,
             policy: AdmissionPolicy::Continuous,
+            prefix_cache_bytes: 0,
         },
     );
     // Prompts are sized to the checkpoint's own config (vocab, max_seq).
@@ -283,6 +284,88 @@ pub fn serve(args: &Args) -> Result<()> {
         cold.load_seconds * 1e3,
         first_token_s * 1e3
     );
+    Ok(())
+}
+
+/// `claq bench-check [--baseline DIR] [--fresh DIR] [--tol 0.25]
+/// [--update]` — the CI bench-regression gate (DESIGN.md §11). Every
+/// `BENCH_*.json` in the baseline dir is compared against its freshly
+/// produced counterpart in the fresh dir; any metric beyond
+/// `baseline × (1 + tol)`, or a cell/file missing from the fresh run,
+/// fails the command (non-zero exit fails the CI job). `--update`
+/// instead copies the fresh files over the baselines — the refresh path
+/// after an intentional perf change or a runner-speed shift.
+pub fn bench_check(args: &Args) -> Result<()> {
+    let baseline_dir = PathBuf::from(args.get_or("baseline", "ci/bench_baseline"));
+    let fresh_dir = PathBuf::from(args.get_or("fresh", "."));
+    let tol: f64 = args.get_parse_or("tol", 0.25).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(tol >= 0.0, "--tol must be non-negative (got {tol})");
+
+    let mut names: Vec<String> = std::fs::read_dir(&baseline_dir)
+        .with_context(|| format!("read baseline dir {}", baseline_dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    names.sort();
+    anyhow::ensure!(
+        !names.is_empty(),
+        "no BENCH_*.json baselines in {} — nothing to gate",
+        baseline_dir.display()
+    );
+
+    if args.has("update") {
+        for name in &names {
+            let fresh = fresh_dir.join(name);
+            let text = std::fs::read_to_string(&fresh).with_context(|| {
+                format!("read fresh {} (run the benches first)", fresh.display())
+            })?;
+            // refuse to bless an unparsable document as a baseline
+            crate::util::benchlib::parse_bench_json(&text)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", fresh.display()))?;
+            std::fs::write(baseline_dir.join(name), text)
+                .with_context(|| format!("write baseline {name}"))?;
+            println!("baseline refreshed: {name}");
+        }
+        return Ok(());
+    }
+
+    let mut total = 0usize;
+    for name in &names {
+        let base_path = baseline_dir.join(name);
+        let fresh_path = fresh_dir.join(name);
+        let base_text = std::fs::read_to_string(&base_path)
+            .with_context(|| format!("read baseline {}", base_path.display()))?;
+        let base = crate::util::benchlib::parse_bench_json(&base_text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", base_path.display()))?;
+        let fresh_text = std::fs::read_to_string(&fresh_path).with_context(|| {
+            format!("read fresh {} (did its bench run?)", fresh_path.display())
+        })?;
+        let fresh = crate::util::benchlib::parse_bench_json(&fresh_text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", fresh_path.display()))?;
+        let violations = crate::util::benchlib::compare_bench(&base, &fresh, tol);
+        let armed =
+            base.cells.iter().filter(|c| c.ns_per_elem.is_some() || c.median_ns > 0.0).count();
+        if violations.is_empty() {
+            println!(
+                "{name}: OK ({} cells, {armed} armed, tol {:.0}%)",
+                base.cells.len(),
+                tol * 100.0
+            );
+        } else {
+            for v in &violations {
+                eprintln!("REGRESSION {v}");
+            }
+            total += violations.len();
+        }
+    }
+    if total > 0 {
+        bail!(
+            "{total} bench regression(s) beyond {:.0}% tolerance — if intentional, refresh with \
+             `claq bench-check --update --baseline <dir> --fresh <dir>`",
+            tol * 100.0
+        );
+    }
     Ok(())
 }
 

@@ -6,7 +6,16 @@
 //! Results are also appended to `target/claq-bench.csv` for the §Perf log,
 //! and each group writes a machine-readable `BENCH_<group>.json` at the
 //! repo root (name, ns/elem, elems/s per cell) so CI can track the perf
-//! trajectory run over run.
+//! trajectory run over run. Scenario benches that time whole traces
+//! (e.g. `bench_scheduler`) build [`Sample`]s by hand and land in the same
+//! JSON via [`write_bench_json`].
+//!
+//! The second half of this module is the **bench-regression gate**
+//! (`claq bench-check`, DESIGN.md §11): [`parse_bench_json`] reads a
+//! `BENCH_<group>.json` back (hand-rolled reader — no serde offline) and
+//! [`compare_bench`] diffs a fresh document against a committed baseline
+//! with a relative tolerance, so CI fails when a tracked hot path
+//! regresses beyond noise.
 
 use std::hint::black_box as bb;
 use std::io::Write;
@@ -37,6 +46,11 @@ pub struct Sample {
     pub mean_ns: f64,
     /// Optional elements-per-iteration for throughput reporting.
     pub elems: Option<u64>,
+    /// Extra numeric keys rendered verbatim into the cell's JSON —
+    /// scenario benches use these for counters that don't fit the
+    /// time/elems schema (e.g. prefill tokens per request). The gate
+    /// ignores keys it doesn't know.
+    pub extra: Vec<(String, f64)>,
 }
 
 impl Sample {
@@ -130,6 +144,7 @@ impl Bench {
             mad_ns: mad,
             mean_ns: mean,
             elems,
+            extra: Vec::new(),
         };
         let tp = s
             .throughput()
@@ -160,11 +175,19 @@ impl Bench {
             })
             .collect();
         append_csv(&rows);
-        let path = bench_json_path(&self.group);
-        if let Err(e) = std::fs::write(&path, render_json(&self.group, &self.samples)) {
-            eprintln!("warning: could not write {}: {e}", path.display());
+        if let Err(e) = write_bench_json(&self.group, &self.samples) {
+            eprintln!("warning: could not write BENCH_{}.json: {e}", self.group);
         }
     }
+}
+
+/// Write `BENCH_<group>.json` at the repo root from pre-built samples;
+/// returns the path written. Scenario benches that measure whole serving
+/// traces (not per-iteration closures) call this directly.
+pub fn write_bench_json(group: &str, samples: &[Sample]) -> std::io::Result<std::path::PathBuf> {
+    let path = bench_json_path(group);
+    std::fs::write(&path, render_json(group, samples))?;
+    Ok(path)
 }
 
 /// `BENCH_<group>.json` lives at the repo root: benches run with CWD =
@@ -196,9 +219,14 @@ fn render_json(group: &str, samples: &[Sample]) -> String {
             }
             _ => ("null".to_string(), "null".to_string()),
         };
+        let extra: String = s
+            .extra
+            .iter()
+            .map(|(k, v)| format!(", \"{}\": {v:.4}", json_escape(k)))
+            .collect();
         out.push_str(&format!(
             "    {{\"name\": \"{}\", \"median_ns\": {:.1}, \"mad_ns\": {:.1}, \"iters\": {}, \
-             \"elems\": {}, \"ns_per_elem\": {}, \"elems_per_s\": {}}}{}\n",
+             \"elems\": {}, \"ns_per_elem\": {}, \"elems_per_s\": {}{}}}{}\n",
             json_escape(&s.name),
             s.median_ns,
             s.mad_ns,
@@ -206,6 +234,7 @@ fn render_json(group: &str, samples: &[Sample]) -> String {
             s.elems.map_or("null".to_string(), |e| e.to_string()),
             ns_per_elem,
             elems_per_s,
+            extra,
             if i + 1 < samples.len() { "," } else { "" },
         ));
     }
@@ -229,6 +258,319 @@ pub fn append_csv(rows: &[String]) {
             let _ = writeln!(f, "{row}");
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Bench-regression gate: read BENCH_<group>.json back and diff against a
+// committed baseline (the `claq bench-check` machinery).
+// ---------------------------------------------------------------------------
+
+/// One cell of a parsed `BENCH_<group>.json`. Unknown keys are ignored,
+/// so baselines survive schema additions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchCell {
+    pub name: String,
+    pub median_ns: f64,
+    pub elems: Option<u64>,
+    pub ns_per_elem: Option<f64>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchDoc {
+    pub group: String,
+    pub cells: Vec<BenchCell>,
+}
+
+/// Minimal JSON value for the bench documents (no serde offline).
+enum Json {
+    Null,
+    // payload kept for parser completeness; bench documents carry no bools
+    #[allow(dead_code)]
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get<'a>(&'a self, key: &str) -> Option<&'a Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.pos)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek().ok_or_else(|| self.err("unexpected end of input"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while self
+            .bytes
+            .get(self.pos)
+            .is_some_and(|b| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| self.err("invalid number"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bytes.get(self.pos).copied().ok_or_else(|| self.err("unterminated string"))?
+            {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let esc =
+                        self.bytes.get(self.pos).copied().ok_or_else(|| self.err("bad escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        // \uXXXX and the rare escapes: the bench names this
+                        // reader targets never contain them; keep the raw
+                        // escape so comparisons still work byte-for-byte.
+                        other => {
+                            out.push('\\');
+                            out.push(other as char);
+                        }
+                    }
+                }
+                _ => {
+                    // multi-byte UTF-8 sequences pass through untouched
+                    let s = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut kvs = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(kvs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            kvs.push((key, self.value()?));
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kvs));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+/// Parse a `BENCH_<group>.json` document (as written by [`write_bench_json`]
+/// or hand-maintained under `ci/bench_baseline/`). Numeric fields may be
+/// `null` or absent; baselines use that to leave a cell present but
+/// unarmed.
+pub fn parse_bench_json(text: &str) -> Result<BenchDoc, String> {
+    let mut p = JsonParser { bytes: text.as_bytes(), pos: 0 };
+    let root = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing data after document"));
+    }
+    let group = match root.get("group") {
+        Some(Json::Str(s)) => s.clone(),
+        _ => return Err("document has no string \"group\"".into()),
+    };
+    let cells_json = match root.get("cells") {
+        Some(Json::Arr(a)) => a,
+        _ => return Err("document has no \"cells\" array".into()),
+    };
+    let mut cells = Vec::with_capacity(cells_json.len());
+    for (i, c) in cells_json.iter().enumerate() {
+        let name = match c.get("name") {
+            Some(Json::Str(s)) => s.clone(),
+            _ => return Err(format!("cell {i} has no string \"name\"")),
+        };
+        cells.push(BenchCell {
+            name,
+            median_ns: c.get("median_ns").and_then(Json::as_f64).unwrap_or(0.0),
+            elems: c.get("elems").and_then(Json::as_f64).map(|e| e as u64),
+            ns_per_elem: c.get("ns_per_elem").and_then(Json::as_f64),
+        });
+    }
+    Ok(BenchDoc { group, cells })
+}
+
+/// Diff a freshly produced bench document against a committed baseline.
+/// Returns human-readable violations (empty = gate passes):
+///
+/// * group mismatch, or a baseline cell missing from the fresh run
+///   (structure regressions);
+/// * `ns_per_elem` (preferred) or `median_ns` exceeding
+///   `baseline × (1 + tol)` — a baseline metric of `null`/`0` leaves that
+///   cell unarmed, which is how bootstrap baselines gate structure only;
+/// * `elems` growth beyond the same tolerance on cells where `elems` is a
+///   tracked size (e.g. the cold-start cells carry the checkpoint byte
+///   size).
+///
+/// Fresh-only cells and improvements are never violations.
+pub fn compare_bench(baseline: &BenchDoc, fresh: &BenchDoc, tol: f64) -> Vec<String> {
+    let mut violations = Vec::new();
+    if baseline.group != fresh.group {
+        violations.push(format!(
+            "group mismatch: baseline '{}' vs fresh '{}'",
+            baseline.group, fresh.group
+        ));
+        return violations;
+    }
+    for base in &baseline.cells {
+        let Some(new) = fresh.cells.iter().find(|c| c.name == base.name) else {
+            violations
+                .push(format!("[{}] cell '{}' missing from fresh run", baseline.group, base.name));
+            continue;
+        };
+        let limit = 1.0 + tol;
+        match base.ns_per_elem {
+            Some(b) if b > 0.0 => match new.ns_per_elem {
+                Some(f) if f <= b * limit => {}
+                Some(f) => violations.push(format!(
+                    "[{}] '{}': ns_per_elem {f:.4} exceeds baseline {b:.4} by {:.1}% (tol {:.0}%)",
+                    baseline.group,
+                    base.name,
+                    (f / b - 1.0) * 100.0,
+                    tol * 100.0
+                )),
+                None => violations.push(format!(
+                    "[{}] '{}': baseline has ns_per_elem but fresh run does not",
+                    baseline.group, base.name
+                )),
+            },
+            // unarmed metric: fall back to median_ns when the baseline
+            // carries one
+            _ if base.median_ns > 0.0 => {
+                let f = new.median_ns;
+                if f > base.median_ns * limit {
+                    violations.push(format!(
+                        "[{}] '{}': median_ns {f:.1} exceeds baseline {:.1} by {:.1}% (tol {:.0}%)",
+                        baseline.group,
+                        base.name,
+                        base.median_ns,
+                        (f / base.median_ns - 1.0) * 100.0,
+                        tol * 100.0
+                    ));
+                }
+            }
+            _ => {} // cell fully unarmed: presence is all that is gated
+        }
+        if let (Some(be), Some(fe)) = (base.elems, new.elems) {
+            if be > 0 && fe as f64 > be as f64 * (1.0 + tol) {
+                violations.push(format!(
+                    "[{}] '{}': elems grew {be} -> {fe} (beyond {:.0}% tolerance)",
+                    baseline.group,
+                    base.name,
+                    tol * 100.0
+                ));
+            }
+        }
+    }
+    violations
 }
 
 #[cfg(test)]
@@ -257,6 +599,7 @@ mod tests {
                 mad_ns: 1.0e3,
                 mean_ns: 2.1e6,
                 elems: Some(512 * 512),
+                extra: Vec::new(),
             },
             Sample {
                 name: "no-elems \"cell\"".into(),
@@ -265,6 +608,7 @@ mod tests {
                 mad_ns: 0.5,
                 mean_ns: 5.0,
                 elems: None,
+                extra: vec![("prefill_in_per_req".into(), 12.5)],
             },
         ];
         let json = render_json("gptq", &samples);
@@ -275,10 +619,113 @@ mod tests {
         // quotes in names must be escaped, elem-less cells go null
         assert!(json.contains("no-elems \\\"cell\\\""), "{json}");
         assert!(json.contains("\"ns_per_elem\": null"), "{json}");
+        // extra keys render inline on their cell
+        assert!(json.contains("\"prefill_in_per_req\": 12.5000"), "{json}");
         // comma between the two cells, none trailing before the close
         assert!(json.contains("},\n"), "{json}");
         assert!(json.contains("}\n  ]"), "{json}");
         assert!(!json.contains(",\n  ]"), "{json}");
+    }
+
+    #[test]
+    fn parse_round_trips_render() {
+        let samples = vec![
+            Sample {
+                name: "decode batch=4".into(),
+                iters: 100,
+                median_ns: 4.0e5,
+                mad_ns: 100.0,
+                mean_ns: 4.1e5,
+                elems: Some(4),
+                extra: vec![("prefix_hits".into(), 3.0)],
+            },
+            Sample {
+                name: "with \"quotes\"".into(),
+                iters: 1,
+                median_ns: 9.0,
+                mad_ns: 0.0,
+                mean_ns: 9.0,
+                elems: None,
+                extra: Vec::new(),
+            },
+        ];
+        let doc = parse_bench_json(&render_json("decode", &samples)).unwrap();
+        assert_eq!(doc.group, "decode");
+        assert_eq!(doc.cells.len(), 2);
+        assert_eq!(doc.cells[0].name, "decode batch=4");
+        assert_eq!(doc.cells[0].elems, Some(4));
+        assert!((doc.cells[0].ns_per_elem.unwrap() - 1.0e5).abs() < 1.0);
+        assert_eq!(doc.cells[1].name, "with \"quotes\"");
+        assert_eq!(doc.cells[1].elems, None);
+        assert_eq!(doc.cells[1].ns_per_elem, None);
+        assert_eq!(doc.cells[1].median_ns, 9.0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        assert!(parse_bench_json("").is_err());
+        assert!(parse_bench_json("{\"cells\": []}").is_err(), "missing group");
+        assert!(parse_bench_json("{\"group\": \"g\"}").is_err(), "missing cells");
+        assert!(parse_bench_json("{\"group\": \"g\", \"cells\": [{}]}").is_err(), "nameless cell");
+        assert!(parse_bench_json("{\"group\": \"g\", \"cells\": []} trailing").is_err());
+    }
+
+    fn doc(group: &str, cells: &[(&str, Option<f64>, f64, Option<u64>)]) -> BenchDoc {
+        BenchDoc {
+            group: group.into(),
+            cells: cells
+                .iter()
+                .map(|(n, npe, med, e)| BenchCell {
+                    name: (*n).into(),
+                    median_ns: *med,
+                    elems: *e,
+                    ns_per_elem: *npe,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_fails_beyond() {
+        let base = doc("gptq", &[("cell", Some(100.0), 1.0e6, Some(1000))]);
+        // +20% under a 25% tolerance: fine; improvements: fine
+        let ok = doc("gptq", &[("cell", Some(120.0), 2.0e6, Some(1000))]);
+        assert!(compare_bench(&base, &ok, 0.25).is_empty());
+        let faster = doc("gptq", &[("cell", Some(50.0), 5.0e5, Some(1000))]);
+        assert!(compare_bench(&base, &faster, 0.25).is_empty());
+        // +30% beyond it: violation naming the cell and the overshoot
+        let slow = doc("gptq", &[("cell", Some(130.0), 1.0e6, Some(1000))]);
+        let v = compare_bench(&base, &slow, 0.25);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("'cell'") && v[0].contains("30.0%"), "{v:?}");
+    }
+
+    #[test]
+    fn gate_flags_structure_and_size_regressions() {
+        let base =
+            doc("decode", &[("kept", Some(10.0), 1.0, Some(100)), ("gone", None, 0.0, None)]);
+        let fresh = doc("decode", &[("kept", Some(10.0), 1.0, Some(200))]);
+        let v = compare_bench(&base, &fresh, 0.25);
+        // 'gone' disappeared; 'kept' elems doubled (a tracked size)
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().any(|m| m.contains("'gone'") && m.contains("missing")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("'kept'") && m.contains("elems grew")), "{v:?}");
+        // group mismatch short-circuits
+        let v = compare_bench(&base, &doc("gptq", &[]), 0.25);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("group mismatch"));
+    }
+
+    #[test]
+    fn gate_unarmed_baselines_check_presence_only() {
+        // ns_per_elem null + median 0 = fully unarmed: any speed passes
+        let base = doc("sched", &[("cell", None, 0.0, None)]);
+        let fresh = doc("sched", &[("cell", Some(9.9e9), 9.9e9, Some(5))]);
+        assert!(compare_bench(&base, &fresh, 0.25).is_empty());
+        // median-armed fallback when ns_per_elem is null
+        let base = doc("sched", &[("cell", None, 100.0, None)]);
+        let slow = doc("sched", &[("cell", None, 200.0, None)]);
+        assert_eq!(compare_bench(&base, &slow, 0.25).len(), 1);
     }
 
     #[test]

@@ -1,0 +1,243 @@
+//! Cross-module properties of prefix-sharing KV reuse (DESIGN.md §10).
+//!
+//! The load-bearing one is **cold/warm bit-identity**: with the prefix
+//! cache enabled, every completion — tokens *and* stop reason — must be
+//! identical to cold-prefill serving, for both execution backends and
+//! both admission policies, on workloads engineered to hit the cache.
+//! This holds because K/V rows of a position depend only on tokens at or
+//! before it, every kernel is deterministic and batch/thread-invariant
+//! (pinned since PR 2), and a fork is a byte copy of rows a cold prefill
+//! would have recomputed bit-for-bit. On top of identity, the shared
+//! prefix must actually be *reused*: `SchedulerStats` has to report
+//! prefix hits and saved prefill tokens on shared-prefix traces.
+
+use claq::model::exec::{argmax, decode_step, prefill, ExecModel, ExecState, KvCache};
+use claq::model::quantized::QuantizedModel;
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::Method;
+use claq::runtime::scheduler::{
+    AdmissionPolicy, Request, Scheduler, SchedulerConfig, SchedulerStats,
+};
+use claq::util::proptest::{check, Config};
+use claq::util::rng::Rng;
+use std::collections::HashMap;
+
+fn test_config() -> TransformerConfig {
+    TransformerConfig {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 32,
+        rope_theta: 10000.0,
+        eps: 1e-5,
+    }
+}
+
+fn build_dense() -> ExecModel {
+    ExecModel::dense(&Model::random(test_config(), &mut Rng::new(81)))
+}
+
+fn build_packed() -> ExecModel {
+    let model = Model::random(test_config(), &mut Rng::new(82));
+    let em = QuantizedModel::quantize_uncalibrated(&model, &Method::fusion_2_12()).to_exec();
+    assert_eq!(em.backend, "packed");
+    em
+}
+
+/// The single-request reference: prefill once, then one-row decode steps.
+fn reference_generate(model: &ExecModel, st: &mut ExecState, req: &Request) -> Vec<u16> {
+    let mut cache = KvCache::new(&model.config);
+    let logits = prefill(model, &mut cache, &req.prompt, st);
+    let mut toks = vec![argmax(logits.row(req.prompt.len() - 1))];
+    while toks.len() < req.max_new_tokens && req.stop_token != Some(*toks.last().unwrap()) {
+        let last = *toks.last().unwrap();
+        let logits = decode_step(model, &mut [&mut cache], &[last], st);
+        toks.push(argmax(logits.row(0)));
+    }
+    toks
+}
+
+/// Drive a scheduler over step-domain arrivals; returns completions by
+/// request index (tokens + finish reason) and the final stats.
+#[allow(clippy::type_complexity)]
+fn staggered_serve(
+    model: &ExecModel,
+    st: &mut ExecState,
+    cfg: SchedulerConfig,
+    arrivals: &[(usize, Request)],
+) -> (Vec<(Vec<u16>, claq::runtime::scheduler::FinishReason)>, SchedulerStats) {
+    let mut sched = Scheduler::new(model.config, cfg);
+    let mut ids = Vec::new();
+    let mut by_id = HashMap::new();
+    let mut next = 0usize;
+    let mut step = 0usize;
+    while next < arrivals.len() || sched.has_work() {
+        while next < arrivals.len() && arrivals[next].0 <= step {
+            ids.push(sched.submit(arrivals[next].1.clone()).unwrap());
+            next += 1;
+        }
+        if sched.has_work() {
+            for c in sched.step(model, st) {
+                by_id.insert(c.id, (c.tokens, c.reason));
+            }
+        }
+        step += 1;
+    }
+    assert_eq!(by_id.len(), arrivals.len(), "every request must complete");
+    let stats = sched.stats();
+    (ids.iter().map(|id| by_id.remove(id).unwrap()).collect(), stats)
+}
+
+/// Shared-prefix arrivals: every prompt opens with the same system
+/// prefix, and requests are staggered far enough apart that early
+/// retirements can seed later admissions.
+fn shared_prefix_arrivals(
+    rng: &mut Rng,
+    cfg: &TransformerConfig,
+    n: usize,
+    prefix_len: usize,
+) -> Vec<(usize, Request)> {
+    let system: Vec<u16> =
+        (0..prefix_len).map(|_| rng.below(cfg.vocab as u64) as u16).collect();
+    (0..n)
+        .map(|i| {
+            let tail_len = 1 + rng.below_usize(4);
+            let mut prompt = system.clone();
+            prompt.extend((0..tail_len).map(|_| rng.below(cfg.vocab as u64) as u16));
+            let max_new = 1 + rng.below_usize(5);
+            let stop_token = if rng.next_f64() < 0.25 {
+                Some(rng.below(cfg.vocab as u64) as u16)
+            } else {
+                None
+            };
+            // spacing > max_new guarantees at least some retire-then-admit
+            // interleavings, i.e. real prefix hits
+            (7 * i, Request { prompt, max_new_tokens: max_new, stop_token })
+        })
+        .collect()
+}
+
+/// Cold-prefill serving vs. prefix-cache serving vs. the single-request
+/// reference: token streams and stop reasons must be identical, while the
+/// cached run reports hits and saved tokens.
+fn check_prefix_identity(build: fn() -> ExecModel, seed: u64, cases: usize) {
+    check("prefix-cache cold/warm identity", Config { cases, seed }, move |rng| {
+        let model = build();
+        let model = &model;
+        let cfg = model.config;
+        let mut st = ExecState::new(cfg);
+        let n = 3 + rng.below_usize(3);
+        let prefix_len = 4 + rng.below_usize(5); // 4..=8 shared tokens
+        let arrivals = shared_prefix_arrivals(rng, &cfg, n, prefix_len);
+        let policy = if rng.next_f64() < 0.5 {
+            AdmissionPolicy::Continuous
+        } else {
+            AdmissionPolicy::Wave
+        };
+        let sched_cfg = SchedulerConfig {
+            max_slots: 1 + rng.below_usize(3),
+            prefill_token_budget: 8 + rng.below_usize(12),
+            policy,
+            prefix_cache_bytes: 0,
+        };
+        let (cold, cold_stats) = staggered_serve(model, &mut st, sched_cfg.clone(), &arrivals);
+        let warm_cfg = SchedulerConfig { prefix_cache_bytes: 1 << 20, ..sched_cfg.clone() };
+        let (warm, warm_stats) = staggered_serve(model, &mut st, warm_cfg, &arrivals);
+
+        for (i, ((ct, cr), (wt, wr))) in cold.iter().zip(&warm).enumerate() {
+            assert_eq!(ct, wt, "request {i} tokens diverged under {policy:?} with prefix cache");
+            assert_eq!(cr, wr, "request {i} stop reason diverged under {policy:?}");
+        }
+        // the scheduler must also agree with N independent single-request
+        // runs (transitively: cached serving == isolated serving)
+        for (i, (_, req)) in arrivals.iter().enumerate() {
+            let want = reference_generate(model, &mut st, req);
+            assert_eq!(warm[i].0, want, "request {i} diverged from the isolated reference");
+        }
+        assert_eq!(cold_stats.prefix_lookups, 0);
+        assert!(
+            warm_stats.prefix_hits > 0,
+            "shared-prefix workload produced no prefix hits (stats: {warm_stats:?})"
+        );
+        assert!(warm_stats.prefill_tokens_saved >= warm_stats.prefix_hits * prefix_len as u64);
+        assert_eq!(
+            warm_stats.prefill_tokens_in + warm_stats.prefill_tokens_saved,
+            cold_stats.prefill_tokens_in,
+            "every prompt token must be either prefilled or forked"
+        );
+    });
+}
+
+/// Dense backend, both policies, randomized shared-prefix traces.
+#[test]
+fn prop_prefix_cache_identity_dense() {
+    check_prefix_identity(build_dense, 501, 10);
+}
+
+/// Same property straight off the packed CLAQ planes (forked rows come
+/// from the fused codebook-gather kernels).
+#[test]
+fn prop_prefix_cache_identity_packed() {
+    check_prefix_identity(build_packed, 502, 5);
+}
+
+/// Eviction under a tiny byte budget must never corrupt results: with
+/// room for a single pinned cache and many distinct prompts, the cache
+/// thrashes (insert/evict every retirement) yet token streams stay
+/// identical to cold serving.
+#[test]
+fn thrashing_prefix_cache_stays_bit_identical() {
+    let model = build_dense();
+    let cfg = model.config;
+    let mut st = ExecState::new(cfg);
+    let one_cache = KvCache::new(&cfg).bytes();
+    let mut rng = Rng::new(907);
+    // fully distinct prompts: every insert evicts the previous entry
+    let arrivals: Vec<(usize, Request)> = (0..6)
+        .map(|i| {
+            let plen = 2 + rng.below_usize(5);
+            let prompt: Vec<u16> =
+                (0..plen).map(|_| rng.below(cfg.vocab as u64) as u16).collect();
+            (3 * i, Request { prompt, max_new_tokens: 1 + rng.below_usize(4), stop_token: None })
+        })
+        .collect();
+    let base = SchedulerConfig { max_slots: 2, ..SchedulerConfig::default() };
+    let (cold, _) = staggered_serve(&model, &mut st, base.clone(), &arrivals);
+    let tiny = SchedulerConfig { prefix_cache_bytes: one_cache, ..base };
+    let (warm, warm_stats) = staggered_serve(&model, &mut st, tiny, &arrivals);
+    assert_eq!(cold, warm);
+    assert!(warm_stats.prefix_evictions > 0, "budget for one cache must evict under churn");
+    assert!(warm_stats.prefix_resident_bytes <= one_cache);
+}
+
+/// A request whose whole prompt is cached still prefills its final token
+/// (the logits source): max reuse is prompt_len - 1, and repeating one
+/// request is still bit-identical.
+#[test]
+fn identical_prompt_reuses_all_but_last_token() {
+    let model = build_dense();
+    let mut st = ExecState::new(model.config);
+    let req = Request { prompt: vec![9, 8, 7, 6, 5], max_new_tokens: 4, stop_token: None };
+    let want = reference_generate(&model, &mut st, &req);
+
+    let mut sched = Scheduler::new(
+        model.config,
+        SchedulerConfig { prefix_cache_bytes: 1 << 20, ..SchedulerConfig::default() },
+    );
+    for _ in 0..3 {
+        sched.submit(req.clone()).unwrap();
+        let done = sched.run_to_completion(&model, &mut st);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens, want);
+    }
+    let stats = sched.stats();
+    assert_eq!(stats.prefix_hits, 2, "second and third submissions hit");
+    assert_eq!(
+        stats.prefill_tokens_saved,
+        2 * (req.prompt.len() as u64 - 1),
+        "reuse caps at prompt_len - 1 so the first token always has logits"
+    );
+    assert_eq!(stats.prefill_tokens_in, req.prompt.len() as u64 + 2);
+}

@@ -9,7 +9,10 @@
 //! every output element in the same ascending-column order regardless of
 //! batch shape or thread count, and (c) `argmax` tie-breaks
 //! deterministically. It is what makes serving results reproducible and
-//! lets the bench compare policies by throughput alone.
+//! lets the bench compare policies by throughput alone. The property is
+//! also exercised with the prefix-sharing KV cache enabled (short random
+//! prompts collide often, so forks really fire); shared-prefix-specific
+//! properties live in `tests/prefix_cache.rs`.
 
 use claq::model::exec::{
     argmax, decode_step, prefill, ExecModel, ExecState, KvCache, KvCachePool,
@@ -114,6 +117,10 @@ fn check_batch_invariance(build: fn() -> ExecModel, seed: u64, cases: usize) {
             } else {
                 AdmissionPolicy::Wave
             },
+            // half the cases serve through the prefix cache; 1..=6-token
+            // prompts over a 32-token vocab collide often enough that
+            // forked admissions really happen
+            prefix_cache_bytes: if rng.next_f64() < 0.5 { 0 } else { 1 << 20 },
         };
         let served = staggered_serve(model, &mut st, sched_cfg.clone(), &arrivals);
         for (i, (_, req)) in arrivals.iter().enumerate() {
