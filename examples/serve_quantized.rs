@@ -49,6 +49,7 @@ use claq::data::calibration::default_calibration;
 use claq::data::corpus::{generate, CorpusKind};
 use claq::model::exec::{ExecModel, ExecState};
 use claq::model::io::load_model;
+use claq::model::linear::KernelKind;
 use claq::model::{Model, TransformerConfig};
 use claq::quant::config::Method;
 use claq::runtime::executor::ColdStart;
@@ -348,8 +349,9 @@ fn main() -> anyhow::Result<()> {
     // ExecState::new has row capacity max_seq; more slots could never decode
     let max_slots = max_slots.min(seq);
     println!(
-        "packed projections resident: {:.2} MB — kernels sharded over {} threads",
+        "packed projections resident: {:.2} MB — {} gather kernel sharded over {} threads",
         packed.projection_bytes() as f64 / 1e6,
+        KernelKind::from_env().name(),
         ThreadPool::global().workers()
     );
 

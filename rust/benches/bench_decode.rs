@@ -1,7 +1,12 @@
 //! Decode-path bench: packed vs dense KV-cached decode throughput
 //! (tokens/s at batch 1/4/16) — tracks the serving hot path of
 //! `examples/serve_quantized.rs` in `target/claq-bench.csv` (throughput is
-//! reported as Melem/s where an "elem" is one decoded token) — plus the
+//! reported as Melem/s where an "elem" is one decoded token). The packed
+//! backend runs twice, once per gather kernel: the tiled kernel under the
+//! historical "packed ..." cell names and the pinned scalar kernel under
+//! "packed[scalar] ..." so one `BENCH_decode.json` shows both side by
+//! side. Packed cells carry `tok_s` and `bytes_decoded_per_s` extras
+//! (decoded-LUT bandwidth through the gather kernel) — plus the
 //! cold-start cells: the model is packed into a single-file CLAQMD01
 //! checkpoint, reloaded, smoke-tested with a 3-step decode, and timed
 //! load→ready and load→first-token. The `coldstart` cells carry the
@@ -9,6 +14,7 @@
 //! artifact-size regressions alongside latency (CI uploads it).
 
 use claq::model::exec::{decode_step, prefill, ExecModel, ExecState, KvCache};
+use claq::model::linear::KernelKind;
 use claq::model::quantized::QuantizedModel;
 use claq::model::{Model, TransformerConfig};
 use claq::quant::config::Method;
@@ -21,11 +27,20 @@ fn bench_backend(b: &mut Bench, em: &ExecModel, label: &str) {
     let prompt_len = 32usize;
     let mut state = ExecState::new(cfg);
     let prompt: Vec<u16> = (0..prompt_len as u16).map(|i| (i * 7) % cfg.vocab as u16).collect();
+    // Every projection decodes its full LUT plane set exactly once per
+    // forward pass (prefill or decode step alike), so each bench iteration
+    // moves this many decoded bytes through the gather kernel. Dense
+    // backends report 0 and skip the extra.
+    let plane_bytes = em.decoded_plane_bytes_per_step() as f64;
 
     b.run_with_elems(&format!("{label} prefill seq={prompt_len}"), Some(prompt_len as u64), || {
         let mut cache = KvCache::new(&cfg);
         black_box(prefill(em, &mut cache, &prompt, &mut state));
     });
+    b.annotate_rate("tok_s", prompt_len as f64);
+    if plane_bytes > 0.0 {
+        b.annotate_rate("bytes_decoded_per_s", plane_bytes);
+    }
 
     for &batch in &[1usize, 4, 16] {
         let mut caches: Vec<KvCache> = (0..batch)
@@ -45,6 +60,10 @@ fn bench_backend(b: &mut Bench, em: &ExecModel, label: &str) {
             let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
             black_box(decode_step(em, &mut refs, &toks, &mut state));
         });
+        b.annotate_rate("tok_s", batch as f64);
+        if plane_bytes > 0.0 {
+            b.annotate_rate("bytes_decoded_per_s", plane_bytes);
+        }
     }
 }
 
@@ -54,7 +73,12 @@ fn main() {
     let model = Model::random(cfg, &mut Rng::new(6));
     let qm = QuantizedModel::quantize_uncalibrated(&model, &Method::fusion_2_12());
 
-    let packed = qm.to_exec();
+    // Side-by-side kernels in one run: the tiled kernel keeps the
+    // historical "packed ..." cell names (so the CI baseline gate keeps
+    // tracking the shipping default), the pinned scalar kernel lands in
+    // fresh "packed[scalar] ..." cells for in-run comparison.
+    let packed = qm.to_exec_kernel(KernelKind::Tiled);
+    let packed_scalar = qm.to_exec_kernel(KernelKind::Scalar);
     let dense = ExecModel::dense(&qm.to_dense());
     println!(
         "projection weights: packed {:.2} MB vs dense {:.2} MB",
@@ -63,6 +87,7 @@ fn main() {
     );
 
     bench_backend(&mut b, &packed, "packed");
+    bench_backend(&mut b, &packed_scalar, "packed[scalar]");
     bench_backend(&mut b, &dense, "dense");
 
     // --- cold start: checkpoint -> packed engine ---------------------------

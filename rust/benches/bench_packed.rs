@@ -2,7 +2,9 @@
 //! dequantization — the runtime costs of the packed CLAQ container.
 
 use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
-use claq::quant::packed::{pack, pack_indices, unpack, unpack_indices};
+use claq::quant::packed::{
+    decode_plane_tile_into, pack, pack_indices, unpack, unpack_indices, unpack_indices_range_into,
+};
 use claq::tensor::Matrix;
 use claq::util::benchlib::{black_box, Bench};
 use claq::util::rng::Rng;
@@ -20,6 +22,18 @@ fn main() {
         let packed = pack_indices(&idx, bits);
         b.run_with_elems(&format!("unpack_indices {bits}b n={n}"), Some(n as u64), || {
             black_box(unpack_indices(black_box(&packed), bits, n));
+        });
+        // bulk range unpack: the word-at-a-time path the tiled gather
+        // kernel runs on, into a preallocated buffer (no per-call Vec)
+        let mut idx_out = vec![0u8; n];
+        b.run_with_elems(&format!("bulk_unpack {bits}b n={n}"), Some(n as u64), || {
+            unpack_indices_range_into(black_box(&packed), bits, 0, black_box(&mut idx_out));
+        });
+        // LUT gather on top of the bulk unpack: packed plane -> f32 column
+        let centroids: Vec<f32> = (0..1u16 << bits).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let mut col = vec![0.0f32; n];
+        b.run_with_elems(&format!("tile_decode {bits}b n={n}"), Some(n as u64), || {
+            decode_plane_tile_into(black_box(&packed), bits, &centroids, 0, black_box(&mut col));
         });
     }
 

@@ -14,8 +14,12 @@
 //! root (CI runs this bench and uploads the JSON; the shared-prefix cells
 //! carry `prefill_in_per_req` / `saved_per_req` / `prefix_hits` extras so
 //! the prefill-compute reduction at equal output is tracked run over run).
+//! Every cell additionally carries `tok_s` and `bytes_decoded_per_s`
+//! extras — generation throughput and the lower-bound decoded-LUT
+//! bandwidth through the fused gather kernel selected by `CLAQ_KERNEL`.
 
 use claq::model::exec::{ExecModel, ExecState};
+use claq::model::linear::KernelKind;
 use claq::model::quantized::QuantizedModel;
 use claq::model::{Model, TransformerConfig};
 use claq::quant::config::Method;
@@ -34,6 +38,9 @@ struct ScenarioResult {
     wall_ns: f64,
     generated: u64,
     requests: u64,
+    /// Engine steps that did work (each runs ≥1 fused forward pass, so
+    /// each decodes the model's full LUT plane set at least once).
+    engine_steps: u64,
     stats: SchedulerStats,
     /// id → tokens, for cross-scenario agreement checks.
     outputs: Vec<(u64, Vec<u16>)>,
@@ -108,6 +115,7 @@ fn run_scenario(
         wall_ns: wall_s * 1e9,
         generated: generated as u64,
         requests: arrivals.len() as u64,
+        engine_steps: step_wall.len() as u64,
         stats: sched.stats(),
         outputs,
     }
@@ -116,8 +124,14 @@ fn run_scenario(
 /// One JSON cell: total scenario wall time over generated tokens, so
 /// `ns_per_elem` is ns per generated token — comparable with the decode
 /// bench rows.
-fn sample(name: &str, r: &ScenarioResult) -> Sample {
+fn sample(name: &str, r: &ScenarioResult, plane_bytes_per_step: f64) -> Sample {
     let per_req = |x: u64| x as f64 / r.requests as f64;
+    let wall_s = r.wall_ns * 1e-9;
+    // Lower-bound decoded-LUT bandwidth: every working engine step runs at
+    // least one fused forward pass, and each pass decodes the model's full
+    // plane set once (prefill sub-steps in the same engine step add more,
+    // so the true figure is ≥ this).
+    let bytes_decoded_per_s = r.engine_steps as f64 * plane_bytes_per_step / wall_s;
     Sample {
         name: name.to_string(),
         iters: 1,
@@ -131,6 +145,8 @@ fn sample(name: &str, r: &ScenarioResult) -> Sample {
             ("prefill_in_per_req".into(), per_req(r.stats.prefill_tokens_in)),
             ("saved_per_req".into(), per_req(r.stats.prefill_tokens_saved)),
             ("prefix_hits".into(), r.stats.prefix_hits as f64),
+            ("tok_s".into(), r.tok_per_s),
+            ("bytes_decoded_per_s".into(), bytes_decoded_per_s),
         ],
     }
 }
@@ -141,8 +157,10 @@ fn main() {
     let model = Model::random(cfg, &mut Rng::new(6));
     let packed =
         QuantizedModel::quantize_uncalibrated(&model, &Method::fusion_2_12()).to_exec();
+    let plane_bytes = packed.decoded_plane_bytes_per_step() as f64;
     println!(
-        "== bench group: scheduler ==  (packed backend, {} kernel threads{})",
+        "== bench group: scheduler ==  (packed backend, {} gather kernel, {} kernel threads{})",
+        KernelKind::from_env().name(),
         ThreadPool::global().workers(),
         if fast { ", fast mode" } else { "" }
     );
@@ -189,7 +207,7 @@ fn main() {
             csv_rows.push(format!(
                 "scheduler,{policy} conc={conc},{ns_per_tok:.1},0.0,{ns_per_tok:.1},1"
             ));
-            samples.push(sample(&format!("{policy} conc={conc}"), r));
+            samples.push(sample(&format!("{policy} conc={conc}"), r, plane_bytes));
         }
     }
 
@@ -230,7 +248,7 @@ fn main() {
         csv_rows.push(format!(
             "scheduler,sharedprefix conc={conc} {label},{ns_per_tok:.1},0.0,{ns_per_tok:.1},1"
         ));
-        samples.push(sample(&format!("sharedprefix conc={conc} {label}"), r));
+        samples.push(sample(&format!("sharedprefix conc={conc} {label}"), r, plane_bytes));
     }
 
     append_csv(&csv_rows);

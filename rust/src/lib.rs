@@ -1,3 +1,8 @@
+// `std::simd` is unstable; the `simd` cargo feature opts into it on a
+// nightly toolchain. The default build uses the unrolled-scalar lanes in
+// `model/linear.rs`, which are bit-identical to the SIMD path.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # CLAQ — Column-Level Adaptive weight Quantization for LLMs
 //!
 //! A three-layer Rust + JAX + Pallas reproduction of

@@ -26,7 +26,7 @@
 
 use super::checkpoint::Checkpoint;
 use super::forward::{rmsnorm, rope_row, rope_tables, silu};
-use super::linear::{DenseLinear, LinearOp, PackedLinear};
+use super::linear::{DenseLinear, LinearOp, LinearScratch, PackedLinear};
 use super::{MatrixId, MatrixKind, Model, TransformerConfig};
 use crate::tensor::Matrix;
 use anyhow::{ensure, Context, Result};
@@ -162,6 +162,26 @@ impl ExecModel {
                     + l.w_down.weight_bytes()
             })
             .sum()
+    }
+
+    /// Packed index-plane bytes decoded by one full forward step (all
+    /// layers + LM head; 0 for the dense backend) — the per-step numerator
+    /// of the bench layer's `bytes_decoded_per_s` throughput extra.
+    pub fn decoded_plane_bytes_per_step(&self) -> usize {
+        self.lm_head.decoded_plane_bytes()
+            + self
+                .layers
+                .iter()
+                .map(|l| {
+                    l.wq.decoded_plane_bytes()
+                        + l.wk.decoded_plane_bytes()
+                        + l.wv.decoded_plane_bytes()
+                        + l.wo.decoded_plane_bytes()
+                        + l.w_gate.decoded_plane_bytes()
+                        + l.w_up.decoded_plane_bytes()
+                        + l.w_down.decoded_plane_bytes()
+                })
+                .sum::<usize>()
     }
 }
 
@@ -388,7 +408,7 @@ pub struct ExecState {
     scores: Vec<f32>, // (max_seq)
     cos: Vec<f32>,    // (max_seq × head_dim/2)
     sin: Vec<f32>,
-    scratch: Vec<f32>, // LinearOp backend workspace
+    scratch: LinearScratch, // LinearOp backend workspace
 }
 
 impl ExecState {
@@ -410,9 +430,10 @@ impl ExecState {
         let cap = rows.max(1);
         let (d, f, s) = (cfg.d_model, cfg.d_ff, cfg.max_seq);
         let (cos, sin) = rope_tables(&cfg, s);
-        // The LinearOp workspace (column-decode scratch + shard staging) is
-        // sized up front for the widest projection at full row capacity, so
-        // nothing on the decode hot path ever grows it.
+        // The LinearOp workspace (column-decode scratch, shard staging, and
+        // the shard descriptors of the parallel dispatch) is sized up front
+        // for the widest projection at full row capacity, so nothing on the
+        // decode hot path allocates at all.
         let max_out = d.max(f).max(cfg.vocab);
         Self {
             cfg,
@@ -429,7 +450,7 @@ impl ExecState {
             scores: vec![0.0; s],
             cos,
             sin,
-            scratch: vec![0.0; max_out * (cap + 1)],
+            scratch: LinearScratch::with_capacity(max_out, cap),
         }
     }
 }

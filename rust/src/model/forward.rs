@@ -3,7 +3,7 @@
 //! the evaluation reference path; the PJRT runtime executes the identical
 //! computation lowered from JAX, and integration tests check the two agree.
 
-use super::linear::LinearOp;
+use super::linear::{LinearOp, LinearScratch};
 use super::{Model, TransformerConfig};
 use crate::tensor::{matmul_into, Matrix};
 use crate::util::stats::log_sum_exp;
@@ -24,7 +24,7 @@ pub struct ForwardState {
     scores: Vec<f32>,  // (seq) one query row at a time
     cos: Vec<f32>,     // (seq × head_dim/2) RoPE table
     sin: Vec<f32>,
-    scratch: Vec<f32>, // LinearOp backend workspace
+    scratch: LinearScratch, // LinearOp backend workspace
 }
 
 /// Precompute the RoPE rotation table for positions `0..max_pos`:
@@ -62,7 +62,7 @@ impl ForwardState {
             scores: vec![0.0; s],
             cos,
             sin,
-            scratch: Vec::new(),
+            scratch: LinearScratch::new(),
         }
     }
 }
@@ -114,7 +114,7 @@ pub(crate) fn rope_row(
 
 /// Linear: out(seq × rows) = x(seq × cols) · Wᵀ(cols × rows), dispatched
 /// through the [`LinearOp`] backend (dense or packed).
-fn linear(x: &[f32], w: &dyn LinearOp, seq: usize, out: &mut [f32], scratch: &mut Vec<f32>) {
+fn linear(x: &[f32], w: &dyn LinearOp, seq: usize, out: &mut [f32], scratch: &mut LinearScratch) {
     w.forward_into(x, seq, out, scratch)
 }
 

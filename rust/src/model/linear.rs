@@ -8,28 +8,142 @@
 //!   bit-packed index planes + codebooks (`quant/packed.rs` layout), with
 //!   reserved outliers applied as a sparse per-column override and AWQ
 //!   activation scales folded in. No dense weight matrix is ever
-//!   materialized; the kernel decodes one column (input feature) at a time
-//!   into a reusable scratch buffer and accumulates a rank-1 update.
+//!   materialized; the kernel decodes columns into a reusable scratch
+//!   buffer and accumulates rank-1 (scalar kernel) or rank-4 (tiled
+//!   kernel) updates.
 //!
-//! Column-major traversal keeps the floating-point accumulation order
-//! identical to the dense row dot products, so the packed and dense paths
-//! agree to rounding error — the property `tests/packed_exec.rs` pins down.
+//! `PackedLinear` ships two kernels (DESIGN.md §12):
+//!
+//! * [`KernelKind::Scalar`] — the pinned reference: one column decoded
+//!   bit-by-bit per pass, per-element accumulation in ascending-column
+//!   order, i.e. the exact order of the dense row dot product, so packed
+//!   and dense agree to rounding error.
+//! * [`KernelKind::Tiled`] — the default serving kernel: bulk index
+//!   unpack ([`crate::quant::packed::decode_plane_tile_into`]), `COL_TILE`
+//!   columns decoded per pass, and unrolled f32 lanes (`std::simd` behind
+//!   the `simd` cargo feature, with a bit-identical unrolled-scalar
+//!   fallback). Its accumulation order is a *fixed per-tile combine tree*
+//!   over ascending column tiles — a function of `cols` alone, never of
+//!   thread count, shard partition, or batch composition — so it is just
+//!   as deterministic as the scalar kernel, merely a *different* fixed
+//!   order. Dense-vs-packed agreement is therefore tolerance-gated, while
+//!   every serial/parallel/batched bit-identity property still holds
+//!   exactly under either kernel.
 //!
 //! Both backends shard their output rows across the process-wide
 //! [`ThreadPool`] (see [`run_row_sharded`]): every shard computes a
 //! disjoint block of output features for the whole batch, decoding only
 //! its own row range of each packed column. Because each output element is
-//! still accumulated in ascending-column order, results are bit-identical
-//! to the serial kernel for any thread count, shard partition, or batch
-//! composition — the invariant the scheduler's batch-invariance property
-//! (`tests/scheduler.rs`) relies on.
+//! accumulated by exactly one shard in a schedule fixed by `cols`, results
+//! are bit-identical to the serial kernel for any thread count, shard
+//! partition, or batch composition — the invariant the scheduler's
+//! batch-invariance property (`tests/scheduler.rs`) relies on. Shard
+//! bookkeeping lives in the caller's [`LinearScratch`], so steady-state
+//! decode performs zero heap allocations.
 
 use crate::quant::gptq::QuantizedMatrix;
-use crate::quant::packed::{decode_plane_range_into, pack_indices, PackedMatrix};
+use crate::quant::packed::{
+    decode_plane_range_into, decode_plane_tile_into, pack_indices, PackedMatrix,
+};
 use crate::tensor::Matrix;
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
-use std::sync::Mutex;
+use std::sync::OnceLock;
+
+/// Columns decoded (and accumulated) per pass of the tiled kernel. Four
+/// ≤16-entry codebooks plus four decoded row blocks stay cache-resident,
+/// and the rank-4 update gives the f32 lanes four independent products per
+/// output element.
+const COL_TILE: usize = 4;
+
+/// Which packed-decode kernel [`PackedLinear`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The original column-at-a-time kernel: bit-by-bit plane walk, one
+    /// rank-1 update per column, per-element accumulation in ascending
+    /// column order (the dense dot-product order, so dense agreement is
+    /// bit-tight). Selectable via `CLAQ_KERNEL=scalar`; kept as the pinned
+    /// reference the tiled kernel is tested against.
+    Scalar,
+    /// The LUT-blocked tiled kernel: bulk index unpack, [`COL_TILE`]
+    /// columns per pass, unrolled f32 lanes (`std::simd` behind the `simd`
+    /// feature). Deterministic fixed-tile accumulation order; dense
+    /// agreement is tolerance-gated. The default.
+    Tiled,
+}
+
+impl KernelKind {
+    /// Parse a `CLAQ_KERNEL` value. `None` for unrecognized strings.
+    fn parse(s: &str) -> Option<KernelKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelKind::Scalar),
+            "tiled" => Some(KernelKind::Tiled),
+            _ => None,
+        }
+    }
+
+    /// The process-wide default kernel, from `CLAQ_KERNEL` (`tiled` unless
+    /// `CLAQ_KERNEL=scalar`; unknown values warn and fall back to tiled).
+    /// Read once, like `CLAQ_THREADS` — the choice is process-global so
+    /// every layer of a model runs the same kernel.
+    pub fn from_env() -> KernelKind {
+        static KIND: OnceLock<KernelKind> = OnceLock::new();
+        *KIND.get_or_init(|| match std::env::var("CLAQ_KERNEL") {
+            Err(_) => KernelKind::Tiled,
+            Ok(s) => KernelKind::parse(&s).unwrap_or_else(|| {
+                eprintln!("warning: unknown CLAQ_KERNEL={s:?}; using the tiled kernel");
+                KernelKind::Tiled
+            }),
+        })
+    }
+
+    /// Stable lowercase label (reports, bench cell names).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Tiled => "tiled",
+        }
+    }
+}
+
+/// Per-shard work descriptor: plain offsets into [`LinearScratch::buf`].
+/// No borrows, so the descriptor vector is reusable across calls.
+#[derive(Clone, Copy)]
+struct ShardDesc {
+    r0: usize,
+    r1: usize,
+    decode_off: usize,
+    decode_len: usize,
+    stage_off: usize,
+}
+
+/// Caller-owned workspace for [`LinearOp::forward_into`]: the float buffer
+/// for column-decode and shard staging, plus the shard-descriptor vector
+/// the parallel dispatch used to allocate per call. Own one per execution
+/// state (`ExecState` / `ForwardState`) and steady-state decode makes zero
+/// heap allocations.
+#[derive(Default)]
+pub struct LinearScratch {
+    buf: Vec<f32>,
+    shards: Vec<ShardDesc>,
+}
+
+impl LinearScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size for a backend with up to `max_out` output features and
+    /// batches of up to `cap` rows, so the serving hot path never grows
+    /// the buffer: the largest request is `COL_TILE·max_out` decode floats
+    /// (tiled kernel) plus `cap·max_out` staging floats.
+    pub fn with_capacity(max_out: usize, cap: usize) -> Self {
+        Self {
+            buf: vec![0.0; max_out * (cap + COL_TILE)],
+            shards: Vec::with_capacity(ThreadPool::global().workers()),
+        }
+    }
+}
 
 /// A linear operator `y = x · Wᵀ` over a (rows=out × cols=in) weight.
 pub trait LinearOp: Send + Sync {
@@ -37,17 +151,23 @@ pub trait LinearOp: Send + Sync {
     fn out_features(&self) -> usize;
     /// Input features (cols of W).
     fn in_features(&self) -> usize;
-    /// `out(seq × out_features) = x(seq × in_features) · Wᵀ`. `scratch` is a
-    /// caller-owned reusable buffer for per-call workspace (column-decode
-    /// and shard staging; resized on first use, e.g. pre-sized by
-    /// `ExecState`) so the hot loop never reallocates its large buffers
-    /// (parallel dispatch still makes O(shards) small bookkeeping
-    /// allocations per call).
-    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut Vec<f32>);
+    /// `out(seq × out_features) = x(seq × in_features) · Wᵀ`. `scratch` is
+    /// a caller-owned reusable workspace (column-decode floats, shard
+    /// staging, and the shard descriptors of the parallel dispatch; grown
+    /// on first use, e.g. pre-sized by `ExecState`), so a warm hot loop
+    /// performs no heap allocation at all.
+    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut LinearScratch);
 
     /// Approximate resident bytes of the weight representation (for the
     /// serving memory report).
     fn weight_bytes(&self) -> usize;
+
+    /// Packed index-plane bytes decoded by one forward step (0 for dense
+    /// backends) — the numerator of the bench layer's
+    /// `bytes_decoded_per_s` throughput extra.
+    fn decoded_plane_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// Below this many multiply-accumulates (`seq × rows × cols`) a forward
@@ -56,14 +176,21 @@ const PAR_MIN_MACS: usize = 32 * 1024;
 /// Minimum output rows per shard; smaller blocks don't amortize dispatch.
 const PAR_MIN_ROWS: usize = 16;
 
+/// A raw f32 base pointer that may cross the pool dispatch. Soundness
+/// rests on shard geometry, not on this type: see the SAFETY comment in
+/// [`run_row_sharded`].
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
 /// Shard an output-rows kernel across [`ThreadPool::global`].
 ///
 /// `kernel(r0, r1, decode, stage)` must compute output features
 /// `[r0, r1)` for all `seq` batch rows into `stage`, laid out block-local
-/// row-major (`seq × (r1-r0)`), using `decode` (`r1-r0` floats) as
-/// column-decode scratch. Shards get disjoint sub-slices of `scratch`, so
-/// the float buffers are never reallocated once `scratch` is warm (the
-/// dispatch itself costs O(shards) small allocations); the staged
+/// row-major (`seq × (r1-r0)`), using `decode` (`decode_cols · (r1-r0)`
+/// floats) as column-decode scratch. Shards get disjoint sub-ranges of
+/// `scratch.buf`, described by plain offsets in the reusable
+/// `scratch.shards` vector, so a warm call allocates nothing; the staged
 /// blocks are scattered into `out` afterwards. The serial path points
 /// `stage` directly at `out` (block-local layout == output layout when the
 /// block is all rows), so nothing is copied.
@@ -75,8 +202,9 @@ fn run_row_sharded<K>(
     rows: usize,
     cols: usize,
     seq: usize,
+    decode_cols: usize,
     out: &mut [f32],
-    scratch: &mut Vec<f32>,
+    scratch: &mut LinearScratch,
     kernel: K,
 ) where
     K: Fn(usize, usize, &mut [f32], &mut [f32]) + Sync,
@@ -84,52 +212,155 @@ fn run_row_sharded<K>(
     debug_assert_eq!(out.len(), seq * rows);
     let pool = ThreadPool::global();
     let shards = pool.workers().min(rows / PAR_MIN_ROWS).max(1);
+    let decode_need = decode_cols * rows;
     if shards <= 1 || seq * rows * cols < PAR_MIN_MACS {
-        if scratch.len() < rows {
-            scratch.resize(rows, 0.0);
+        if scratch.buf.len() < decode_need {
+            scratch.buf.resize(decode_need, 0.0);
         }
-        kernel(0, rows, &mut scratch[..rows], out);
+        let (decode, _) = scratch.buf.split_at_mut(decode_need);
+        kernel(0, rows, decode, out);
         return;
     }
 
-    // Scratch layout: [decode: rows] ++ [stage: seq × rows], carved into
-    // one disjoint (decode, stage) pair per shard.
-    let need = rows + seq * rows;
-    if scratch.len() < need {
-        scratch.resize(need, 0.0);
+    // Scratch layout: [decode: decode_cols × rows] ++ [stage: seq × rows],
+    // carved into one disjoint (decode, stage) range pair per shard.
+    let need = decode_need + seq * rows;
+    if scratch.buf.len() < need {
+        scratch.buf.resize(need, 0.0);
     }
-    let (decode_all, stage_all) = scratch[..need].split_at_mut(rows);
     let per_shard = rows.div_ceil(shards);
-    let mut decode_rest = decode_all;
-    let mut stage_rest = stage_all;
-    let mut parts: Vec<Mutex<(usize, usize, &mut [f32], &mut [f32])>> = Vec::new();
+    scratch.shards.clear();
     let mut r0 = 0;
     while r0 < rows {
         let r1 = (r0 + per_shard).min(rows);
-        let bl = r1 - r0;
-        let (decode, rest) = std::mem::take(&mut decode_rest).split_at_mut(bl);
-        decode_rest = rest;
-        let (stage, rest) = std::mem::take(&mut stage_rest).split_at_mut(seq * bl);
-        stage_rest = rest;
-        parts.push(Mutex::new((r0, r1, decode, stage)));
+        scratch.shards.push(ShardDesc {
+            r0,
+            r1,
+            decode_off: decode_cols * r0,
+            decode_len: decode_cols * (r1 - r0),
+            stage_off: decode_need + seq * r0,
+        });
         r0 = r1;
     }
 
-    pool.run(parts.len(), |i| {
-        // Uncontended: each job locks only its own part.
-        let mut part = parts[i].lock().unwrap();
-        let (r0, r1, ref mut decode, ref mut stage) = *part;
-        kernel(r0, r1, &mut **decode, &mut **stage);
+    let base = SendPtr(scratch.buf.as_mut_ptr());
+    let descs = &scratch.shards;
+    pool.run_units(descs.len(), |i| {
+        let d = descs[i];
+        // SAFETY: the descriptors carve pairwise-disjoint ranges of
+        // `scratch.buf` — decode ranges [decode_cols·r0, decode_cols·r1)
+        // and stage ranges [decode_need + seq·r0, decode_need + seq·r1)
+        // for ascending, non-overlapping [r0, r1) blocks — and every range
+        // is in-bounds (`buf.len() >= need`). `run_units` does not return
+        // until every job retires, so `base` outlives all uses, and no
+        // other reference into `buf` is live while the jobs run. Two
+        // `&mut` slices therefore never alias.
+        let decode =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(d.decode_off), d.decode_len) };
+        let stage =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(d.stage_off), seq * (d.r1 - d.r0)) };
+        kernel(d.r0, d.r1, decode, stage);
     });
 
-    for part in parts {
-        let (r0, r1, _, stage) = part.into_inner().unwrap();
-        let bl = r1 - r0;
+    for d in &scratch.shards {
+        let bl = d.r1 - d.r0;
+        let stage = &scratch.buf[d.stage_off..d.stage_off + seq * bl];
         for t in 0..seq {
-            out[t * rows + r0..t * rows + r1].copy_from_slice(&stage[t * bl..(t + 1) * bl]);
+            out[t * rows + d.r0..t * rows + d.r1].copy_from_slice(&stage[t * bl..(t + 1) * bl]);
         }
     }
 }
+
+// ------------------------------------------------------------ f32 lanes ----
+
+/// `o[j] += (x0·w0[j] + x1·w1[j]) + (x2·w2[j] + x3·w3[j])` for every j —
+/// the tiled kernel's rank-4 update with its fixed per-element combine
+/// tree. The SIMD and scalar bodies evaluate this exact expression
+/// (`std::simd` has strict IEEE semantics — no FMA contraction, no
+/// reassociation), so enabling the `simd` feature is bit-invisible.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn axpy4(
+    o: &mut [f32],
+    x0: f32,
+    x1: f32,
+    x2: f32,
+    x3: f32,
+    w0: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    w3: &[f32],
+) {
+    let n = o.len();
+    debug_assert!(w0.len() >= n && w1.len() >= n && w2.len() >= n && w3.len() >= n);
+    let mut j = 0usize;
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::f32x8;
+        let (vx0, vx1) = (f32x8::splat(x0), f32x8::splat(x1));
+        let (vx2, vx3) = (f32x8::splat(x2), f32x8::splat(x3));
+        while j + 8 <= n {
+            let a = vx0 * f32x8::from_slice(&w0[j..]) + vx1 * f32x8::from_slice(&w1[j..]);
+            let b = vx2 * f32x8::from_slice(&w2[j..]) + vx3 * f32x8::from_slice(&w3[j..]);
+            let acc = f32x8::from_slice(&o[j..]) + (a + b);
+            acc.copy_to_slice(&mut o[j..j + 8]);
+            j += 8;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        // Hand-unrolled 4-wide trips: four independent output elements per
+        // iteration keep the FP ports busy; each element still evaluates
+        // the identical combine tree.
+        while j + 4 <= n {
+            o[j] += (x0 * w0[j] + x1 * w1[j]) + (x2 * w2[j] + x3 * w3[j]);
+            o[j + 1] += (x0 * w0[j + 1] + x1 * w1[j + 1]) + (x2 * w2[j + 1] + x3 * w3[j + 1]);
+            o[j + 2] += (x0 * w0[j + 2] + x1 * w1[j + 2]) + (x2 * w2[j + 2] + x3 * w3[j + 2]);
+            o[j + 3] += (x0 * w0[j + 3] + x1 * w1[j + 3]) + (x2 * w2[j + 3] + x3 * w3[j + 3]);
+            j += 4;
+        }
+    }
+    while j < n {
+        o[j] += (x0 * w0[j] + x1 * w1[j]) + (x2 * w2[j] + x3 * w3[j]);
+        j += 1;
+    }
+}
+
+/// `o[j] += x·w[j]` — the rank-1 update for the ragged column tail
+/// (`cols % COL_TILE`), with the same SIMD/scalar bit-identity as
+/// [`axpy4`].
+#[inline]
+fn axpy1(o: &mut [f32], x: f32, w: &[f32]) {
+    let n = o.len();
+    debug_assert!(w.len() >= n);
+    let mut j = 0usize;
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::f32x8;
+        let vx = f32x8::splat(x);
+        while j + 8 <= n {
+            let acc = f32x8::from_slice(&o[j..]) + vx * f32x8::from_slice(&w[j..]);
+            acc.copy_to_slice(&mut o[j..j + 8]);
+            j += 8;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        while j + 4 <= n {
+            o[j] += x * w[j];
+            o[j + 1] += x * w[j + 1];
+            o[j + 2] += x * w[j + 2];
+            o[j + 3] += x * w[j + 3];
+            j += 4;
+        }
+    }
+    while j < n {
+        o[j] += x * w[j];
+        j += 1;
+    }
+}
+
+// -------------------------------------------------------------- backends ----
 
 /// Dense row-major f32 weights — the reference backend.
 impl LinearOp for Matrix {
@@ -141,11 +372,11 @@ impl LinearOp for Matrix {
         self.cols
     }
 
-    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut Vec<f32>) {
+    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut LinearScratch) {
         let (rows, cols) = (self.rows, self.cols);
         assert!(x.len() >= seq * cols, "x too short for seq={seq}");
         assert!(out.len() >= seq * rows, "out too short for seq={seq}");
-        run_row_sharded(rows, cols, seq, &mut out[..seq * rows], scratch, |r0, r1, _, stage| {
+        run_row_sharded(rows, cols, seq, 0, &mut out[..seq * rows], scratch, |r0, r1, _, stage| {
             let bl = r1 - r0;
             for t in 0..seq {
                 let xi = &x[t * cols..(t + 1) * cols];
@@ -188,7 +419,7 @@ impl LinearOp for DenseLinear {
         self.w.cols
     }
 
-    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut Vec<f32>) {
+    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut LinearScratch) {
         self.w.forward_into(x, seq, out, scratch)
     }
 
@@ -221,12 +452,15 @@ pub struct PackedLinear {
     out_vals: Vec<f32>,
     /// AWQ per-column scales to divide back out (None for non-AWQ).
     awq_scales: Option<Vec<f32>>,
+    kernel: KernelKind,
 }
 
 impl PackedLinear {
     /// Build from an in-memory quantized matrix (f32 codebooks — exact
     /// parity with `QuantizedMatrix::dequantize`). `awq_scales` are the
-    /// per-input-column activation scales of the AWQ path, if any.
+    /// per-input-column activation scales of the AWQ path, if any. Runs
+    /// the process-default kernel ([`KernelKind::from_env`]); see
+    /// [`Self::with_kernel`].
     pub fn from_quantized(qm: &QuantizedMatrix, awq_scales: Option<&[f32]>) -> Self {
         let (rows, cols) = (qm.rows, qm.cols);
         assert_eq!(qm.columns.len(), cols);
@@ -271,6 +505,7 @@ impl PackedLinear {
             out_rows,
             out_vals,
             awq_scales: awq_scales.map(<[f32]>::to_vec),
+            kernel: KernelKind::from_env(),
         }
     }
 
@@ -281,19 +516,27 @@ impl PackedLinear {
         Ok(Self::from_quantized(&qm, awq_scales))
     }
 
+    /// Override the decode kernel (tests, side-by-side benches; serving
+    /// uses the process-wide `CLAQ_KERNEL` default).
+    pub fn with_kernel(mut self, kernel: KernelKind) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
     pub fn n_outliers(&self) -> usize {
         self.out_rows.len()
     }
 
-    /// Decode rows `[r0, r1)` of column `c` (dequant + outlier override +
-    /// AWQ un-scaling) into `out[..r1-r0]` — the per-column gather at the
-    /// heart of the kernel, in the row-block form the sharded forward
-    /// needs. Outliers of one column are sorted by row, so the block's
-    /// overrides are found by binary search.
-    fn decode_column_range_into(&self, c: usize, r0: usize, r1: usize, out: &mut [f32]) {
-        let pc = &self.columns[c];
+    /// Sparse outlier override + AWQ un-scaling for rows `[r0, r1)` of
+    /// column `c`, applied to an already-decoded row block. Outliers of
+    /// one column are sorted by row, so the block's overrides are found by
+    /// binary search.
+    fn apply_column_overrides(&self, c: usize, r0: usize, r1: usize, out: &mut [f32]) {
         let bl = r1 - r0;
-        decode_plane_range_into(&pc.plane, pc.bits, &pc.centroids, r0, &mut out[..bl]);
         let (start, end) = (self.out_start[c], self.out_start[c + 1]);
         let lo = start + self.out_rows[start..end].partition_point(|&r| (r as usize) < r0);
         let hi = start + self.out_rows[start..end].partition_point(|&r| (r as usize) < r1);
@@ -309,29 +552,31 @@ impl PackedLinear {
             }
         }
     }
-}
 
-impl LinearOp for PackedLinear {
-    fn out_features(&self) -> usize {
-        self.rows
+    /// Decode rows `[r0, r1)` of column `c` (dequant + outlier override +
+    /// AWQ un-scaling) into `out[..r1-r0]` — the per-column gather of the
+    /// scalar kernel, bit-by-bit plane walk.
+    fn decode_column_range_into(&self, c: usize, r0: usize, r1: usize, out: &mut [f32]) {
+        let pc = &self.columns[c];
+        decode_plane_range_into(&pc.plane, pc.bits, &pc.centroids, r0, &mut out[..r1 - r0]);
+        self.apply_column_overrides(c, r0, r1, out);
     }
 
-    fn in_features(&self) -> usize {
-        self.cols
+    /// Same decode through the bulk index unpack — the tiled kernel's
+    /// per-column gather. Indices are exact integers either way, so the
+    /// decoded values are bit-identical to
+    /// [`Self::decode_column_range_into`]; only the decode cost differs.
+    fn decode_column_tile_into(&self, c: usize, r0: usize, r1: usize, out: &mut [f32]) {
+        let pc = &self.columns[c];
+        decode_plane_tile_into(&pc.plane, pc.bits, &pc.centroids, r0, &mut out[..r1 - r0]);
+        self.apply_column_overrides(c, r0, r1, out);
     }
 
-    /// Fused codebook-gather matmul, sharded over output rows. For each
-    /// input feature c, a shard decodes its row block of the weight column
-    /// once into scratch and accumulates `y[t, r0..r1] += x[t,c] · w_c`
-    /// for every row of the batch, so plane unpacking is amortized across
-    /// the batch and split (not duplicated) across threads. Accumulation
-    /// runs in ascending-c order — the same order as the dense dot
-    /// product, keeping the two paths bit-compatible.
-    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut Vec<f32>) {
+    /// The scalar (pinned reference) kernel body: ascending-column rank-1
+    /// updates, per-element accumulation in dense dot-product order.
+    fn forward_scalar(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut LinearScratch) {
         let (rows, cols) = (self.rows, self.cols);
-        assert!(x.len() >= seq * cols, "x too short for seq={seq}");
-        assert!(out.len() >= seq * rows, "out too short for seq={seq}");
-        run_row_sharded(rows, cols, seq, &mut out[..seq * rows], scratch, |r0, r1, decode, stage| {
+        run_row_sharded(rows, cols, seq, 1, out, scratch, |r0, r1, decode, stage| {
             let bl = r1 - r0;
             stage[..seq * bl].fill(0.0);
             for c in 0..cols {
@@ -351,6 +596,71 @@ impl LinearOp for PackedLinear {
         });
     }
 
+    /// The tiled kernel body: [`COL_TILE`] columns decoded in bulk per
+    /// pass, then one rank-4 [`axpy4`] update per batch row, so every
+    /// decoded tile is reused across all tokens of the step. The ragged
+    /// column tail falls back to rank-1 [`axpy1`] updates. The resulting
+    /// per-element accumulation order is a function of `cols` alone.
+    fn forward_tiled(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut LinearScratch) {
+        let (rows, cols) = (self.rows, self.cols);
+        run_row_sharded(rows, cols, seq, COL_TILE, out, scratch, |r0, r1, decode, stage| {
+            let bl = r1 - r0;
+            stage[..seq * bl].fill(0.0);
+            let mut c = 0usize;
+            while c + COL_TILE <= cols {
+                let (w0, rest) = decode.split_at_mut(bl);
+                let (w1, rest) = rest.split_at_mut(bl);
+                let (w2, rest) = rest.split_at_mut(bl);
+                let w3 = &mut rest[..bl];
+                self.decode_column_tile_into(c, r0, r1, w0);
+                self.decode_column_tile_into(c + 1, r0, r1, w1);
+                self.decode_column_tile_into(c + 2, r0, r1, w2);
+                self.decode_column_tile_into(c + 3, r0, r1, w3);
+                for t in 0..seq {
+                    let xi = &x[t * cols + c..t * cols + c + COL_TILE];
+                    let o = &mut stage[t * bl..(t + 1) * bl];
+                    axpy4(o, xi[0], xi[1], xi[2], xi[3], w0, w1, w2, w3);
+                }
+                c += COL_TILE;
+            }
+            while c < cols {
+                self.decode_column_tile_into(c, r0, r1, &mut decode[..bl]);
+                let col = &decode[..bl];
+                for t in 0..seq {
+                    axpy1(&mut stage[t * bl..(t + 1) * bl], x[t * cols + c], col);
+                }
+                c += 1;
+            }
+        });
+    }
+}
+
+impl LinearOp for PackedLinear {
+    fn out_features(&self) -> usize {
+        self.rows
+    }
+
+    fn in_features(&self) -> usize {
+        self.cols
+    }
+
+    /// Fused codebook-gather matmul, sharded over output rows. Each shard
+    /// decodes its row block of the weight columns once into scratch and
+    /// accumulates `y[t, r0..r1] += x[t, c..] · W_c` for every row of the
+    /// batch, so plane unpacking is amortized across the batch and split
+    /// (not duplicated) across threads. The accumulation schedule is fixed
+    /// by `cols` under both kernels (see the module docs), keeping the
+    /// forward batch- and thread-invariant bit-for-bit.
+    fn forward_into(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut LinearScratch) {
+        let (rows, cols) = (self.rows, self.cols);
+        assert!(x.len() >= seq * cols, "x too short for seq={seq}");
+        assert!(out.len() >= seq * rows, "out too short for seq={seq}");
+        match self.kernel {
+            KernelKind::Scalar => self.forward_scalar(x, seq, &mut out[..seq * rows], scratch),
+            KernelKind::Tiled => self.forward_tiled(x, seq, &mut out[..seq * rows], scratch),
+        }
+    }
+
     fn weight_bytes(&self) -> usize {
         let planes: usize = self
             .columns
@@ -361,6 +671,10 @@ impl LinearOp for PackedLinear {
             + self.out_rows.len() * (std::mem::size_of::<u32>() + std::mem::size_of::<f32>())
             + self.awq_scales.as_ref().map_or(0, |s| s.len() * std::mem::size_of::<f32>())
     }
+
+    fn decoded_plane_bytes(&self) -> usize {
+        self.columns.iter().map(|c| c.plane.len()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -369,7 +683,13 @@ mod tests {
     use crate::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
     use crate::util::rng::Rng;
 
-    fn sample(seed: u64, rows: usize, cols: usize, bits: u8, reserve: usize) -> (Matrix, QuantizedMatrix) {
+    fn sample(
+        seed: u64,
+        rows: usize,
+        cols: usize,
+        bits: u8,
+        reserve: usize,
+    ) -> (Matrix, QuantizedMatrix) {
         let mut rng = Rng::new(seed);
         let mut w = Matrix::zeros(rows, cols);
         rng.fill_normal(&mut w.data, 0.1);
@@ -381,30 +701,64 @@ mod tests {
 
     fn dense_ref(deq: &Matrix, x: &[f32], seq: usize) -> Vec<f32> {
         let mut out = vec![0.0f32; seq * deq.rows];
-        let mut scratch = Vec::new();
+        let mut scratch = LinearScratch::new();
         deq.forward_into(x, seq, &mut out, &mut scratch);
         out
+    }
+
+    #[test]
+    fn kernel_env_values_parse() {
+        assert_eq!(KernelKind::parse("scalar"), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse(" Tiled "), Some(KernelKind::Tiled));
+        assert_eq!(KernelKind::parse("avx512"), None);
+        assert_eq!(KernelKind::parse(""), None);
+        assert_eq!(KernelKind::Scalar.name(), "scalar");
+        assert_eq!(KernelKind::Tiled.name(), "tiled");
     }
 
     #[test]
     fn packed_matches_dense_dequant() {
         let (_, qm) = sample(1, 33, 12, 3, 2);
         let deq = qm.dequantize();
-        let packed = PackedLinear::from_quantized(&qm, None);
-        assert_eq!(packed.out_features(), 33);
-        assert_eq!(packed.in_features(), 12);
-        assert_eq!(packed.n_outliers(), 2 * 12);
+        for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+            let packed = PackedLinear::from_quantized(&qm, None).with_kernel(kernel);
+            assert_eq!(packed.out_features(), 33);
+            assert_eq!(packed.in_features(), 12);
+            assert_eq!(packed.n_outliers(), 2 * 12);
 
-        let mut rng = Rng::new(2);
-        let seq = 5;
-        let mut x = vec![0.0f32; seq * 12];
+            let mut rng = Rng::new(2);
+            let seq = 5;
+            let mut x = vec![0.0f32; seq * 12];
+            rng.fill_normal(&mut x, 1.0);
+            let want = dense_ref(&deq, &x, seq);
+            let mut got = vec![0.0f32; seq * 33];
+            let mut scratch = LinearScratch::new();
+            packed.forward_into(&x, seq, &mut got, &mut scratch);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{kernel:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// The two packed kernels accumulate in different (both fixed) orders,
+    /// so they agree to rounding error, not bit-for-bit — shapes chosen to
+    /// exercise the ragged column tail (`cols % COL_TILE != 0`).
+    #[test]
+    fn tiled_agrees_with_scalar_reference() {
+        let (_, qm) = sample(11, 37, 14, 3, 2);
+        let scalar = PackedLinear::from_quantized(&qm, None).with_kernel(KernelKind::Scalar);
+        let tiled = PackedLinear::from_quantized(&qm, None).with_kernel(KernelKind::Tiled);
+        let mut rng = Rng::new(12);
+        let seq = 3;
+        let mut x = vec![0.0f32; seq * 14];
         rng.fill_normal(&mut x, 1.0);
-        let want = dense_ref(&deq, &x, seq);
-        let mut got = vec![0.0f32; seq * 33];
-        let mut scratch = Vec::new();
-        packed.forward_into(&x, seq, &mut got, &mut scratch);
-        for (a, b) in got.iter().zip(&want) {
-            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        let mut a = vec![0.0f32; seq * 37];
+        let mut b = vec![0.0f32; seq * 37];
+        let mut scratch = LinearScratch::new();
+        scalar.forward_into(&x, seq, &mut a, &mut scratch);
+        tiled.forward_into(&x, seq, &mut b, &mut scratch);
+        for (p, q) in a.iter().zip(&b) {
+            assert!((p - q).abs() <= 1e-5 * (1.0 + q.abs()), "{p} vs {q}");
         }
     }
 
@@ -419,16 +773,18 @@ mod tests {
                 *v /= s;
             }
         }
-        let packed = PackedLinear::from_quantized(&qm, Some(&scales));
-        let mut rng = Rng::new(4);
-        let mut x = vec![0.0f32; 8];
-        rng.fill_normal(&mut x, 1.0);
-        let want = dense_ref(&deq, &x, 1);
-        let mut got = vec![0.0f32; 20];
-        let mut scratch = Vec::new();
-        packed.forward_into(&x, 1, &mut got, &mut scratch);
-        for (a, b) in got.iter().zip(&want) {
-            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+            let packed = PackedLinear::from_quantized(&qm, Some(&scales)).with_kernel(kernel);
+            let mut rng = Rng::new(4);
+            let mut x = vec![0.0f32; 8];
+            rng.fill_normal(&mut x, 1.0);
+            let want = dense_ref(&deq, &x, 1);
+            let mut got = vec![0.0f32; 20];
+            let mut scratch = LinearScratch::new();
+            packed.forward_into(&x, 1, &mut got, &mut scratch);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{kernel:?}: {a} vs {b}");
+            }
         }
     }
 
@@ -444,7 +800,7 @@ mod tests {
         rng.fill_normal(&mut x, 1.0);
         let want = dense_ref(&deq, &x, 3);
         let mut got = vec![0.0f32; 3 * 40];
-        let mut scratch = Vec::new();
+        let mut scratch = LinearScratch::new();
         packed.forward_into(&x, 3, &mut got, &mut scratch);
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
@@ -456,36 +812,47 @@ mod tests {
         let (w, qm) = sample(7, 128, 64, 2, 2);
         let packed = PackedLinear::from_quantized(&qm, None);
         assert!(packed.weight_bytes() < w.weight_bytes() / 4);
+        // decoded_plane_bytes counts exactly the index planes: 64 columns
+        // of ceil(128·2/8) = 32 bytes each
+        assert_eq!(packed.decoded_plane_bytes(), 64 * 32);
     }
 
     /// Shapes large enough to cross the parallel threshold must produce
-    /// bit-identical output to the serial kernel: each output element is
-    /// accumulated in the same ascending-column order by exactly one
-    /// shard. (Batch invariance of the scheduler rests on this.)
+    /// bit-identical output to the serial kernel, under *both* kernels:
+    /// each output element is accumulated by exactly one shard in a
+    /// schedule fixed by `cols`. (Batch invariance of the scheduler rests
+    /// on this.)
     #[test]
     fn sharded_forward_is_bit_identical_to_serial() {
         let (_, qm) = sample(9, 160, 96, 3, 2);
-        let packed = PackedLinear::from_quantized(&qm, None);
-        let mut rng = Rng::new(10);
-        let seq = 8; // 8 × 160 × 96 MACs — well over PAR_MIN_MACS
-        let mut x = vec![0.0f32; seq * 96];
-        rng.fill_normal(&mut x, 1.0);
+        for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+            let packed = PackedLinear::from_quantized(&qm, None).with_kernel(kernel);
+            let mut rng = Rng::new(10);
+            let seq = 8; // 8 × 160 × 96 MACs — well over PAR_MIN_MACS
+            let mut x = vec![0.0f32; seq * 96];
+            rng.fill_normal(&mut x, 1.0);
 
-        // serial reference: run each batch row alone (below the MAC
-        // threshold, so run_row_sharded takes the serial path)
-        let mut want = vec![0.0f32; seq * 160];
-        let mut scratch = Vec::new();
-        for t in 0..seq {
-            let row = &x[t * 96..(t + 1) * 96];
-            packed.forward_into(row, 1, &mut want[t * 160..(t + 1) * 160], &mut scratch);
+            // serial reference: run each batch row alone (below the MAC
+            // threshold, so run_row_sharded takes the serial path)
+            let mut want = vec![0.0f32; seq * 160];
+            let mut scratch = LinearScratch::new();
+            for t in 0..seq {
+                let row = &x[t * 96..(t + 1) * 96];
+                packed.forward_into(row, 1, &mut want[t * 160..(t + 1) * 160], &mut scratch);
+            }
+
+            let mut got = vec![0.0f32; seq * 160];
+            packed.forward_into(&x, seq, &mut got, &mut scratch);
+            assert_eq!(got, want, "{kernel:?} sharded kernel diverged from serial");
         }
-
-        let mut got = vec![0.0f32; seq * 160];
-        packed.forward_into(&x, seq, &mut got, &mut scratch);
-        assert_eq!(got, want, "sharded kernel diverged from serial");
 
         // dense backend: same invariant
         let deq = qm.dequantize();
+        let mut rng = Rng::new(10);
+        let seq = 8;
+        let mut x = vec![0.0f32; seq * 96];
+        rng.fill_normal(&mut x, 1.0);
+        let mut scratch = LinearScratch::new();
         let mut want_d = vec![0.0f32; seq * 160];
         for t in 0..seq {
             let row = &x[t * 96..(t + 1) * 96];

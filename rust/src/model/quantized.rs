@@ -11,7 +11,7 @@
 
 use super::checkpoint::{self, Checkpoint};
 use super::exec::{ExecLayer, ExecModel};
-use super::linear::{DenseLinear, LinearOp, PackedLinear};
+use super::linear::{DenseLinear, KernelKind, LinearOp, PackedLinear};
 use super::{LayerWeights, MatrixId, MatrixKind, Model};
 use crate::quant::gptq::QuantizedMatrix;
 use crate::quant::packed::{pack, unpack};
@@ -94,14 +94,26 @@ impl QuantizedModel {
     /// [`PackedLinear`] operating on its bit-packed index planes (AWQ
     /// scales folded in); anything left unquantized (and the LM head)
     /// stays dense. This is the serving path — `to_dense` never runs.
+    /// Kernel selection follows the process-wide `CLAQ_KERNEL` default;
+    /// see [`QuantizedModel::to_exec_kernel`] for an explicit choice.
     pub fn to_exec(&self) -> ExecModel {
+        self.to_exec_kernel(KernelKind::from_env())
+    }
+
+    /// [`QuantizedModel::to_exec`] with an explicit packed-decode kernel —
+    /// what side-by-side benches and kernel property tests use to compare
+    /// the tiled and scalar kernels within one process.
+    pub fn to_exec_kernel(&self, kernel: KernelKind) -> ExecModel {
         let m = &self.base;
         let op = |id: MatrixId| -> Box<dyn LinearOp> {
             match self.matrices.get(&id) {
-                Some(qm) => Box::new(PackedLinear::from_quantized(
-                    qm,
-                    self.awq_scales.get(&id).map(Vec::as_slice),
-                )),
+                Some(qm) => Box::new(
+                    PackedLinear::from_quantized(
+                        qm,
+                        self.awq_scales.get(&id).map(Vec::as_slice),
+                    )
+                    .with_kernel(kernel),
+                ),
                 None => Box::new(DenseLinear::new(m.matrix(id).clone())),
             }
         };

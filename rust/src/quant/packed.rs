@@ -141,6 +141,109 @@ pub fn decode_plane_range_into(
     }
 }
 
+/// Bulk unpack: decode `out.len()` indices of `bits` width starting at
+/// index `start` into a caller-owned byte buffer. This is the fast path
+/// under the tiled decode kernel (`model/linear.rs`): instead of walking
+/// the plane bit-by-bit, byte-aligned widths (1/2/4/8 — every stored
+/// index of a byte decodes in one pass over that byte) and the odd widths
+/// (3/5/6/7 — eight indices extracted from one unaligned little-endian
+/// u64 window; `7 bit offset + 8×7 index bits = 63 ≤ 64`) both consume
+/// whole bytes per step. Produces exactly the indices
+/// [`unpack_indices`] would.
+pub fn unpack_indices_range_into(packed: &[u8], bits: u8, start: usize, out: &mut [u8]) {
+    assert!((1..=8).contains(&bits));
+    let b = bits as usize;
+    let n = out.len();
+    let mask = ((1u16 << bits) - 1) as u8;
+    match bits {
+        8 => out.copy_from_slice(&packed[start..start + n]),
+        1 | 2 | 4 => {
+            let per = 8 / b; // indices per byte
+            let mut i = 0usize;
+            let mut pos = start;
+            // head: finish the partially consumed first byte
+            while i < n && pos % per != 0 {
+                out[i] = (packed[pos / per] >> ((pos % per) * b)) & mask;
+                i += 1;
+                pos += 1;
+            }
+            // body: one full byte -> `per` indices
+            while i + per <= n {
+                let byte = packed[pos / per];
+                for k in 0..per {
+                    out[i + k] = (byte >> (k * b)) & mask;
+                }
+                i += per;
+                pos += per;
+            }
+            // tail: the last partial byte
+            while i < n {
+                out[i] = (packed[pos / per] >> ((pos % per) * b)) & mask;
+                i += 1;
+                pos += 1;
+            }
+        }
+        _ => {
+            // 3/5/6/7 bits: 8 indices per unaligned u64 window
+            let mut i = 0usize;
+            let mut bitpos = start * b;
+            while i + 8 <= n && bitpos / 8 + 8 <= packed.len() {
+                let byte0 = bitpos / 8;
+                let word = u64::from_le_bytes(packed[byte0..byte0 + 8].try_into().unwrap());
+                let mut w = word >> (bitpos % 8);
+                for k in 0..8 {
+                    out[i + k] = (w as u8) & mask;
+                    w >>= b;
+                }
+                i += 8;
+                bitpos += 8 * b;
+            }
+            // tail (and the end-of-plane rows where a full u64 would read
+            // past the buffer): the plain two-byte extraction
+            while i < n {
+                let byte = bitpos / 8;
+                let off = bitpos % 8;
+                let mut v = packed[byte] >> off;
+                if off + b > 8 {
+                    v |= packed[byte + 1] << (8 - off);
+                }
+                out[i] = v & mask;
+                i += 1;
+                bitpos += b;
+            }
+        }
+    }
+}
+
+/// Tile-granular fused unpack + codebook gather: decode `out.len()` rows
+/// of a plane starting at row `start`, going through the bulk index
+/// unpack ([`unpack_indices_range_into`]) instead of the bit-by-bit walk
+/// of [`decode_plane_range_into`]. Indices are exact integers either way,
+/// so the gathered values are identical; only the decode cost differs.
+/// This is the per-column decode of the tiled kernel in `model/linear.rs`.
+pub fn decode_plane_tile_into(
+    packed: &[u8],
+    bits: u8,
+    centroids: &[f32],
+    start: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(
+        centroids.len() >= (1usize << bits),
+        "codebook too small for bit width"
+    );
+    let mut idx = [0u8; 64];
+    let mut done = 0usize;
+    while done < out.len() {
+        let chunk = (out.len() - done).min(64);
+        unpack_indices_range_into(packed, bits, start + done, &mut idx[..chunk]);
+        for (o, &i) in out[done..done + chunk].iter_mut().zip(&idx[..chunk]) {
+            *o = centroids[i as usize];
+        }
+        done += chunk;
+    }
+}
+
 /// Unpack `n` indices of `bits` width from a packed byte stream.
 pub fn unpack_indices(packed: &[u8], bits: u8, n: usize) -> Vec<u8> {
     assert!((1..=8).contains(&bits));
@@ -402,6 +505,44 @@ mod tests {
             let mut window = vec![0.0f32; len];
             decode_plane_range_into(&packed, bits, &centroids, start, &mut window);
             assert_eq!(window, full[start..start + len]);
+        });
+    }
+
+    #[test]
+    fn bulk_unpack_range_matches_unpack_indices() {
+        check_default("bulk unpack range", |rng| {
+            let bits = 1 + rng.below_usize(8) as u8;
+            let n = 1 + rng.below_usize(300);
+            let idx: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let packed = pack_indices(&idx, bits);
+            // an arbitrary window, including ones ending at the ragged
+            // plane tail where the u64 fast path must hand off to the
+            // scalar extraction
+            let start = rng.below_usize(n);
+            let len = 1 + rng.below_usize(n - start);
+            let mut out = vec![0u8; len];
+            unpack_indices_range_into(&packed, bits, start, &mut out);
+            assert_eq!(out, idx[start..start + len]);
+        });
+    }
+
+    #[test]
+    fn tile_decode_matches_range_decode() {
+        check_default("tile decode", |rng| {
+            let bits = 1 + rng.below_usize(8) as u8;
+            let n = 1 + rng.below_usize(300);
+            let k = 1usize << bits;
+            let idx: Vec<u8> = (0..n).map(|_| rng.below(k as u64) as u8).collect();
+            let centroids: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            let packed = pack_indices(&idx, bits);
+            let start = rng.below_usize(n);
+            let len = 1 + rng.below_usize(n - start);
+            let mut want = vec![0.0f32; len];
+            decode_plane_range_into(&packed, bits, &centroids, start, &mut want);
+            let mut got = vec![0.0f32; len];
+            decode_plane_tile_into(&packed, bits, &centroids, start, &mut got);
+            // same indices, same gather: bit-identical, not just close
+            assert_eq!(got, want);
         });
     }
 

@@ -161,6 +161,24 @@ impl Bench {
         self.samples.push(s);
     }
 
+    /// Attach an extra numeric key to the most recent sample (rendered
+    /// verbatim into its JSON cell; the gate ignores keys it doesn't
+    /// know, so extras never break an old baseline).
+    pub fn annotate(&mut self, key: &str, value: f64) {
+        let s = self.samples.last_mut().expect("annotate before any sample");
+        s.extra.push((key.to_string(), value));
+    }
+
+    /// Attach a throughput extra derived from the most recent sample's
+    /// measured median: `units_per_iter / median_seconds`. This is how the
+    /// kernel benches emit `bytes_decoded_per_s` and `tok_s` so the CI
+    /// gate can track kernel throughput directly, not just wall time.
+    pub fn annotate_rate(&mut self, key: &str, units_per_iter: f64) {
+        let s = self.samples.last_mut().expect("annotate_rate before any sample");
+        let rate = units_per_iter / (s.median_ns * 1e-9);
+        s.extra.push((key.to_string(), rate));
+    }
+
     /// Write accumulated samples to the CSV log and the tracked
     /// `BENCH_<group>.json` at the repo root.
     pub fn finish(self) {
@@ -587,6 +605,26 @@ mod tests {
         });
         assert!(b.samples[0].median_ns > 0.0);
         assert!(b.samples[0].iters > 0);
+    }
+
+    #[test]
+    fn annotate_attaches_extras_to_last_sample() {
+        let mut b = Bench::new("selftest");
+        b.cfg =
+            BenchConfig { measure: Duration::from_millis(10), warmup: Duration::from_millis(2) };
+        let mut acc = 0u64;
+        b.run("work", || {
+            acc = acc.wrapping_add(black_box(1));
+        });
+        b.annotate("tok_s", 123.0);
+        b.annotate_rate("bytes_decoded_per_s", 1e6);
+        let s = &b.samples[0];
+        assert_eq!(s.extra[0], ("tok_s".to_string(), 123.0));
+        let (ref k, rate) = s.extra[1];
+        assert_eq!(k, "bytes_decoded_per_s");
+        // 1e6 units per iteration over the measured median
+        let want = 1e6 / (s.median_ns * 1e-9);
+        assert!((rate - want).abs() <= 1e-6 * want, "{rate} vs {want}");
     }
 
     #[test]

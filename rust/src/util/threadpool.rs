@@ -184,32 +184,14 @@ impl ThreadPool {
         self.workers
     }
 
-    /// Run `n_jobs` indexed closures across the pool and wait for all.
-    /// Results are returned in job order. The submitting thread executes
-    /// jobs too, and a `run` issued from *inside* a pool job executes
-    /// inline (the nested-dispatch case that would otherwise deadlock on
-    /// the submit lock), so the call cannot hang on a busy pool.
-    pub fn run<T, F>(&self, n_jobs: usize, job: F) -> Vec<T>
-    where
-        T: Send,
-        F: Fn(usize) -> T + Sync,
-    {
-        if n_jobs == 0 {
-            return Vec::new();
-        }
-        if n_jobs == 1 || self.handles.is_empty() || IN_POOL_JOB.with(Cell::get) {
-            return (0..n_jobs).map(&job).collect();
-        }
-
-        let results: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
-        let wrapper = |i: usize| {
-            let out = job(i);
-            *results[i].lock().unwrap() = Some(out);
-        };
-        let erased: &(dyn Fn(usize) + Sync) = &wrapper;
+    /// Publish a lifetime-erased task, contribute the submitting thread as
+    /// the last parallel lane, and block until every job index retires —
+    /// the dispatch core shared by [`Self::run`] and [`Self::run_units`].
+    fn dispatch(&self, erased: &(dyn Fn(usize) + Sync), n_jobs: usize) {
         // SAFETY: lifetime erasure to 'static; sound because this function
-        // waits for outstanding == 0 before `wrapper` (and everything it
-        // borrows) goes out of scope — see the Task contract.
+        // waits for outstanding == 0 before returning, so the pointee (and
+        // everything it borrows) outlives every call — see the Task
+        // contract.
         let job_ptr: *const (dyn Fn(usize) + Sync) = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(erased)
         };
@@ -246,11 +228,57 @@ impl ThreadPool {
         if let Some(payload) = panic {
             std::panic::resume_unwind(payload);
         }
+    }
+
+    /// Run `n_jobs` indexed closures across the pool and wait for all.
+    /// Results are returned in job order. The submitting thread executes
+    /// jobs too, and a `run` issued from *inside* a pool job executes
+    /// inline (the nested-dispatch case that would otherwise deadlock on
+    /// the submit lock), so the call cannot hang on a busy pool.
+    pub fn run<T, F>(&self, n_jobs: usize, job: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n_jobs == 0 {
+            return Vec::new();
+        }
+        if n_jobs == 1 || self.handles.is_empty() || IN_POOL_JOB.with(Cell::get) {
+            return (0..n_jobs).map(&job).collect();
+        }
+
+        let results: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
+        let wrapper = |i: usize| {
+            let out = job(i);
+            *results[i].lock().unwrap() = Some(out);
+        };
+        self.dispatch(&wrapper, n_jobs);
 
         results
             .into_iter()
             .map(|m| m.into_inner().unwrap().expect("job did not produce a result"))
             .collect()
+    }
+
+    /// [`Self::run`] for jobs that produce no results: skips the per-call
+    /// results vector, so a dispatch performs **no heap allocation** —
+    /// what the serving hot path (`model/linear.rs::run_row_sharded`)
+    /// needs to keep steady-state decode allocation-free. Same inline
+    /// fallbacks and panic propagation as `run`.
+    pub fn run_units<F>(&self, n_jobs: usize, job: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n_jobs == 0 {
+            return;
+        }
+        if n_jobs == 1 || self.handles.is_empty() || IN_POOL_JOB.with(Cell::get) {
+            for i in 0..n_jobs {
+                job(i);
+            }
+            return;
+        }
+        self.dispatch(&job, n_jobs);
     }
 
     /// Parallel map over a slice.
@@ -415,6 +443,41 @@ mod tests {
             pool.run(3, move |j| i * 10 + j).iter().sum::<usize>()
         });
         assert_eq!(out, vec![3, 33, 63, 93]);
+    }
+
+    #[test]
+    fn run_units_runs_every_job_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_units(100, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "job {i}");
+        }
+        // zero and single-job fast paths
+        pool.run_units(0, |_| panic!("no jobs to run"));
+        let once = AtomicUsize::new(0);
+        pool.run_units(1, |_| {
+            once.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(once.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn run_units_propagates_panics() {
+        let pool = ThreadPool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_units(16, |i| {
+                if i == 3 {
+                    panic!("unit job 3 failed");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // pool still usable afterwards
+        let out = pool.run(4, |i| i);
+        assert_eq!(out, vec![0, 1, 2, 3]);
     }
 
     #[test]

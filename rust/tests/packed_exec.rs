@@ -3,7 +3,7 @@
 //! arbitrary bit maps, outlier reservations, and AWQ scales, and the f16
 //! container codec must honor IEEE 754 binary16 edge cases.
 
-use claq::model::linear::{LinearOp, PackedLinear};
+use claq::model::linear::{LinearOp, LinearScratch, PackedLinear};
 use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan, QuantizedMatrix};
 use claq::quant::packed::{f16_bits_to_f32, f32_to_f16_bits, pack};
 use claq::tensor::Matrix;
@@ -31,7 +31,7 @@ fn random_quantized(rng: &mut Rng, with_outliers: bool) -> (Matrix, QuantizedMat
 
 fn dense_forward(deq: &Matrix, x: &[f32], seq: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; seq * deq.rows];
-    let mut scratch = Vec::new();
+    let mut scratch = LinearScratch::new();
     deq.forward_into(x, seq, &mut out, &mut scratch);
     out
 }
@@ -59,7 +59,7 @@ fn prop_packed_matches_dense_dequant() {
             rng.fill_normal(&mut x, 1.0);
             let want = dense_forward(&deq, &x, seq);
             let mut got = vec![0.0f32; seq * qm.rows];
-            let mut scratch = Vec::new();
+            let mut scratch = LinearScratch::new();
             packed.forward_into(&x, seq, &mut got, &mut scratch);
             assert_close(&got, &want, 1e-5);
         });
@@ -86,7 +86,7 @@ fn prop_packed_matches_dense_with_awq_scales() {
         rng.fill_normal(&mut x, 1.0);
         let want = dense_forward(&deq, &x, seq);
         let mut got = vec![0.0f32; seq * qm.rows];
-        let mut scratch = Vec::new();
+        let mut scratch = LinearScratch::new();
         packed.forward_into(&x, seq, &mut got, &mut scratch);
         assert_close(&got, &want, 1e-5);
     });
@@ -105,7 +105,7 @@ fn prop_container_backend_matches_unpacked_dense() {
         rng.fill_normal(&mut x, 1.0);
         let want = dense_forward(&deq, &x, 1);
         let mut got = vec![0.0f32; qm.rows];
-        let mut scratch = Vec::new();
+        let mut scratch = LinearScratch::new();
         packed.forward_into(&x, 1, &mut got, &mut scratch);
         assert_close(&got, &want, 1e-5);
     });

@@ -1,0 +1,182 @@
+//! Property suite for the tiled LUT-blocked gather kernel: sweeps bit
+//! widths {2,3,4} × f32/f16 (container) codebooks × outlier reservations ×
+//! ragged shapes and checks the renegotiated accumulation contract —
+//! tiled vs scalar agree to tolerance (different fixed combine trees),
+//! while everything the serving stack's bit-identity properties rest on
+//! (serial vs sharded vs batched, and repeated runs) stays exactly
+//! bit-identical under the tiled kernel.
+
+use claq::model::exec::{decode_step, prefill, ExecState, KvCache};
+use claq::model::linear::{KernelKind, LinearOp, LinearScratch, PackedLinear};
+use claq::model::quantized::QuantizedModel;
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::Method;
+use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan, QuantizedMatrix};
+use claq::quant::packed::pack;
+use claq::tensor::Matrix;
+use claq::util::proptest::{check, gen_column, Config};
+use claq::util::rng::Rng;
+
+/// Random ragged-shaped quantized matrix: bits 2..=4 per column, optional
+/// outlier reservations, rows/cols chosen to land on and off the COL_TILE
+/// and byte boundaries the bulk unpacker special-cases.
+fn random_quantized(rng: &mut Rng, with_outliers: bool) -> QuantizedMatrix {
+    let rows = 3 + rng.below_usize(62); // 3..=64: crosses u64-window tails
+    let cols = 1 + rng.below_usize(23); // 1..=23: ragged vs COL_TILE=4
+    let mut w = Matrix::zeros(rows, cols);
+    for c in 0..cols {
+        let col = gen_column(rng, rows, 0.05);
+        w.set_col(c, &col);
+    }
+    let mut plan = MatrixPlan::uniform(cols, 2, CentroidRule::KMeans, false);
+    for c in 0..cols {
+        plan.bits[c] = 2 + rng.below_usize(3) as u8; // 2..=4 bits
+    }
+    if with_outliers {
+        plan.reserve = (0..cols).map(|_| rng.below_usize(3)).collect();
+    }
+    quantize_matrix(&w, None, &plan)
+}
+
+fn forward(lin: &PackedLinear, x: &[f32], seq: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; seq * lin.out_features()];
+    let mut scratch = LinearScratch::new();
+    lin.forward_into(x, seq, &mut out, &mut scratch);
+    out
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+    for (a, b) in got.iter().zip(want) {
+        assert!((a - b).abs() <= tol * (1.0 + b.abs()), "tiled {a} vs scalar {b} (tol {tol})");
+    }
+}
+
+/// Tiled == scalar to tolerance for f32 codebooks, with and without
+/// outlier columns, over random ragged shapes and batch sizes.
+#[test]
+fn prop_tiled_matches_scalar_f32_codebooks() {
+    for (seed, with_outliers) in [(601u64, false), (602, true)] {
+        check("tiled vs scalar f32", Config { cases: 32, seed }, move |rng| {
+            let qm = random_quantized(rng, with_outliers);
+            let scalar = PackedLinear::from_quantized(&qm, None).with_kernel(KernelKind::Scalar);
+            let tiled = PackedLinear::from_quantized(&qm, None).with_kernel(KernelKind::Tiled);
+            let seq = 1 + rng.below_usize(5);
+            let mut x = vec![0.0f32; seq * qm.cols];
+            rng.fill_normal(&mut x, 1.0);
+            assert_close(&forward(&tiled, &x, seq), &forward(&scalar, &x, seq), 1e-5);
+        });
+    }
+}
+
+/// Same property through the serialized container, so the codebooks the
+/// kernels gather from are f16-rounded — and with AWQ scales folded in.
+#[test]
+fn prop_tiled_matches_scalar_f16_container_and_awq() {
+    check("tiled vs scalar f16+awq", Config { cases: 24, seed: 603 }, |rng| {
+        let qm = random_quantized(rng, true);
+        let scales: Vec<f32> = (0..qm.cols).map(|_| 0.5 + 1.5 * rng.next_f32()).collect();
+        let (pm, _) = pack(&qm).unwrap();
+        let scalar = PackedLinear::from_container(&pm, Some(&scales))
+            .unwrap()
+            .with_kernel(KernelKind::Scalar);
+        let tiled = PackedLinear::from_container(&pm, Some(&scales))
+            .unwrap()
+            .with_kernel(KernelKind::Tiled);
+        let seq = 1 + rng.below_usize(4);
+        let mut x = vec![0.0f32; seq * qm.cols];
+        rng.fill_normal(&mut x, 1.0);
+        assert_close(&forward(&tiled, &x, seq), &forward(&scalar, &x, seq), 1e-5);
+    });
+}
+
+/// The tiled kernel's bit-identity contract: batched output equals
+/// token-at-a-time output EXACTLY (`assert_eq!`), including shapes large
+/// enough to cross the parallel row-sharding threshold — the accumulation
+/// order for each output element is a function of `cols` alone, never of
+/// seq, shard count, or which path ran.
+#[test]
+fn prop_tiled_batched_and_sharded_bit_identical_to_serial() {
+    check("tiled bit identity", Config { cases: 12, seed: 604 }, |rng| {
+        // big enough that seq·rows·cols crosses PAR_MIN_MACS on most draws
+        let rows = 96 + rng.below_usize(96);
+        let cols = 32 + rng.below_usize(64);
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.1);
+        let mut plan = MatrixPlan::uniform(cols, 3, CentroidRule::KMeans, false);
+        plan.reserve = vec![1; cols];
+        let qm = quantize_matrix(&w, None, &plan);
+        let tiled = PackedLinear::from_quantized(&qm, None).with_kernel(KernelKind::Tiled);
+
+        let seq = 2 + rng.below_usize(7);
+        let mut x = vec![0.0f32; seq * cols];
+        rng.fill_normal(&mut x, 1.0);
+
+        // token-at-a-time reference (serial path: one row, small MACs)
+        let mut want = vec![0.0f32; seq * rows];
+        let mut scratch = LinearScratch::new();
+        for t in 0..seq {
+            let mut row_out = vec![0.0f32; rows];
+            tiled.forward_into(&x[t * cols..(t + 1) * cols], 1, &mut row_out, &mut scratch);
+            want[t * rows..(t + 1) * rows].copy_from_slice(&row_out);
+        }
+
+        let got = forward(&tiled, &x, seq);
+        assert_eq!(got, want, "tiled batched/sharded output diverged from serial");
+
+        // and the whole thing is deterministic run over run
+        assert_eq!(forward(&tiled, &x, seq), got);
+    });
+}
+
+/// End to end: a full transformer built with `to_exec_kernel` produces
+/// logits under the tiled kernel that (a) match the scalar kernel to
+/// tolerance and (b) are bit-identical between batched decode and
+/// one-cache-at-a-time decode.
+#[test]
+fn exec_model_tiled_vs_scalar_and_batch_invariance() {
+    let cfg = TransformerConfig::tiny_l();
+    let model = Model::random(cfg, &mut Rng::new(42));
+    let qm = QuantizedModel::quantize_uncalibrated(&model, &Method::fusion_2_12());
+    let scalar = qm.to_exec_kernel(KernelKind::Scalar);
+    let tiled = qm.to_exec_kernel(KernelKind::Tiled);
+    let prompt: Vec<u16> = (0..12u16).map(|i| (i * 5) % cfg.vocab as u16).collect();
+
+    // (a) tolerance agreement of full-model logits
+    let mut st_s = ExecState::new(cfg);
+    let mut st_t = ExecState::new(cfg);
+    let mut cache_s = KvCache::new(&cfg);
+    let mut cache_t = KvCache::new(&cfg);
+    let logits_s = prefill(&scalar, &mut cache_s, &prompt, &mut st_s);
+    let logits_t = prefill(&tiled, &mut cache_t, &prompt, &mut st_t);
+    for (a, b) in logits_t.data.iter().zip(&logits_s.data) {
+        assert!(a.is_finite() && (a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+
+    // (b) batched decode == per-cache decode, bit-identical, under tiled
+    let batch = 3usize;
+    let toks: Vec<u16> = (0..batch as u16).map(|i| (i * 11 + 1) % cfg.vocab as u16).collect();
+    let mut batched: Vec<KvCache> = (0..batch)
+        .map(|_| {
+            let mut c = KvCache::new(&cfg);
+            let _ = prefill(&tiled, &mut c, &prompt, &mut st_t);
+            c
+        })
+        .collect();
+    let mut alone: Vec<KvCache> = (0..batch)
+        .map(|_| {
+            let mut c = KvCache::new(&cfg);
+            let _ = prefill(&tiled, &mut c, &prompt, &mut st_t);
+            c
+        })
+        .collect();
+    let mut refs: Vec<&mut KvCache> = batched.iter_mut().collect();
+    let together = decode_step(&tiled, &mut refs, &toks, &mut st_t);
+    for (i, c) in alone.iter_mut().enumerate() {
+        let one = decode_step(&tiled, &mut [c], &toks[i..i + 1], &mut st_t);
+        assert_eq!(
+            together.row(i),
+            one.row(0),
+            "tiled decode not batch-invariant at slot {i}"
+        );
+    }
+}
