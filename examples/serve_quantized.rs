@@ -11,7 +11,8 @@
 //!   cargo run --release --example serve_quantized \
 //!       [n_requests] [arrival_rate_per_s] [max_slots] [seed] \
 //!       [--checkpoint model.claq] [--save model.claq] \
-//!       [--prefix-cache] [--prefix-cache-mb MB] [--shared-prefix N]
+//!       [--prefix-cache] [--prefix-cache-mb MB] [--shared-prefix N] \
+//!       [--kv-page-tokens P] [--kv-quant-bits B]
 //!
 //! * `n_requests`        total requests in the trace        (default 32)
 //! * `arrival_rate_per_s` mean Poisson arrival rate          (default 8.0)
@@ -34,6 +35,14 @@
 //! * `--shared-prefix N` length of the shared system prefix (default 24
 //!                       under `--prefix-cache`, else 0; `0` keeps fully
 //!                       independent prompts).
+//! * `--kv-page-tokens P` tokens per KV page (default 64). Purely a
+//!                       memory-granularity knob: token streams are
+//!                       bit-identical across page sizes.
+//! * `--kv-quant-bits B` re-encode cold KV pages as B-bit k-means
+//!                       codebooks (default 0 = off). **Lossy**: with the
+//!                       prefix cache in play the cross-run agreement
+//!                       check may drop below 100%, which the report
+//!                       flags rather than asserts.
 //!
 //! Prompt lengths, generation budgets, and inter-arrival gaps are
 //! randomized per request; every policy replays the identical trace, and
@@ -80,11 +89,19 @@ struct ServeReport {
     pool_hit_rate: f64,
     pool_resident_mb: f64,
     peak_live: usize,
-    /// Prompt tokens actually prefilled / served by prefix-cache forks.
+    /// Prompt tokens actually prefilled / served by prefix-page sharing.
     prefill_in: u64,
     prefill_saved: u64,
     prefix_hits: u64,
     prefix_lookups: u64,
+    /// Distinct-page KV residency high-water mark (each shared page once).
+    peak_kv_mb: f64,
+    /// What `peak_live` contiguous full-context caches would have held.
+    contiguous_kv_mb: f64,
+    /// KV bytes prefix hits shared instead of memcpying.
+    shared_saved_mb: f64,
+    /// Pages re-encoded by cold-page quantization over the run.
+    kv_pages_quantized: u64,
     /// id → generated tokens, for the cross-policy agreement check.
     outputs: Vec<(u64, Vec<u16>)>,
 }
@@ -111,6 +128,8 @@ fn serve_trace(
     max_slots: usize,
     policy: AdmissionPolicy,
     prefix_cache_bytes: usize,
+    kv_page_tokens: usize,
+    kv_quant_bits: u8,
     label: &'static str,
 ) -> ServeReport {
     let mut st = ExecState::new(model.config);
@@ -121,6 +140,9 @@ fn serve_trace(
             prefill_token_budget: 2 * model.config.max_seq,
             policy,
             prefix_cache_bytes,
+            kv_page_tokens,
+            kv_quant_bits,
+            ..SchedulerConfig::default()
         },
     );
     let mut arrival_by_id = vec![0.0f64; trace.len()];
@@ -179,6 +201,13 @@ fn serve_trace(
         prefill_saved: stats.prefill_tokens_saved,
         prefix_hits: stats.prefix_hits,
         prefix_lookups: stats.prefix_lookups,
+        peak_kv_mb: stats.peak_kv_resident_bytes as f64 / 1e6,
+        contiguous_kv_mb: (stats.peak_live
+            * claq::model::exec::KvCache::contiguous_bytes(&model.config))
+            as f64
+            / 1e6,
+        shared_saved_mb: stats.shared_kv_bytes_saved as f64 / 1e6,
+        kv_pages_quantized: stats.kv_pages_quantized_total,
         outputs,
     }
 }
@@ -206,10 +235,15 @@ fn print_report(r: &ServeReport) {
         l99 * 1e3
     );
     println!(
-        "  peak live batch: {}   kv-pool hit rate: {:.0}%   pooled: {:.2} MB",
+        "  peak live batch: {}   kv-page-pool hit rate: {:.0}%   pooled: {:.2} MB",
         r.peak_live,
         r.pool_hit_rate * 100.0,
         r.pool_resident_mb
+    );
+    println!(
+        "  kv pages: peak {:.2} MB resident vs {:.2} MB contiguous equivalent, \
+         {} quantized, {:.2} MB copy saved by sharing",
+        r.peak_kv_mb, r.contiguous_kv_mb, r.kv_pages_quantized, r.shared_saved_mb
     );
     if r.prefix_lookups > 0 {
         let n = r.outputs.len().max(1) as f64;
@@ -233,6 +267,8 @@ fn main() -> anyhow::Result<()> {
     let mut prefix_cache = false;
     let mut prefix_cache_mb: f64 = 64.0;
     let mut shared_prefix: Option<usize> = None;
+    let mut kv_page_tokens: usize = claq::model::exec::DEFAULT_PAGE_TOKENS;
+    let mut kv_quant_bits: u8 = 0;
     let mut pos: Vec<String> = Vec::new();
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -256,6 +292,18 @@ fn main() -> anyhow::Result<()> {
                         .and_then(|v| v.parse().ok())
                         .expect("--shared-prefix expects a token count"),
                 )
+            }
+            "--kv-page-tokens" => {
+                kv_page_tokens = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--kv-page-tokens expects a token count");
+            }
+            "--kv-quant-bits" => {
+                kv_quant_bits = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--kv-quant-bits expects 0..=8");
             }
             _ => pos.push(a),
         }
@@ -379,10 +427,26 @@ fn main() -> anyhow::Result<()> {
         n_requests, rate, shared_prefix, max_slots
     );
 
-    let cont =
-        serve_trace(&packed, &trace, max_slots, AdmissionPolicy::Continuous, 0, "continuous");
-    let wave =
-        serve_trace(&packed, &trace, max_slots, AdmissionPolicy::Wave, 0, "lockstep-wave");
+    let cont = serve_trace(
+        &packed,
+        &trace,
+        max_slots,
+        AdmissionPolicy::Continuous,
+        0,
+        kv_page_tokens,
+        kv_quant_bits,
+        "continuous",
+    );
+    let wave = serve_trace(
+        &packed,
+        &trace,
+        max_slots,
+        AdmissionPolicy::Wave,
+        0,
+        kv_page_tokens,
+        kv_quant_bits,
+        "lockstep-wave",
+    );
     print_report(&cont);
     print_report(&wave);
 
@@ -394,6 +458,8 @@ fn main() -> anyhow::Result<()> {
             max_slots,
             AdmissionPolicy::Continuous,
             budget.max(1),
+            kv_page_tokens,
+            kv_quant_bits,
             "continuous+prefix-cache",
         )
     });
@@ -414,7 +480,16 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Batch invariance across policies — and bit-identical prefix reuse
-    // when the cache ran: identical token streams everywhere.
+    // when the cache ran: identical token streams everywhere. With
+    // --kv-quant-bits, sharing changes *which* pages are cold-quantized
+    // (shared pages are skipped), so the cached run is tolerance-level
+    // only and its agreement count may legitimately dip.
+    if kv_quant_bits > 0 {
+        println!(
+            "\n(kv quantization at {kv_quant_bits} bits is lossy: agreement below is \
+             informational, not a bit-identity check)"
+        );
+    }
     let mut runs: Vec<&ServeReport> = vec![&cont, &wave];
     if let Some(c) = &cached {
         runs.push(c);

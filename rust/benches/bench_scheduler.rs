@@ -16,9 +16,16 @@
 //! the prefill-compute reduction at equal output is tracked run over run).
 //! Every cell additionally carries `tok_s` and `bytes_decoded_per_s`
 //! extras — generation throughput and the lower-bound decoded-LUT
-//! bandwidth through the fused gather kernel selected by `CLAQ_KERNEL`.
+//! bandwidth through the fused gather kernel selected by `CLAQ_KERNEL` —
+//! plus paged-KV accounting: `kv_resident_bytes_per_req` (distinct pages,
+//! shared pages counted once, at the resident high-water mark) against
+//! `contiguous_kv_bytes_per_req` (what the pre-paging per-request
+//! max-seq buffer cost), and `shared_kv_bytes_saved` (KV bytes a prefix
+//! hit would have memcpy'd before page sharing — zero bytes are copied
+//! now). A `kvq=8` shared-prefix cell runs with cold-page KV
+//! quantization on; it is lossy by design, so no token-equality assert.
 
-use claq::model::exec::{ExecModel, ExecState};
+use claq::model::exec::{ExecModel, ExecState, KvCache};
 use claq::model::linear::KernelKind;
 use claq::model::quantized::QuantizedModel;
 use claq::model::{Model, TransformerConfig};
@@ -53,6 +60,9 @@ fn run_scenario(
     slots: usize,
     policy: AdmissionPolicy,
     prefix_cache_bytes: usize,
+    // (page_tokens, quant_bits, quant_margin); (0, 0, _) = default pages,
+    // quantization off.
+    kv: (usize, u8, usize),
 ) -> ScenarioResult {
     let mut st = ExecState::new(model.config);
     let mut sched = Scheduler::new(
@@ -62,6 +72,10 @@ fn run_scenario(
             prefill_token_budget: 2 * model.config.max_seq,
             policy,
             prefix_cache_bytes,
+            kv_page_tokens: kv.0,
+            kv_quant_bits: kv.1,
+            kv_quant_margin: kv.2,
+            ..SchedulerConfig::default()
         },
     );
     let mut completions = Vec::new();
@@ -124,7 +138,12 @@ fn run_scenario(
 /// One JSON cell: total scenario wall time over generated tokens, so
 /// `ns_per_elem` is ns per generated token — comparable with the decode
 /// bench rows.
-fn sample(name: &str, r: &ScenarioResult, plane_bytes_per_step: f64) -> Sample {
+fn sample(
+    name: &str,
+    r: &ScenarioResult,
+    plane_bytes_per_step: f64,
+    contiguous_kv_bytes: f64,
+) -> Sample {
     let per_req = |x: u64| x as f64 / r.requests as f64;
     let wall_s = r.wall_ns * 1e-9;
     // Lower-bound decoded-LUT bandwidth: every working engine step runs at
@@ -132,6 +151,11 @@ fn sample(name: &str, r: &ScenarioResult, plane_bytes_per_step: f64) -> Sample {
     // plane set once (prefill sub-steps in the same engine step add more,
     // so the true figure is ≥ this).
     let bytes_decoded_per_s = r.engine_steps as f64 * plane_bytes_per_step / wall_s;
+    // Distinct-page residency at the high-water mark, amortised over the
+    // concurrent requests live at that point; contrast with what a
+    // contiguous max-seq buffer per request would have pinned.
+    let kv_resident_per_req =
+        r.stats.peak_kv_resident_bytes as f64 / r.stats.peak_live.max(1) as f64;
     Sample {
         name: name.to_string(),
         iters: 1,
@@ -147,6 +171,10 @@ fn sample(name: &str, r: &ScenarioResult, plane_bytes_per_step: f64) -> Sample {
             ("prefix_hits".into(), r.stats.prefix_hits as f64),
             ("tok_s".into(), r.tok_per_s),
             ("bytes_decoded_per_s".into(), bytes_decoded_per_s),
+            ("kv_resident_bytes_per_req".into(), kv_resident_per_req),
+            ("contiguous_kv_bytes_per_req".into(), contiguous_kv_bytes),
+            ("shared_kv_bytes_saved".into(), r.stats.shared_kv_bytes_saved as f64),
+            ("kv_pages_quantized".into(), r.stats.kv_pages_quantized_total as f64),
         ],
     }
 }
@@ -158,6 +186,7 @@ fn main() {
     let packed =
         QuantizedModel::quantize_uncalibrated(&model, &Method::fusion_2_12()).to_exec();
     let plane_bytes = packed.decoded_plane_bytes_per_step() as f64;
+    let contiguous_kv = KvCache::contiguous_bytes(&cfg) as f64;
     println!(
         "== bench group: scheduler ==  (packed backend, {} gather kernel, {} kernel threads{})",
         KernelKind::from_env().name(),
@@ -187,8 +216,9 @@ fn main() {
             ));
         }
 
-        let cont = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous, 0);
-        let wave = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Wave, 0);
+        let cont =
+            run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous, 0, (0, 0, 0));
+        let wave = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Wave, 0, (0, 0, 0));
         println!(
             "concurrency {conc:>2}: continuous {:>8.0} tok/s (ttft p50 {:>6.1} ms, tok p99 {:>6.2} ms)",
             cont.tok_per_s, cont.ttft_p50_ms, cont.tok_p99_ms
@@ -207,7 +237,7 @@ fn main() {
             csv_rows.push(format!(
                 "scheduler,{policy} conc={conc},{ns_per_tok:.1},0.0,{ns_per_tok:.1},1"
             ));
-            samples.push(sample(&format!("{policy} conc={conc}"), r, plane_bytes));
+            samples.push(sample(&format!("{policy} conc={conc}"), r, plane_bytes, contiguous_kv));
         }
     }
 
@@ -231,24 +261,63 @@ fn main() {
         // before the trace ends, so later admissions can hit
         arrivals.push((3 * i, Request { prompt, max_new_tokens: max_new, stop_token: None }));
     }
-    let cold = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous, 0);
-    let warm = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous, 64 << 20);
+    let cold =
+        run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous, 0, (0, 0, 0));
+    let warm = run_scenario(
+        &packed,
+        &arrivals,
+        conc,
+        AdmissionPolicy::Continuous,
+        64 << 20,
+        (0, 0, 0),
+    );
     assert_eq!(cold.outputs, warm.outputs, "prefix cache changed token streams");
     assert!(warm.stats.prefix_hits > 0, "shared-prefix trace produced no prefix hits");
-    for (label, r) in [("cache=off", &cold), ("cache=on", &warm)] {
+    // Page sharing means a hit is O(pages) refcount bumps: the bytes the
+    // old contiguous fork memcpy'd are now *saved*, and no stat anywhere
+    // counts a KV copy on the hit path.
+    assert!(
+        warm.stats.shared_kv_bytes_saved > 0,
+        "prefix hits should report KV bytes saved by page sharing"
+    );
+    // Cold-page KV quantization on top of the same trace: lossy by
+    // design (tolerance-gated in tests/paged_kv.rs), so throughput and
+    // residency are tracked but token streams are NOT asserted equal.
+    // 16-token pages + 16-token margin make pages actually go cold at
+    // this trace's sequence lengths (≤ ~60 of max_seq 128).
+    let kvq = run_scenario(
+        &packed,
+        &arrivals,
+        conc,
+        AdmissionPolicy::Continuous,
+        64 << 20,
+        (16, 8, 16),
+    );
+    assert!(
+        kvq.stats.kv_pages_quantized_total > 0,
+        "quantized-KV cell re-encoded no cold pages"
+    );
+    for (label, r) in [("cache=off", &cold), ("cache=on", &warm), ("cache=on kvq=8", &kvq)] {
         println!(
             "shared-prefix conc={conc} {label}: {:>8.0} tok/s, prefill in/req {:>5.1}, \
-             saved/req {:>5.1}, hits {}",
+             saved/req {:>5.1}, hits {}, kv peak/req {:.1} KB (contiguous {:.1} KB)",
             r.tok_per_s,
             r.stats.prefill_tokens_in as f64 / r.requests as f64,
             r.stats.prefill_tokens_saved as f64 / r.requests as f64,
-            r.stats.prefix_hits
+            r.stats.prefix_hits,
+            r.stats.peak_kv_resident_bytes as f64 / r.stats.peak_live.max(1) as f64 / 1024.0,
+            contiguous_kv / 1024.0,
         );
         let ns_per_tok = 1e9 / r.tok_per_s;
         csv_rows.push(format!(
             "scheduler,sharedprefix conc={conc} {label},{ns_per_tok:.1},0.0,{ns_per_tok:.1},1"
         ));
-        samples.push(sample(&format!("sharedprefix conc={conc} {label}"), r, plane_bytes));
+        samples.push(sample(
+            &format!("sharedprefix conc={conc} {label}"),
+            r,
+            plane_bytes,
+            contiguous_kv,
+        ));
     }
 
     append_csv(&csv_rows);

@@ -6,9 +6,12 @@
 //! and LM head stay FP, as in the paper). On top of it sits the
 //! incremental decode path the scoring-only harness never needed:
 //!
-//! * [`KvCache`] — per-request key/value cache (n_layers × max_seq × d).
-//! * [`KvCachePool`] — recycling allocator for caches, so steady-state
-//!   serving does zero large allocations (the scheduler's cache source).
+//! * [`KvCache`] — per-request key/value cache, held as a table of
+//!   refcounted fixed-size pages ([`KvPageBuf`], default
+//!   [`DEFAULT_PAGE_TOKENS`] tokens) so prefix hits share pages
+//!   copy-on-write and cold pages can be k-means-quantized in place.
+//! * [`KvPagePool`] — recycling page allocator, so steady-state serving
+//!   does zero large allocations (the scheduler's page source).
 //! * [`prefill`] — run a prompt chunk once, populating the cache and
 //!   returning logits for every prompt position.
 //! * [`decode_step`] — advance a *batch* of requests by one token each,
@@ -28,8 +31,10 @@ use super::checkpoint::Checkpoint;
 use super::forward::{rmsnorm, rope_row, rope_tables, silu};
 use super::linear::{DenseLinear, LinearOp, LinearScratch, PackedLinear};
 use super::{MatrixId, MatrixKind, Model, TransformerConfig};
+use crate::quant::kvpage::QuantKvPage;
 use crate::tensor::Matrix;
 use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
 
 /// One decoder layer with backend-agnostic projections.
 pub struct ExecLayer {
@@ -185,27 +190,126 @@ impl ExecModel {
     }
 }
 
-/// Per-request key/value cache over all layers.
-pub struct KvCache {
-    n_layers: usize,
-    d: usize,
-    max_seq: usize,
-    len: usize,
-    /// (n_layers × max_seq × d) each.
+/// Tokens per KV page unless overridden (`SchedulerConfig::kv_page_tokens`,
+/// [`KvCache::with_page_tokens`]). Clamped to `max_seq` at construction so
+/// tiny test configs get exactly one page per sequence.
+pub const DEFAULT_PAGE_TOKENS: usize = 64;
+
+/// One f32 KV page: keys and values for `page_tokens` consecutive
+/// positions across **all** layers (`n_layers × page_tokens × d` floats
+/// each), so a single refcount covers a position range for the whole
+/// model. Within a plane, `(layer * page_tokens + slot) * d` addresses the
+/// row of `slot = pos % page_tokens`.
+pub struct KvPageBuf {
     k: Vec<f32>,
     v: Vec<f32>,
 }
 
+impl KvPageBuf {
+    fn zeroed(n_layers: usize, page_tokens: usize, d: usize) -> Self {
+        let n = n_layers * page_tokens * d;
+        Self { k: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// One entry of a cache's page table. `Clone` bumps the refcount — that is
+/// the whole point: a prefix-cache hit clones table entries instead of
+/// copying KV bytes, and writers fork copy-on-write when the count is > 1.
+#[derive(Clone)]
+enum Page {
+    /// Plain f32 page; shared (strong count > 1) after a prefix hit.
+    F32(Arc<KvPageBuf>),
+    /// Cold page re-encoded as per-page k-means codebooks
+    /// (`quant/kvpage.rs`); immutable, dequantized into scratch on read.
+    Quant(Arc<QuantKvPage>),
+}
+
+impl Page {
+    fn bytes(&self) -> usize {
+        match self {
+            Page::F32(b) => b.bytes(),
+            Page::Quant(q) => q.bytes(),
+        }
+    }
+
+    fn ptr(&self) -> usize {
+        match self {
+            Page::F32(b) => Arc::as_ptr(b) as usize,
+            Page::Quant(q) => Arc::as_ptr(q) as usize,
+        }
+    }
+
+    fn is_shared(&self) -> bool {
+        match self {
+            Page::F32(b) => Arc::strong_count(b) > 1,
+            Page::Quant(q) => Arc::strong_count(q) > 1,
+        }
+    }
+}
+
+/// Identity and size of one resident page, for the distinct-page
+/// accounting walks (`SchedulerStats` counts every shared page once by
+/// deduplicating on `ptr`).
+pub struct PageStat {
+    /// Address of the page allocation — stable for the page's lifetime.
+    pub ptr: usize,
+    /// Exact resident bytes of this page (f32 planes or quant codec).
+    pub bytes: usize,
+    /// True for k-means-encoded cold pages.
+    pub quantized: bool,
+    /// True when more than one page table references the page.
+    pub shared: bool,
+}
+
+/// Per-request key/value cache over all layers, held as a table of
+/// refcounted fixed-size pages instead of one contiguous buffer.
+///
+/// * Pages are allocated lazily: a fresh cache owns no memory, and
+///   standalone callers ([`prefill`]/[`decode_step`] outside the
+///   scheduler) grow the table automatically. The serving path reserves
+///   pages from the [`KvPagePool`] instead ([`KvCache::reserve`]), so
+///   steady-state serving allocates nothing.
+/// * A prefix-cache hit [`share_prefix_from`](KvCache::share_prefix_from)s
+///   the source's pages — O(pages) `Arc` clones, zero KV bytes copied.
+///   The only page that can ever need copying is a *partial* tail page,
+///   and it is forked lazily, the first time the new request appends into
+///   it (copy-on-write; full shared pages are never copied).
+/// * Pages that fall behind the decode head can be re-encoded as per-page
+///   k-means codebooks ([`quantize_cold_pages`](KvCache::quantize_cold_pages));
+///   reads dequantize into `ExecState` scratch.
+///
+/// Invariant: `pages.len()` is between `ceil(len / page_tokens)` and
+/// `ceil(max_seq / page_tokens)`; only the slots below `len` hold defined
+/// data (recycled pool pages are not zeroed — every slot is written before
+/// it is read).
+pub struct KvCache {
+    n_layers: usize,
+    d: usize,
+    max_seq: usize,
+    page_tokens: usize,
+    len: usize,
+    pages: Vec<Page>,
+}
+
 impl KvCache {
+    /// Empty cache with the default page size (no memory allocated yet).
     pub fn new(cfg: &TransformerConfig) -> Self {
-        let n = cfg.n_layers * cfg.max_seq * cfg.d_model;
+        Self::with_page_tokens(cfg, DEFAULT_PAGE_TOKENS)
+    }
+
+    /// Empty cache with `page_tokens`-token pages (clamped to `1..=max_seq`).
+    pub fn with_page_tokens(cfg: &TransformerConfig, page_tokens: usize) -> Self {
         Self {
             n_layers: cfg.n_layers,
             d: cfg.d_model,
             max_seq: cfg.max_seq,
+            page_tokens: page_tokens.max(1).min(cfg.max_seq.max(1)),
             len: 0,
-            k: vec![0.0; n],
-            v: vec![0.0; n],
+            pages: Vec::new(),
         }
     }
 
@@ -223,159 +327,405 @@ impl KvCache {
         self.max_seq
     }
 
-    /// Drop all cached positions (start a fresh sequence).
+    /// Tokens per page of this cache's table.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Bytes of one full f32 page of this geometry.
+    pub fn page_bytes(&self) -> usize {
+        2 * self.n_layers * self.page_tokens * self.d * std::mem::size_of::<f32>()
+    }
+
+    /// f32 KV bytes of one cached position across all layers — the unit of
+    /// the `shared_kv_bytes_saved` accounting (what the pre-paging
+    /// `copy_prefix_from` memcpy moved per prefix token).
+    pub fn token_bytes(&self) -> usize {
+        2 * self.n_layers * self.d * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes a pre-paging contiguous cache held for `cfg`: the
+    /// full-context f32 allocation every request used to pin regardless of
+    /// its actual length. Benches report paged residency against this.
+    pub fn contiguous_bytes(cfg: &TransformerConfig) -> usize {
+        2 * cfg.n_layers * cfg.max_seq * cfg.d_model * std::mem::size_of::<f32>()
+    }
+
+    /// Drop all cached positions *and* the page table (start a fresh
+    /// sequence). Pages this cache exclusively owned are freed; use
+    /// [`KvPagePool::put_cache`] instead to recycle them.
     pub fn reset(&mut self) {
         self.len = 0;
+        self.pages.clear();
     }
 
     /// Roll back to the first `len` positions (e.g. re-decode from a
-    /// shared prefix).
+    /// shared prefix), dropping pages that fall wholly beyond it.
     pub fn truncate(&mut self, len: usize) {
         assert!(len <= self.len, "truncate beyond cached length");
         self.len = len;
+        self.pages.truncate(len.div_ceil(self.page_tokens));
     }
 
-    /// Clone the first `len` cached positions of `src` into a new cache.
-    /// K/V rows of a position depend only on the tokens at or before it,
-    /// so a fork at `len` is bit-identical to a cold prefill of those
-    /// `len` tokens — the property the prefix-sharing cache
-    /// (`runtime/prefix_cache.rs`) is built on. Serving paths should
-    /// prefer [`copy_prefix_from`](KvCache::copy_prefix_from) onto a
-    /// pooled cache to avoid the allocation.
+    /// [`truncate`](KvCache::truncate), releasing dropped pages into
+    /// `pool` instead of freeing them (the prefix cache's insert path).
+    pub fn truncate_into(&mut self, len: usize, pool: &mut KvPagePool) {
+        assert!(len <= self.len, "truncate beyond cached length");
+        self.len = len;
+        let keep = len.div_ceil(self.page_tokens);
+        for page in self.pages.drain(keep..).collect::<Vec<_>>() {
+            pool.release(page);
+        }
+    }
+
+    /// Become a fork of the first `len` positions of `src` by cloning its
+    /// page table entries — O(pages) refcount bumps, **zero KV bytes
+    /// copied**. K/V rows of a position depend only on the tokens at or
+    /// before it, so reads through the shared pages are bit-identical to a
+    /// cold prefill of those `len` tokens (the prefix-sharing cache's
+    /// foundation, DESIGN.md §13). Any pages this cache previously held
+    /// are dropped; call on pool shells or pass a pool via
+    /// [`reserve`](KvCache::reserve) before appending.
+    pub fn share_prefix_from(&mut self, src: &KvCache, len: usize) {
+        assert!(len <= src.len, "fork beyond source length ({len} > {})", src.len);
+        assert!(
+            self.n_layers == src.n_layers
+                && self.d == src.d
+                && self.max_seq == src.max_seq
+                && self.page_tokens == src.page_tokens,
+            "fork between caches of different geometries"
+        );
+        self.pages.clear();
+        self.pages.extend_from_slice(&src.pages[..len.div_ceil(self.page_tokens)]);
+        self.len = len;
+    }
+
+    /// Clone-by-sharing the first `len` positions of `src` into a new
+    /// cache (allocation-free aside from the table itself).
     pub fn fork_from(src: &KvCache, len: usize) -> KvCache {
         let mut cache = KvCache {
             n_layers: src.n_layers,
             d: src.d,
             max_seq: src.max_seq,
+            page_tokens: src.page_tokens,
             len: 0,
-            k: vec![0.0; src.k.len()],
-            v: vec![0.0; src.v.len()],
+            pages: Vec::new(),
         };
-        cache.copy_prefix_from(src, len);
+        cache.share_prefix_from(src, len);
         cache
     }
 
-    /// Overwrite this cache with the first `len` positions of `src` and
-    /// set the length to `len` — the allocation-free fork used by the
-    /// prefix cache on pool-recycled destinations. A partial `prefill`
-    /// afterwards appends at position `len`, exactly as if the prefix had
-    /// just been prefilled here.
-    pub fn copy_prefix_from(&mut self, src: &KvCache, len: usize) {
-        assert!(len <= src.len, "fork beyond source length ({len} > {})", src.len);
-        assert!(
-            self.n_layers == src.n_layers && self.d == src.d && self.max_seq == src.max_seq,
-            "fork between caches of different configs"
-        );
-        for layer in 0..self.n_layers {
-            let base = layer * self.max_seq * self.d;
-            let n = len * self.d;
-            self.k[base..base + n].copy_from_slice(&src.k[base..base + n]);
-            self.v[base..base + n].copy_from_slice(&src.v[base..base + n]);
-        }
-        self.len = len;
-    }
-
-    /// Resident bytes of the cache buffers.
+    /// Resident bytes of every page this cache references (shared pages
+    /// count fully here; the scheduler's distinct-page walk is what
+    /// deduplicates system-wide residency).
     pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+        self.pages.iter().map(Page::bytes).sum()
     }
 
-    #[inline]
-    fn at(&self, layer: usize, pos: usize) -> usize {
-        debug_assert!(layer < self.n_layers && pos < self.max_seq);
-        (layer * self.max_seq + pos) * self.d
+    /// Walk the page table for accounting (see [`PageStat`]).
+    pub fn page_stats(&self) -> impl Iterator<Item = PageStat> + '_ {
+        self.pages.iter().map(|p| PageStat {
+            ptr: p.ptr(),
+            bytes: p.bytes(),
+            quantized: matches!(p, Page::Quant(_)),
+            shared: p.is_shared(),
+        })
     }
 
-    #[inline]
-    fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
-        let i = self.at(layer, pos);
-        &self.k[i..i + self.d]
+    /// Make positions `len .. len + n` writable: fork a shared or
+    /// quantized partial tail page copy-on-write (only the `len %
+    /// page_tokens` filled slots are copied/dequantized — the lazy-fork
+    /// rule), then extend the table with fresh pages. `pool` is the page
+    /// source/sink on the serving path; `None` allocates and frees
+    /// directly (standalone callers).
+    fn ensure_appendable(&mut self, n: usize, mut pool: Option<&mut KvPagePool>) {
+        assert!(self.len + n <= self.max_seq, "append overflows KV cache ({}+{n})", self.len);
+        if n == 0 {
+            return;
+        }
+        let pt = self.page_tokens;
+        let filled = self.len % pt;
+        if filled != 0 {
+            let idx = self.len / pt;
+            let writable =
+                matches!(&self.pages[idx], Page::F32(b) if Arc::strong_count(b) == 1);
+            if !writable {
+                let mut fresh = match pool.as_deref_mut() {
+                    Some(p) => p.take_page(),
+                    None => Arc::new(KvPageBuf::zeroed(self.n_layers, pt, self.d)),
+                };
+                {
+                    let dst = Arc::get_mut(&mut fresh).expect("pages are handed out unique");
+                    let rows = filled * self.d;
+                    match &self.pages[idx] {
+                        Page::F32(src) => {
+                            for li in 0..self.n_layers {
+                                let o = li * pt * self.d;
+                                dst.k[o..o + rows].copy_from_slice(&src.k[o..o + rows]);
+                                dst.v[o..o + rows].copy_from_slice(&src.v[o..o + rows]);
+                            }
+                        }
+                        Page::Quant(q) => {
+                            for li in 0..self.n_layers {
+                                let o = li * pt * self.d;
+                                q.dequantize_k_into(o, &mut dst.k[o..o + rows]);
+                                q.dequantize_v_into(o, &mut dst.v[o..o + rows]);
+                            }
+                        }
+                    }
+                }
+                let old = std::mem::replace(&mut self.pages[idx], Page::F32(fresh));
+                match pool.as_deref_mut() {
+                    Some(p) => p.release(old),
+                    None => drop(old),
+                }
+            }
+        }
+        let needed = (self.len + n).div_ceil(pt);
+        while self.pages.len() < needed {
+            let page = match pool.as_deref_mut() {
+                Some(p) => p.take_page(),
+                None => Arc::new(KvPageBuf::zeroed(self.n_layers, pt, self.d)),
+            };
+            self.pages.push(Page::F32(page));
+        }
     }
 
-    #[inline]
-    fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
-        let i = self.at(layer, pos);
-        &self.v[i..i + self.d]
+    /// Standalone grow-before-append: called internally by [`prefill`] /
+    /// [`decode_step`], allocating directly. A no-op when the table is
+    /// already writable for `n` more positions (the serving path reserves
+    /// from the pool first, so the hot loop never lands here).
+    pub fn prepare_append(&mut self, n: usize) {
+        self.ensure_appendable(n, None);
+    }
+
+    /// Pool-backed grow-before-append: the scheduler's zero-allocation
+    /// path. Forked tails and fresh pages come from (and spill back to)
+    /// `pool`.
+    pub fn reserve(&mut self, pool: &mut KvPagePool, n: usize) {
+        assert!(
+            self.n_layers == pool.cfg.n_layers
+                && self.d == pool.cfg.d_model
+                && self.max_seq == pool.cfg.max_seq
+                && self.page_tokens == pool.page_tokens,
+            "cache reserved from a pool of a different geometry"
+        );
+        self.ensure_appendable(n, Some(pool));
+    }
+
+    /// Re-encode cold pages as per-page k-means codebooks: every *full*,
+    /// exclusively-owned f32 page lying wholly below `len - margin` is
+    /// replaced by a [`QuantKvPage`] (`bits` ∈ 1..=8) and its f32 buffer
+    /// released to `pool` (or freed when `None`). Shared pages are skipped
+    /// — other tables still append through them, and replacing one table's
+    /// entry would duplicate, not shrink, residency. Returns the number of
+    /// pages quantized by this call. Lossy: downstream logits are
+    /// tolerance-gated, never bit-compared (DESIGN.md §13).
+    pub fn quantize_cold_pages(
+        &mut self,
+        bits: u8,
+        margin: usize,
+        mut pool: Option<&mut KvPagePool>,
+    ) -> usize {
+        let pt = self.page_tokens;
+        let cold_end = self.len.saturating_sub(margin);
+        let mut quantized = 0usize;
+        for idx in 0..self.pages.len() {
+            if (idx + 1) * pt > cold_end {
+                break; // first page not wholly cold; later ones are hotter
+            }
+            let encoded = match &self.pages[idx] {
+                Page::F32(buf) if Arc::strong_count(buf) == 1 => {
+                    Some(QuantKvPage::encode(&buf.k, &buf.v, bits))
+                }
+                _ => None, // already quantized, or shared
+            };
+            if let Some(q) = encoded {
+                let old = std::mem::replace(&mut self.pages[idx], Page::Quant(Arc::new(q)));
+                match pool.as_deref_mut() {
+                    Some(p) => p.release(old),
+                    None => drop(old),
+                }
+                quantized += 1;
+            }
+        }
+        quantized
     }
 
     #[inline]
     fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
-        let i = self.at(layer, pos);
-        self.k[i..i + self.d].copy_from_slice(k);
-        self.v[i..i + self.d].copy_from_slice(v);
+        debug_assert!(layer < self.n_layers && pos < self.max_seq);
+        let pt = self.page_tokens;
+        let Page::F32(arc) = &mut self.pages[pos / pt] else {
+            panic!("write into a quantized page (prepare_append not called)");
+        };
+        let buf = Arc::get_mut(arc).expect("write into a shared page (CoW fork missed)");
+        let o = (layer * pt + pos % pt) * self.d;
+        buf.k[o..o + self.d].copy_from_slice(k);
+        buf.v[o..o + self.d].copy_from_slice(v);
     }
 }
 
-/// Recycling allocator for [`KvCache`]s. A cache is ~n_layers × max_seq ×
-/// d × 8 bytes — the single biggest per-request allocation on the serving
-/// path — so the scheduler takes caches from a pool and returns them on
-/// retirement; once the pool is warm (≥ peak live batch), steady-state
-/// serving allocates nothing. Hit/miss counters and resident bytes feed
-/// the scheduler's stats report.
-pub struct KvCachePool {
+/// Recycling page allocator for [`KvCache`]s — the successor of the
+/// whole-cache `KvCachePool`. Requests draw fixed-size pages (plus a cheap
+/// table shell) instead of full-context buffers, so a request holds only
+/// `ceil(len / page_tokens)` pages and the same free list serves any mix
+/// of request lengths; once the pool is warm, steady-state serving
+/// allocates nothing. Released pages return to the free list only when
+/// their refcount proves them unique — a shared page simply drops one
+/// reference, which makes double-frees structurally impossible (the free
+/// list can never hold a page some table still reads). Hit/miss counters
+/// are per *page take*; `pages_created` vs [`free_pages`] is the leak
+/// check the refcount-hygiene property test pins.
+pub struct KvPagePool {
     cfg: TransformerConfig,
-    free: Vec<KvCache>,
+    page_tokens: usize,
+    free: Vec<Arc<KvPageBuf>>,
+    /// Empty page tables recycled between requests (no KV memory).
+    shells: Vec<KvCache>,
     hits: u64,
     misses: u64,
+    created: u64,
 }
 
-impl KvCachePool {
+impl KvPagePool {
+    /// Empty pool with the default page size.
     pub fn new(cfg: TransformerConfig) -> Self {
-        Self { cfg, free: Vec::new(), hits: 0, misses: 0 }
+        Self::with_page_tokens(cfg, DEFAULT_PAGE_TOKENS)
     }
 
-    /// Pool pre-warmed with `n` caches (counted as neither hits nor
-    /// misses), so even the first requests allocate nothing.
+    /// Empty pool handing out `page_tokens`-token pages (clamped to
+    /// `1..=max_seq`).
+    pub fn with_page_tokens(cfg: TransformerConfig, page_tokens: usize) -> Self {
+        let page_tokens = page_tokens.max(1).min(cfg.max_seq.max(1));
+        Self { cfg, page_tokens, free: Vec::new(), shells: Vec::new(), hits: 0, misses: 0, created: 0 }
+    }
+
+    /// Pool pre-warmed for `n` full-context requests (pages and shells;
+    /// counted as neither hits nor misses), default page size.
     pub fn with_capacity(cfg: TransformerConfig, n: usize) -> Self {
-        let free = (0..n).map(|_| KvCache::new(&cfg)).collect();
-        Self { cfg, free, hits: 0, misses: 0 }
+        Self::with_capacity_paged(cfg, DEFAULT_PAGE_TOKENS, n)
     }
 
-    /// Take a cache, recycled (reset to length 0) when one is free,
-    /// freshly allocated otherwise.
-    pub fn take(&mut self) -> KvCache {
+    /// [`with_capacity`](KvPagePool::with_capacity) with an explicit page
+    /// size: pre-warms `n × ceil(max_seq / page_tokens)` pages.
+    pub fn with_capacity_paged(cfg: TransformerConfig, page_tokens: usize, n: usize) -> Self {
+        let mut pool = Self::with_page_tokens(cfg, page_tokens);
+        for _ in 0..n * pool.pages_per_request() {
+            let page = pool.alloc_page();
+            pool.free.push(page);
+        }
+        for _ in 0..n {
+            let shell = KvCache::with_page_tokens(&pool.cfg, pool.page_tokens);
+            pool.shells.push(shell);
+        }
+        pool
+    }
+
+    /// Tokens per page handed out by this pool.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Bytes of one f32 page of this pool's geometry.
+    pub fn page_bytes(&self) -> usize {
+        2 * self.cfg.n_layers * self.page_tokens * self.cfg.d_model * std::mem::size_of::<f32>()
+    }
+
+    /// Pages a full-context request needs.
+    pub fn pages_per_request(&self) -> usize {
+        self.cfg.max_seq.div_ceil(self.page_tokens)
+    }
+
+    fn alloc_page(&mut self) -> Arc<KvPageBuf> {
+        self.created += 1;
+        Arc::new(KvPageBuf::zeroed(self.cfg.n_layers, self.page_tokens, self.cfg.d_model))
+    }
+
+    /// Take an empty cache shell (recycled table or a fresh one — shells
+    /// own no KV memory, so shell takes are not hits/misses). Pages arrive
+    /// later via [`KvCache::reserve`] / [`KvCache::share_prefix_from`].
+    pub fn take_cache(&mut self) -> KvCache {
+        match self.shells.pop() {
+            Some(mut shell) => {
+                debug_assert!(shell.pages.is_empty() && shell.len == 0);
+                shell.reset();
+                shell
+            }
+            None => KvCache::with_page_tokens(&self.cfg, self.page_tokens),
+        }
+    }
+
+    /// Return a retired request's cache: every page it held is released
+    /// (unique f32 pages back to the free list, shared/quantized ones just
+    /// drop a reference) and the empty shell is kept for reuse. Panics on
+    /// geometry mismatch.
+    pub fn put_cache(&mut self, mut cache: KvCache) {
+        assert!(
+            cache.n_layers == self.cfg.n_layers
+                && cache.d == self.cfg.d_model
+                && cache.max_seq == self.cfg.max_seq
+                && cache.page_tokens == self.page_tokens,
+            "cache returned to a pool of a different geometry"
+        );
+        cache.len = 0;
+        while let Some(page) = cache.pages.pop() {
+            self.release(page);
+        }
+        self.shells.push(cache);
+    }
+
+    /// Take one page: recycled from the free list (hit) or freshly
+    /// allocated (miss). Recycled pages are *not* zeroed — the cache
+    /// invariant is that every slot below `len` is written before read.
+    fn take_page(&mut self) -> Arc<KvPageBuf> {
         match self.free.pop() {
-            Some(mut cache) => {
-                cache.reset();
+            Some(page) => {
+                debug_assert_eq!(Arc::strong_count(&page), 1);
                 self.hits += 1;
-                cache
+                page
             }
             None => {
                 self.misses += 1;
-                KvCache::new(&self.cfg)
+                self.alloc_page()
             }
         }
     }
 
-    /// Return a retired request's cache for reuse. The cache is reset
-    /// immediately; panics if it was built for a different config.
-    pub fn put(&mut self, mut cache: KvCache) {
-        assert!(
-            cache.n_layers == self.cfg.n_layers
-                && cache.d == self.cfg.d_model
-                && cache.max_seq == self.cfg.max_seq,
-            "cache returned to a pool of a different config"
-        );
-        cache.reset();
-        self.free.push(cache);
+    /// Release one page table entry. Only an f32 page whose `Arc` we hold
+    /// the *last* reference to re-enters the free list; shared f32 clones
+    /// and quantized pages (wrong size class) just drop.
+    fn release(&mut self, page: Page) {
+        if let Page::F32(buf) = page {
+            if Arc::strong_count(&buf) == 1 {
+                self.free.push(buf);
+            }
+        }
     }
 
-    /// Free (recyclable) caches currently held.
-    pub fn free_caches(&self) -> usize {
+    /// Free (recyclable) pages currently held.
+    pub fn free_pages(&self) -> usize {
         self.free.len()
     }
 
-    /// Takes served from the free list.
+    /// Total pool pages ever allocated (pre-warm + misses). After every
+    /// request retires and the prefix cache drains, [`free_pages`] must
+    /// equal this — the no-leak / no-double-free invariant.
+    pub fn pages_created(&self) -> u64 {
+        self.created
+    }
+
+    /// Page takes served from the free list.
     pub fn hits(&self) -> u64 {
         self.hits
     }
 
-    /// Takes that had to allocate.
+    /// Page takes that had to allocate.
     pub fn misses(&self) -> u64 {
         self.misses
     }
 
-    /// Fraction of takes served without allocating (1.0 before any take).
+    /// Fraction of page takes served without allocating (1.0 before any).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -385,9 +735,9 @@ impl KvCachePool {
         }
     }
 
-    /// Resident bytes of the pooled (free) cache buffers.
+    /// Resident bytes of the pooled (free) pages.
     pub fn resident_bytes(&self) -> usize {
-        self.free.iter().map(KvCache::bytes).sum()
+        self.free.len() * self.page_bytes()
     }
 }
 
@@ -405,8 +755,13 @@ pub struct ExecState {
     proj: Vec<f32>,   // (rows × d)
     gate: Vec<f32>,   // (rows × d_ff)
     up: Vec<f32>,     // (rows × d_ff)
-    scores: Vec<f32>, // (max_seq)
-    cos: Vec<f32>,    // (max_seq × head_dim/2)
+    scores: Vec<f32>, // (n_heads × max_seq): all heads of one page pass
+    inv_z: Vec<f32>,  // (n_heads) softmax normalizers
+    /// Dequant scratch for quantized pages (lazily sized to one page's
+    /// layer run; untouched — and unallocated — while serving f32-only).
+    kpage: Vec<f32>,
+    vpage: Vec<f32>,
+    cos: Vec<f32>, // (max_seq × head_dim/2)
     sin: Vec<f32>,
     scratch: LinearScratch, // LinearOp backend workspace
 }
@@ -447,7 +802,10 @@ impl ExecState {
             proj: vec![0.0; cap * d],
             gate: vec![0.0; cap * f],
             up: vec![0.0; cap * f],
-            scores: vec![0.0; s],
+            scores: vec![0.0; cfg.n_heads * s],
+            inv_z: vec![0.0; cfg.n_heads],
+            kpage: Vec::new(),
+            vpage: Vec::new(),
             cos,
             sin,
             scratch: LinearScratch::with_capacity(max_out, cap),
@@ -457,37 +815,98 @@ impl ExecState {
 
 /// Attention of one query row (`st.q[row]` at absolute `pos`) against the
 /// cached keys/values `0..=pos` of `layer`, mixed into `st.attn[row]`.
+///
+/// Page-wise three-pass form: (1) raw scores for *all* heads, page by
+/// page, so each page's K rows are touched (or dequantized) exactly once;
+/// (2) per-head softmax over the contiguous score row; (3) value mix,
+/// again page by page with V rows touched once. Per head, every
+/// float operation — dot-product order, max fold, exp/sum order, and the
+/// ascending-position value accumulation — is identical to the historical
+/// contiguous single-head loop, so paged attention over f32 pages is
+/// **bit-identical** to the pre-paging path regardless of page size
+/// (pinned by `page_size_is_invisible_to_decoding` and the scheduler /
+/// prefix-cache property suites). Quantized pages are dequantized into
+/// `st.kpage`/`st.vpage` and are tolerance-gated instead.
 fn attend_cached(st: &mut ExecState, cache: &KvCache, layer: usize, row: usize, pos: usize) {
     let d = st.cfg.d_model;
     let nh = st.cfg.n_heads;
     let hd = st.cfg.head_dim();
+    let stride = st.cfg.max_seq;
     let scale = 1.0 / (hd as f32).sqrt();
-    for h in 0..nh {
-        let off = h * hd;
-        for u in 0..=pos {
-            let krow = cache.k_row(layer, u);
-            let qrow = &st.q[row * d + off..row * d + off + hd];
-            let mut s = 0.0f32;
-            for i in 0..hd {
-                s += qrow[i] * krow[off + i];
+    let pt = cache.page_tokens;
+    let ExecState { q, attn, scores, inv_z, kpage, vpage, .. } = st;
+    let qrow = &q[row * d..(row + 1) * d];
+    let n_pages = pos / pt + 1;
+
+    // pass 1: raw scores, every head, page by page
+    for pidx in 0..n_pages {
+        let base = pidx * pt;
+        let filled = (pos + 1 - base).min(pt);
+        let rows = filled * d;
+        let krun: &[f32] = match &cache.pages[pidx] {
+            Page::F32(buf) => &buf.k[layer * pt * d..layer * pt * d + rows],
+            Page::Quant(qp) => {
+                if kpage.len() < pt * d {
+                    kpage.resize(pt * d, 0.0);
+                }
+                qp.dequantize_k_into(layer * pt * d, &mut kpage[..rows]);
+                &kpage[..rows]
             }
-            st.scores[u] = s * scale;
+        };
+        for h in 0..nh {
+            let off = h * hd;
+            let qh = &qrow[off..off + hd];
+            for s in 0..filled {
+                let krow = &krun[s * d + off..s * d + off + hd];
+                let mut acc = 0.0f32;
+                for i in 0..hd {
+                    acc += qh[i] * krow[i];
+                }
+                scores[h * stride + base + s] = acc * scale;
+            }
         }
-        let m = st.scores[..=pos].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    }
+
+    // pass 2: per-head softmax (same max/exp/sum order as the contiguous
+    // loop: ascending positions)
+    for h in 0..nh {
+        let sc = &mut scores[h * stride..h * stride + pos + 1];
+        let m = sc.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut z = 0.0f32;
-        for u in 0..=pos {
-            let e = (st.scores[u] - m).exp();
-            st.scores[u] = e;
-            z += e;
+        for e in sc.iter_mut() {
+            let x = (*e - m).exp();
+            *e = x;
+            z += x;
         }
-        let inv_z = 1.0 / z;
-        let out = &mut st.attn[row * d + off..row * d + off + hd];
-        out.fill(0.0);
-        for u in 0..=pos {
-            let p = st.scores[u] * inv_z;
-            let vrow = cache.v_row(layer, u);
-            for i in 0..hd {
-                out[i] += p * vrow[off + i];
+        inv_z[h] = 1.0 / z;
+    }
+
+    // pass 3: value mix, ascending positions per head, page by page
+    let out = &mut attn[row * d..(row + 1) * d];
+    out.fill(0.0);
+    for pidx in 0..n_pages {
+        let base = pidx * pt;
+        let filled = (pos + 1 - base).min(pt);
+        let rows = filled * d;
+        let vrun: &[f32] = match &cache.pages[pidx] {
+            Page::F32(buf) => &buf.v[layer * pt * d..layer * pt * d + rows],
+            Page::Quant(qp) => {
+                if vpage.len() < pt * d {
+                    vpage.resize(pt * d, 0.0);
+                }
+                qp.dequantize_v_into(layer * pt * d, &mut vpage[..rows]);
+                &vpage[..rows]
+            }
+        };
+        for h in 0..nh {
+            let off = h * hd;
+            let o = &mut out[off..off + hd];
+            for s in 0..filled {
+                let p = scores[h * stride + base + s] * inv_z[h];
+                let vrow = &vrun[s * d + off..s * d + off + hd];
+                for i in 0..hd {
+                    o[i] += p * vrow[i];
+                }
             }
         }
     }
@@ -510,10 +929,11 @@ fn head_logits(model: &ExecModel, st: &mut ExecState, rows: usize) -> Matrix {
 /// cache advances by `tokens.len()`; call with a fresh/reset cache for a
 /// full-sequence forward. The start offset is the cache's length itself:
 /// positions, RoPE angles, and attention spans all begin at `cache.len()`,
-/// which is what makes partial prefill over a forked prefix
-/// ([`KvCache::copy_prefix_from`], used by the prefix-sharing cache in
+/// which is what makes partial prefill over a shared prefix
+/// ([`KvCache::share_prefix_from`], used by the prefix-sharing cache in
 /// `runtime/prefix_cache.rs`) bit-identical to prefilling the whole
-/// prompt cold.
+/// prompt cold. Pages are taken on demand ([`KvCache::prepare_append`]);
+/// serving callers reserve from the pool first so this allocates nothing.
 pub fn prefill(
     model: &ExecModel,
     cache: &mut KvCache,
@@ -528,6 +948,7 @@ pub fn prefill(
     assert!(p0 + seq <= cache.max_seq, "prompt overflows KV cache ({p0}+{seq})");
     assert_eq!(cache.n_layers, cfg.n_layers);
     assert_eq!(cache.d, cfg.d_model);
+    cache.prepare_append(seq);
     let d = cfg.d_model;
     let nh = cfg.n_heads;
     let hd = cfg.head_dim();
@@ -597,10 +1018,11 @@ pub fn decode_step(
     let d = cfg.d_model;
     let nh = cfg.n_heads;
     let hd = cfg.head_dim();
-    for c in caches.iter() {
+    for c in caches.iter_mut() {
         assert_eq!(c.n_layers, cfg.n_layers);
         assert_eq!(c.d, d);
         assert!(c.len < c.max_seq, "KV cache full");
+        c.prepare_append(1); // no-op when the scheduler reserved already
     }
 
     for (b, &tok) in tokens.iter().enumerate() {
@@ -778,8 +1200,48 @@ mod tests {
         close(b.row(1), a.row(3), 1e-6);
         cache.reset();
         assert!(cache.is_empty());
+        assert_eq!(cache.bytes(), 0, "reset drops the page table");
         let c = prefill(&em, &mut cache, &[1, 2, 3, 4], &mut st);
         close(&c.data, &a.data, 1e-6);
+    }
+
+    /// The tentpole contract (quantization off): the page table is
+    /// invisible — any page size reproduces the single-page (contiguous-
+    /// equivalent) logits **bit-for-bit**, through prefill, chunked
+    /// prefill, and decode.
+    #[test]
+    fn page_size_is_invisible_to_decoding() {
+        let m = small_model(9);
+        let em = ExecModel::dense(&m);
+        let mut st = ExecState::new(m.config);
+        let toks = [3u16, 1, 4, 1, 5, 9, 2, 6];
+
+        let mut whole = KvCache::with_page_tokens(&m.config, m.config.max_seq);
+        let want_pre = prefill(&em, &mut whole, &toks, &mut st);
+        let mut want_dec = Vec::new();
+        let mut tok = argmax(want_pre.row(toks.len() - 1));
+        for _ in 0..4 {
+            let l = decode_step(&em, &mut [&mut whole], &[tok], &mut st);
+            tok = argmax(l.row(0));
+            want_dec.push(l.data);
+        }
+
+        for pt in [1usize, 3, 4, 7] {
+            let mut c = KvCache::with_page_tokens(&m.config, pt);
+            assert_eq!(c.page_tokens(), pt);
+            // chunked prefill crosses page boundaries mid-chunk
+            let got_a = prefill(&em, &mut c, &toks[..5], &mut st);
+            let got_b = prefill(&em, &mut c, &toks[5..], &mut st);
+            assert_eq!(&got_a.data[..], &want_pre.data[..5 * m.config.vocab], "pt={pt}");
+            assert_eq!(&got_b.data[..], &want_pre.data[5 * m.config.vocab..], "pt={pt}");
+            let mut tok = argmax(got_b.row(toks.len() - 5 - 1));
+            for want in &want_dec {
+                let l = decode_step(&em, &mut [&mut c], &[tok], &mut st);
+                tok = argmax(l.row(0));
+                assert_eq!(&l.data, want, "pt={pt}");
+            }
+            assert_eq!(c.pages.len(), (toks.len() + 4).div_ceil(pt));
+        }
     }
 
     #[test]
@@ -807,10 +1269,11 @@ mod tests {
         let mut st = ExecState::new(m.config);
         let toks = [2u16, 9, 4, 4, 1, 7];
 
-        let mut full = KvCache::new(&m.config);
+        // 2-token pages so forks land mid-page (CoW) and on boundaries
+        let mut full = KvCache::with_page_tokens(&m.config, 2);
         let want = prefill(&em, &mut full, &toks, &mut st);
 
-        // fork at every interior depth and prefill the tail: logits for
+        // share at every interior depth and prefill the tail: logits for
         // the tail positions must be bit-identical to the cold prefill
         for depth in 1..toks.len() {
             let mut fork = KvCache::fork_from(&full, depth);
@@ -821,63 +1284,105 @@ mod tests {
             }
             assert_eq!(fork.len(), toks.len());
         }
+        // ...and the source is untouched by all that appending
+        assert_eq!(full.len(), toks.len());
+        let replay = prefill(&em, &mut KvCache::fork_from(&full, 0), &toks, &mut st);
+        assert_eq!(replay.data, want.data, "source pages were mutated by a fork");
 
-        // the allocation-free flavour over a recycled cache is the same
-        let mut dst = KvCache::new(&m.config);
-        let _ = prefill(&em, &mut dst, &[5, 5, 5, 5, 5, 5, 5], &mut st); // dirty it
-        dst.reset();
-        dst.copy_prefix_from(&full, 3);
+        // the pool-shell flavour over a recycled cache is the same
+        let mut pool = KvPagePool::with_page_tokens(m.config, 2);
+        let mut dst = pool.take_cache();
+        dst.share_prefix_from(&full, 3);
         let got = prefill(&em, &mut dst, &toks[3..], &mut st);
         assert_eq!(got.row(toks.len() - 3 - 1), want.row(toks.len() - 1));
     }
 
-    /// Pool accounting stays exact while the prefix cache pins and evicts
-    /// caches: pins take buffers out of circulation (visible as misses
-    /// once the free list drains), evictions hand them back.
+    /// Copy-on-write mechanics: sharing copies nothing; the first append
+    /// into a shared *partial* tail page forks exactly that page, while
+    /// full shared pages stay shared (and page-aligned shares never copy).
     #[test]
-    fn pool_accounting_under_fork_and_pin() {
+    fn share_is_zero_copy_and_forks_lazily() {
+        let m = small_model(11);
+        let em = ExecModel::dense(&m);
+        let mut st = ExecState::new(m.config);
+        let mut src = KvCache::with_page_tokens(&m.config, 4);
+        let _ = prefill(&em, &mut src, &[1, 2, 3, 4, 5, 6], &mut st);
+
+        // mid-page share: both pages shared, zero bytes copied
+        let mut fork = KvCache::fork_from(&src, 6);
+        let pages: Vec<usize> = src.page_stats().map(|s| s.ptr).collect();
+        let fpages: Vec<usize> = fork.page_stats().map(|s| s.ptr).collect();
+        assert_eq!(pages, fpages, "sharing must reference the same pages");
+        assert!(src.page_stats().all(|s| s.shared));
+
+        // appending forks ONLY the partial tail page (index 1)
+        let _ = decode_step(&em, &mut [&mut fork], &[7], &mut st);
+        let fpages: Vec<usize> = fork.page_stats().map(|s| s.ptr).collect();
+        assert_eq!(fpages[0], pages[0], "full page stays shared");
+        assert_ne!(fpages[1], pages[1], "partial tail page must fork on append");
+        let src_stats: Vec<PageStat> = src.page_stats().collect();
+        assert!(src_stats[0].shared && !src_stats[1].shared);
+
+        // page-aligned share + append: no fork, the new write opens page 2
+        let mut fork2 = KvCache::fork_from(&src, 4);
+        let _ = decode_step(&em, &mut [&mut fork2], &[7], &mut st);
+        assert_eq!(fork2.page_stats().next().unwrap().ptr, pages[0]);
+        assert_eq!(fork2.pages.len(), 2);
+    }
+
+    /// Page-pool accounting stays exact while the prefix cache pins and
+    /// evicts pages: pins hold pages outside the pool, sharing takes
+    /// nothing, CoW forks take exactly one page, and everything drains
+    /// back (free == created).
+    #[test]
+    fn pool_accounting_under_share_and_pin() {
         use crate::runtime::prefix_cache::PrefixCache;
         let m = small_model(8);
         let em = ExecModel::dense(&m);
         let mut st = ExecState::new(m.config);
-        let mut pool = KvCachePool::with_capacity(m.config, 2);
-        let cache_bytes = KvCache::new(&m.config).bytes();
-        assert_eq!(pool.resident_bytes(), 2 * cache_bytes);
-        let mut pc = PrefixCache::new(cache_bytes); // room for exactly one pin
+        let mut pool = KvPagePool::with_capacity_paged(m.config, 4, 2);
+        let page = pool.page_bytes();
+        assert_eq!(pool.pages_per_request(), 4);
+        assert_eq!((pool.free_pages(), pool.pages_created()), (8, 8));
+        assert_eq!(pool.resident_bytes(), 8 * page);
+        let mut pc = PrefixCache::new(page); // room to pin exactly one 1-page prefix
 
-        // take both pre-warmed caches (hits), pin one under its prompt
-        let mut a = pool.take();
-        let mut b = pool.take();
-        assert_eq!((pool.hits(), pool.misses()), (2, 0));
-        assert_eq!(pool.resident_bytes(), 0);
+        let mut a = pool.take_cache();
+        let mut b = pool.take_cache();
+        a.reserve(&mut pool, 3);
+        b.reserve(&mut pool, 3);
         let _ = prefill(&em, &mut a, &[1, 2, 3], &mut st);
         let _ = prefill(&em, &mut b, &[1, 2, 4], &mut st);
+        assert_eq!((pool.hits(), pool.misses()), (2, 0));
+        assert_eq!(pool.free_pages(), 6);
+
         pc.insert(&[1, 2, 3], a, &mut pool);
-        assert_eq!(pc.resident_bytes(), cache_bytes);
-        assert_eq!(pool.free_caches(), 0, "pinned caches live outside the pool");
+        assert_eq!(pc.resident_bytes(), page);
+        assert_eq!(pool.free_pages(), 6, "pinned pages live outside the pool");
 
-        // a third take must allocate: one buffer is pinned, one is out
-        let c = pool.take();
-        assert_eq!((pool.hits(), pool.misses()), (2, 1));
-
-        // pinning a second prompt evicts the first back into the pool
+        // a second pin evicts the first back into the pool
         pc.insert(&[1, 2, 4], b, &mut pool);
         assert_eq!(pc.evictions(), 1);
-        assert_eq!(pc.resident_bytes(), cache_bytes);
-        assert_eq!(pool.free_caches(), 1);
-        assert_eq!(pool.resident_bytes(), cache_bytes);
+        assert_eq!(pc.resident_bytes(), page);
+        assert_eq!(pool.free_pages(), 7);
 
-        // forking copies: the pinned entry stays resident, the fork is a
-        // pool cache, and the books balance
-        let mut dst = pool.take();
-        assert_eq!((pool.hits(), pool.misses()), (3, 1));
-        let depth = pc.fork_into(&[1, 2, 4], &mut dst);
+        // sharing into a pooled shell takes zero pages
+        let mut dst = pool.take_cache();
+        let depth = pc.share_into(&[1, 2, 4], &mut dst);
         assert_eq!(depth, 2);
-        assert_eq!(pc.resident_bytes(), cache_bytes);
-        pool.put(dst);
-        pool.put(c);
-        assert_eq!(pool.free_caches(), 2);
-        assert_eq!(pool.resident_bytes(), 2 * cache_bytes);
+        assert_eq!(pool.free_pages(), 7, "a prefix hit copies no pages");
+        assert_eq!(dst.bytes(), page);
+
+        // the first append CoW-forks the shared tail from the pool
+        dst.reserve(&mut pool, 1);
+        assert_eq!(pool.free_pages(), 6);
+        pool.put_cache(dst); // fork comes home; the pinned page stays put
+        assert_eq!(pool.free_pages(), 7);
+
+        // hygiene: drain the trie and every page is back
+        pc.drain(&mut pool);
+        assert_eq!(pool.free_pages() as u64, pool.pages_created());
+        assert_eq!((pool.hits(), pool.misses()), (4, 0), "prewarmed pool never allocated");
     }
 
     #[test]
@@ -885,23 +1390,64 @@ mod tests {
         let m = small_model(6);
         let em = ExecModel::dense(&m);
         let mut st = ExecState::new(m.config);
-        let mut pool = KvCachePool::new(m.config);
+        let mut pool = KvPagePool::new(m.config); // max_seq 16 → 1 page/request
 
-        let mut a = pool.take(); // cold: allocates
+        let mut a = pool.take_cache();
+        a.reserve(&mut pool, 3); // cold: allocates a page
         assert_eq!((pool.hits(), pool.misses()), (0, 1));
+        assert_eq!(pool.pages_created(), 1);
         let logits1 = prefill(&em, &mut a, &[1, 2, 3], &mut st);
         assert_eq!(a.len(), 3);
-        pool.put(a);
-        assert_eq!(pool.free_caches(), 1);
+        pool.put_cache(a);
+        assert_eq!(pool.free_pages(), 1);
         assert!(pool.resident_bytes() > 0);
 
-        let mut b = pool.take(); // warm: recycled, reset to empty
+        let mut b = pool.take_cache();
+        assert!(b.is_empty(), "recycled shell must start a fresh sequence");
+        b.reserve(&mut pool, 3); // warm: recycled page (dirty, fully overwritten)
         assert_eq!((pool.hits(), pool.misses()), (1, 1));
-        assert_eq!(pool.free_caches(), 0);
-        assert!(b.is_empty(), "recycled cache must start a fresh sequence");
+        assert_eq!(pool.free_pages(), 0);
         let logits2 = prefill(&em, &mut b, &[1, 2, 3], &mut st);
         close(&logits2.data, &logits1.data, 0.0);
         assert!((pool.hit_rate() - 0.5).abs() < 1e-9);
-        pool.put(b);
+        pool.put_cache(b);
+        assert_eq!(pool.free_pages() as u64, pool.pages_created());
+    }
+
+    /// Cold-page quantization: exact byte accounting, idempotence, shared
+    /// pages skipped, and tolerance-gated (not bit-gated) logits.
+    #[test]
+    fn quantize_cold_pages_accounting_and_tolerance() {
+        let m = small_model(10);
+        let em = ExecModel::dense(&m);
+        let mut st = ExecState::new(m.config);
+        let toks: Vec<u16> = (0..12).map(|i| (i * 5 % 31) as u16).collect();
+
+        let mut c = KvCache::with_page_tokens(&m.config, 4);
+        let mut c_ref = KvCache::with_page_tokens(&m.config, 4);
+        let _ = prefill(&em, &mut c, &toks, &mut st);
+        let _ = prefill(&em, &mut c_ref, &toks, &mut st);
+        let f32_bytes = c.bytes();
+
+        // margin 4 → cold_end 8 → exactly pages 0 and 1 (tokens 0..8)
+        assert_eq!(c.quantize_cold_pages(8, 4, None), 2);
+        assert_eq!(c.quantize_cold_pages(8, 4, None), 0, "idempotent until len grows");
+        let stats: Vec<PageStat> = c.page_stats().collect();
+        assert_eq!(stats.iter().filter(|s| s.quantized).count(), 2);
+        let want: usize = stats.iter().map(|s| s.bytes).sum();
+        assert_eq!(c.bytes(), want, "bytes() must track the quant codec exactly");
+        assert!(c.bytes() < f32_bytes, "quantized pages must shrink residency");
+
+        // reads through quantized pages: tolerance, not bit-identity
+        let next = 3u16;
+        let a = decode_step(&em, &mut [&mut c], &[next], &mut st);
+        let b = decode_step(&em, &mut [&mut c_ref], &[next], &mut st);
+        close(&a.data, &b.data, 0.05);
+
+        // shared pages are never quantized out from under a reader
+        let mut src = KvCache::with_page_tokens(&m.config, 4);
+        let _ = prefill(&em, &mut src, &toks, &mut st);
+        let _pin = KvCache::fork_from(&src, 8);
+        assert_eq!(src.quantize_cold_pages(8, 4, None), 0, "shared pages skipped");
     }
 }

@@ -1,0 +1,196 @@
+//! Cold-KV-page codec: per-page k-means codebooks over cached K/V rows.
+//!
+//! The paged KV cache (`model/exec.rs`) re-encodes pages that have fallen
+//! behind the decode head as one k-means [`Codebook`] per tensor (K and V
+//! separately, the two have very different distributions) plus one `u8`
+//! index per element — the same centroid machinery the weight quantizer
+//! uses (`quant/kmeans.rs`, paper §3.1), pointed at activations instead
+//! of weights. Encoding is deterministic (fixed k-means seed), so a given
+//! f32 page always quantizes to the same bytes; decoding is a table
+//! gather into caller scratch on attention read.
+//!
+//! Accounting is honest about the in-memory representation: indices are
+//! stored one byte each regardless of `bits` (there is no bit-packing on
+//! this path — pages are transient serving state, not a checkpoint), so
+//! `bytes()` reports `len` bytes per tensor plus the f32 centroid tables.
+//! The compression claim vs. an f32 page (8 bytes per element pair) is
+//! therefore ~4× at the default 8 bits, not 8/bits×.
+
+use super::codebook::Codebook;
+use super::kmeans::{kmeans_1d, KMeansOpts};
+
+/// Highest supported codebook width: indices are `u8`.
+pub const MAX_KV_QUANT_BITS: u8 = 8;
+
+/// One immutable quantized KV page: K and V of `len` elements each,
+/// encoded against private per-page codebooks.
+pub struct QuantKvPage {
+    bits: u8,
+    k_codebook: Codebook,
+    v_codebook: Codebook,
+    k_idx: Vec<u8>,
+    v_idx: Vec<u8>,
+}
+
+impl QuantKvPage {
+    /// Encode a full page (`k`/`v` must be the same length, the page's
+    /// `n_layers × page_tokens × d` layout flattened). `bits` ∈ 1..=8;
+    /// the codebook is clamped to the element count when a (tiny, test-
+    /// sized) page has fewer elements than `1 << bits` levels, and to
+    /// `len / 2` (floor 16) so the f32 centroid tables always amortize —
+    /// an encoded page is guaranteed smaller than its f32 original
+    /// whenever `len ≥ 32` (`len` is `n_layers × page_tokens × d`, a
+    /// multiple of `d`, so this always holds in practice). Production
+    /// pages are thousands of elements; only the `1 << bits` term binds
+    /// there.
+    pub fn encode(k: &[f32], v: &[f32], bits: u8) -> Self {
+        assert!(
+            (1..=MAX_KV_QUANT_BITS).contains(&bits),
+            "kv page quantization supports 1..=8 bits, got {bits}"
+        );
+        assert_eq!(k.len(), v.len(), "K and V planes of a page match in size");
+        assert!(!k.is_empty(), "cannot encode an empty page");
+        let levels = (1usize << bits).min(k.len()).min((k.len() / 2).max(16));
+        let opts = KMeansOpts::default(); // fixed seed: deterministic encode
+        let k_codebook = kmeans_1d(k, levels, &opts).codebook;
+        let v_codebook = kmeans_1d(v, levels, &opts).codebook;
+        let mut k_idx = Vec::new();
+        let mut v_idx = Vec::new();
+        k_codebook.quantize_slice(k, &mut k_idx);
+        v_codebook.quantize_slice(v, &mut v_idx);
+        Self { bits, k_codebook, v_codebook, k_idx, v_idx }
+    }
+
+    /// Requested codebook width.
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Elements per tensor (K and V each hold this many).
+    pub fn len(&self) -> usize {
+        self.k_idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k_idx.is_empty()
+    }
+
+    /// Exact resident bytes of this page: one index byte per element per
+    /// tensor plus both f32 centroid tables (see module docs).
+    pub fn bytes(&self) -> usize {
+        self.k_idx.len()
+            + self.v_idx.len()
+            + (self.k_codebook.len() + self.v_codebook.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Decode `out.len()` K elements starting at flat offset `start`.
+    pub fn dequantize_k_into(&self, start: usize, out: &mut [f32]) {
+        Self::gather(&self.k_codebook, &self.k_idx[start..start + out.len()], out);
+    }
+
+    /// Decode `out.len()` V elements starting at flat offset `start`.
+    pub fn dequantize_v_into(&self, start: usize, out: &mut [f32]) {
+        Self::gather(&self.v_codebook, &self.v_idx[start..start + out.len()], out);
+    }
+
+    #[inline]
+    fn gather(cb: &Codebook, idx: &[u8], out: &mut [f32]) {
+        for (o, &i) in out.iter_mut().zip(idx) {
+            *o = cb.dequantize(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn page(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let k = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let v = (0..n).map(|_| rng.next_f32() * 0.5).collect();
+        (k, v)
+    }
+
+    #[test]
+    fn round_trip_error_is_bounded_at_8_bits() {
+        let (k, v) = page(512, 1);
+        let q = QuantKvPage::encode(&k, &v, 8);
+        let mut dk = vec![0.0; k.len()];
+        let mut dv = vec![0.0; v.len()];
+        q.dequantize_k_into(0, &mut dk);
+        q.dequantize_v_into(0, &mut dv);
+        // 256 k-means levels over a unit-range page: tiny per-element error
+        for (x, y) in k.iter().zip(&dk) {
+            assert!((x - y).abs() < 0.05, "{x} vs {y}");
+        }
+        for (x, y) in v.iter().zip(&dv) {
+            assert!((x - y).abs() < 0.05, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn encode_is_deterministic() {
+        let (k, v) = page(256, 2);
+        let a = QuantKvPage::encode(&k, &v, 4);
+        let b = QuantKvPage::encode(&k, &v, 4);
+        assert_eq!(a.k_idx, b.k_idx);
+        assert_eq!(a.v_idx, b.v_idx);
+        assert_eq!(a.k_codebook.centroids, b.k_codebook.centroids);
+    }
+
+    #[test]
+    fn ranged_decode_matches_full_decode() {
+        let (k, v) = page(128, 3);
+        let q = QuantKvPage::encode(&k, &v, 6);
+        let mut full = vec![0.0; k.len()];
+        q.dequantize_k_into(0, &mut full);
+        let mut part = vec![0.0; 32];
+        q.dequantize_k_into(40, &mut part);
+        assert_eq!(&full[40..72], &part[..]);
+    }
+
+    #[test]
+    fn bytes_accounting_is_exact() {
+        let (k, v) = page(64, 4);
+        let q = QuantKvPage::encode(&k, &v, 8);
+        assert_eq!(
+            q.bytes(),
+            q.k_idx.len()
+                + q.v_idx.len()
+                + 4 * (q.k_codebook.len() + q.v_codebook.len())
+        );
+        assert!(q.bytes() < (k.len() + v.len()) * 4, "quant page smaller than f32 page");
+    }
+
+    #[test]
+    fn tiny_page_clamps_codebook_to_element_count() {
+        let k = [0.5f32, -0.5];
+        let v = [1.0f32, 2.0];
+        let q = QuantKvPage::encode(&k, &v, 8);
+        assert!(q.k_codebook.len() <= 2);
+        let mut out = vec![0.0; 2];
+        q.dequantize_k_into(0, &mut out);
+        // exactly representable: 2 levels for 2 distinct values
+        assert_eq!(out, vec![0.5, -0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=8 bits")]
+    fn rejects_zero_bits() {
+        let _ = QuantKvPage::encode(&[1.0], &[1.0], 0);
+    }
+
+    #[test]
+    fn constant_page_survives_encoding() {
+        let k = vec![0.0f32; 96];
+        let v = vec![0.25f32; 96];
+        let q = QuantKvPage::encode(&k, &v, 8);
+        let mut out = vec![1.0; 96];
+        q.dequantize_k_into(0, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+        q.dequantize_v_into(0, &mut out);
+        assert!(out.iter().all(|&x| x == 0.25));
+    }
+}

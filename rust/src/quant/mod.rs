@@ -9,6 +9,7 @@ pub mod codebook;
 pub mod config;
 pub mod gptq;
 pub mod kmeans;
+pub mod kvpage;
 pub mod outliers;
 pub mod packed;
 pub mod precision;

@@ -1,6 +1,7 @@
 //! Prefix-sharing KV reuse: a token-sequence trie that pins retired
-//! requests' KV caches so later requests with a shared prompt prefix skip
-//! most of their prefill.
+//! requests' KV prefixes so later requests with a shared prompt prefix
+//! skip most of their prefill — and, since the cache went paged, skip the
+//! copy too.
 //!
 //! Real serving fleets overwhelmingly share prompt prefixes (system
 //! prompts, few-shot templates). Cold admission pays a full `prefill` for
@@ -9,52 +10,57 @@
 //! absolute position). Two prompts that agree on their first `d` tokens
 //! therefore produce **bit-identical** K/V rows for positions `0..d` —
 //! the kernels are deterministic and batch/thread-invariant (DESIGN.md
-//! §7) — so those rows can be copied out of a previously computed cache
-//! instead of recomputed. Copying is a pair of `memcpy`s per layer; a
-//! prefill is seven projections, attention, and an MLP per layer per
-//! token. That asymmetry is the entire win.
+//! §7) — so those rows can be *shared* out of a previously computed cache
+//! instead of recomputed. Sharing is an `Arc` clone per page
+//! ([`KvCache::share_prefix_from`], DESIGN.md §13): a hit costs O(pages)
+//! pointer work and copies **zero KV bytes** — the per-layer memcpy the
+//! pre-paging `copy_prefix_from` paid is gone, tracked by the
+//! `saved_bytes` counter.
 //!
 //! **Structure.** A radix trie keyed on prompt tokens ([`Node`] per
 //! token). When the scheduler retires a request it offers the prompt and
 //! the request's [`KvCache`]; the cache is truncated back to the prompt
-//! (decoded-token positions are dropped) and pinned at the trie node at
-//! that depth. Each node's `subtree_entries` counts the pinned caches at
-//! or below it — the ref-count that keeps interior nodes alive and lets
-//! eviction prune paths that no longer lead to an entry.
+//! (decoded-token pages are released to the pool) and pinned at the trie
+//! node at that depth. Each node's `subtree_entries` counts the pinned
+//! caches at or below it — the ref-count that keeps interior nodes alive
+//! and lets eviction prune paths that no longer lead to an entry.
 //!
 //! **Lookup.** [`probe`](PrefixCache::probe) walks a new prompt down the
 //! trie and returns the deepest match, capped at `prompt.len() - 1`: the
 //! last prompt position is always prefilled, because its logits produce
-//! the request's first token. [`fork_into`](PrefixCache::fork_into) then
-//! copies the matched prefix out of *any* pinned entry below the matched
-//! node (they all share those tokens, so their leading rows are
-//! bit-identical) into a pool-provided destination cache via
-//! [`KvCache::copy_prefix_from`], and the scheduler prefills only the
-//! prompt tail on top of it.
+//! the request's first token. [`share_into`](PrefixCache::share_into)
+//! then clones the matched prefix's page table out of *any* pinned entry
+//! below the matched node (they all share those tokens, so their leading
+//! rows are bit-identical) into a pool-provided destination cache, and
+//! the scheduler prefills only the prompt tail on top of it — the tail
+//! write forks a shared partial page copy-on-write, never the full ones.
 //!
-//! **Eviction.** Pinned caches are full-size buffers, so the cache is
-//! byte-budgeted: inserts beyond `budget_bytes` evict the least-recently
-//! used entry (clock ticks are unique, so the order is total) and return
-//! its cache to the [`KvCachePool`] — pinning borrows from the pool's
-//! working set, eviction pays it back. A duplicate insert refreshes the
-//! existing entry's LRU stamp and returns the new cache to the pool.
+//! **Eviction.** The cache is byte-budgeted on the pages its entries
+//! reference: inserts beyond `budget_bytes` evict the least-recently used
+//! entry (clock ticks are unique, so the order is total) and release its
+//! pages to the [`KvPagePool`] — pinning borrows pages from the pool's
+//! working set, eviction pays them back (pages still shared with a live
+//! request only drop a reference and come home when that request
+//! retires). A duplicate insert refreshes the existing entry's LRU stamp
+//! and releases the new cache to the pool.
 //!
 //! The trie uses `BTreeMap` children so every walk (including the
-//! pick-any-entry descent in `fork_into`) is deterministic: serving
+//! pick-any-entry descent in `share_into`) is deterministic: serving
 //! output never depends on it (any entry yields identical bytes), but
 //! stats and eviction order stay reproducible run over run.
 //! `tests/prefix_cache.rs` pins the end-to-end property: prefix-hit
 //! serving is token-identical to cold prefill for both backends and both
-//! admission policies.
+//! admission policies; `tests/paged_kv.rs` pins page-refcount hygiene
+//! under eviction thrash.
 
-use crate::model::exec::{KvCache, KvCachePool};
+use crate::model::exec::{KvCache, KvPagePool};
 use std::collections::BTreeMap;
 
 /// One pinned KV prefix. `cache.len()` equals the depth of the node that
 /// owns the entry (the number of prompt tokens whose K/V rows it holds).
 struct Entry {
     cache: KvCache,
-    /// LRU clock tick of the last fork or insert that touched this entry.
+    /// LRU clock tick of the last share or insert that touched this entry.
     last_used: u64,
 }
 
@@ -65,7 +71,7 @@ struct Node {
     entry: Option<Entry>,
     /// Pinned entries at or below this node. Every live node has ≥ 1
     /// (nodes are pruned when their last entry is evicted), which is what
-    /// makes any `probe` depth forkable.
+    /// makes any `probe` depth shareable.
     subtree_entries: usize,
 }
 
@@ -79,13 +85,16 @@ pub struct PrefixCache {
     lookups: u64,
     hits: u64,
     saved_tokens: u64,
+    /// KV bytes a hit would have memcpy'd pre-paging (prefix length ×
+    /// per-token f32 KV bytes) — now pure refcount work.
+    saved_bytes: u64,
     evictions: u64,
 }
 
 impl PrefixCache {
-    /// Byte budget covers the pinned caches' buffers; a single cache
-    /// larger than the budget is never pinned (the cache degrades to a
-    /// no-op rather than thrash).
+    /// Byte budget covers the pages the pinned entries reference; a
+    /// single cache larger than the budget is never pinned (the cache
+    /// degrades to a no-op rather than thrash).
     pub fn new(budget_bytes: usize) -> Self {
         Self {
             root: Node::default(),
@@ -96,6 +105,7 @@ impl PrefixCache {
             lookups: 0,
             hits: 0,
             saved_tokens: 0,
+            saved_bytes: 0,
             evictions: 0,
         }
     }
@@ -104,7 +114,7 @@ impl PrefixCache {
     /// so the final prompt position (whose logits yield the first output
     /// token) is always prefilled. Read-only: no LRU touch, no counters —
     /// the scheduler probes for budget accounting before committing to an
-    /// admission, then forks.
+    /// admission, then shares.
     pub fn probe(&self, prompt: &[u16]) -> usize {
         let cap = prompt.len().saturating_sub(1);
         let mut node = &self.root;
@@ -121,12 +131,15 @@ impl PrefixCache {
         depth
     }
 
-    /// Copy the longest cached prefix of `prompt` into `dst` (a fresh or
+    /// Share the longest cached prefix of `prompt` into `dst` (a shell or
     /// reset cache from the pool) and return its length; `dst` ends at
-    /// exactly that depth, ready for a tail prefill. Returns 0 on a miss
-    /// (`dst` untouched). Counts the lookup, the hit, and the saved
-    /// prefill tokens, and refreshes the source entry's LRU stamp.
-    pub fn fork_into(&mut self, prompt: &[u16], dst: &mut KvCache) -> usize {
+    /// exactly that depth, ready for a tail prefill, referencing the
+    /// entry's pages — **no KV bytes are copied** (the tail page forks
+    /// copy-on-write at the first append). Returns 0 on a miss (`dst`
+    /// untouched). Counts the lookup, the hit, the saved prefill tokens
+    /// and the saved copy bytes, and refreshes the source entry's LRU
+    /// stamp.
+    pub fn share_into(&mut self, prompt: &[u16], dst: &mut KvCache) -> usize {
         self.lookups += 1;
         let depth = self.probe(prompt);
         if depth == 0 {
@@ -148,23 +161,24 @@ impl PrefixCache {
         }
         let e = node.entry.as_mut().unwrap();
         debug_assert!(e.cache.len() >= depth, "pinned entry shorter than its trie depth");
-        dst.copy_prefix_from(&e.cache, depth);
+        dst.share_prefix_from(&e.cache, depth);
         e.last_used = self.clock;
         self.clock += 1;
         self.hits += 1;
         self.saved_tokens += depth as u64;
+        self.saved_bytes += (depth * dst.token_bytes()) as u64;
         depth
     }
 
     /// Pin a retired request's cache under its prompt. The cache is
-    /// truncated back to the prompt (generated-token positions dropped);
-    /// if an entry for this exact prompt already exists, or the cache
-    /// alone exceeds the budget, the cache goes straight back to `pool`.
-    /// Inserting may evict least-recently-used entries into `pool` until
-    /// the byte budget holds again.
-    pub fn insert(&mut self, prompt: &[u16], mut cache: KvCache, pool: &mut KvCachePool) {
-        if prompt.is_empty() || cache.bytes() > self.budget_bytes {
-            pool.put(cache);
+    /// truncated back to the prompt (generated-token pages released to
+    /// `pool`); if an entry for this exact prompt already exists, or the
+    /// truncated cache alone exceeds the budget, the cache goes straight
+    /// back to `pool`. Inserting may evict least-recently-used entries
+    /// into `pool` until the byte budget holds again.
+    pub fn insert(&mut self, prompt: &[u16], mut cache: KvCache, pool: &mut KvPagePool) {
+        if prompt.is_empty() {
+            pool.put_cache(cache);
             return;
         }
         assert!(
@@ -173,8 +187,12 @@ impl PrefixCache {
             cache.len(),
             prompt.len()
         );
-        cache.truncate(prompt.len());
+        cache.truncate_into(prompt.len(), pool);
         let bytes = cache.bytes();
+        if bytes > self.budget_bytes {
+            pool.put_cache(cache);
+            return;
+        }
         let stamp = self.clock;
         self.clock += 1;
         match insert_rec(&mut self.root, prompt, cache, stamp) {
@@ -185,22 +203,41 @@ impl PrefixCache {
             }
             // Exact prompt already pinned: its LRU stamp was refreshed;
             // the offered cache is surplus.
-            Err(dup) => pool.put(dup),
+            Err(dup) => pool.put_cache(dup),
         }
     }
 
-    fn evict_to_budget(&mut self, pool: &mut KvCachePool) {
+    fn evict_to_budget(&mut self, pool: &mut KvPagePool) {
         while self.resident_bytes > self.budget_bytes {
-            let mut path = Vec::new();
-            let mut lru: Option<(u64, Vec<u16>)> = None;
-            find_lru(&self.root, &mut path, &mut lru);
-            let (_, key) = lru.expect("over budget implies at least one entry");
-            let e = remove_rec(&mut self.root, &key).expect("LRU path resolves to an entry");
-            self.resident_bytes -= e.cache.bytes();
-            self.entries -= 1;
-            self.evictions += 1;
-            pool.put(e.cache);
+            self.evict_lru(pool);
         }
+    }
+
+    fn evict_lru(&mut self, pool: &mut KvPagePool) {
+        let mut path = Vec::new();
+        let mut lru: Option<(u64, Vec<u16>)> = None;
+        find_lru(&self.root, &mut path, &mut lru);
+        let (_, key) = lru.expect("eviction requires at least one entry");
+        let e = remove_rec(&mut self.root, &key).expect("LRU path resolves to an entry");
+        self.resident_bytes -= e.cache.bytes();
+        self.entries -= 1;
+        self.evictions += 1;
+        pool.put_cache(e.cache);
+    }
+
+    /// Evict every entry back into `pool` (shutdown / the page-hygiene
+    /// property's final drain). Counts as evictions.
+    pub fn drain(&mut self, pool: &mut KvPagePool) {
+        while self.entries > 0 {
+            self.evict_lru(pool);
+        }
+        debug_assert_eq!(self.resident_bytes, 0);
+    }
+
+    /// Visit every pinned cache (the scheduler's distinct-page residency
+    /// walk; order is the deterministic trie order).
+    pub fn visit_caches(&self, f: &mut dyn FnMut(&KvCache)) {
+        visit_rec(&self.root, f);
     }
 
     /// Pinned caches currently held.
@@ -208,7 +245,9 @@ impl PrefixCache {
         self.entries
     }
 
-    /// Bytes of the pinned caches' buffers.
+    /// Bytes of the pages the pinned entries reference (each entry
+    /// counted in full; system-wide dedup of pages shared with live
+    /// requests happens in the scheduler's stats walk).
     pub fn resident_bytes(&self) -> usize {
         self.resident_bytes
     }
@@ -217,19 +256,24 @@ impl PrefixCache {
         self.budget_bytes
     }
 
-    /// Forks attempted (one per admission when the cache is enabled).
+    /// Shares attempted (one per admission when the cache is enabled).
     pub fn lookups(&self) -> u64 {
         self.lookups
     }
 
-    /// Forks that reused a non-empty prefix.
+    /// Shares that reused a non-empty prefix.
     pub fn hits(&self) -> u64 {
         self.hits
     }
 
-    /// Prompt tokens served by copy instead of prefill.
+    /// Prompt tokens served by page sharing instead of prefill.
     pub fn saved_tokens(&self) -> u64 {
         self.saved_tokens
+    }
+
+    /// KV bytes the pre-paging copy path would have memcpy'd on hits.
+    pub fn saved_bytes(&self) -> u64 {
+        self.saved_bytes
     }
 
     /// Entries evicted back into the pool to hold the byte budget.
@@ -272,6 +316,15 @@ fn find_lru(node: &Node, path: &mut Vec<u16>, best: &mut Option<(u64, Vec<u16>)>
     }
 }
 
+fn visit_rec(node: &Node, f: &mut dyn FnMut(&KvCache)) {
+    if let Some(e) = &node.entry {
+        f(&e.cache);
+    }
+    for child in node.children.values() {
+        visit_rec(child, f);
+    }
+}
+
 /// Remove the entry at `key`, decrementing `subtree_entries` on the way
 /// out and pruning child nodes whose subtree no longer holds any entry.
 fn remove_rec(node: &mut Node, key: &[u16]) -> Option<Entry> {
@@ -298,7 +351,8 @@ mod tests {
     use crate::model::{Model, TransformerConfig};
     use crate::util::rng::Rng;
 
-    fn setup() -> (ExecModel, ExecState, KvCachePool) {
+    /// 8-token pages over a 32-token context: pins span 1–4 pages.
+    fn setup() -> (ExecModel, ExecState, KvPagePool) {
         let cfg = TransformerConfig {
             vocab: 32,
             d_model: 16,
@@ -310,16 +364,17 @@ mod tests {
             eps: 1e-5,
         };
         let m = Model::random(cfg, &mut Rng::new(90));
-        (ExecModel::dense(&m), ExecState::new(cfg), KvCachePool::new(cfg))
+        (ExecModel::dense(&m), ExecState::new(cfg), KvPagePool::with_page_tokens(cfg, 8))
     }
 
     fn pinned(
         model: &ExecModel,
         st: &mut ExecState,
-        pool: &mut KvCachePool,
+        pool: &mut KvPagePool,
         prompt: &[u16],
     ) -> KvCache {
-        let mut c = pool.take();
+        let mut c = pool.take_cache();
+        c.reserve(pool, prompt.len());
         let _ = prefill(model, &mut c, prompt, st);
         c
     }
@@ -327,12 +382,12 @@ mod tests {
     #[test]
     fn probe_finds_longest_shared_prefix_capped_at_len_minus_one() {
         let (model, mut st, mut pool) = setup();
-        let cache_bytes = KvCache::new(&model.config).bytes();
-        let mut pc = PrefixCache::new(4 * cache_bytes);
+        let page = pool.page_bytes();
+        let mut pc = PrefixCache::new(4 * page);
         let c = pinned(&model, &mut st, &mut pool, &[1, 2, 3, 4]);
         pc.insert(&[1, 2, 3, 4], c, &mut pool);
         assert_eq!(pc.entries(), 1);
-        assert_eq!(pc.resident_bytes(), cache_bytes);
+        assert_eq!(pc.resident_bytes(), page, "a 4-token pin holds one 8-token page");
 
         // identical prompt: full depth minus the mandatory final prefill
         assert_eq!(pc.probe(&[1, 2, 3, 4]), 3);
@@ -347,47 +402,65 @@ mod tests {
     }
 
     #[test]
-    fn fork_reproduces_cold_prefill_bitwise() {
+    fn share_reproduces_cold_prefill_bitwise_and_copies_nothing() {
         let (model, mut st, mut pool) = setup();
-        let mut pc = PrefixCache::new(8 * KvCache::new(&model.config).bytes());
-        let prompt = [3u16, 1, 4, 1, 5, 9, 2, 6];
+        let mut pc = PrefixCache::new(8 * pool.page_bytes());
+        let prompt = [3u16, 1, 4, 1, 5, 9, 2, 6, 5, 3];
         let donor = pinned(&model, &mut st, &mut pool, &prompt);
         pc.insert(&prompt, donor, &mut pool);
 
         // cold reference over the same prompt
-        let mut cold = KvCache::new(&model.config);
+        let mut cold = KvCache::with_page_tokens(&model.config, 8);
         let want = prefill(&model, &mut cold, &prompt, &mut st);
 
-        let mut dst = pool.take();
-        let depth = pc.fork_into(&prompt, &mut dst);
+        let free_before = pool.free_pages();
+        let mut dst = pool.take_cache();
+        let depth = pc.share_into(&prompt, &mut dst);
         assert_eq!(depth, prompt.len() - 1);
         assert_eq!(dst.len(), depth);
+        assert_eq!(pool.free_pages(), free_before, "a hit takes no pages from the pool");
+        // the destination references the donor's pages verbatim
+        assert!(dst.page_stats().all(|s| s.shared));
         let got = prefill(&model, &mut dst, &prompt[depth..], &mut st);
-        // tail prefill over the forked prefix is bit-identical to the
+        // tail prefill over the shared prefix is bit-identical to the
         // cold last-row logits
         assert_eq!(got.row(0), want.row(prompt.len() - 1));
         assert_eq!((pc.lookups(), pc.hits()), (1, 1));
         assert_eq!(pc.saved_tokens(), depth as u64);
+        assert_eq!(pc.saved_bytes(), (depth * dst.token_bytes()) as u64);
     }
 
     #[test]
-    fn duplicate_insert_returns_cache_to_pool() {
+    fn duplicate_insert_returns_pages_to_pool() {
         let (model, mut st, mut pool) = setup();
-        let mut pc = PrefixCache::new(8 * KvCache::new(&model.config).bytes());
+        let mut pc = PrefixCache::new(8 * pool.page_bytes());
         let a = pinned(&model, &mut st, &mut pool, &[5, 6, 7]);
         let b = pinned(&model, &mut st, &mut pool, &[5, 6, 7]);
         pc.insert(&[5, 6, 7], a, &mut pool);
-        assert_eq!(pool.free_caches(), 0);
+        assert_eq!(pool.free_pages(), 0);
         pc.insert(&[5, 6, 7], b, &mut pool);
         assert_eq!(pc.entries(), 1, "duplicate prompt must not pin twice");
-        assert_eq!(pool.free_caches(), 1, "surplus cache returns to the pool");
+        assert_eq!(pool.free_pages(), 1, "surplus page returns to the pool");
+    }
+
+    #[test]
+    fn insert_releases_generated_pages_beyond_the_prompt() {
+        let (model, mut st, mut pool) = setup();
+        let mut pc = PrefixCache::new(8 * pool.page_bytes());
+        // 4 prompt tokens + 14 "generated" positions = 18 → 3 pages; the
+        // prompt needs only 1. truncate_into must free the other 2.
+        let long: Vec<u16> = (0..18).map(|i| (i % 31) as u16).collect();
+        let c = pinned(&model, &mut st, &mut pool, &long);
+        pc.insert(&long[..4], c, &mut pool);
+        assert_eq!(pc.resident_bytes(), pool.page_bytes());
+        assert_eq!(pool.free_pages(), 2, "pages past the prompt rejoin the pool");
     }
 
     #[test]
     fn lru_eviction_holds_budget_and_refills_pool() {
         let (model, mut st, mut pool) = setup();
-        let cache_bytes = KvCache::new(&model.config).bytes();
-        let mut pc = PrefixCache::new(2 * cache_bytes);
+        let page = pool.page_bytes();
+        let mut pc = PrefixCache::new(2 * page);
 
         let c1 = pinned(&model, &mut st, &mut pool, &[1, 1, 1]);
         let c2 = pinned(&model, &mut st, &mut pool, &[2, 2, 2]);
@@ -395,16 +468,16 @@ mod tests {
         pc.insert(&[1, 1, 1], c1, &mut pool);
         pc.insert(&[2, 2, 2], c2, &mut pool);
         // touch [1,1,1] so [2,2,2] becomes the LRU entry
-        let mut scratch = pool.take();
-        assert_eq!(pc.fork_into(&[1, 1, 1, 4], &mut scratch), 3);
-        pool.put(scratch);
+        let mut scratch = pool.take_cache();
+        assert_eq!(pc.share_into(&[1, 1, 1, 4], &mut scratch), 3);
+        pool.put_cache(scratch);
 
-        let free_before = pool.free_caches();
+        let free_before = pool.free_pages();
         pc.insert(&[3, 3, 3], c3, &mut pool);
         assert_eq!(pc.entries(), 2);
-        assert_eq!(pc.resident_bytes(), 2 * cache_bytes);
+        assert_eq!(pc.resident_bytes(), 2 * page);
         assert_eq!(pc.evictions(), 1);
-        assert_eq!(pool.free_caches(), free_before + 1, "evicted cache rejoins the pool");
+        assert_eq!(pool.free_pages(), free_before + 1, "evicted pages rejoin the pool");
         // the LRU victim was [2,2,2]; the touched and the new entries remain
         assert_eq!(pc.probe(&[2, 2, 2, 9]), 0);
         assert_eq!(pc.probe(&[1, 1, 1, 9]), 3);
@@ -414,11 +487,34 @@ mod tests {
     #[test]
     fn oversized_cache_is_never_pinned() {
         let (model, mut st, mut pool) = setup();
-        let mut pc = PrefixCache::new(KvCache::new(&model.config).bytes() / 2);
+        let mut pc = PrefixCache::new(pool.page_bytes() / 2);
         let c = pinned(&model, &mut st, &mut pool, &[4, 5]);
         pc.insert(&[4, 5], c, &mut pool);
         assert_eq!(pc.entries(), 0);
         assert_eq!(pc.resident_bytes(), 0);
-        assert_eq!(pool.free_caches(), 1);
+        assert_eq!(pool.free_pages(), 1);
+    }
+
+    #[test]
+    fn drain_returns_every_page_even_while_shared() {
+        let (model, mut st, mut pool) = setup();
+        let mut pc = PrefixCache::new(8 * pool.page_bytes());
+        let prompt = [9u16, 8, 7, 6, 5, 4, 3, 2, 1, 0];
+        let donor = pinned(&model, &mut st, &mut pool, &prompt);
+        pc.insert(&prompt, donor, &mut pool); // 10 tokens → 2 pages pinned
+
+        // a live reader shares the pinned pages, then the trie drains:
+        // the fully-shared page must NOT hit the free list twice
+        let mut live = pool.take_cache();
+        let depth = pc.share_into(&prompt, &mut live);
+        assert_eq!(depth, 9);
+        pc.drain(&mut pool);
+        assert_eq!(pc.entries(), 0);
+        // page 0 (full, still referenced by `live`) stayed out; page 1
+        // dropped to refcount 1 via the entry release... but `live` also
+        // holds it (9 < 16 tokens → both pages), so nothing is free yet
+        assert_eq!(pool.free_pages(), 0, "shared pages only come home with the reader");
+        pool.put_cache(live);
+        assert_eq!(pool.free_pages() as u64, pool.pages_created(), "no leak, no double-free");
     }
 }

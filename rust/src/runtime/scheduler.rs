@@ -13,24 +13,43 @@
 //!    requests sit at arbitrary, unequal cache depths, and per-row results
 //!    are independent of batch composition, so outputs are token-identical
 //!    to running each request alone (`tests/scheduler.rs` pins this);
-//! 3. **retires** finished requests immediately (their [`KvCache`] goes
-//!    back to the [`KvCachePool`]) and **backfills** the freed slots from
-//!    the queue in the same step.
+//! 3. **retires** finished requests immediately (their [`KvCache`] pages
+//!    go back to the [`KvPagePool`]) and **backfills** the freed slots
+//!    from the queue in the same step.
 //!
 //! [`AdmissionPolicy::Wave`] disables backfill (admission only into an
 //! empty batch), which reproduces the PR-1 static-batching behaviour on
 //! the same engine — the baseline the example and the scheduler bench
 //! compare against.
 //!
-//! With [`SchedulerConfig::prefix_cache_bytes`] > 0, admission consults a
-//! [`PrefixCache`]: retired requests pin their prompt's KV prefix in a
-//! token trie, and a new request whose prompt shares a cached prefix
-//! forks that KV state (a per-layer `memcpy`) and prefills **only the
-//! prompt tail**. Because prefill and decode are deterministic and
-//! batch-invariant, prefix-hit serving is token-identical to cold
+//! **KV memory is paged** ([`SchedulerConfig::kv_page_tokens`]): a live
+//! request holds `ceil(len / page_tokens)` fixed-size pages drawn from the
+//! pool, not a full-context buffer, and the scheduler `reserve`s one
+//! position per slot from the pool before each fused decode so the hot
+//! loop never allocates. With [`SchedulerConfig::prefix_cache_bytes`] > 0,
+//! admission consults a [`PrefixCache`]: retired requests pin their
+//! prompt's KV pages in a token trie, and a new request whose prompt
+//! shares a cached prefix **shares those pages** — O(pages) refcount
+//! bumps, zero KV bytes copied ([`KvCache::share_prefix_from`]); the
+//! memcpy the pre-paging fork paid is tracked as
+//! [`SchedulerStats::shared_kv_bytes_saved`] — and prefills **only the
+//! prompt tail**, whose first append forks the shared partial tail page
+//! copy-on-write. Because prefill and decode are deterministic and
+//! batch-invariant, prefix-hit paged serving is token-identical to cold
 //! prefill (`tests/prefix_cache.rs` pins this); only the step at which a
-//! request is admitted can shift, since saved tokens free prefill
-//! budget. Hit and saved-token counters surface in [`SchedulerStats`].
+//! request is admitted can shift, since saved tokens free prefill budget.
+//!
+//! With [`SchedulerConfig::kv_quant_bits`] > 0 (off by default), pages
+//! that have fallen at least `kv_quant_margin` positions behind a
+//! request's decode head are re-encoded after each step as per-page
+//! k-means codebooks ([`KvCache::quantize_cold_pages`]) and read back
+//! through scratch during attention. This is **lossy**: outputs are
+//! tolerance-gated, never bit-compared (DESIGN.md §13), which is why it
+//! is opt-in while paging itself is contract-identical.
+//!
+//! Residency accounting is distinct-page: [`SchedulerStats`] counts every
+//! page once no matter how many tables (live slots, pinned prefixes)
+//! reference it.
 //!
 //! The scheduler is deliberately synchronous and single-threaded: one
 //! `step` call is one unit of engine work, and the caller owns the clock
@@ -41,11 +60,12 @@
 
 use super::prefix_cache::PrefixCache;
 use crate::model::exec::{
-    argmax, decode_step, prefill, ExecModel, ExecState, KvCache, KvCachePool,
+    argmax, decode_step, prefill, ExecModel, ExecState, KvCache, KvPagePool, DEFAULT_PAGE_TOKENS,
 };
 use crate::model::TransformerConfig;
+use crate::quant::kvpage::MAX_KV_QUANT_BITS;
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// One generation request.
 #[derive(Clone, Debug)]
@@ -107,9 +127,19 @@ pub struct SchedulerConfig {
     pub prefill_token_budget: usize,
     pub policy: AdmissionPolicy,
     /// Byte budget for the prefix-sharing KV cache (`0` disables it).
-    /// Pinned prefixes borrow full-size caches from the pool's working
-    /// set, so the budget bounds the extra KV memory serving holds.
+    /// Pinned prefixes hold page refcounts, so the budget bounds the
+    /// extra KV pages serving keeps alive beyond the live batch.
     pub prefix_cache_bytes: usize,
+    /// Tokens per KV page (`0` → [`DEFAULT_PAGE_TOKENS`]; clamped to
+    /// `1..=max_seq` by the pool). Purely a memory-granularity knob:
+    /// outputs are bit-identical across page sizes.
+    pub kv_page_tokens: usize,
+    /// Codebook width for cold-page KV quantization, `0` = off (the
+    /// default — quantized KV is lossy and tolerance-gated).
+    pub kv_quant_bits: u8,
+    /// A page is re-encoded only once it lies wholly at least this many
+    /// positions behind the request's decode head.
+    pub kv_quant_margin: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -119,12 +149,16 @@ impl Default for SchedulerConfig {
             prefill_token_budget: 512,
             policy: AdmissionPolicy::Continuous,
             prefix_cache_bytes: 0,
+            kv_page_tokens: DEFAULT_PAGE_TOKENS,
+            kv_quant_bits: 0,
+            kv_quant_margin: 128,
         }
     }
 }
 
 /// Counters for the serving report; pool numbers come straight from the
-/// [`KvCachePool`].
+/// [`KvPagePool`], residency from a distinct-page walk over every live
+/// and pinned page table (each shared page counted once).
 #[derive(Clone, Debug, Default)]
 pub struct SchedulerStats {
     pub steps: u64,
@@ -137,14 +171,21 @@ pub struct SchedulerStats {
     /// Prompt tokens actually prefilled (prefix-cache hits skip the
     /// shared prefix, so this counts only the tails that ran).
     pub prefill_tokens_in: u64,
-    /// Prompt tokens served by prefix-cache forks instead of prefill.
+    /// Prompt tokens served by prefix-page sharing instead of prefill.
     pub prefill_tokens_saved: u64,
     pub completed: u64,
     pub peak_live: usize,
+    /// Page takes served from the pool's free list / by allocation.
     pub pool_hits: u64,
     pub pool_misses: u64,
+    /// Bytes of the pooled (free) pages.
     pub pool_resident_bytes: usize,
     pub pool_hit_rate: f64,
+    pub pool_free_pages: usize,
+    /// Pages the pool ever allocated; equals `pool_free_pages` once every
+    /// request retired and the prefix cache drained (no leak, no
+    /// double-free — `tests/paged_kv.rs` pins this).
+    pub pool_pages_created: u64,
     /// Prefix-cache probes (one per admission when enabled).
     pub prefix_lookups: u64,
     /// Admissions that reused a non-empty cached prefix.
@@ -152,6 +193,29 @@ pub struct SchedulerStats {
     pub prefix_entries: usize,
     pub prefix_resident_bytes: usize,
     pub prefix_evictions: u64,
+    /// KV bytes prefix hits would have memcpy'd under the pre-paging
+    /// contiguous fork — now pure page sharing.
+    pub shared_kv_bytes_saved: u64,
+    /// Distinct KV pages (and their bytes) currently referenced by live
+    /// slots + pinned prefixes, each page counted once.
+    pub kv_pages_resident: usize,
+    pub kv_pages_shared: usize,
+    pub kv_pages_quantized: usize,
+    pub kv_resident_bytes: usize,
+    /// High-water mark of `kv_resident_bytes`, sampled after admission
+    /// each step.
+    pub peak_kv_resident_bytes: usize,
+    /// Pages re-encoded by cold-page quantization over the run.
+    pub kv_pages_quantized_total: u64,
+}
+
+/// Distinct-page residency snapshot (shared pages counted once).
+#[derive(Clone, Copy, Debug, Default)]
+struct KvCensus {
+    pages: usize,
+    shared: usize,
+    quantized: usize,
+    bytes: usize,
 }
 
 /// A live request occupying one batch slot. The prompt is kept so the
@@ -180,7 +244,7 @@ pub struct Scheduler {
     cfg: SchedulerConfig,
     queue: VecDeque<(u64, Request)>,
     slots: Vec<Slot>,
-    pool: KvCachePool,
+    pool: KvPagePool,
     prefix: Option<PrefixCache>,
     next_id: u64,
     step_no: u64,
@@ -190,16 +254,26 @@ pub struct Scheduler {
     prefill_tokens_out: u64,
     completed: u64,
     peak_live: usize,
+    peak_kv_resident_bytes: usize,
+    kv_pages_quantized_total: u64,
 }
 
 impl Scheduler {
     pub fn new(model_cfg: TransformerConfig, cfg: SchedulerConfig) -> Self {
         assert!(cfg.max_slots >= 1, "scheduler needs at least one slot");
         assert!(cfg.prefill_token_budget >= 1, "zero prefill budget admits nothing");
-        // Pre-warm the pool to the live-batch bound: steady-state serving
-        // then allocates no caches at all. (Prefix pins borrow from this
-        // working set; the pool simply allocates replacements on demand.)
-        let pool = KvCachePool::with_capacity(model_cfg, cfg.max_slots);
+        assert!(
+            cfg.kv_quant_bits <= MAX_KV_QUANT_BITS,
+            "kv_quant_bits ({}) exceeds the {MAX_KV_QUANT_BITS}-bit codec",
+            cfg.kv_quant_bits
+        );
+        let page_tokens =
+            if cfg.kv_page_tokens == 0 { DEFAULT_PAGE_TOKENS } else { cfg.kv_page_tokens };
+        // Pre-warm the pool to the live-batch bound (pages for max_slots
+        // full-context requests): steady-state serving then allocates
+        // nothing. Prefix pins hold refcounts on this working set; the
+        // pool allocates replacement pages on demand.
+        let pool = KvPagePool::with_capacity_paged(model_cfg, page_tokens, cfg.max_slots);
         let prefix = (cfg.prefix_cache_bytes > 0).then(|| PrefixCache::new(cfg.prefix_cache_bytes));
         Self {
             model_cfg,
@@ -216,6 +290,8 @@ impl Scheduler {
             prefill_tokens_out: 0,
             completed: 0,
             peak_live: 0,
+            peak_kv_resident_bytes: 0,
+            kv_pages_quantized_total: 0,
         }
     }
 
@@ -252,8 +328,48 @@ impl Scheduler {
         !self.queue.is_empty() || !self.slots.is_empty()
     }
 
+    /// Evict every pinned prefix back into the page pool (shutdown; the
+    /// refcount-hygiene property drains here before checking the pool).
+    pub fn drain_prefix_cache(&mut self) {
+        if let Some(p) = &mut self.prefix {
+            p.drain(&mut self.pool);
+        }
+    }
+
+    /// Walk every live and pinned page table, counting each distinct page
+    /// once — the fix for the pre-paging stats that attributed a full
+    /// forked cache to every request.
+    fn kv_census(&self) -> KvCensus {
+        let mut seen = HashMap::new();
+        for slot in &self.slots {
+            for s in slot.cache.page_stats() {
+                seen.insert(s.ptr, s);
+            }
+        }
+        if let Some(p) = &self.prefix {
+            p.visit_caches(&mut |c| {
+                for s in c.page_stats() {
+                    seen.insert(s.ptr, s);
+                }
+            });
+        }
+        let mut out = KvCensus::default();
+        for s in seen.values() {
+            out.pages += 1;
+            out.bytes += s.bytes;
+            if s.shared {
+                out.shared += 1;
+            }
+            if s.quantized {
+                out.quantized += 1;
+            }
+        }
+        out
+    }
+
     pub fn stats(&self) -> SchedulerStats {
         let p = self.prefix.as_ref();
+        let census = self.kv_census();
         SchedulerStats {
             steps: self.step_no,
             decode_batches: self.decode_batches,
@@ -267,19 +383,29 @@ impl Scheduler {
             pool_misses: self.pool.misses(),
             pool_resident_bytes: self.pool.resident_bytes(),
             pool_hit_rate: self.pool.hit_rate(),
+            pool_free_pages: self.pool.free_pages(),
+            pool_pages_created: self.pool.pages_created(),
             prefix_lookups: p.map_or(0, PrefixCache::lookups),
             prefix_hits: p.map_or(0, PrefixCache::hits),
             prefix_entries: p.map_or(0, PrefixCache::entries),
             prefix_resident_bytes: p.map_or(0, PrefixCache::resident_bytes),
             prefix_evictions: p.map_or(0, PrefixCache::evictions),
+            shared_kv_bytes_saved: p.map_or(0, PrefixCache::saved_bytes),
+            kv_pages_resident: census.pages,
+            kv_pages_shared: census.shared,
+            kv_pages_quantized: census.quantized,
+            kv_resident_bytes: census.bytes,
+            peak_kv_resident_bytes: self.peak_kv_resident_bytes.max(census.bytes),
+            kv_pages_quantized_total: self.kv_pages_quantized_total,
         }
     }
 
     /// One engine step: admit + prefill, one fused decode across the live
-    /// batch, retire finished requests, backfill their slots (same step).
-    /// Returns the requests that finished during this step, in retirement
-    /// order. `st` must have row capacity ≥ `max_slots` and ≥ the longest
-    /// admitted prompt ([`ExecState::new`] covers both).
+    /// batch, retire finished requests, backfill their slots (same step),
+    /// then re-encode any pages that went cold. Returns the requests that
+    /// finished during this step, in retirement order. `st` must have row
+    /// capacity ≥ `max_slots` and ≥ the longest admitted prompt
+    /// ([`ExecState::new`] covers both).
     pub fn step(&mut self, model: &ExecModel, st: &mut ExecState) -> Vec<Completion> {
         assert_eq!(model.config, self.model_cfg, "scheduler built for a different model config");
         assert!(
@@ -294,7 +420,15 @@ impl Scheduler {
         let mut admitted_any = false;
 
         self.admit(model, st, &mut budget, &mut admitted_any, &mut done);
+        let census = self.kv_census();
+        self.peak_kv_resident_bytes = self.peak_kv_resident_bytes.max(census.bytes);
         if !self.slots.is_empty() {
+            // Draw this step's page growth from the pool up front (a page
+            // boundary crossing, or a CoW fork of a still-shared tail) so
+            // the fused decode itself never allocates.
+            for s in self.slots.iter_mut() {
+                s.cache.reserve(&mut self.pool, 1);
+            }
             let toks: Vec<u16> =
                 self.slots.iter().map(|s| *s.generated.last().unwrap()).collect();
             let mut caches: Vec<&mut KvCache> =
@@ -309,6 +443,14 @@ impl Scheduler {
             self.retire(&mut done);
             // Backfill freed slots so they decode from the very next step.
             self.admit(model, st, &mut budget, &mut admitted_any, &mut done);
+
+            if self.cfg.kv_quant_bits > 0 {
+                let (bits, margin) = (self.cfg.kv_quant_bits, self.cfg.kv_quant_margin);
+                for s in self.slots.iter_mut() {
+                    self.kv_pages_quantized_total +=
+                        s.cache.quantize_cold_pages(bits, margin, Some(&mut self.pool)) as u64;
+                }
+            }
         }
         done
     }
@@ -342,8 +484,9 @@ impl Scheduler {
         while self.slots.len() < self.cfg.max_slots {
             let Some((_, front)) = self.queue.front() else { break };
             let prompt_len = front.prompt.len();
-            // Budget is a compute throttle, so a cached prefix (a memcpy,
-            // not a forward pass) charges only the tail it will prefill.
+            // Budget is a compute throttle, so a cached prefix (page
+            // sharing, not a forward pass) charges only the tail it will
+            // prefill.
             let reusable = self.prefix.as_ref().map_or(0, |p| p.probe(&front.prompt));
             if prompt_len - reusable > *budget && *admitted_any {
                 break; // budget spent; the rest waits for the next step
@@ -352,13 +495,17 @@ impl Scheduler {
             *budget = budget.saturating_sub(prompt_len - reusable);
 
             let (id, req) = self.queue.pop_front().unwrap();
-            let mut cache = self.pool.take();
+            let mut cache = self.pool.take_cache();
             let depth = match &mut self.prefix {
-                Some(p) => p.fork_into(&req.prompt, &mut cache),
+                Some(p) => p.share_into(&req.prompt, &mut cache),
                 None => 0,
             };
-            debug_assert_eq!(depth, reusable, "probe and fork must agree within one admission");
+            debug_assert_eq!(depth, reusable, "probe and share must agree within one admission");
             let tail = &req.prompt[depth..];
+            // Tail pages (and the CoW fork of a shared partial tail page)
+            // come from the pool; prefill's own prepare_append is then a
+            // no-op.
+            cache.reserve(&mut self.pool, tail.len());
             let logits = prefill(model, &mut cache, tail, st);
             let first = argmax(logits.row(tail.len() - 1));
             self.prefill_tokens_in += tail.len() as u64;
@@ -382,7 +529,7 @@ impl Scheduler {
         }
     }
 
-    /// Retire every finished slot, releasing its cache to the prefix
+    /// Retire every finished slot, releasing its pages to the prefix
     /// cache (when enabled) or the pool.
     fn retire(&mut self, done: &mut Vec<Completion>) {
         let mut i = 0;
@@ -401,12 +548,13 @@ impl Scheduler {
         let last = *generated.last().unwrap();
         let reason = if stop == Some(last) { FinishReason::Stop } else { FinishReason::Length };
         // Retirement feeds the prefix cache: the cache (truncated back to
-        // the prompt) is pinned for future shared-prefix admissions, or
-        // recycled straight into the pool when the cache is disabled /
-        // the prompt is already pinned.
+        // the prompt, decode pages released) pins its prompt pages for
+        // future shared-prefix admissions, or every page recycles straight
+        // into the pool when the cache is disabled / the prompt is already
+        // pinned.
         match &mut self.prefix {
             Some(p) => p.insert(&prompt, cache, &mut self.pool),
-            None => self.pool.put(cache),
+            None => self.pool.put_cache(cache),
         }
         self.completed += 1;
         Completion {
@@ -490,9 +638,13 @@ mod tests {
         let stats = s.stats();
         assert_eq!(stats.completed, 5);
         assert!(stats.peak_live <= 2);
-        // pre-warmed pool + recycling: no allocation ever needed
+        // pre-warmed pool + page recycling: no allocation ever needed
+        // (max_seq 32 fits one default page, so one take per request)
         assert_eq!(stats.pool_misses, 0);
         assert_eq!(stats.pool_hits, 5);
+        // everything retired, nothing pinned: all pages are home
+        assert_eq!(stats.pool_free_pages as u64, stats.pool_pages_created);
+        assert_eq!(stats.kv_pages_resident, 0);
     }
 
     #[test]
@@ -524,7 +676,7 @@ mod tests {
                 max_slots: 4,
                 prefill_token_budget: 5,
                 policy: AdmissionPolicy::Continuous,
-                prefix_cache_bytes: 0,
+                ..SchedulerConfig::default()
             },
         );
         // 10-token prompt exceeds the whole budget: admitted anyway (first
@@ -559,7 +711,7 @@ mod tests {
 
         // serve sequentially so each retirement can seed the next
         // admission; cold run is the reference
-        let serve = |prefix_cache_bytes: usize| {
+        let mut serve = |prefix_cache_bytes: usize| {
             let mut s = Scheduler::new(
                 model.config,
                 SchedulerConfig { prefix_cache_bytes, ..SchedulerConfig::default() },
@@ -580,10 +732,14 @@ mod tests {
         }
         assert_eq!(cold_stats.prefix_lookups, 0, "disabled cache must not probe");
         assert_eq!(cold_stats.prefill_tokens_saved, 0);
+        assert_eq!(cold_stats.shared_kv_bytes_saved, 0);
         assert_eq!(warm_stats.prefix_lookups, 4);
         // requests 2..4 all share the 8-token system prefix of request 1
         assert_eq!(warm_stats.prefix_hits, 3);
         assert_eq!(warm_stats.prefill_tokens_saved, 3 * system.len() as u64);
+        // every saved token is KV bytes that are now shared, not copied
+        let token_bytes = KvCache::new(&model.config).token_bytes() as u64;
+        assert_eq!(warm_stats.shared_kv_bytes_saved, warm_stats.prefill_tokens_saved * token_bytes);
         assert_eq!(
             warm_stats.prefill_tokens_in + warm_stats.prefill_tokens_saved,
             cold_stats.prefill_tokens_in,
@@ -606,6 +762,7 @@ mod tests {
                 prefill_token_budget: 6,
                 policy: AdmissionPolicy::Continuous,
                 prefix_cache_bytes: 1 << 20,
+                ..SchedulerConfig::default()
             },
         );
         let mk = |last: u16| Request {
@@ -664,5 +821,90 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn page_size_is_invisible_to_serving() {
+        let (model, mut st) = small_setup();
+        let mut serve = |pt: usize| {
+            let mut s = Scheduler::new(
+                model.config,
+                SchedulerConfig {
+                    max_slots: 3,
+                    kv_page_tokens: pt,
+                    prefix_cache_bytes: 1 << 20,
+                    ..SchedulerConfig::default()
+                },
+            );
+            for i in 0..6u16 {
+                s.submit(Request {
+                    prompt: vec![i % 3, 5, 6, i],
+                    max_new_tokens: 5,
+                    stop_token: None,
+                })
+                .unwrap();
+            }
+            let mut done = s.run_to_completion(&model, &mut st);
+            done.sort_by_key(|c| c.id);
+            done.into_iter().map(|c| c.tokens).collect::<Vec<_>>()
+        };
+        // one-page-per-request baseline vs small pages that force boundary
+        // crossings, CoW tail forks, and multi-page shares
+        let base = serve(32);
+        for pt in [1, 3, 7] {
+            assert_eq!(serve(pt), base, "page size {pt} changed served tokens");
+        }
+    }
+
+    #[test]
+    fn cold_page_quantization_runs_and_returns_pages() {
+        let (model, mut st) = small_setup();
+        let mut s = Scheduler::new(
+            model.config,
+            SchedulerConfig {
+                max_slots: 1,
+                kv_page_tokens: 4,
+                kv_quant_bits: 8,
+                kv_quant_margin: 4,
+                ..SchedulerConfig::default()
+            },
+        );
+        s.submit(Request {
+            prompt: vec![3, 1, 4, 1, 5, 9, 2, 6],
+            max_new_tokens: 12,
+            stop_token: None,
+        })
+        .unwrap();
+        let done = s.run_to_completion(&model, &mut st);
+        assert_eq!(done.len(), 1);
+        // lossy path: structure is asserted, tokens are not bit-compared
+        assert_eq!(done[0].tokens.len(), 12);
+        let stats = s.stats();
+        assert!(stats.kv_pages_quantized_total > 0, "cold pages must have been re-encoded");
+        assert_eq!(stats.pool_misses, 0, "quantization frees f32 pages back to the pool");
+        // retirement drops quantized pages and returns every f32 page
+        assert_eq!(stats.pool_free_pages as u64, stats.pool_pages_created);
+        assert_eq!(stats.kv_pages_resident, 0);
+    }
+
+    #[test]
+    fn drain_prefix_cache_returns_pinned_pages() {
+        let (model, mut st) = small_setup();
+        let mut s = Scheduler::new(
+            model.config,
+            SchedulerConfig { prefix_cache_bytes: 1 << 20, ..SchedulerConfig::default() },
+        );
+        s.submit(Request { prompt: vec![1, 2, 3, 4, 5], max_new_tokens: 3, stop_token: None })
+            .unwrap();
+        s.run_to_completion(&model, &mut st);
+        let before = s.stats();
+        assert_eq!(before.prefix_entries, 1);
+        assert!(before.kv_pages_resident > 0, "the pinned prefix keeps pages alive");
+        assert!((before.pool_free_pages as u64) < before.pool_pages_created);
+        s.drain_prefix_cache();
+        let after = s.stats();
+        assert_eq!(after.prefix_entries, 0);
+        assert_eq!(after.kv_pages_resident, 0);
+        assert_eq!(after.pool_free_pages as u64, after.pool_pages_created);
     }
 }

@@ -10,7 +10,7 @@ use crate::coordinator::pipeline::{quantize_model, PipelineOpts};
 use crate::coordinator::registry::artifacts_dir;
 use crate::data::calibration::default_calibration;
 use crate::data::corpus::CorpusKind;
-use crate::model::exec::ExecState;
+use crate::model::exec::{ExecState, DEFAULT_PAGE_TOKENS};
 use crate::model::io::load_model;
 use crate::model::{MatrixId, MatrixKind, Model, TransformerConfig};
 use crate::quant::config::{Method, DEFAULT_S};
@@ -217,10 +217,11 @@ pub fn pack(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `claq serve --checkpoint model.claq [--requests N --slots S --seed K]`
-/// — cold-start the continuous-batching engine from a checkpoint (no
-/// calibration, no quantization, no dense weights) and drive a short
-/// greedy-decode workload.
+/// `claq serve --checkpoint model.claq [--requests N --slots S --seed K]
+/// [--kv-page-tokens P] [--kv-quant-bits B]` — cold-start the
+/// continuous-batching engine from a checkpoint (no calibration, no
+/// quantization, no dense weights) and drive a short greedy-decode
+/// workload over the paged KV cache.
 pub fn serve(args: &Args) -> Result<()> {
     let path = args
         .get("checkpoint")
@@ -240,6 +241,11 @@ pub fn serve(args: &Args) -> Result<()> {
     let slots: usize = args.get_parse_or("slots", 4).map_err(anyhow::Error::msg)?;
     let slots = slots.clamp(1, cfg.max_seq);
     let seed: u64 = args.get_parse_or("seed", 17).map_err(anyhow::Error::msg)?;
+    let kv_page_tokens: usize =
+        args.get_parse_or("kv-page-tokens", DEFAULT_PAGE_TOKENS).map_err(anyhow::Error::msg)?;
+    let kv_quant_bits: u8 =
+        args.get_parse_or("kv-quant-bits", 0).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(kv_quant_bits <= 8, "--kv-quant-bits must be in [0, 8] (0 = off)");
 
     let mut sched = Scheduler::new(
         cfg,
@@ -247,7 +253,9 @@ pub fn serve(args: &Args) -> Result<()> {
             max_slots: slots,
             prefill_token_budget: 2 * cfg.max_seq,
             policy: AdmissionPolicy::Continuous,
-            prefix_cache_bytes: 0,
+            kv_page_tokens,
+            kv_quant_bits,
+            ..SchedulerConfig::default()
         },
     );
     // Prompts are sized to the checkpoint's own config (vocab, max_seq).
@@ -284,6 +292,15 @@ pub fn serve(args: &Args) -> Result<()> {
         cold.load_seconds * 1e3,
         first_token_s * 1e3
     );
+    println!(
+        "kv pages: {}-token pages, peak {:.2} MB resident ({:.2} MB contiguous equivalent), \
+         {} quantized over the run, {:.2} MB copy saved by sharing",
+        kv_page_tokens,
+        stats.peak_kv_resident_bytes as f64 / 1e6,
+        (stats.peak_live * crate::model::exec::KvCache::contiguous_bytes(&cfg)) as f64 / 1e6,
+        stats.kv_pages_quantized_total,
+        stats.shared_kv_bytes_saved as f64 / 1e6
+    );
     Ok(())
 }
 
@@ -291,8 +308,10 @@ pub fn serve(args: &Args) -> Result<()> {
 /// [--update]` — the CI bench-regression gate (DESIGN.md §11). Every
 /// `BENCH_*.json` in the baseline dir is compared against its freshly
 /// produced counterpart in the fresh dir; any metric beyond
-/// `baseline × (1 + tol)`, or a cell/file missing from the fresh run,
-/// fails the command (non-zero exit fails the CI job). `--update`
+/// `baseline × (1 + tol)` (time/size ceilings, plus `tok_s` /
+/// `bytes_decoded_per_s` throughput floors), or a cell/file missing from
+/// the fresh run, fails the command (non-zero exit fails the CI job).
+/// `--update`
 /// instead copies the fresh files over the baselines — the refresh path
 /// after an intentional perf change or a runner-speed shift.
 pub fn bench_check(args: &Args) -> Result<()> {
@@ -344,8 +363,17 @@ pub fn bench_check(args: &Args) -> Result<()> {
         let fresh = crate::util::benchlib::parse_bench_json(&fresh_text)
             .map_err(|e| anyhow::anyhow!("{}: {e}", fresh_path.display()))?;
         let violations = crate::util::benchlib::compare_bench(&base, &fresh, tol);
-        let armed =
-            base.cells.iter().filter(|c| c.ns_per_elem.is_some() || c.median_ns > 0.0).count();
+        let armed = base
+            .cells
+            .iter()
+            .filter(|c| {
+                c.ns_per_elem.is_some()
+                    || c.median_ns > 0.0
+                    || c.extras.iter().any(|(k, v)| {
+                        crate::util::benchlib::GATED_RATE_EXTRAS.contains(&k.as_str()) && *v > 0.0
+                    })
+            })
+            .count();
         if violations.is_empty() {
             println!(
                 "{name}: OK ({} cells, {armed} armed, tol {:.0}%)",

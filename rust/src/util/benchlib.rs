@@ -49,7 +49,9 @@ pub struct Sample {
     /// Extra numeric keys rendered verbatim into the cell's JSON —
     /// scenario benches use these for counters that don't fit the
     /// time/elems schema (e.g. prefill tokens per request). The gate
-    /// ignores keys it doesn't know.
+    /// ignores extras it doesn't know, but the throughput keys in
+    /// [`GATED_RATE_EXTRAS`] are gated as floors when the baseline arms
+    /// them.
     pub extra: Vec<(String, f64)>,
 }
 
@@ -162,8 +164,10 @@ impl Bench {
     }
 
     /// Attach an extra numeric key to the most recent sample (rendered
-    /// verbatim into its JSON cell; the gate ignores keys it doesn't
-    /// know, so extras never break an old baseline).
+    /// verbatim into its JSON cell). The gate ignores extras it doesn't
+    /// know — except the [`GATED_RATE_EXTRAS`] throughput keys, which a
+    /// baseline may arm as floors — so new extras never break an old
+    /// baseline.
     pub fn annotate(&mut self, key: &str, value: f64) {
         let s = self.samples.last_mut().expect("annotate before any sample");
         s.extra.push((key.to_string(), value));
@@ -283,15 +287,28 @@ pub fn append_csv(rows: &[String]) {
 // committed baseline (the `claq bench-check` machinery).
 // ---------------------------------------------------------------------------
 
-/// One cell of a parsed `BENCH_<group>.json`. Unknown keys are ignored,
-/// so baselines survive schema additions.
+/// One cell of a parsed `BENCH_<group>.json`. Unknown keys are collected
+/// into `extras` (numbers only) rather than dropped, so baselines survive
+/// schema additions and can arm throughput floors.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BenchCell {
     pub name: String,
     pub median_ns: f64,
     pub elems: Option<u64>,
     pub ns_per_elem: Option<f64>,
+    /// Numeric keys outside the fixed schema (`tok_s`, counters, …).
+    pub extras: Vec<(String, f64)>,
 }
+
+/// Throughput extras the gate treats as **floors** when a baseline cell
+/// carries them with a positive value: the fresh run must emit the key,
+/// and `fresh ≥ baseline / (1 + tol)`. Higher-is-better, mirroring the
+/// lower-is-better `ns_per_elem` ceiling.
+pub const GATED_RATE_EXTRAS: [&str; 2] = ["tok_s", "bytes_decoded_per_s"];
+
+/// Cell keys that are part of the fixed schema, not extras.
+const KNOWN_CELL_KEYS: [&str; 7] =
+    ["name", "median_ns", "mad_ns", "iters", "elems", "ns_per_elem", "elems_per_s"];
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct BenchDoc {
@@ -506,11 +523,20 @@ pub fn parse_bench_json(text: &str) -> Result<BenchDoc, String> {
             Some(Json::Str(s)) => s.clone(),
             _ => return Err(format!("cell {i} has no string \"name\"")),
         };
+        let extras = match c {
+            Json::Obj(kvs) => kvs
+                .iter()
+                .filter(|(k, _)| !KNOWN_CELL_KEYS.contains(&k.as_str()))
+                .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                .collect(),
+            _ => Vec::new(),
+        };
         cells.push(BenchCell {
             name,
             median_ns: c.get("median_ns").and_then(Json::as_f64).unwrap_or(0.0),
             elems: c.get("elems").and_then(Json::as_f64).map(|e| e as u64),
             ns_per_elem: c.get("ns_per_elem").and_then(Json::as_f64),
+            extras,
         });
     }
     Ok(BenchDoc { group, cells })
@@ -526,7 +552,11 @@ pub fn parse_bench_json(text: &str) -> Result<BenchDoc, String> {
 ///   cell unarmed, which is how bootstrap baselines gate structure only;
 /// * `elems` growth beyond the same tolerance on cells where `elems` is a
 ///   tracked size (e.g. the cold-start cells carry the checkpoint byte
-///   size).
+///   size);
+/// * a [`GATED_RATE_EXTRAS`] throughput key (`tok_s`,
+///   `bytes_decoded_per_s`) falling below `baseline / (1 + tol)` — or
+///   missing from the fresh cell — when the baseline arms it with a
+///   positive value. Other extras stay informational.
 ///
 /// Fresh-only cells and improvements are never violations.
 pub fn compare_bench(baseline: &BenchDoc, fresh: &BenchDoc, tol: f64) -> Vec<String> {
@@ -585,6 +615,25 @@ pub fn compare_bench(baseline: &BenchDoc, fresh: &BenchDoc, tol: f64) -> Vec<Str
                     base.name,
                     tol * 100.0
                 ));
+            }
+        }
+        for (key, b) in &base.extras {
+            if !GATED_RATE_EXTRAS.contains(&key.as_str()) || *b <= 0.0 {
+                continue; // unknown or unarmed extra: informational only
+            }
+            match new.extras.iter().find(|(k, _)| k == key) {
+                Some((_, f)) if *f >= b / limit => {}
+                Some((_, f)) => violations.push(format!(
+                    "[{}] '{}': {key} {f:.1} fell below baseline {b:.1} by {:.1}% (tol {:.0}%)",
+                    baseline.group,
+                    base.name,
+                    (1.0 - f / b) * 100.0,
+                    tol * 100.0
+                )),
+                None => violations.push(format!(
+                    "[{}] '{}': baseline arms {key} but the fresh run does not emit it",
+                    baseline.group, base.name
+                )),
             }
         }
     }
@@ -718,9 +767,16 @@ mod tests {
                     median_ns: *med,
                     elems: *e,
                     ns_per_elem: *npe,
+                    extras: Vec::new(),
                 })
                 .collect(),
         }
+    }
+
+    fn with_extras(mut d: BenchDoc, cell: &str, extras: &[(&str, f64)]) -> BenchDoc {
+        let c = d.cells.iter_mut().find(|c| c.name == cell).unwrap();
+        c.extras = extras.iter().map(|(k, v)| ((*k).to_string(), *v)).collect();
+        d
     }
 
     #[test]
@@ -752,6 +808,55 @@ mod tests {
         let v = compare_bench(&base, &doc("gptq", &[]), 0.25);
         assert_eq!(v.len(), 1);
         assert!(v[0].contains("group mismatch"));
+    }
+
+    #[test]
+    fn parse_collects_unknown_numeric_keys_as_extras() {
+        let samples = vec![Sample {
+            name: "packed b=1".into(),
+            iters: 7,
+            median_ns: 1.0e6,
+            mad_ns: 10.0,
+            mean_ns: 1.0e6,
+            elems: Some(64),
+            extra: vec![("tok_s".into(), 1234.5), ("prefix_hits".into(), 3.0)],
+        }];
+        let doc = parse_bench_json(&render_json("decode", &samples)).unwrap();
+        assert_eq!(
+            doc.cells[0].extras,
+            vec![("tok_s".to_string(), 1234.5), ("prefix_hits".to_string(), 3.0)]
+        );
+    }
+
+    #[test]
+    fn gate_rate_extras_are_floors() {
+        let mk = |tok_s: f64| {
+            with_extras(
+                doc("decode", &[("cell", Some(10.0), 1.0e6, None)]),
+                "cell",
+                &[("tok_s", tok_s), ("prefix_hits", 0.0)],
+            )
+        };
+        let base = mk(100.0);
+        // a 10% dip sits above the 25%-tolerance floor (80.0); fine
+        assert!(compare_bench(&base, &mk(90.0), 0.25).is_empty());
+        assert!(compare_bench(&base, &mk(500.0), 0.25).is_empty(), "improvement passes");
+        // 70.0 < 100/1.25: throughput regression
+        let v = compare_bench(&base, &mk(70.0), 0.25);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("tok_s") && v[0].contains("fell below"), "{v:?}");
+        // armed key missing from the fresh cell
+        let bare = doc("decode", &[("cell", Some(10.0), 1.0e6, None)]);
+        let v = compare_bench(&base, &bare, 0.25);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("does not emit"), "{v:?}");
+        // non-whitelisted extras never gate, and a 0-valued rate is unarmed
+        let noisy = with_extras(
+            doc("decode", &[("cell", Some(10.0), 1.0e6, None)]),
+            "cell",
+            &[("tok_s", 0.0), ("prefix_hits", 99.0)],
+        );
+        assert!(compare_bench(&noisy, &bare, 0.25).is_empty());
     }
 
     #[test]

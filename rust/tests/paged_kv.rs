@@ -1,0 +1,254 @@
+//! Cross-module properties of the paged KV runtime (DESIGN.md §13).
+//!
+//! The load-bearing one is **page-refcount hygiene**: whatever the
+//! serving history — pool sizes, page sizes, prefix-cache eviction
+//! thrash, cold-page quantization, either admission policy — once every
+//! request has retired and the prefix cache is drained, every f32 page
+//! the pool ever allocated is back on its free list. `free == created`
+//! simultaneously rules out leaks (a page some dropped table still
+//! pinned) and double-frees (the same page on the free list twice would
+//! overshoot `created`, and `KvPagePool::release` structurally cannot
+//! re-admit a page with live readers). The satellite tests pin the
+//! distinct-page residency census (shared pages counted once) and the
+//! quantized-KV contract: lossy-but-tolerance-bounded logits with exact
+//! byte accounting.
+
+use claq::model::exec::{
+    argmax, decode_step, prefill, ExecModel, ExecState, KvCache, KvPagePool, PageStat,
+};
+use claq::model::{Model, TransformerConfig};
+use claq::runtime::scheduler::{AdmissionPolicy, Request, Scheduler, SchedulerConfig};
+use claq::util::proptest::{check, Config};
+use claq::util::rng::Rng;
+
+fn test_config() -> TransformerConfig {
+    TransformerConfig {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 32,
+        rope_theta: 10000.0,
+        eps: 1e-5,
+    }
+}
+
+fn build_dense() -> ExecModel {
+    ExecModel::dense(&Model::random(test_config(), &mut Rng::new(61)))
+}
+
+/// |a - b| ≤ tol element-wise (absolute; logits of the tiny test models
+/// are O(1)).
+fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= tol, "element {i}: {x} vs {y} (tol {tol})");
+    }
+}
+
+/// Every page the pool ever allocated comes home after the last retire +
+/// prefix drain — across pool sizes (`max_slots` bounds the pre-warm),
+/// page sizes, eviction thrash (tiny prefix budgets), quantization
+/// on/off, and both admission policies.
+#[test]
+fn prop_every_page_returns_to_the_pool() {
+    check("paged-KV refcount hygiene", Config { cases: 24, seed: 601 }, move |rng| {
+        let model = build_dense();
+        let model = &model;
+        let cfg = model.config;
+        let mut st = ExecState::new(cfg);
+
+        let kv_page_tokens = 1 + rng.below_usize(8);
+        let page_bytes = KvPagePool::with_page_tokens(cfg, kv_page_tokens).page_bytes();
+        // 0 = off, tiny = insert/evict churn on nearly every retirement,
+        // large = everything pins
+        let prefix_cache_bytes = match rng.below_usize(3) {
+            0 => 0,
+            1 => 2 * page_bytes,
+            _ => 1 << 20,
+        };
+        let sched_cfg = SchedulerConfig {
+            max_slots: 1 + rng.below_usize(3),
+            prefill_token_budget: 4 + rng.below_usize(12),
+            policy: if rng.next_f64() < 0.5 {
+                AdmissionPolicy::Continuous
+            } else {
+                AdmissionPolicy::Wave
+            },
+            prefix_cache_bytes,
+            kv_page_tokens,
+            // lossy cold-page re-encoding must not change who owns what
+            kv_quant_bits: [0u8, 0, 3, 8][rng.below_usize(4)],
+            kv_quant_margin: 2 + rng.below_usize(6),
+        };
+        let mut sched = Scheduler::new(cfg, sched_cfg);
+
+        // shared-prefix-heavy staggered trace so shares, CoW forks,
+        // pins, and evictions all actually happen
+        let system: Vec<u16> =
+            (0..4 + rng.below_usize(5)).map(|_| rng.below(cfg.vocab as u64) as u16).collect();
+        let n = 4 + rng.below_usize(5);
+        let arrivals: Vec<(usize, Request)> = (0..n)
+            .map(|i| {
+                let mut prompt = if rng.next_f64() < 0.7 { system.clone() } else { Vec::new() };
+                let tail = 1 + rng.below_usize(4);
+                prompt.extend((0..tail).map(|_| rng.below(cfg.vocab as u64) as u16));
+                let req = Request {
+                    prompt,
+                    max_new_tokens: 1 + rng.below_usize(5),
+                    stop_token: None,
+                };
+                (rng.below_usize(4) * i, req)
+            })
+            .collect();
+
+        let mut next = 0usize;
+        let mut step = 0usize;
+        let mut completed = 0usize;
+        while next < arrivals.len() || sched.has_work() {
+            while next < arrivals.len() && arrivals[next].0 <= step {
+                sched.submit(arrivals[next].1.clone()).unwrap();
+                next += 1;
+            }
+            if sched.has_work() {
+                completed += sched.step(model, &mut st).len();
+            }
+            step += 1;
+        }
+        assert_eq!(completed, arrivals.len(), "every request must complete");
+
+        sched.drain_prefix_cache();
+        let stats = sched.stats();
+        assert_eq!(
+            stats.pool_free_pages as u64, stats.pool_pages_created,
+            "page leak or double-free (stats: {stats:?})"
+        );
+        assert_eq!(stats.kv_pages_resident, 0, "no table may still reference pages");
+        assert_eq!(stats.kv_resident_bytes, 0);
+    });
+}
+
+/// The residency census counts each distinct page once, no matter how
+/// many tables reference it — the fix for the pre-paging stats that
+/// attributed a full forked cache to every request.
+#[test]
+fn resident_stats_count_shared_pages_once() {
+    let model = build_dense();
+    let mut st = ExecState::new(model.config);
+    let mut sched = Scheduler::new(
+        model.config,
+        SchedulerConfig {
+            max_slots: 2,
+            prefix_cache_bytes: 1 << 20,
+            kv_page_tokens: 4,
+            ..SchedulerConfig::default()
+        },
+    );
+    let page = KvPagePool::with_page_tokens(model.config, 4).page_bytes();
+    let req = Request {
+        prompt: vec![1, 2, 3, 4, 5, 6, 7, 8],
+        max_new_tokens: 4,
+        stop_token: None,
+    };
+
+    // first request retires and pins its 8-token prompt: 2 pages
+    sched.submit(req.clone()).unwrap();
+    assert_eq!(sched.run_to_completion(&model, &mut st).len(), 1);
+    let pinned = sched.stats();
+    assert_eq!(pinned.kv_pages_resident, 2);
+    assert_eq!(pinned.kv_pages_shared, 0);
+    assert_eq!(pinned.kv_resident_bytes, 2 * page);
+
+    // an identical prompt admits sharing 7 positions out of the pinned
+    // prefix: page 0 stays shared, the partial page 1 CoW-forks for the
+    // 1-token tail prefill, and the same-step decode opens page 2.
+    // Distinct pages: {page0, page1, page1', page2} = 4, NOT the 5 a
+    // per-table sum (2 pinned + 3 live) would claim.
+    sched.submit(req).unwrap();
+    sched.step(&model, &mut st);
+    let mid = sched.stats();
+    assert_eq!(mid.kv_pages_resident, 4, "shared page must be counted once");
+    assert_eq!(mid.kv_pages_shared, 1);
+    assert_eq!(mid.kv_resident_bytes, 4 * page);
+    assert_eq!(mid.prefix_hits, 1);
+    let token_bytes = KvCache::new(&model.config).token_bytes() as u64;
+    assert_eq!(mid.shared_kv_bytes_saved, 7 * token_bytes);
+
+    // full drain: duplicate pin released, trie emptied, all pages home
+    sched.run_to_completion(&model, &mut st);
+    sched.drain_prefix_cache();
+    let end = sched.stats();
+    assert_eq!(end.pool_free_pages as u64, end.pool_pages_created);
+    assert_eq!(end.kv_pages_resident, 0);
+}
+
+/// Quantized-KV reads are tolerance-gated, never bit-compared: decoding
+/// over re-encoded cold pages stays within a small absolute band of the
+/// exact-f32 logits (DESIGN.md §13 contract).
+#[test]
+fn quantized_kv_decode_stays_within_tolerance() {
+    let model = build_dense();
+    let cfg = model.config;
+    let mut st = ExecState::new(cfg);
+    let toks: Vec<u16> = (0..20).map(|i| (i * 7 % 31) as u16).collect();
+
+    let mut exact = KvCache::with_page_tokens(&cfg, 4);
+    let mut lossy = KvCache::with_page_tokens(&cfg, 4);
+    let _ = prefill(&model, &mut exact, &toks, &mut st);
+    let _ = prefill(&model, &mut lossy, &toks, &mut st);
+    // margin 4 → cold_end 16 → pages 0..=3 re-encode
+    assert_eq!(lossy.quantize_cold_pages(8, 4, None), 4);
+
+    // several decode steps: appends go into fresh f32 pages while
+    // attention keeps reading through the quantized ones
+    let mut tok = 3u16;
+    for _ in 0..4 {
+        let a = decode_step(&model, &mut [&mut exact], &[tok], &mut st);
+        let b = decode_step(&model, &mut [&mut lossy], &[tok], &mut st);
+        assert_close(&a.data, &b.data, 0.05);
+        // keep both caches on the *same* trajectory so the comparison
+        // stays one-variable (the codec), even if argmax were to differ
+        tok = argmax(a.row(0));
+    }
+    assert_eq!(exact.len(), lossy.len());
+}
+
+/// Byte accounting through the codec is exact: `bytes()` equals the
+/// per-page sum, quantized pages are bounded by their u8-index + f32
+/// codebook layout, and untouched pages still cost a full f32 page.
+#[test]
+fn quantized_page_byte_accounting_is_exact() {
+    let model = build_dense();
+    let cfg = model.config;
+    let mut st = ExecState::new(cfg);
+    let toks: Vec<u16> = (0..16).map(|i| (i * 3 % 31) as u16).collect();
+
+    let mut c = KvCache::with_page_tokens(&cfg, 4);
+    let _ = prefill(&model, &mut c, &toks, &mut st);
+    let f32_bytes = c.bytes();
+    assert_eq!(f32_bytes, 4 * c.page_bytes());
+
+    // margin 4 → cold_end 12 → exactly pages 0..=2
+    assert_eq!(c.quantize_cold_pages(8, 4, None), 3);
+    let stats: Vec<PageStat> = c.page_stats().collect();
+    assert_eq!(stats.iter().filter(|s| s.quantized).count(), 3);
+    assert_eq!(c.bytes(), stats.iter().map(|s| s.bytes).sum::<usize>());
+    assert!(c.bytes() < f32_bytes, "quantization must shrink residency");
+
+    // per-page layout: n_layers × page_tokens × d u8 indices per tensor,
+    // plus two ≤256-entry f32 codebooks
+    let elems = 2 * cfg.n_layers * 4 * cfg.d_model; // K + V
+    for s in &stats {
+        if s.quantized {
+            assert!(s.bytes >= elems, "indices alone cost {elems} bytes, got {}", s.bytes);
+            assert!(
+                s.bytes <= elems + 2 * 256 * 4,
+                "codebooks are capped at 256 f32 entries each, got {}",
+                s.bytes
+            );
+        } else {
+            assert_eq!(s.bytes, c.page_bytes(), "f32 pages keep their full cost");
+        }
+    }
+}

@@ -6,10 +6,13 @@
 //! both admission policies, on workloads engineered to hit the cache.
 //! This holds because K/V rows of a position depend only on tokens at or
 //! before it, every kernel is deterministic and batch/thread-invariant
-//! (pinned since PR 2), and a fork is a byte copy of rows a cold prefill
-//! would have recomputed bit-for-bit. On top of identity, the shared
-//! prefix must actually be *reused*: `SchedulerStats` has to report
-//! prefix hits and saved prefill tokens on shared-prefix traces.
+//! (pinned since PR 2), and a prefix hit *shares* the very pages a cold
+//! prefill would have recomputed bit-for-bit (no bytes are copied; only
+//! a partial tail page is CoW-forked on first append). On top of
+//! identity, the shared prefix must actually be *reused*:
+//! `SchedulerStats` has to report prefix hits, saved prefill tokens, and
+//! saved KV copy bytes on shared-prefix traces. Identity is exercised
+//! across randomized KV page sizes — paging is memory granularity only.
 
 use claq::model::exec::{argmax, decode_step, prefill, ExecModel, ExecState, KvCache};
 use claq::model::quantized::QuantizedModel;
@@ -141,6 +144,9 @@ fn check_prefix_identity(build: fn() -> ExecModel, seed: u64, cases: usize) {
             prefill_token_budget: 8 + rng.below_usize(12),
             policy,
             prefix_cache_bytes: 0,
+            // shares land mid-page and on page boundaries alike
+            kv_page_tokens: 1 + rng.below_usize(8),
+            ..SchedulerConfig::default()
         };
         let (cold, cold_stats) = staggered_serve(model, &mut st, sched_cfg.clone(), &arrivals);
         let warm_cfg = SchedulerConfig { prefix_cache_bytes: 1 << 20, ..sched_cfg.clone() };
@@ -165,7 +171,16 @@ fn check_prefix_identity(build: fn() -> ExecModel, seed: u64, cases: usize) {
         assert_eq!(
             warm_stats.prefill_tokens_in + warm_stats.prefill_tokens_saved,
             cold_stats.prefill_tokens_in,
-            "every prompt token must be either prefilled or forked"
+            "every prompt token must be either prefilled or shared"
+        );
+        // page sharing saves exactly the KV bytes the pre-paging fork
+        // memcpy'd: token_bytes per shared position, and zero when cold
+        let tok_bytes = KvCache::new(&cfg).token_bytes() as u64;
+        assert_eq!(cold_stats.shared_kv_bytes_saved, 0);
+        assert_eq!(
+            warm_stats.shared_kv_bytes_saved,
+            warm_stats.prefill_tokens_saved * tok_bytes,
+            "shared-KV byte accounting must match saved positions exactly"
         );
     });
 }
@@ -192,7 +207,10 @@ fn thrashing_prefix_cache_stays_bit_identical() {
     let model = build_dense();
     let cfg = model.config;
     let mut st = ExecState::new(cfg);
-    let one_cache = KvCache::new(&cfg).bytes();
+    // Budget for exactly one pinned prefix: caches are lazily paged now,
+    // so the unit is a page (every 2..=6-token prompt below pins one
+    // 32-token page), not a full contiguous cache.
+    let one_cache = claq::model::exec::KvPagePool::new(cfg).page_bytes();
     let mut rng = Rng::new(907);
     // fully distinct prompts: every insert evicts the previous entry
     let arrivals: Vec<(usize, Request)> = (0..6)

@@ -11,11 +11,14 @@
 //! deterministically. It is what makes serving results reproducible and
 //! lets the bench compare policies by throughput alone. The property is
 //! also exercised with the prefix-sharing KV cache enabled (short random
-//! prompts collide often, so forks really fire); shared-prefix-specific
-//! properties live in `tests/prefix_cache.rs`.
+//! prompts collide often, so page shares really fire) and under
+//! randomized KV page sizes (paging is pure memory granularity, so the
+//! page size must be invisible to every token stream);
+//! shared-prefix-specific properties live in `tests/prefix_cache.rs`,
+//! page-refcount hygiene in `tests/paged_kv.rs`.
 
 use claq::model::exec::{
-    argmax, decode_step, prefill, ExecModel, ExecState, KvCache, KvCachePool,
+    argmax, decode_step, prefill, ExecModel, ExecState, KvCache, KvPagePool,
 };
 use claq::model::quantized::QuantizedModel;
 use claq::model::{Model, TransformerConfig};
@@ -119,8 +122,13 @@ fn check_batch_invariance(build: fn() -> ExecModel, seed: u64, cases: usize) {
             },
             // half the cases serve through the prefix cache; 1..=6-token
             // prompts over a 32-token vocab collide often enough that
-            // forked admissions really happen
+            // shared admissions really happen
             prefix_cache_bytes: if rng.next_f64() < 0.5 { 0 } else { 1 << 20 },
+            // 1..=8-token pages against max_seq 32: most requests span
+            // several pages, partial-tail CoW forks fire, and the token
+            // streams must not notice
+            kv_page_tokens: 1 + rng.below_usize(8),
+            ..SchedulerConfig::default()
         };
         let served = staggered_serve(model, &mut st, sched_cfg.clone(), &arrivals);
         for (i, (_, req)) in arrivals.iter().enumerate() {
@@ -160,35 +168,44 @@ fn prop_scheduler_matches_single_request_packed() {
 }
 
 /// A recycled pool cache behaves exactly like a fresh one, including
-/// truncate-replay, and the pool accounts for its resident bytes.
+/// truncate-replay, and the pool accounts for its resident pages.
+/// Recycled pages are deliberately *not* zeroed — positions ≥ `len` are
+/// never read, and this test reuses a dirty page to prove it.
 #[test]
 fn pool_reuse_preserves_cache_semantics() {
     let cfg = test_config();
     let model = Model::random(cfg, &mut Rng::new(73));
     let em = ExecModel::dense(&model);
     let mut st = ExecState::new(cfg);
-    let mut pool = KvCachePool::with_capacity(cfg, 1);
-    let one_cache_bytes = pool.resident_bytes();
-    assert!(one_cache_bytes > 0);
+    let mut pool = KvPagePool::with_capacity(cfg, 1);
+    let page = pool.page_bytes();
+    assert_eq!(pool.resident_bytes(), page, "one prewarmed request = one 32-token page here");
 
     // use a cache, return it, take it back: must start empty
-    let mut c = pool.take();
-    let full = prefill(&em, &mut c, &[1, 2, 3, 4], &mut st);
-    pool.put(c);
-    assert_eq!(pool.resident_bytes(), one_cache_bytes);
-    let mut c = pool.take();
+    let mut c = pool.take_cache();
     assert!(c.is_empty());
-    assert_eq!(pool.resident_bytes(), 0, "taken caches leave the pool");
+    c.reserve(&mut pool, 4);
+    assert_eq!(pool.resident_bytes(), 0, "reserved pages leave the pool");
+    let full = prefill(&em, &mut c, &[1, 2, 3, 4], &mut st);
+    pool.put_cache(c);
+    assert_eq!(pool.resident_bytes(), page);
 
-    // recycled cache supports prefix truncation exactly like a fresh one
+    // recycled (dirty) cache behaves exactly like a fresh one
+    let mut c = pool.take_cache();
+    assert!(c.is_empty());
+    c.reserve(&mut pool, 4);
     let again = prefill(&em, &mut c, &[1, 2, 3, 4], &mut st);
     assert_eq!(again.data, full.data);
+
+    // recycled cache supports prefix truncation exactly like a fresh one
     c.truncate(2);
     let replay = prefill(&em, &mut c, &[3, 4], &mut st);
     assert_eq!(replay.row(1), full.row(3));
     assert_eq!(c.len(), 4);
-    pool.put(c);
+    pool.put_cache(c);
 
-    assert_eq!((pool.hits(), pool.misses()), (2, 0));
+    assert_eq!((pool.hits(), pool.misses()), (2, 0), "both reserves hit the prewarmed page");
     assert!((pool.hit_rate() - 1.0).abs() < 1e-12);
+    assert_eq!(pool.pages_created(), 1);
+    assert_eq!(pool.free_pages(), 1, "full drain returns the page");
 }
