@@ -12,7 +12,8 @@
 //!       [n_requests] [arrival_rate_per_s] [max_slots] [seed] \
 //!       [--checkpoint model.claq] [--save model.claq] \
 //!       [--prefix-cache] [--prefix-cache-mb MB] [--shared-prefix N] \
-//!       [--kv-page-tokens P] [--kv-quant-bits B]
+//!       [--kv-page-tokens P] [--kv-quant-bits B] \
+//!       [--kv-budget-mb M] [--max-queue Q] [--deadline-steps D]
 //!
 //! * `n_requests`        total requests in the trace        (default 32)
 //! * `arrival_rate_per_s` mean Poisson arrival rate          (default 8.0)
@@ -43,6 +44,17 @@
 //!                       prefix cache in play the cross-run agreement
 //!                       check may drop below 100%, which the report
 //!                       flags rather than asserts.
+//! * `--kv-budget-mb M`  hard byte budget for f32 KV pages (default 0 =
+//!                       unbounded). Under pressure the scheduler walks
+//!                       its degradation ladder — prefix eviction, forced
+//!                       cold-page quantization, preemption, rejection
+//!                       (DESIGN.md §14) — and the report breaks requests
+//!                       out per outcome.
+//! * `--max-queue Q`     queue bound past which new submissions are shed
+//!                       with `Rejected` (default 0 = unbounded).
+//! * `--deadline-steps D` per-request step deadline; a request still
+//!                       unfinished D engine steps after submission is
+//!                       retired `DeadlineExceeded` (default 0 = none).
 //!
 //! Prompt lengths, generation budgets, and inter-arrival gaps are
 //! randomized per request; every policy replays the identical trace, and
@@ -76,12 +88,29 @@ struct TracedRequest {
     req: Request,
 }
 
+/// The three overload knobs, passed to every policy replay unchanged.
+struct OverloadCfg {
+    kv_budget_mb: usize,
+    max_queue: usize,
+    deadline_steps: u64,
+}
+
 /// Per-policy serving report over one trace replay.
 struct ServeReport {
     policy: &'static str,
     wall_s: f64,
     generated: usize,
+    /// TTFT of requests that finished `Length`/`Stop`.
     ttft_s: Vec<f64>,
+    /// TTFT of admitted requests later shed (deadline/cancel) — rejected
+    /// requests never produce a token, so they have no TTFT at all.
+    ttft_shed_s: Vec<f64>,
+    /// Per-outcome request counts.
+    completed: u64,
+    rejected: u64,
+    deadline_exceeded: u64,
+    preempted: u64,
+    resumed: u64,
     /// Mean seconds per generated token of each request (excluding the
     /// prefill token; requests generating a single token contribute only
     /// to TTFT).
@@ -102,7 +131,9 @@ struct ServeReport {
     shared_saved_mb: f64,
     /// Pages re-encoded by cold-page quantization over the run.
     kv_pages_quantized: u64,
-    /// id → generated tokens, for the cross-policy agreement check.
+    /// id → generated tokens of *successfully finished* requests, for the
+    /// cross-policy agreement check (shed requests carry partial or empty
+    /// streams and are compared by count, not content).
     outputs: Vec<(u64, Vec<u16>)>,
 }
 
@@ -130,6 +161,7 @@ fn serve_trace(
     prefix_cache_bytes: usize,
     kv_page_tokens: usize,
     kv_quant_bits: u8,
+    overload: &OverloadCfg,
     label: &'static str,
 ) -> ServeReport {
     let mut st = ExecState::new(model.config);
@@ -142,6 +174,9 @@ fn serve_trace(
             prefix_cache_bytes,
             kv_page_tokens,
             kv_quant_bits,
+            kv_budget_bytes: overload.kv_budget_mb * (1 << 20),
+            max_queue: overload.max_queue,
+            deadline_steps: overload.deadline_steps,
             ..SchedulerConfig::default()
         },
     );
@@ -172,19 +207,31 @@ fn serve_trace(
     let wall_s = t0.elapsed().as_secs_f64();
 
     let mut ttft_s = Vec::with_capacity(completions.len());
+    let mut ttft_shed_s = Vec::new();
     let mut tok_latency_s = Vec::new();
     let mut generated = 0usize;
     let mut outputs = Vec::with_capacity(completions.len());
     for c in &completions {
+        generated += c.tokens.len();
+        // A request shed before its first prefill (rejected, or a queued
+        // deadline expiry) has admitted_step == 0: no engine step ever
+        // touched it, so it has no TTFT and nothing indexes step_wall.
+        if c.admitted_step == 0 {
+            continue;
+        }
         // step numbers are 1-based; step_wall[s-1] is when step s ended
         let first = step_wall[c.admitted_step as usize - 1];
         let last = step_wall[c.finished_step as usize - 1];
-        ttft_s.push(first - arrival_by_id[c.id as usize]);
+        let ttft = first - arrival_by_id[c.id as usize];
+        if c.reason.is_success() {
+            ttft_s.push(ttft);
+            outputs.push((c.id, c.tokens.clone()));
+        } else {
+            ttft_shed_s.push(ttft);
+        }
         if c.tokens.len() > 1 {
             tok_latency_s.push((last - first) / (c.tokens.len() - 1) as f64);
         }
-        generated += c.tokens.len();
-        outputs.push((c.id, c.tokens.clone()));
     }
     outputs.sort_by_key(|(id, _)| *id);
     let stats = sched.stats();
@@ -193,6 +240,12 @@ fn serve_trace(
         wall_s,
         generated,
         ttft_s,
+        ttft_shed_s,
+        completed: stats.completed,
+        rejected: stats.rejected,
+        deadline_exceeded: stats.deadline_exceeded,
+        preempted: stats.preempted,
+        resumed: stats.resumed,
         tok_latency_s,
         pool_hit_rate: stats.pool_hit_rate,
         pool_resident_mb: stats.pool_resident_bytes as f64 / 1e6,
@@ -223,11 +276,27 @@ fn print_report(r: &ServeReport) {
         r.generated as f64 / r.wall_s
     );
     println!(
-        "  ttft      p50/p95/p99: {:>7.1} / {:>7.1} / {:>7.1} ms",
+        "  ttft      p50/p95/p99: {:>7.1} / {:>7.1} / {:>7.1} ms  ({} completed)",
         t50 * 1e3,
         t95 * 1e3,
-        t99 * 1e3
+        t99 * 1e3,
+        r.completed
     );
+    if r.rejected + r.deadline_exceeded + r.preempted > 0 {
+        println!(
+            "  overload: {} rejected, {} deadline-exceeded, {} preemptions / {} resumes",
+            r.rejected, r.deadline_exceeded, r.preempted, r.resumed
+        );
+        if !r.ttft_shed_s.is_empty() {
+            let (s50, s95, s99) = percentiles(r.ttft_shed_s.clone());
+            println!(
+                "  ttft (shed after admission) p50/p95/p99: {:>7.1} / {:>7.1} / {:>7.1} ms",
+                s50 * 1e3,
+                s95 * 1e3,
+                s99 * 1e3
+            );
+        }
+    }
     println!(
         "  per-token p50/p95/p99: {:>7.2} / {:>7.2} / {:>7.2} ms",
         l50 * 1e3,
@@ -269,6 +338,7 @@ fn main() -> anyhow::Result<()> {
     let mut shared_prefix: Option<usize> = None;
     let mut kv_page_tokens: usize = claq::model::exec::DEFAULT_PAGE_TOKENS;
     let mut kv_quant_bits: u8 = 0;
+    let mut overload = OverloadCfg { kv_budget_mb: 0, max_queue: 0, deadline_steps: 0 };
     let mut pos: Vec<String> = Vec::new();
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -304,6 +374,24 @@ fn main() -> anyhow::Result<()> {
                     .next()
                     .and_then(|v| v.parse().ok())
                     .expect("--kv-quant-bits expects 0..=8");
+            }
+            "--kv-budget-mb" => {
+                overload.kv_budget_mb = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--kv-budget-mb expects a megabyte count (0 = unbounded)");
+            }
+            "--max-queue" => {
+                overload.max_queue = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--max-queue expects a queue bound (0 = unbounded)");
+            }
+            "--deadline-steps" => {
+                overload.deadline_steps = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--deadline-steps expects a step count (0 = none)");
             }
             _ => pos.push(a),
         }
@@ -435,6 +523,7 @@ fn main() -> anyhow::Result<()> {
         0,
         kv_page_tokens,
         kv_quant_bits,
+        &overload,
         "continuous",
     );
     let wave = serve_trace(
@@ -445,6 +534,7 @@ fn main() -> anyhow::Result<()> {
         0,
         kv_page_tokens,
         kv_quant_bits,
+        &overload,
         "lockstep-wave",
     );
     print_report(&cont);
@@ -460,6 +550,7 @@ fn main() -> anyhow::Result<()> {
             budget.max(1),
             kv_page_tokens,
             kv_quant_bits,
+            &overload,
             "continuous+prefix-cache",
         )
     });
@@ -494,16 +585,26 @@ fn main() -> anyhow::Result<()> {
     if let Some(c) = &cached {
         runs.push(c);
     }
+    // Under overload different policies may shed different requests, so
+    // agreement is over the ids both runs finished successfully — a shed
+    // request has no complete stream to compare.
+    let by_id: std::collections::HashMap<u64, &Vec<u16>> =
+        cont.outputs.iter().map(|(id, t)| (*id, t)).collect();
     for other in &runs[1..] {
-        let agree = cont
-            .outputs
-            .iter()
-            .zip(&other.outputs)
-            .filter(|((ia, ta), (ib, tb))| ia == ib && ta == tb)
-            .count();
+        let mut common = 0usize;
+        let mut agree = 0usize;
+        for (id, tokens) in &other.outputs {
+            if let Some(t) = by_id.get(id) {
+                common += 1;
+                if *t == tokens {
+                    agree += 1;
+                }
+            }
+        }
         println!(
-            "continuous/{} token-stream agreement: {agree}/{} requests",
-            other.policy, n_requests
+            "continuous/{} token-stream agreement: {agree}/{common} requests \
+             finished by both",
+            other.policy
         );
     }
     println!(

@@ -63,6 +63,8 @@ fn run_scenario(
     // (page_tokens, quant_bits, quant_margin); (0, 0, _) = default pages,
     // quantization off.
     kv: (usize, u8, usize),
+    // (kv_budget_bytes, max_queue); (0, 0) = unbounded (no overload).
+    overload: (usize, usize),
 ) -> ScenarioResult {
     let mut st = ExecState::new(model.config);
     let mut sched = Scheduler::new(
@@ -75,6 +77,8 @@ fn run_scenario(
             kv_page_tokens: kv.0,
             kv_quant_bits: kv.1,
             kv_quant_margin: kv.2,
+            kv_budget_bytes: overload.0,
+            max_queue: overload.1,
             ..SchedulerConfig::default()
         },
     );
@@ -103,9 +107,14 @@ fn run_scenario(
     let mut tok_ms = Vec::new();
     let mut outputs = Vec::with_capacity(completions.len());
     for c in &completions {
+        generated += c.tokens.len();
+        // Shed before admission (rejected / queued expiry): no engine
+        // step ever ran it, so there is no TTFT to index step_wall with.
+        if c.admitted_step == 0 {
+            continue;
+        }
         let first = step_wall[c.admitted_step as usize - 1];
         let last = step_wall[c.finished_step as usize - 1];
-        generated += c.tokens.len();
         ttft_ms.push((first - submit_wall[c.id as usize]) * 1e3);
         if c.tokens.len() > 1 {
             tok_ms.push((last - first) * 1e3 / (c.tokens.len() - 1) as f64);
@@ -175,6 +184,12 @@ fn sample(
             ("contiguous_kv_bytes_per_req".into(), contiguous_kv_bytes),
             ("shared_kv_bytes_saved".into(), r.stats.shared_kv_bytes_saved as f64),
             ("kv_pages_quantized".into(), r.stats.kv_pages_quantized_total as f64),
+            // Overload accounting (informational extras; all 0 in the
+            // unbounded cells): how many requests the ladder shed or
+            // preempted-and-resumed under a KV budget / queue bound.
+            ("rejected".into(), r.stats.rejected as f64),
+            ("preempted".into(), r.stats.preempted as f64),
+            ("resumed".into(), r.stats.resumed as f64),
         ],
     }
 }
@@ -216,9 +231,17 @@ fn main() {
             ));
         }
 
-        let cont =
-            run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous, 0, (0, 0, 0));
-        let wave = run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Wave, 0, (0, 0, 0));
+        let cont = run_scenario(
+            &packed,
+            &arrivals,
+            conc,
+            AdmissionPolicy::Continuous,
+            0,
+            (0, 0, 0),
+            (0, 0),
+        );
+        let wave =
+            run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Wave, 0, (0, 0, 0), (0, 0));
         println!(
             "concurrency {conc:>2}: continuous {:>8.0} tok/s (ttft p50 {:>6.1} ms, tok p99 {:>6.2} ms)",
             cont.tok_per_s, cont.ttft_p50_ms, cont.tok_p99_ms
@@ -261,8 +284,15 @@ fn main() {
         // before the trace ends, so later admissions can hit
         arrivals.push((3 * i, Request { prompt, max_new_tokens: max_new, stop_token: None }));
     }
-    let cold =
-        run_scenario(&packed, &arrivals, conc, AdmissionPolicy::Continuous, 0, (0, 0, 0));
+    let cold = run_scenario(
+        &packed,
+        &arrivals,
+        conc,
+        AdmissionPolicy::Continuous,
+        0,
+        (0, 0, 0),
+        (0, 0),
+    );
     let warm = run_scenario(
         &packed,
         &arrivals,
@@ -270,6 +300,7 @@ fn main() {
         AdmissionPolicy::Continuous,
         64 << 20,
         (0, 0, 0),
+        (0, 0),
     );
     assert_eq!(cold.outputs, warm.outputs, "prefix cache changed token streams");
     assert!(warm.stats.prefix_hits > 0, "shared-prefix trace produced no prefix hits");
@@ -292,6 +323,7 @@ fn main() {
         AdmissionPolicy::Continuous,
         64 << 20,
         (16, 8, 16),
+        (0, 0),
     );
     assert!(
         kvq.stats.kv_pages_quantized_total > 0,
@@ -319,6 +351,54 @@ fn main() {
             contiguous_kv,
         ));
     }
+
+    // --- overload cell: the same staggered trace squeezed under a
+    // 12-page KV budget (vs ~32 pages the 8 live slots would like) and a
+    // 4-deep queue bound. With no prefix cache and no KV quantization the
+    // only relief rung is preemption, so the cell exercises the
+    // preempt/resume path end to end; `tok_s` gates as a floor so the
+    // ladder can't quietly collapse into thrash (DESIGN.md §14).
+    let page_tokens = 16usize;
+    let page_bytes = 2 * cfg.n_layers * page_tokens * cfg.d_model * std::mem::size_of::<f32>();
+    let over = run_scenario(
+        &packed,
+        &arrivals,
+        conc,
+        AdmissionPolicy::Continuous,
+        0,
+        (page_tokens, 0, 0),
+        (12 * page_bytes, 4),
+    );
+    assert!(over.stats.preempted > 0, "overload cell never preempted — budget not binding");
+    assert_eq!(over.stats.resumed, over.stats.preempted, "a drained bench resumed every preempt");
+    assert_eq!(
+        over.stats.completed + over.stats.rejected,
+        over.requests,
+        "every overload request must resolve as completed or rejected"
+    );
+    assert_eq!(
+        over.stats.pool_free_pages as u64, over.stats.pool_pages_created,
+        "overload run leaked pages"
+    );
+    println!(
+        "overload conc={conc} budget-pages=12 queue=4: {:>8.0} tok/s, {} completed, \
+         {} rejected, {} preemptions / {} resumes",
+        over.tok_per_s,
+        over.stats.completed,
+        over.stats.rejected,
+        over.stats.preempted,
+        over.stats.resumed
+    );
+    let ns_per_tok = 1e9 / over.tok_per_s;
+    csv_rows.push(format!(
+        "scheduler,overload conc={conc} budget-pages=12 queue=4,{ns_per_tok:.1},0.0,{ns_per_tok:.1},1"
+    ));
+    samples.push(sample(
+        &format!("overload conc={conc} budget-pages=12 queue=4"),
+        &over,
+        plane_bytes,
+        contiguous_kv,
+    ));
 
     append_csv(&csv_rows);
     match write_bench_json("scheduler", &samples) {

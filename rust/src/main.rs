@@ -24,7 +24,8 @@ use claq::util::cli::Args;
 const VALUE_FLAGS: &[&str] = &[
     "out", "model", "method", "bits", "s", "segments", "windows", "items", "tokens", "seed",
     "setting", "calib", "target", "workers", "artifacts", "checkpoint", "requests", "slots",
-    "baseline", "fresh", "tol", "kv-page-tokens", "kv-quant-bits",
+    "baseline", "fresh", "tol", "kv-page-tokens", "kv-quant-bits", "kv-budget-mb", "max-queue",
+    "deadline-steps",
 ];
 
 fn usage() -> &'static str {
@@ -35,7 +36,8 @@ USAGE:
   claq quantize --model artifacts/weights_l.bin --method claq --bits 2.12
   claq pack     --out model.claq [--model l|xl|PATH] [--method claq --bits 2.12] [--random] [--fast]
   claq serve    --checkpoint model.claq [--requests 16] [--slots 4] [--seed 17]
-                [--kv-page-tokens 64] [--kv-quant-bits 0]
+                [--kv-page-tokens 64] [--kv-quant-bits 0] [--kv-budget-mb 0]
+                [--max-queue 0] [--deadline-steps 0]
   claq table    <1|2|3|4|5|6|7|8|10|12|13> [--fast]
   claq figure   <3|4|5>
   claq outliers [--model PATH] [--s 13]

@@ -204,6 +204,14 @@ impl Checkpoint {
 
     /// Strict inverse of [`Checkpoint::encode`].
     pub fn decode(b: &[u8]) -> Result<Self> {
+        // Fault-injection hook: lets the chaos suite exercise the cold-start
+        // error path (a checkpoint that fails to parse) without crafting
+        // corrupt bytes. Zero-cost when `CLAQ_FAILPOINTS` is unset.
+        ensure!(
+            !crate::util::failpoint::fire(crate::util::failpoint::CKPT_DECODE),
+            "injected fault: failpoint {} fired in Checkpoint::decode",
+            crate::util::failpoint::CKPT_DECODE
+        );
         let mut pos = 0usize;
         let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
             if *pos + n > b.len() {

@@ -33,6 +33,7 @@ use super::linear::{DenseLinear, LinearOp, LinearScratch, PackedLinear};
 use super::{MatrixId, MatrixKind, Model, TransformerConfig};
 use crate::quant::kvpage::QuantKvPage;
 use crate::tensor::Matrix;
+use crate::util::failpoint::{self, Failpoints};
 use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
 
@@ -438,10 +439,16 @@ impl KvCache {
     /// rule), then extend the table with fresh pages. `pool` is the page
     /// source/sink on the serving path; `None` allocates and frees
     /// directly (standalone callers).
-    fn ensure_appendable(&mut self, n: usize, mut pool: Option<&mut KvPagePool>) {
+    /// Returns `false` when a pool-backed page take failed (budget
+    /// exhaustion or an injected fault) — the table is left valid: `len`
+    /// is unchanged, and any pages already acquired stay in the table
+    /// (harmless surplus, released with the cache). A later retry
+    /// re-checks writability from scratch, so partial progress (including
+    /// a completed CoW fork) is kept. Pool-less allocation cannot fail.
+    fn ensure_appendable(&mut self, n: usize, mut pool: Option<&mut KvPagePool>) -> bool {
         assert!(self.len + n <= self.max_seq, "append overflows KV cache ({}+{n})", self.len);
         if n == 0 {
-            return;
+            return true;
         }
         let pt = self.page_tokens;
         let filled = self.len % pt;
@@ -451,7 +458,10 @@ impl KvCache {
                 matches!(&self.pages[idx], Page::F32(b) if Arc::strong_count(b) == 1);
             if !writable {
                 let mut fresh = match pool.as_deref_mut() {
-                    Some(p) => p.take_page(),
+                    Some(p) => match p.take_page() {
+                        Some(page) => page,
+                        None => return false,
+                    },
                     None => Arc::new(KvPageBuf::zeroed(self.n_layers, pt, self.d)),
                 };
                 {
@@ -484,11 +494,15 @@ impl KvCache {
         let needed = (self.len + n).div_ceil(pt);
         while self.pages.len() < needed {
             let page = match pool.as_deref_mut() {
-                Some(p) => p.take_page(),
+                Some(p) => match p.take_page() {
+                    Some(page) => page,
+                    None => return false,
+                },
                 None => Arc::new(KvPageBuf::zeroed(self.n_layers, pt, self.d)),
             };
             self.pages.push(Page::F32(page));
         }
+        true
     }
 
     /// Standalone grow-before-append: called internally by [`prefill`] /
@@ -496,13 +510,30 @@ impl KvCache {
     /// already writable for `n` more positions (the serving path reserves
     /// from the pool first, so the hot loop never lands here).
     pub fn prepare_append(&mut self, n: usize) {
-        self.ensure_appendable(n, None);
+        let ok = self.ensure_appendable(n, None);
+        debug_assert!(ok, "pool-less allocation cannot fail");
     }
 
     /// Pool-backed grow-before-append: the scheduler's zero-allocation
     /// path. Forked tails and fresh pages come from (and spill back to)
-    /// `pool`.
+    /// `pool`. Panics when the pool cannot supply the pages — callers
+    /// that can degrade gracefully use [`try_reserve`](Self::try_reserve).
     pub fn reserve(&mut self, pool: &mut KvPagePool, n: usize) {
+        assert!(
+            self.try_reserve(pool, n),
+            "KV page pool exhausted reserving {n} position(s) \
+             (budget {} bytes, {} pages created)",
+            pool.budget_bytes,
+            pool.created
+        );
+    }
+
+    /// Fallible [`reserve`](Self::reserve): `false` means the pool could
+    /// not supply a page (byte budget exhausted, or an injected
+    /// [`failpoint::POOL_TAKE`] fault). The cache stays valid and a retry
+    /// after the caller frees pages picks up where this left off — the
+    /// scheduler's degradation ladder (DESIGN.md §14) is built on that.
+    pub fn try_reserve(&mut self, pool: &mut KvPagePool, n: usize) -> bool {
         assert!(
             self.n_layers == pool.cfg.n_layers
                 && self.d == pool.cfg.d_model
@@ -510,7 +541,7 @@ impl KvCache {
                 && self.page_tokens == pool.page_tokens,
             "cache reserved from a pool of a different geometry"
         );
-        self.ensure_appendable(n, Some(pool));
+        self.ensure_appendable(n, Some(pool))
     }
 
     /// Re-encode cold pages as per-page k-means codebooks: every *full*,
@@ -583,9 +614,18 @@ pub struct KvPagePool {
     free: Vec<Arc<KvPageBuf>>,
     /// Empty page tables recycled between requests (no KV memory).
     shells: Vec<KvCache>,
+    /// Hard cap on bytes of pages this pool will ever create (`0` =
+    /// unbounded, the pre-PR-8 behaviour). Free-list takes always
+    /// succeed; only *allocation* past the budget fails.
+    budget_bytes: usize,
+    /// Armed failpoints ([`failpoint::POOL_TAKE`] makes a take fail as if
+    /// the budget were exhausted). Wired from `CLAQ_FAILPOINTS` at
+    /// construction; tests inject via [`set_failpoints`](Self::set_failpoints).
+    failpoints: Option<Arc<Failpoints>>,
     hits: u64,
     misses: u64,
     created: u64,
+    failed_takes: u64,
 }
 
 impl KvPagePool {
@@ -595,10 +635,21 @@ impl KvPagePool {
     }
 
     /// Empty pool handing out `page_tokens`-token pages (clamped to
-    /// `1..=max_seq`).
+    /// `1..=max_seq`), unbounded.
     pub fn with_page_tokens(cfg: TransformerConfig, page_tokens: usize) -> Self {
         let page_tokens = page_tokens.max(1).min(cfg.max_seq.max(1));
-        Self { cfg, page_tokens, free: Vec::new(), shells: Vec::new(), hits: 0, misses: 0, created: 0 }
+        Self {
+            cfg,
+            page_tokens,
+            free: Vec::new(),
+            shells: Vec::new(),
+            budget_bytes: 0,
+            failpoints: failpoint::global().cloned(),
+            hits: 0,
+            misses: 0,
+            created: 0,
+            failed_takes: 0,
+        }
     }
 
     /// Pool pre-warmed for `n` full-context requests (pages and shells;
@@ -610,8 +661,23 @@ impl KvPagePool {
     /// [`with_capacity`](KvPagePool::with_capacity) with an explicit page
     /// size: pre-warms `n × ceil(max_seq / page_tokens)` pages.
     pub fn with_capacity_paged(cfg: TransformerConfig, page_tokens: usize, n: usize) -> Self {
+        Self::with_budget_paged(cfg, page_tokens, 0, n)
+    }
+
+    /// [`with_capacity_paged`](KvPagePool::with_capacity_paged) under a
+    /// hard byte budget (`0` = unbounded): the pre-warm is capped so the
+    /// pool never starts life over budget, and every take past the budget
+    /// fails instead of allocating.
+    pub fn with_budget_paged(
+        cfg: TransformerConfig,
+        page_tokens: usize,
+        budget_bytes: usize,
+        n: usize,
+    ) -> Self {
         let mut pool = Self::with_page_tokens(cfg, page_tokens);
-        for _ in 0..n * pool.pages_per_request() {
+        pool.budget_bytes = budget_bytes;
+        let prewarm = (n * pool.pages_per_request()).min(pool.max_pages());
+        for _ in 0..prewarm {
             let page = pool.alloc_page();
             pool.free.push(page);
         }
@@ -620,6 +686,26 @@ impl KvPagePool {
             pool.shells.push(shell);
         }
         pool
+    }
+
+    /// Install an armed failpoint set (replacing any env-derived one) —
+    /// the chaos suite's deterministic injection path.
+    pub fn set_failpoints(&mut self, fp: Arc<Failpoints>) {
+        self.failpoints = Some(fp);
+    }
+
+    /// Pages this pool may ever create (`usize::MAX` when unbounded).
+    pub fn max_pages(&self) -> usize {
+        if self.budget_bytes == 0 {
+            usize::MAX
+        } else {
+            self.budget_bytes / self.page_bytes()
+        }
+    }
+
+    /// The configured byte budget (`0` = unbounded).
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
     }
 
     /// Tokens per page handed out by this pool.
@@ -678,18 +764,29 @@ impl KvPagePool {
     /// Take one page: recycled from the free list (hit) or freshly
     /// allocated (miss). Recycled pages are *not* zeroed — the cache
     /// invariant is that every slot below `len` is written before read.
-    fn take_page(&mut self) -> Arc<KvPageBuf> {
-        match self.free.pop() {
-            Some(page) => {
-                debug_assert_eq!(Arc::strong_count(&page), 1);
-                self.hits += 1;
-                page
-            }
-            None => {
-                self.misses += 1;
-                self.alloc_page()
-            }
+    ///
+    /// `None` means the take **failed**: either the [`failpoint::POOL_TAKE`]
+    /// failpoint fired (deterministic injected exhaustion), or the free
+    /// list is empty and allocating one more page would overshoot
+    /// `budget_bytes`. Failed takes are counted separately from
+    /// hits/misses ([`failed_takes`](Self::failed_takes)).
+    fn take_page(&mut self) -> Option<Arc<KvPageBuf>> {
+        if self.failpoints.as_ref().is_some_and(|fp| fp.fire(failpoint::POOL_TAKE)) {
+            self.failed_takes += 1;
+            return None;
         }
+        if let Some(page) = self.free.pop() {
+            debug_assert_eq!(Arc::strong_count(&page), 1);
+            self.hits += 1;
+            return Some(page);
+        }
+        if self.budget_bytes > 0 && (self.created as usize + 1) * self.page_bytes() > self.budget_bytes
+        {
+            self.failed_takes += 1;
+            return None;
+        }
+        self.misses += 1;
+        Some(self.alloc_page())
     }
 
     /// Release one page table entry. Only an f32 page whose `Arc` we hold
@@ -723,6 +820,13 @@ impl KvPagePool {
     /// Page takes that had to allocate.
     pub fn misses(&self) -> u64 {
         self.misses
+    }
+
+    /// Page takes that failed outright: budget exhaustion plus injected
+    /// [`failpoint::POOL_TAKE`] faults. Each one sent the scheduler down
+    /// its degradation ladder.
+    pub fn failed_takes(&self) -> u64 {
+        self.failed_takes
     }
 
     /// Fraction of page takes served without allocating (1.0 before any).

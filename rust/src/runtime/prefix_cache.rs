@@ -225,6 +225,18 @@ impl PrefixCache {
         pool.put_cache(e.cache);
     }
 
+    /// Evict the single least-recently-used entry back into `pool` —
+    /// rung 1 of the scheduler's memory-pressure ladder. Returns `false`
+    /// when the trie is empty (no memory to give back), so the caller can
+    /// fall through to the next rung.
+    pub fn evict_one(&mut self, pool: &mut KvPagePool) -> bool {
+        if self.entries == 0 {
+            return false;
+        }
+        self.evict_lru(pool);
+        true
+    }
+
     /// Evict every entry back into `pool` (shutdown / the page-hygiene
     /// property's final drain). Counts as evictions.
     pub fn drain(&mut self, pool: &mut KvPagePool) {

@@ -47,6 +47,23 @@
 //! tolerance-gated, never bit-compared (DESIGN.md §13), which is why it
 //! is opt-in while paging itself is contract-identical.
 //!
+//! **Overload is a defined state, not an abort**: the pool can carry a
+//! hard byte budget ([`SchedulerConfig::kv_budget_bytes`]) so a page take
+//! can *fail*, and a failed take walks a degradation ladder — (1) evict a
+//! pinned prefix, (2) force cold-page quantization (only when enabled —
+//! it is lossy), (3) preempt the youngest live request, re-queueing it
+//! with `prompt ++ generated` as the new prompt so resume is a plain
+//! prefill, **bit-identical** to never having been preempted, and (4)
+//! shed load: [`SchedulerConfig::max_queue`] overflow and requests that
+//! could never fit the budget are answered with a structured
+//! [`FinishReason::Rejected`] completion. Requests can also be
+//! [`cancel`](Scheduler::cancel)led — queued or live, pages freed the
+//! same step — and carry per-request step deadlines
+//! ([`Scheduler::submit_with_deadline`]). `tests/chaos.rs` drives all of
+//! this under seeded fault injection (`util/failpoint.rs`) and asserts
+//! page hygiene plus survivor bit-identity; DESIGN.md §14 has the ladder
+//! and the bit-identity argument.
+//!
 //! Residency accounting is distinct-page: [`SchedulerStats`] counts every
 //! page once no matter how many tables (live slots, pinned prefixes)
 //! reference it.
@@ -83,6 +100,25 @@ pub enum FinishReason {
     Length,
     /// Produced the stop token.
     Stop,
+    /// Removed by [`Scheduler::cancel`]; `tokens` holds the partial
+    /// output generated so far (possibly empty when still queued).
+    Cancelled,
+    /// Still unfinished past its step deadline
+    /// ([`Scheduler::submit_with_deadline`]); `tokens` holds the partial
+    /// output.
+    DeadlineExceeded,
+    /// Shed at submission: the queue was full
+    /// ([`SchedulerConfig::max_queue`]) or the request's full KV
+    /// footprint could never fit [`SchedulerConfig::kv_budget_bytes`].
+    Rejected,
+}
+
+impl FinishReason {
+    /// Reasons carrying a complete generation — the only retirements
+    /// whose caches are worth pinning in the prefix cache.
+    pub fn is_success(self) -> bool {
+        matches!(self, FinishReason::Length | FinishReason::Stop)
+    }
 }
 
 /// A finished request, in retirement order.
@@ -95,8 +131,10 @@ pub struct Completion {
     /// steps; includes the stop token when one fired).
     pub tokens: Vec<u16>,
     pub reason: FinishReason,
-    /// Engine step (1-based) that prefilled the request — the step its
-    /// first token appeared.
+    /// Engine step (1-based) that first prefilled the request — the step
+    /// its first token appeared (preserved across preemptions, so TTFT
+    /// math stays honest). `0` when the request never held a slot
+    /// (rejected, or cancelled / deadlined while queued).
     pub admitted_step: u64,
     /// Engine step that produced its last token.
     pub finished_step: u64,
@@ -140,6 +178,24 @@ pub struct SchedulerConfig {
     /// A page is re-encoded only once it lies wholly at least this many
     /// positions behind the request's decode head.
     pub kv_quant_margin: usize,
+    /// Hard byte budget for the KV page pool (`0` = unbounded, the
+    /// default). A take that would push the pool's f32 pages past the
+    /// budget fails instead of allocating, and the scheduler walks the
+    /// degradation ladder (module docs; DESIGN.md §14). Quantized cold
+    /// pages live outside the pool and are not charged — they are what
+    /// rung 2 converts budgeted f32 pages *into*.
+    pub kv_budget_bytes: usize,
+    /// Upper bound on queued (not yet admitted) requests; a submission
+    /// past it is answered with [`FinishReason::Rejected`] instead of
+    /// growing the queue forever. `0` = unbounded (the default).
+    pub max_queue: usize,
+    /// Default step deadline stamped on every
+    /// [`submit`](Scheduler::submit): a request still unfinished once
+    /// this many engine steps have elapsed past its submission step
+    /// finishes as [`FinishReason::DeadlineExceeded`], whether queued or
+    /// live. `0` = no deadline (the default); per-request override via
+    /// [`Scheduler::submit_with_deadline`].
+    pub deadline_steps: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -152,6 +208,9 @@ impl Default for SchedulerConfig {
             kv_page_tokens: DEFAULT_PAGE_TOKENS,
             kv_quant_bits: 0,
             kv_quant_margin: 128,
+            kv_budget_bytes: 0,
+            max_queue: 0,
+            deadline_steps: 0,
         }
     }
 }
@@ -207,6 +266,21 @@ pub struct SchedulerStats {
     pub peak_kv_resident_bytes: usize,
     /// Pages re-encoded by cold-page quantization over the run.
     pub kv_pages_quantized_total: u64,
+    /// Submissions shed with [`FinishReason::Rejected`] (queue full or
+    /// budget-infeasible).
+    pub rejected: u64,
+    /// Requests removed by [`Scheduler::cancel`] (queued or live).
+    pub cancelled: u64,
+    /// Requests retired past their step deadline.
+    pub deadline_exceeded: u64,
+    /// Times a live request was preempted back into the queue under
+    /// memory pressure (one request may count more than once).
+    pub preempted: u64,
+    /// Admissions that resumed a previously preempted request.
+    pub resumed: u64,
+    /// Page takes the pool refused (byte budget exhausted, or an
+    /// injected `pool_take` failpoint).
+    pub pool_failed_takes: u64,
 }
 
 /// Distinct-page residency snapshot (shared pages counted once).
@@ -216,6 +290,32 @@ struct KvCensus {
     shared: usize,
     quantized: usize,
     bytes: usize,
+}
+
+/// A queued request: fresh from [`Scheduler::submit`], or a preempted
+/// live request waiting to resume. For a preempted request `prompt` is
+/// `original prompt ++ generated`, so resuming is a plain prefill — the
+/// deterministic, batch-invariant kernels make it bit-identical to never
+/// having been preempted (DESIGN.md §14) — and `generated` carries the
+/// tokens produced before preemption so the final [`Completion`] reports
+/// the full output.
+struct Queued {
+    id: u64,
+    prompt: Vec<u16>,
+    max_new: usize,
+    stop: Option<u16>,
+    generated: Vec<u16>,
+    /// Length of the prompt as submitted ([`Completion::prompt_len`]
+    /// reports this, not the preemption-extended prompt).
+    orig_prompt_len: usize,
+    /// `step_no` at submission — the deadline clock's epoch.
+    submit_step: u64,
+    /// Steps past `submit_step` this request may stay unfinished
+    /// (`0` = no deadline).
+    deadline_steps: u64,
+    /// Step of the first admission (`0` = never admitted), preserved
+    /// across preemptions for [`Completion::admitted_step`].
+    first_admitted_step: u64,
 }
 
 /// A live request occupying one batch slot. The prompt is kept so the
@@ -228,12 +328,31 @@ struct Slot {
     stop: Option<u16>,
     generated: Vec<u16>,
     admitted_step: u64,
+    orig_prompt_len: usize,
+    submit_step: u64,
+    deadline_steps: u64,
 }
 
 impl Slot {
+    /// Invariant: admission seeds `generated` with the prefill token
+    /// before a `Slot` is ever built, so it is never empty. Checked in
+    /// debug; release falls back to "not finished" / token 0 instead of
+    /// panicking mid-serve.
     fn finished(&self) -> bool {
-        let last = *self.generated.last().expect("slot holds ≥1 generated token");
-        self.generated.len() >= self.max_new || self.stop == Some(last)
+        match self.generated.last() {
+            Some(&last) => self.generated.len() >= self.max_new || self.stop == Some(last),
+            None => {
+                debug_assert!(false, "slot holds ≥1 generated token");
+                false
+            }
+        }
+    }
+
+    /// The token the next decode step feeds (see [`Slot::finished`] for
+    /// the non-empty invariant).
+    fn last_token(&self) -> u16 {
+        debug_assert!(!self.generated.is_empty(), "slot holds ≥1 generated token");
+        self.generated.last().copied().unwrap_or_default()
     }
 }
 
@@ -242,10 +361,13 @@ impl Slot {
 pub struct Scheduler {
     model_cfg: TransformerConfig,
     cfg: SchedulerConfig,
-    queue: VecDeque<(u64, Request)>,
+    queue: VecDeque<Queued>,
     slots: Vec<Slot>,
     pool: KvPagePool,
     prefix: Option<PrefixCache>,
+    /// Completions produced *between* steps (submission-time rejections,
+    /// so far), delivered by the next [`step`](Scheduler::step).
+    pending: Vec<Completion>,
     next_id: u64,
     step_no: u64,
     decode_batches: u64,
@@ -253,6 +375,11 @@ pub struct Scheduler {
     prefill_tokens_in: u64,
     prefill_tokens_out: u64,
     completed: u64,
+    rejected: u64,
+    cancelled: u64,
+    deadline_exceeded: u64,
+    preempted: u64,
+    resumed: u64,
     peak_live: usize,
     peak_kv_resident_bytes: usize,
     kv_pages_quantized_total: u64,
@@ -273,7 +400,8 @@ impl Scheduler {
         // full-context requests): steady-state serving then allocates
         // nothing. Prefix pins hold refcounts on this working set; the
         // pool allocates replacement pages on demand.
-        let pool = KvPagePool::with_capacity_paged(model_cfg, page_tokens, cfg.max_slots);
+        let pool =
+            KvPagePool::with_budget_paged(model_cfg, page_tokens, cfg.kv_budget_bytes, cfg.max_slots);
         let prefix = (cfg.prefix_cache_bytes > 0).then(|| PrefixCache::new(cfg.prefix_cache_bytes));
         Self {
             model_cfg,
@@ -282,6 +410,7 @@ impl Scheduler {
             slots: Vec::new(),
             pool,
             prefix,
+            pending: Vec::new(),
             next_id: 0,
             step_no: 0,
             decode_batches: 0,
@@ -289,16 +418,42 @@ impl Scheduler {
             prefill_tokens_in: 0,
             prefill_tokens_out: 0,
             completed: 0,
+            rejected: 0,
+            cancelled: 0,
+            deadline_exceeded: 0,
+            preempted: 0,
+            resumed: 0,
             peak_live: 0,
             peak_kv_resident_bytes: 0,
             kv_pages_quantized_total: 0,
         }
     }
 
+    /// Arm (or replace) the page pool's failpoint set — the chaos suite's
+    /// deterministic injection path. Production arming goes through the
+    /// `CLAQ_FAILPOINTS` env var at pool construction.
+    pub fn set_failpoints(&mut self, fp: std::sync::Arc<crate::util::failpoint::Failpoints>) {
+        self.pool.set_failpoints(fp);
+    }
+
     /// Enqueue a request; returns the id its [`Completion`] will carry.
-    /// Rejects requests that could never be served (empty prompt, zero
-    /// budget, or prompt + generation overflowing the context window).
+    /// `Err` means a *caller* bug (empty prompt, zero token budget,
+    /// prompt + generation overflowing the context window). *Overload*
+    /// is not an error: a request shed because the queue is full or
+    /// because its KV footprint could never fit the byte budget still
+    /// gets an id, answered with a [`FinishReason::Rejected`] completion
+    /// from the next [`step`](Scheduler::step).
     pub fn submit(&mut self, req: Request) -> Result<u64> {
+        self.submit_with_deadline(req, self.cfg.deadline_steps)
+    }
+
+    /// [`submit`](Scheduler::submit) with a per-request step deadline
+    /// overriding [`SchedulerConfig::deadline_steps`] (`0` = none): a
+    /// request still unfinished once `deadline_steps` engine steps have
+    /// elapsed past its submission step is retired with
+    /// [`FinishReason::DeadlineExceeded`], whether queued or live, its
+    /// pages freed that same step.
+    pub fn submit_with_deadline(&mut self, req: Request, deadline_steps: u64) -> Result<u64> {
         anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
         anyhow::ensure!(req.max_new_tokens >= 1, "max_new_tokens must be >= 1");
         anyhow::ensure!(
@@ -310,8 +465,82 @@ impl Scheduler {
         );
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back((id, req));
+        if self.cfg.max_queue > 0 && self.queue.len() >= self.cfg.max_queue {
+            self.reject(id, req.prompt.len());
+            return Ok(id);
+        }
+        // Rung 4 also sheds requests that could never be served: a
+        // footprint past the byte budget would cycle through the ladder
+        // forever (preempt, fail to resume, repeat), so it is refused up
+        // front. `div_ceil` makes this a conservative (≥ actual pages)
+        // bound — the worst case is one page per `page_tokens` positions
+        // of `prompt ++ generated`.
+        let worst_pages =
+            (req.prompt.len() + req.max_new_tokens).div_ceil(self.pool.page_tokens());
+        if worst_pages > self.pool.max_pages() {
+            self.reject(id, req.prompt.len());
+            return Ok(id);
+        }
+        let orig_prompt_len = req.prompt.len();
+        self.queue.push_back(Queued {
+            id,
+            prompt: req.prompt,
+            max_new: req.max_new_tokens,
+            stop: req.stop_token,
+            generated: Vec::new(),
+            orig_prompt_len,
+            submit_step: self.step_no,
+            deadline_steps,
+            first_admitted_step: 0,
+        });
         Ok(id)
+    }
+
+    fn reject(&mut self, id: u64, prompt_len: usize) {
+        self.account(FinishReason::Rejected);
+        self.pending.push(Completion {
+            id,
+            prompt_len,
+            tokens: Vec::new(),
+            reason: FinishReason::Rejected,
+            admitted_step: 0,
+            finished_step: self.step_no,
+        });
+    }
+
+    /// Cancel a request by id, queued or live. Pages are freed
+    /// immediately (a cancelled generation is incomplete, so its cache
+    /// recycles straight into the pool, never the prefix cache) and the
+    /// [`FinishReason::Cancelled`] completion — carrying any partial
+    /// output — is returned. `None` when the id is unknown or already
+    /// finished.
+    pub fn cancel(&mut self, id: u64) -> Option<Completion> {
+        if let Some(i) = self.queue.iter().position(|q| q.id == id) {
+            // position() just returned a valid index, so remove() hits.
+            let q = self.queue.remove(i).expect("cancel target vanished from the queue");
+            return Some(self.finish_queued(q, FinishReason::Cancelled));
+        }
+        if let Some(i) = self.slots.iter().position(|s| s.id == id) {
+            let slot = self.slots.remove(i);
+            return Some(self.finish_slot_early(slot, FinishReason::Cancelled));
+        }
+        None
+    }
+
+    /// Preempt a live request back to the *front* of the queue (rung 3
+    /// of the degradation ladder, also callable directly): its pages are
+    /// released immediately and it re-queues with `prompt ++ generated`
+    /// as the new prompt, so resuming is a plain prefill — bit-identical
+    /// to never having been preempted (`tests/preemption.rs` pins this at
+    /// every decode step). Returns `false` when `id` is not live.
+    pub fn preempt(&mut self, id: u64) -> bool {
+        match self.slots.iter().position(|s| s.id == id) {
+            Some(i) => {
+                self.preempt_slot_at(i);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Requests waiting for admission.
@@ -325,7 +554,7 @@ impl Scheduler {
     }
 
     pub fn has_work(&self) -> bool {
-        !self.queue.is_empty() || !self.slots.is_empty()
+        !self.queue.is_empty() || !self.slots.is_empty() || !self.pending.is_empty()
     }
 
     /// Evict every pinned prefix back into the page pool (shutdown; the
@@ -397,6 +626,12 @@ impl Scheduler {
             kv_resident_bytes: census.bytes,
             peak_kv_resident_bytes: self.peak_kv_resident_bytes.max(census.bytes),
             kv_pages_quantized_total: self.kv_pages_quantized_total,
+            rejected: self.rejected,
+            cancelled: self.cancelled,
+            deadline_exceeded: self.deadline_exceeded,
+            preempted: self.preempted,
+            resumed: self.resumed,
+            pool_failed_takes: self.pool.failed_takes(),
         }
     }
 
@@ -415,7 +650,10 @@ impl Scheduler {
             st.capacity()
         );
         self.step_no += 1;
-        let mut done = Vec::new();
+        // Deliver completions buffered between steps (submission-time
+        // rejections): they belong to this serving clock, not to errors.
+        let mut done = std::mem::take(&mut self.pending);
+        self.expire_deadlines(&mut done);
         let mut budget = self.cfg.prefill_token_budget;
         let mut admitted_any = false;
 
@@ -425,12 +663,13 @@ impl Scheduler {
         if !self.slots.is_empty() {
             // Draw this step's page growth from the pool up front (a page
             // boundary crossing, or a CoW fork of a still-shared tail) so
-            // the fused decode itself never allocates.
-            for s in self.slots.iter_mut() {
-                s.cache.reserve(&mut self.pool, 1);
-            }
-            let toks: Vec<u16> =
-                self.slots.iter().map(|s| *s.generated.last().unwrap()).collect();
+            // the fused decode itself never allocates. Failed takes walk
+            // the degradation ladder, which may preempt slots — hence the
+            // re-check below.
+            self.reserve_decode_pages();
+        }
+        if !self.slots.is_empty() {
+            let toks: Vec<u16> = self.slots.iter().map(Slot::last_token).collect();
             let mut caches: Vec<&mut KvCache> =
                 self.slots.iter_mut().map(|s| &mut s.cache).collect();
             let logits = decode_step(model, &mut caches, &toks, st);
@@ -482,7 +721,7 @@ impl Scheduler {
             return;
         }
         while self.slots.len() < self.cfg.max_slots {
-            let Some((_, front)) = self.queue.front() else { break };
+            let Some(front) = self.queue.front() else { break };
             let prompt_len = front.prompt.len();
             // Budget is a compute throttle, so a cached prefix (page
             // sharing, not a forward pass) charges only the tail it will
@@ -491,40 +730,193 @@ impl Scheduler {
             if prompt_len - reusable > *budget && *admitted_any {
                 break; // budget spent; the rest waits for the next step
             }
-            *admitted_any = true;
-            *budget = budget.saturating_sub(prompt_len - reusable);
 
-            let (id, req) = self.queue.pop_front().unwrap();
+            let Some(mut q) = self.queue.pop_front() else {
+                // Structurally unreachable: front() above just observed
+                // an entry and nothing between touched the queue.
+                debug_assert!(false, "queue emptied between front() and pop_front()");
+                break;
+            };
             let mut cache = self.pool.take_cache();
             let depth = match &mut self.prefix {
-                Some(p) => p.share_into(&req.prompt, &mut cache),
+                Some(p) => p.share_into(&q.prompt, &mut cache),
                 None => 0,
             };
             debug_assert_eq!(depth, reusable, "probe and share must agree within one admission");
-            let tail = &req.prompt[depth..];
+            let tail_len = q.prompt.len() - depth;
             // Tail pages (and the CoW fork of a shared partial tail page)
-            // come from the pool; prefill's own prepare_append is then a
-            // no-op.
-            cache.reserve(&mut self.pool, tail.len());
+            // come from the pool, walking rungs 1-2 of the ladder when a
+            // take fails; prefill's own prepare_append is then a no-op.
+            // Admission never preempts (rung 3): un-admitting one request
+            // to admit another would thrash, so when the reclaim rungs
+            // are exhausted the request goes back to the queue front and
+            // waits for decode-side pressure (retirement or preemption)
+            // to free pages. Prefix stats counted by share_into recount
+            // on the retry — acceptable drift under overload.
+            while !cache.try_reserve(&mut self.pool, tail_len) {
+                if !self.relieve_memory_pressure() {
+                    self.pool.put_cache(cache);
+                    self.queue.push_front(q);
+                    return;
+                }
+            }
+            *admitted_any = true;
+            *budget = budget.saturating_sub(tail_len);
+            if q.first_admitted_step != 0 {
+                self.resumed += 1;
+            }
+
+            let tail = &q.prompt[depth..];
             let logits = prefill(model, &mut cache, tail, st);
-            let first = argmax(logits.row(tail.len() - 1));
+            let next = argmax(logits.row(tail.len() - 1));
             self.prefill_tokens_in += tail.len() as u64;
             self.prefill_tokens_out += 1;
 
+            // A resumed request keeps its pre-preemption tokens: the
+            // prefill of `prompt ++ generated` produced the *next* one.
+            let mut generated = std::mem::take(&mut q.generated);
+            generated.push(next);
             let slot = Slot {
-                id,
+                id: q.id,
                 cache,
-                prompt: req.prompt,
-                max_new: req.max_new_tokens,
-                stop: req.stop_token,
-                generated: vec![first],
-                admitted_step: self.step_no,
+                prompt: q.prompt,
+                max_new: q.max_new,
+                stop: q.stop,
+                generated,
+                admitted_step: if q.first_admitted_step != 0 {
+                    q.first_admitted_step
+                } else {
+                    self.step_no
+                },
+                orig_prompt_len: q.orig_prompt_len,
+                submit_step: q.submit_step,
+                deadline_steps: q.deadline_steps,
             };
             if slot.finished() {
                 done.push(self.complete(slot));
             } else {
                 self.slots.push(slot);
                 self.peak_live = self.peak_live.max(self.slots.len());
+            }
+        }
+    }
+
+    /// Rungs 1-2 of the degradation ladder: reclaim memory without
+    /// touching live requests — evict one pinned prefix back into the
+    /// pool, else force cold-page quantization (margin 0: every full
+    /// private page strictly behind a decode head; only when
+    /// `kv_quant_bits` is enabled, because it is lossy). Returns `false`
+    /// when neither rung produced anything, i.e. the caller must escalate
+    /// (preempt) or back off. Each call consumes a finite resource
+    /// (a trie entry, an unquantized page), so ladder loops terminate.
+    fn relieve_memory_pressure(&mut self) -> bool {
+        if let Some(p) = &mut self.prefix {
+            if p.evict_one(&mut self.pool) {
+                return true;
+            }
+        }
+        if self.cfg.kv_quant_bits > 0 {
+            let bits = self.cfg.kv_quant_bits;
+            let mut quantized = 0usize;
+            for s in self.slots.iter_mut() {
+                quantized += s.cache.quantize_cold_pages(bits, 0, Some(&mut self.pool));
+            }
+            self.kv_pages_quantized_total += quantized as u64;
+            return quantized > 0;
+        }
+        false
+    }
+
+    /// Reserve this step's one-position growth for every live slot,
+    /// walking the full ladder on a failed take: reclaim
+    /// ([`relieve_memory_pressure`](Self::relieve_memory_pressure)),
+    /// then preempt the youngest live request and restart the walk.
+    /// `try_reserve` is a no-op for slots whose tail is already writable,
+    /// so restarting never double-reserves.
+    fn reserve_decode_pages(&mut self) {
+        loop {
+            let mut failed = false;
+            for i in 0..self.slots.len() {
+                if !self.slots[i].cache.try_reserve(&mut self.pool, 1) {
+                    failed = true;
+                    if !self.relieve_memory_pressure() && !self.preempt_youngest() {
+                        // Structurally unreachable: the walk only runs
+                        // with live slots, so preempt_youngest() always
+                        // has a victim. Defensive in release: give up on
+                        // reserving; decode will then fall back to
+                        // pool-less allocation in prepare_append.
+                        debug_assert!(false, "pressure ladder exhausted with a live batch");
+                        return;
+                    }
+                    break; // restart the walk after reclaim/preemption
+                }
+            }
+            if !failed {
+                return;
+            }
+        }
+    }
+
+    /// Rung 3: preempt the youngest live request (highest id — the one
+    /// with the least service, whose re-prefill costs the least; the
+    /// choice that can never starve the eldest request). `false` when no
+    /// slot is live.
+    fn preempt_youngest(&mut self) -> bool {
+        match (0..self.slots.len()).max_by_key(|&i| self.slots[i].id) {
+            Some(i) => {
+                self.preempt_slot_at(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn preempt_slot_at(&mut self, i: usize) {
+        let slot = self.slots.remove(i);
+        self.pool.put_cache(slot.cache);
+        self.preempted += 1;
+        // Resume prompt = original prompt ++ everything generated. The
+        // slot prompt of a request preempted once before already holds
+        // its earlier tokens, so rebuild from the original length.
+        let mut prompt = slot.prompt;
+        prompt.truncate(slot.orig_prompt_len);
+        prompt.extend_from_slice(&slot.generated);
+        self.queue.push_front(Queued {
+            id: slot.id,
+            prompt,
+            max_new: slot.max_new,
+            stop: slot.stop,
+            generated: slot.generated,
+            orig_prompt_len: slot.orig_prompt_len,
+            submit_step: slot.submit_step,
+            deadline_steps: slot.deadline_steps,
+            first_admitted_step: slot.admitted_step,
+        });
+    }
+
+    /// Retire every queued or live request whose step deadline has
+    /// passed (runs at the top of each step, before admission).
+    fn expire_deadlines(&mut self, done: &mut Vec<Completion>) {
+        let now = self.step_no;
+        let mut i = 0;
+        while i < self.queue.len() {
+            let q = &self.queue[i];
+            if q.deadline_steps > 0 && now > q.submit_step + q.deadline_steps {
+                // The index was just observed in bounds, so remove() hits.
+                let q = self.queue.remove(i).expect("expired entry vanished from the queue");
+                done.push(self.finish_queued(q, FinishReason::DeadlineExceeded));
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.slots.len() {
+            let s = &self.slots[i];
+            if s.deadline_steps > 0 && now > s.submit_step + s.deadline_steps {
+                let slot = self.slots.remove(i);
+                done.push(self.finish_slot_early(slot, FinishReason::DeadlineExceeded));
+            } else {
+                i += 1;
             }
         }
     }
@@ -544,26 +936,68 @@ impl Scheduler {
     }
 
     fn complete(&mut self, slot: Slot) -> Completion {
-        let Slot { id, cache, prompt, stop, generated, admitted_step, .. } = slot;
-        let last = *generated.last().unwrap();
+        let last = slot.last_token();
+        let Slot { id, cache, prompt, stop, generated, admitted_step, orig_prompt_len, .. } = slot;
         let reason = if stop == Some(last) { FinishReason::Stop } else { FinishReason::Length };
         // Retirement feeds the prefix cache: the cache (truncated back to
         // the prompt, decode pages released) pins its prompt pages for
         // future shared-prefix admissions, or every page recycles straight
         // into the pool when the cache is disabled / the prompt is already
-        // pinned.
+        // pinned. (For a resumed request "the prompt" is the extended one
+        // — exactly the tokens its first cache positions hold.)
         match &mut self.prefix {
             Some(p) => p.insert(&prompt, cache, &mut self.pool),
             None => self.pool.put_cache(cache),
         }
-        self.completed += 1;
+        self.account(reason);
         Completion {
             id,
-            prompt_len: prompt.len(),
+            prompt_len: orig_prompt_len,
             tokens: generated,
             reason,
             admitted_step,
             finished_step: self.step_no,
+        }
+    }
+
+    /// Retire a live slot early (cancel / deadline): its pages recycle
+    /// straight into the pool — an incomplete generation is never pinned
+    /// in the prefix cache — and the completion carries the partial
+    /// output.
+    fn finish_slot_early(&mut self, slot: Slot, reason: FinishReason) -> Completion {
+        debug_assert!(!reason.is_success(), "successful finishes go through complete()");
+        self.pool.put_cache(slot.cache);
+        self.account(reason);
+        Completion {
+            id: slot.id,
+            prompt_len: slot.orig_prompt_len,
+            tokens: slot.generated,
+            reason,
+            admitted_step: slot.admitted_step,
+            finished_step: self.step_no,
+        }
+    }
+
+    /// Retire a queued entry without admission (cancel / deadline); a
+    /// preempted entry's partial output still reaches its completion.
+    fn finish_queued(&mut self, q: Queued, reason: FinishReason) -> Completion {
+        self.account(reason);
+        Completion {
+            id: q.id,
+            prompt_len: q.orig_prompt_len,
+            tokens: q.generated,
+            reason,
+            admitted_step: q.first_admitted_step,
+            finished_step: self.step_no,
+        }
+    }
+
+    fn account(&mut self, reason: FinishReason) {
+        match reason {
+            FinishReason::Length | FinishReason::Stop => self.completed += 1,
+            FinishReason::Cancelled => self.cancelled += 1,
+            FinishReason::DeadlineExceeded => self.deadline_exceeded += 1,
+            FinishReason::Rejected => self.rejected += 1,
         }
     }
 }
@@ -906,5 +1340,228 @@ mod tests {
         assert_eq!(after.prefix_entries, 0);
         assert_eq!(after.kv_pages_resident, 0);
         assert_eq!(after.pool_free_pages as u64, after.pool_pages_created);
+    }
+
+    /// Bytes of one page at `small_setup` geometry (2 layers, d 16) for
+    /// a given page size — for tests that count budgets in pages.
+    fn page_bytes(cfg: &TransformerConfig, page_tokens: usize) -> usize {
+        2 * cfg.n_layers * page_tokens * cfg.d_model * std::mem::size_of::<f32>()
+    }
+
+    #[test]
+    fn full_queue_sheds_with_a_structured_rejection() {
+        let (model, mut st) = small_setup();
+        let mut s = Scheduler::new(
+            model.config,
+            SchedulerConfig { max_slots: 1, max_queue: 2, ..SchedulerConfig::default() },
+        );
+        let ids: Vec<u64> = (0..3u16)
+            .map(|i| {
+                s.submit(Request { prompt: vec![i + 1], max_new_tokens: 2, stop_token: None })
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(s.queued(), 2, "the third submission must not grow the queue");
+        let done = s.run_to_completion(&model, &mut st);
+        assert_eq!(done.len(), 3, "rejections are completions, not silence");
+        let rejected: Vec<_> =
+            done.iter().filter(|c| c.reason == FinishReason::Rejected).collect();
+        assert_eq!(rejected.len(), 1);
+        assert_eq!(rejected[0].id, ids[2]);
+        assert!(rejected[0].tokens.is_empty());
+        assert_eq!(rejected[0].admitted_step, 0);
+        let stats = s.stats();
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.pool_free_pages as u64, stats.pool_pages_created);
+    }
+
+    #[test]
+    fn budget_infeasible_requests_are_rejected_up_front() {
+        let (model, mut st) = small_setup();
+        // Budget of exactly one 4-token page: prompt 3 + max_new 3 needs
+        // two pages and can never be served; prompt 2 + max_new 2 fits.
+        let mut s = Scheduler::new(
+            model.config,
+            SchedulerConfig {
+                max_slots: 1,
+                kv_page_tokens: 4,
+                kv_budget_bytes: page_bytes(&model.config, 4),
+                ..SchedulerConfig::default()
+            },
+        );
+        s.submit(Request { prompt: vec![1, 2, 3], max_new_tokens: 3, stop_token: None }).unwrap();
+        let done = s.run_to_completion(&model, &mut st);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::Rejected);
+        assert_eq!(s.stats().rejected, 1);
+
+        s.submit(Request { prompt: vec![1, 2], max_new_tokens: 2, stop_token: None }).unwrap();
+        let done = s.run_to_completion(&model, &mut st);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].reason.is_success(), "a fitting request still serves: {done:?}");
+        let stats = s.stats();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.pool_free_pages as u64, stats.pool_pages_created);
+    }
+
+    #[test]
+    fn cancel_works_queued_and_live_and_frees_pages() {
+        let (model, mut st) = small_setup();
+        let mut s = Scheduler::new(
+            model.config,
+            SchedulerConfig { max_slots: 1, ..SchedulerConfig::default() },
+        );
+        let a = s
+            .submit(Request { prompt: vec![1, 2], max_new_tokens: 6, stop_token: None })
+            .unwrap();
+        let b = s
+            .submit(Request { prompt: vec![3, 4], max_new_tokens: 6, stop_token: None })
+            .unwrap();
+        s.step(&model, &mut st); // a live, b queued behind the single slot
+        assert_eq!(s.live(), 1);
+        assert_eq!(s.queued(), 1);
+
+        let cb = s.cancel(b).expect("queued request cancels");
+        assert_eq!(cb.reason, FinishReason::Cancelled);
+        assert!(cb.tokens.is_empty());
+        assert_eq!(cb.admitted_step, 0);
+
+        let ca = s.cancel(a).expect("live request cancels");
+        assert_eq!(ca.reason, FinishReason::Cancelled);
+        assert!(!ca.tokens.is_empty(), "live cancel reports the partial output");
+        assert!(ca.admitted_step >= 1);
+
+        assert!(s.cancel(a).is_none(), "double cancel finds nothing");
+        assert!(!s.has_work());
+        let stats = s.stats();
+        assert_eq!(stats.cancelled, 2);
+        assert_eq!(stats.completed, 0);
+        // the live cache went straight back: page hygiene holds now, not
+        // at some later step
+        assert_eq!(stats.pool_free_pages as u64, stats.pool_pages_created);
+        assert_eq!(stats.kv_pages_resident, 0);
+    }
+
+    #[test]
+    fn deadlines_expire_queued_and_live_requests() {
+        let (model, mut st) = small_setup();
+        let mut s = Scheduler::new(
+            model.config,
+            SchedulerConfig { max_slots: 1, ..SchedulerConfig::default() },
+        );
+        // a gets the slot but wants more steps than its deadline allows;
+        // b never gets the slot before its own deadline passes
+        let a = s
+            .submit_with_deadline(
+                Request { prompt: vec![1, 2], max_new_tokens: 10, stop_token: None },
+                3,
+            )
+            .unwrap();
+        let b = s
+            .submit_with_deadline(
+                Request { prompt: vec![3, 4], max_new_tokens: 10, stop_token: None },
+                2,
+            )
+            .unwrap();
+        let done = s.run_to_completion(&model, &mut st);
+        assert_eq!(done.len(), 2);
+        let ca = done.iter().find(|c| c.id == a).unwrap();
+        assert_eq!(ca.reason, FinishReason::DeadlineExceeded);
+        assert!(
+            !ca.tokens.is_empty() && ca.tokens.len() < 10,
+            "deadline returns the partial output: {:?}",
+            ca.tokens
+        );
+        let cb = done.iter().find(|c| c.id == b).unwrap();
+        assert_eq!(cb.reason, FinishReason::DeadlineExceeded);
+        assert!(cb.tokens.is_empty());
+        assert_eq!(cb.admitted_step, 0);
+        let stats = s.stats();
+        assert_eq!(stats.deadline_exceeded, 2);
+        assert_eq!(stats.pool_free_pages as u64, stats.pool_pages_created);
+        assert_eq!(stats.kv_pages_resident, 0);
+    }
+
+    #[test]
+    fn budget_pressure_preempts_and_resumes_bit_identically() {
+        let (model, mut st) = small_setup();
+        let mut run = |budget_pages: usize| {
+            let mut s = Scheduler::new(
+                model.config,
+                SchedulerConfig {
+                    max_slots: 3,
+                    kv_page_tokens: 4,
+                    kv_budget_bytes: budget_pages * page_bytes(&model.config, 4),
+                    ..SchedulerConfig::default()
+                },
+            );
+            for i in 0..3u16 {
+                s.submit(Request {
+                    prompt: vec![i + 1, i + 2, i + 3],
+                    max_new_tokens: 8,
+                    stop_token: None,
+                })
+                .unwrap();
+            }
+            let mut done = s.run_to_completion(&model, &mut st);
+            done.sort_by_key(|c| c.id);
+            (done, s.stats())
+        };
+        let (free, free_stats) = run(0);
+        assert_eq!(free_stats.preempted, 0);
+        assert_eq!(free_stats.rejected, 0);
+        // Three requests at 3 pages each need 9 pages concurrently; 5
+        // cannot hold them, so the ladder must preempt — but each request
+        // alone fits (3 ≤ 5), so nothing is rejected and everything
+        // eventually completes.
+        let (tight, tight_stats) = run(5);
+        assert!(tight_stats.preempted > 0, "the budget never bit: {tight_stats:?}");
+        assert!(tight_stats.resumed >= 1);
+        assert_eq!(tight_stats.rejected, 0);
+        assert_eq!(tight_stats.completed, 3);
+        assert!(tight_stats.pool_failed_takes > 0);
+        assert_eq!(free.len(), tight.len());
+        for (f, t) in free.iter().zip(&tight) {
+            assert_eq!(f.id, t.id);
+            assert_eq!(f.tokens, t.tokens, "preemption changed tokens of request {}", f.id);
+            assert_eq!(f.reason, t.reason);
+            assert_eq!(f.prompt_len, t.prompt_len, "prompt_len must stay the submitted one");
+        }
+        assert_eq!(tight_stats.pool_free_pages as u64, tight_stats.pool_pages_created);
+        assert_eq!(tight_stats.kv_pages_resident, 0);
+    }
+
+    #[test]
+    fn explicit_preempt_round_trips_through_the_queue() {
+        let (model, mut st) = small_setup();
+        let mut run = |preempt_after: Option<u64>| {
+            let mut s = Scheduler::new(model.config, SchedulerConfig::default());
+            let id = s
+                .submit(Request { prompt: vec![5, 6, 7], max_new_tokens: 7, stop_token: None })
+                .unwrap();
+            let mut out = Vec::new();
+            let mut steps = 0u64;
+            while s.has_work() {
+                out.extend(s.step(&model, &mut st));
+                steps += 1;
+                if Some(steps) == preempt_after {
+                    assert!(s.preempt(id), "request must be live at step {steps}");
+                    assert_eq!(s.live(), 0);
+                    assert_eq!(s.queued(), 1);
+                }
+                assert!(steps < 100, "preempted request failed to drain");
+            }
+            (out, s.stats())
+        };
+        let (base, _) = run(None);
+        assert_eq!(base.len(), 1);
+        let (preempted, stats) = run(Some(2));
+        assert_eq!(preempted.len(), 1);
+        assert_eq!(preempted[0].tokens, base[0].tokens, "resume must be bit-identical");
+        assert_eq!(preempted[0].admitted_step, base[0].admitted_step, "TTFT step preserved");
+        assert_eq!(stats.preempted, 1);
+        assert_eq!(stats.resumed, 1);
+        assert_eq!(stats.pool_free_pages as u64, stats.pool_pages_created);
     }
 }

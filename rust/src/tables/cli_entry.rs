@@ -218,10 +218,14 @@ pub fn pack(args: &Args) -> Result<()> {
 }
 
 /// `claq serve --checkpoint model.claq [--requests N --slots S --seed K]
-/// [--kv-page-tokens P] [--kv-quant-bits B]` — cold-start the
+/// [--kv-page-tokens P] [--kv-quant-bits B] [--kv-budget-mb M]
+/// [--max-queue Q] [--deadline-steps D]` — cold-start the
 /// continuous-batching engine from a checkpoint (no calibration, no
 /// quantization, no dense weights) and drive a short greedy-decode
-/// workload over the paged KV cache.
+/// workload over the paged KV cache. The three overload knobs expose the
+/// degradation ladder (DESIGN.md §14): a hard KV byte budget (0 =
+/// unbounded), a queue bound past which submissions are shed as
+/// `Rejected`, and a per-request step deadline (0 = none).
 pub fn serve(args: &Args) -> Result<()> {
     let path = args
         .get("checkpoint")
@@ -246,6 +250,11 @@ pub fn serve(args: &Args) -> Result<()> {
     let kv_quant_bits: u8 =
         args.get_parse_or("kv-quant-bits", 0).map_err(anyhow::Error::msg)?;
     anyhow::ensure!(kv_quant_bits <= 8, "--kv-quant-bits must be in [0, 8] (0 = off)");
+    let kv_budget_mb: usize =
+        args.get_parse_or("kv-budget-mb", 0).map_err(anyhow::Error::msg)?;
+    let max_queue: usize = args.get_parse_or("max-queue", 0).map_err(anyhow::Error::msg)?;
+    let deadline_steps: u64 =
+        args.get_parse_or("deadline-steps", 0).map_err(anyhow::Error::msg)?;
 
     let mut sched = Scheduler::new(
         cfg,
@@ -255,6 +264,9 @@ pub fn serve(args: &Args) -> Result<()> {
             policy: AdmissionPolicy::Continuous,
             kv_page_tokens,
             kv_quant_bits,
+            kv_budget_bytes: kv_budget_mb * (1 << 20),
+            max_queue,
+            deadline_steps,
             ..SchedulerConfig::default()
         },
     );
@@ -286,6 +298,19 @@ pub fn serve(args: &Args) -> Result<()> {
         generated as f64 / wall.max(1e-9),
         stats.peak_live
     );
+    if kv_budget_mb > 0 || max_queue > 0 || deadline_steps > 0 || stats.pool_failed_takes > 0 {
+        println!(
+            "overload: {} completed, {} rejected, {} deadline-exceeded, {} cancelled; \
+             {} preemptions / {} resumes, {} failed page takes",
+            stats.completed,
+            stats.rejected,
+            stats.deadline_exceeded,
+            stats.cancelled,
+            stats.preempted,
+            stats.resumed,
+            stats.pool_failed_takes
+        );
+    }
     println!(
         "load -> first token: {:.1} ms  (load {:.1} ms + first engine step {:.1} ms)",
         (cold.load_seconds + first_token_s) * 1e3,

@@ -1,0 +1,299 @@
+//! Deterministic, seeded fault injection — the trigger half of the chaos
+//! harness (`tests/chaos.rs` is the property half; DESIGN.md §14).
+//!
+//! A *failpoint* is a named site in the runtime that can be told to fail
+//! on purpose: the KV page pool's take path ([`POOL_TAKE`] — a take
+//! returns `None` as if the budget were exhausted), checkpoint decode
+//! ([`CKPT_DECODE`] — `Checkpoint::decode` bails), and thread-pool job
+//! dispatch ([`POOL_DISPATCH`] — the job panics inside the pool's
+//! `catch_unwind`, exercising panic isolation). Sites are armed either
+//! process-wide via the `CLAQ_FAILPOINTS` environment variable or
+//! per-instance/per-scope from tests; unset, a site costs one
+//! thread-local read plus one lazily-initialized static read.
+//!
+//! Syntax (`;`-separated clauses, whitespace-tolerant):
+//!
+//! ```text
+//! CLAQ_FAILPOINTS="pool_take@p0.1;seed=7"
+//! ```
+//!
+//! `name@pP` arms `name` with firing probability `P` ∈ [0, 1];
+//! `seed=N` fixes the decision stream. Decisions are **deterministic**:
+//! the k-th evaluation of a given failpoint fires iff
+//! `splitmix64(seed ⊕ fnv1a(name) ⊕ k·φ) < P·2⁶⁴`, a pure function of
+//! `(seed, name, k)` with no global RNG state — so a fixed seed replays
+//! the exact same fault schedule, which is what lets the chaos property
+//! suite assert bit-identical survivors run after run. (At a site
+//! evaluated concurrently from several threads, the *set* of firing call
+//! numbers is still deterministic; which thread draws which call number
+//! is not — the only such site is `pool_dispatch`.)
+
+use crate::util::rng::SplitMix64;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// `KvPagePool::take_page`: a fired take returns `None`, indistinguishable
+/// from budget exhaustion — the scheduler must walk its degradation ladder.
+pub const POOL_TAKE: &str = "pool_take";
+/// `Checkpoint::decode`: a fired decode bails with a tagged error.
+pub const CKPT_DECODE: &str = "ckpt_decode";
+/// `ThreadPool` job execution: a fired job panics inside the pool's
+/// per-job `catch_unwind` (inline fallback paths bypass it).
+pub const POOL_DISPATCH: &str = "pool_dispatch";
+
+struct Point {
+    name: String,
+    /// Fire iff `hash < threshold` (u128 so `p = 1.0` means always).
+    threshold: u128,
+    /// Cap on total fires (`0` = unlimited) — lets a test inject exactly
+    /// one fault and then prove the victim recovered.
+    max_fires: u64,
+    calls: AtomicU64,
+    fires: AtomicU64,
+}
+
+/// An armed set of failpoints. Cheap to share (`Arc`), `Sync`, and fully
+/// deterministic from its seed — see the module docs for the decision
+/// function.
+pub struct Failpoints {
+    seed: u64,
+    points: Vec<Point>,
+}
+
+impl std::fmt::Debug for Failpoints {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut d = f.debug_struct("Failpoints");
+        d.field("seed", &self.seed);
+        for p in &self.points {
+            d.field(&p.name, &(p.calls.load(Ordering::Relaxed), p.fires.load(Ordering::Relaxed)));
+        }
+        d.finish()
+    }
+}
+
+impl Failpoints {
+    /// Empty set (nothing armed) with a decision seed.
+    pub fn new(seed: u64) -> Self {
+        Self { seed, points: Vec::new() }
+    }
+
+    /// Arm `name` with firing probability `p` (clamped to [0, 1]).
+    pub fn with_point(self, name: &str, p: f64) -> Self {
+        self.with_limited_point(name, p, 0)
+    }
+
+    /// [`with_point`](Self::with_point) capped at `max_fires` total fires
+    /// (`0` = unlimited).
+    pub fn with_limited_point(mut self, name: &str, p: f64, max_fires: u64) -> Self {
+        self.points.push(Point {
+            name: name.to_string(),
+            threshold: (p.clamp(0.0, 1.0) * 2f64.powi(64)) as u128,
+            max_fires,
+            calls: AtomicU64::new(0),
+            fires: AtomicU64::new(0),
+        });
+        self
+    }
+
+    /// Parse the `CLAQ_FAILPOINTS` syntax (see module docs). Malformed
+    /// specs are errors, never silently ignored — a typo'd chaos lane
+    /// that tests nothing is worse than a red one.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut out = Self::new(0);
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(seed) = clause.strip_prefix("seed=") {
+                out.seed = seed.trim().parse().with_context(|| format!("bad seed {seed:?}"))?;
+            } else if let Some((name, prob)) = clause.split_once("@p") {
+                let p: f64 = prob
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad probability in clause {clause:?}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("probability {p} in clause {clause:?} outside [0, 1]");
+                }
+                out = out.with_point(name.trim(), p);
+            } else {
+                bail!("unrecognized failpoint clause {clause:?} (want name@pP or seed=N)");
+            }
+        }
+        Ok(out)
+    }
+
+    /// Evaluate `name`: true = the caller must fail here. Unarmed names
+    /// never fire. Each call advances the site's call counter, so the
+    /// decision sequence is replayable from the seed alone.
+    pub fn fire(&self, name: &str) -> bool {
+        let Some(pt) = self.points.iter().find(|p| p.name == name) else {
+            return false;
+        };
+        let k = pt.calls.fetch_add(1, Ordering::Relaxed);
+        let h = SplitMix64::new(
+            self.seed ^ fnv1a(&pt.name) ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )
+        .next_u64();
+        if (h as u128) >= pt.threshold {
+            return false;
+        }
+        let n = pt.fires.fetch_add(1, Ordering::Relaxed);
+        pt.max_fires == 0 || n < pt.max_fires
+    }
+
+    /// Total fires of `name` so far (0 for unarmed names).
+    pub fn fired(&self, name: &str) -> u64 {
+        self.points.iter().find(|p| p.name == name).map_or(0, |p| {
+            let n = p.fires.load(Ordering::Relaxed);
+            if p.max_fires == 0 {
+                n
+            } else {
+                n.min(p.max_fires)
+            }
+        })
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The process-wide set parsed from `CLAQ_FAILPOINTS` (once). `None` when
+/// the variable is unset; a malformed value panics loudly at first use.
+pub fn global() -> Option<&'static Arc<Failpoints>> {
+    static GLOBAL: OnceLock<Option<Arc<Failpoints>>> = OnceLock::new();
+    GLOBAL
+        .get_or_init(|| {
+            let spec = std::env::var("CLAQ_FAILPOINTS").ok()?;
+            match Failpoints::parse(&spec) {
+                Ok(fp) => Some(Arc::new(fp)),
+                Err(e) => panic!("invalid CLAQ_FAILPOINTS ({spec:?}): {e:#}"),
+            }
+        })
+        .as_ref()
+}
+
+thread_local! {
+    /// Stack of scope-local overrides (tests). The top of the stack
+    /// shadows the global set on this thread only — pool worker threads
+    /// never see a submitter's scoped set, which is why thread-crossing
+    /// sites take an explicit [`Failpoints`] handle instead.
+    static SCOPED: RefCell<Vec<Arc<Failpoints>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// RAII guard installing a thread-scoped override; see [`scoped`].
+pub struct ScopedGuard;
+
+impl Drop for ScopedGuard {
+    fn drop(&mut self) {
+        SCOPED.with(|s| s.borrow_mut().pop());
+    }
+}
+
+/// Shadow the global set with `fp` on the current thread until the guard
+/// drops. Intended for tests of same-thread sites (checkpoint decode);
+/// sites owned by a long-lived object ([`crate::model::exec::KvPagePool`],
+/// [`crate::util::threadpool::ThreadPool`]) take a handle directly.
+pub fn scoped(fp: Arc<Failpoints>) -> ScopedGuard {
+    SCOPED.with(|s| s.borrow_mut().push(fp));
+    ScopedGuard
+}
+
+/// Evaluate `name` against the thread-scoped override if one is
+/// installed, else the global env-armed set. This is the call wired into
+/// the runtime sites; with nothing armed it reduces to a thread-local
+/// read plus a `OnceLock` read.
+pub fn fire(name: &str) -> bool {
+    let scoped = SCOPED.with(|s| s.borrow().last().cloned());
+    match scoped {
+        Some(fp) => fp.fire(name),
+        None => global().is_some_and(|fp| fp.fire(name)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_never_fires() {
+        let fp = Failpoints::new(1);
+        for _ in 0..100 {
+            assert!(!fp.fire(POOL_TAKE));
+        }
+    }
+
+    #[test]
+    fn probability_one_always_fires_and_zero_never() {
+        let always = Failpoints::new(3).with_point(POOL_TAKE, 1.0);
+        let never = Failpoints::new(3).with_point(POOL_TAKE, 0.0);
+        for _ in 0..64 {
+            assert!(always.fire(POOL_TAKE));
+            assert!(!never.fire(POOL_TAKE));
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_schedule() {
+        let a = Failpoints::new(7).with_point(POOL_TAKE, 0.3);
+        let b = Failpoints::new(7).with_point(POOL_TAKE, 0.3);
+        let sa: Vec<bool> = (0..200).map(|_| a.fire(POOL_TAKE)).collect();
+        let sb: Vec<bool> = (0..200).map(|_| b.fire(POOL_TAKE)).collect();
+        assert_eq!(sa, sb);
+        assert!(sa.iter().any(|&x| x), "p=0.3 over 200 draws must fire");
+        assert!(sa.iter().any(|&x| !x), "p=0.3 over 200 draws must also pass");
+    }
+
+    #[test]
+    fn seeds_and_names_give_independent_streams() {
+        let fp = Failpoints::new(11).with_point("a", 0.5).with_point("b", 0.5);
+        let sa: Vec<bool> = (0..128).map(|_| fp.fire("a")).collect();
+        let sb: Vec<bool> = (0..128).map(|_| fp.fire("b")).collect();
+        assert_ne!(sa, sb, "distinct names must not share a decision stream");
+        let other = Failpoints::new(12).with_point("a", 0.5);
+        let so: Vec<bool> = (0..128).map(|_| other.fire("a")).collect();
+        assert_ne!(sa, so, "distinct seeds must not share a decision stream");
+    }
+
+    #[test]
+    fn fire_limit_caps_total_fires() {
+        let fp = Failpoints::new(5).with_limited_point("x", 1.0, 2);
+        let fired = (0..50).filter(|_| fp.fire("x")).count();
+        assert_eq!(fired, 2);
+    }
+
+    #[test]
+    fn parse_round_trips_the_documented_syntax() {
+        let fp = Failpoints::parse("pool_take@p0.1; seed=7").unwrap();
+        assert_eq!(fp.seed, 7);
+        assert_eq!(fp.points.len(), 1);
+        assert_eq!(fp.points[0].name, POOL_TAKE);
+        // order-independent: seed first works too
+        let fp2 = Failpoints::parse("seed=7;pool_take@p0.1").unwrap();
+        let s1: Vec<bool> = (0..64).map(|_| fp.fire(POOL_TAKE)).collect();
+        let s2: Vec<bool> = (0..64).map(|_| fp2.fire(POOL_TAKE)).collect();
+        assert_eq!(s1, s2);
+
+        assert!(Failpoints::parse("pool_take@p1.5").is_err());
+        assert!(Failpoints::parse("pool_take=0.1").is_err());
+        assert!(Failpoints::parse("seed=abc").is_err());
+        assert!(Failpoints::parse("").unwrap().points.is_empty());
+    }
+
+    #[test]
+    fn scoped_override_shadows_and_pops() {
+        assert!(!fire("scoped_test_point"));
+        {
+            let _g = scoped(Arc::new(Failpoints::new(1).with_point("scoped_test_point", 1.0)));
+            assert!(fire("scoped_test_point"));
+        }
+        assert!(!fire("scoped_test_point"));
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod benchlib;
 pub mod cli;
+pub mod failpoint;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

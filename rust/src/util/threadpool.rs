@@ -21,6 +21,7 @@
 //! sized by `CLAQ_THREADS` or the host); the coordinator keeps building
 //! private pools for its own fan-out.
 
+use crate::util::failpoint::{self, Failpoints};
 use std::any::Any;
 use std::cell::Cell;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -66,6 +67,12 @@ struct Inner {
     work: Condvar,
     /// The submitter parks here until `outstanding` hits zero.
     done: Condvar,
+    /// Armed failpoints: [`failpoint::POOL_DISPATCH`] makes a dispatched
+    /// job panic inside the per-job `catch_unwind`, exercising the panic
+    /// isolation contract (the inline fallback paths bypass it). Wired
+    /// from `CLAQ_FAILPOINTS` at construction; tests inject via
+    /// [`ThreadPool::with_failpoints`].
+    failpoints: Option<Arc<Failpoints>>,
 }
 
 impl Inner {
@@ -90,7 +97,12 @@ impl Inner {
         // this job retires below.
         let f = unsafe { &*job };
         let was_in_job = IN_POOL_JOB.with(|flag| flag.replace(true));
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(idx)));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if self.failpoints.as_ref().is_some_and(|fp| fp.fire(failpoint::POOL_DISPATCH)) {
+                panic!("failpoint {} fired in pool job {idx}", failpoint::POOL_DISPATCH);
+            }
+            f(idx)
+        }));
         IN_POOL_JOB.with(|flag| flag.set(was_in_job));
         let mut s = self.shared.lock().unwrap();
         if let Err(payload) = result {
@@ -142,11 +154,22 @@ impl ThreadPool {
     /// Create a pool delivering `workers`-way parallelism (at least 1).
     /// `new(1)` spawns no threads and runs jobs inline.
     pub fn new(workers: usize) -> Self {
+        Self::build(workers, failpoint::global().cloned())
+    }
+
+    /// [`new`](Self::new) with an explicit armed failpoint set (replacing
+    /// any env-derived one) — the panic-isolation test's injection path.
+    pub fn with_failpoints(workers: usize, fp: Arc<Failpoints>) -> Self {
+        Self::build(workers, Some(fp))
+    }
+
+    fn build(workers: usize, failpoints: Option<Arc<Failpoints>>) -> Self {
         let workers = workers.max(1);
         let inner = Arc::new(Inner {
             shared: Mutex::new(Shared::default()),
             work: Condvar::new(),
             done: Condvar::new(),
+            failpoints,
         });
         let handles = (1..workers)
             .map(|i| {
@@ -501,6 +524,58 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn dispatch_failpoint_panic_does_not_poison_the_pool() {
+        // A panicking task must not poison the pool: arm the dispatch
+        // failpoint for exactly one fire, check the payload surfaces on the
+        // submitter, then check the surviving pool behaves bit-identically
+        // to a fresh pool across every dispatch flavour.
+        let fp = Arc::new(Failpoints::new(9).with_limited_point(failpoint::POOL_DISPATCH, 1.0, 1));
+        let pool = ThreadPool::with_failpoints(4, Arc::clone(&fp));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_units(64, |_| {});
+        }));
+        let payload = result.expect_err("armed dispatch failpoint must surface its panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| payload.downcast_ref::<&str>().copied())
+            .expect("panic payload is a string");
+        assert!(msg.contains(failpoint::POOL_DISPATCH), "payload surfaced verbatim: {msg}");
+        assert_eq!(fp.fired(failpoint::POOL_DISPATCH), 1);
+
+        let fresh = ThreadPool::new(4);
+
+        let out = pool.run(33, |i| (i as u64).wrapping_mul(0x9E37_79B9));
+        assert_eq!(out, fresh.run(33, |i| (i as u64).wrapping_mul(0x9E37_79B9)));
+
+        let survivor_sum = AtomicU64::new(0);
+        pool.run_units(65, |i| {
+            survivor_sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        let fresh_sum = AtomicU64::new(0);
+        fresh.run_units(65, |i| {
+            fresh_sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(survivor_sum.load(Ordering::Relaxed), fresh_sum.load(Ordering::Relaxed));
+
+        // Row sharding: every row written exactly once, identical to fresh.
+        let row_len = 4;
+        let rows = 19;
+        let kernel = |r0: usize, chunk: &mut [f32]| {
+            for (lr, row) in chunk.chunks_exact_mut(row_len).enumerate() {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = (r0 + lr) as f32 * 10.0 + c as f32;
+                }
+            }
+        };
+        let mut survivor = vec![0.0f32; rows * row_len];
+        let mut baseline = vec![0.0f32; rows * row_len];
+        pool.run_row_chunks(&mut survivor, row_len, 8, kernel);
+        fresh.run_row_chunks(&mut baseline, row_len, 8, kernel);
+        assert_eq!(survivor, baseline);
     }
 
     #[test]

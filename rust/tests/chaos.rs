@@ -1,0 +1,395 @@
+//! Deterministic chaos suite for the overload-hardened serving runtime
+//! (DESIGN.md §14).
+//!
+//! Each case drives a randomized schedule of submissions, cancellations,
+//! and per-request step deadlines through a scheduler whose page pool is
+//! squeezed two ways at once: a hard byte budget small enough to force
+//! the degradation ladder (prefix eviction → forced cold-page
+//! quantization → preemption → rejection), and a seeded `pool_take`
+//! failpoint that makes takes fail even when memory is available. The
+//! invariants checked are exactly the robustness contract:
+//!
+//! 1. **Total accounting** — every submitted request resolves with
+//!    exactly one completion, and the per-reason counters sum to the
+//!    submission count.
+//! 2. **Page hygiene** — after the system drains (plus a prefix-cache
+//!    drain), `pool_free_pages == pool_pages_created` and the
+//!    distinct-page census is zero: no leak, no double-free, under any
+//!    injected failure schedule.
+//! 3. **Survivor bit-identity** — with KV quantization off, every
+//!    request that finishes `Length`/`Stop` (including preempted-and-
+//!    resumed ones) matches its single-request fault-free reference
+//!    token-for-token, and every `Cancelled`/`DeadlineExceeded` partial
+//!    output is a prefix of that reference.
+//!
+//! The suite is also wired to the env failpoint path: CI runs it with
+//! `CLAQ_FAILPOINTS=pool_take@p0.05;seed=7` so env-armed pools are
+//! exercised too; the in-test schedulers install their own (or empty)
+//! failpoint sets, which replace the env-derived one deterministically.
+
+use claq::model::checkpoint::Checkpoint;
+use claq::model::exec::{argmax, decode_step, prefill, ExecModel, ExecState, KvCache};
+use claq::model::quantized::QuantizedModel;
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::Method;
+use claq::runtime::scheduler::{
+    AdmissionPolicy, Completion, FinishReason, Request, Scheduler, SchedulerConfig,
+};
+use claq::util::failpoint::{self, Failpoints};
+use claq::util::proptest::{check, Config};
+use claq::util::rng::Rng;
+use claq::util::threadpool::ThreadPool;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn test_config() -> TransformerConfig {
+    TransformerConfig {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 32,
+        rope_theta: 10000.0,
+        eps: 1e-5,
+    }
+}
+
+fn build_dense() -> ExecModel {
+    ExecModel::dense(&Model::random(test_config(), &mut Rng::new(91)))
+}
+
+fn build_packed() -> ExecModel {
+    let model = Model::random(test_config(), &mut Rng::new(92));
+    let em = QuantizedModel::quantize_uncalibrated(&model, &Method::fusion_2_12()).to_exec();
+    assert_eq!(em.backend, "packed");
+    em
+}
+
+/// The fault-free single-request reference (same as `tests/scheduler.rs`).
+fn reference_generate(model: &ExecModel, st: &mut ExecState, req: &Request) -> Vec<u16> {
+    let mut cache = KvCache::new(&model.config);
+    let logits = prefill(model, &mut cache, &req.prompt, st);
+    let mut toks = vec![argmax(logits.row(req.prompt.len() - 1))];
+    while toks.len() < req.max_new_tokens && req.stop_token != Some(*toks.last().unwrap()) {
+        let last = *toks.last().unwrap();
+        let logits = decode_step(model, &mut [&mut cache], &[last], st);
+        toks.push(argmax(logits.row(0)));
+    }
+    toks
+}
+
+/// One planned request of a chaos schedule.
+struct Planned {
+    req: Request,
+    arrive_step: u64,
+    /// Step deadline passed to `submit_with_deadline` (0 = none).
+    deadline: u64,
+    /// Engine step at which `cancel` is called (if still unresolved).
+    cancel_step: Option<u64>,
+}
+
+fn random_plan(rng: &mut Rng, vocab: usize, n: usize) -> Vec<Planned> {
+    let mut plan: Vec<Planned> = (0..n)
+        .map(|_| {
+            let plen = 1 + rng.below_usize(6);
+            let prompt: Vec<u16> = (0..plen).map(|_| rng.below(vocab as u64) as u16).collect();
+            let max_new = 1 + rng.below_usize(6);
+            let stop_token =
+                if rng.next_f64() < 0.33 { Some(rng.below(vocab as u64) as u16) } else { None };
+            let arrive_step = rng.below(8);
+            Planned {
+                req: Request { prompt, max_new_tokens: max_new, stop_token },
+                arrive_step,
+                deadline: if rng.next_f64() < 0.25 { 2 + rng.below(10) } else { 0 },
+                cancel_step: (rng.next_f64() < 0.2).then(|| arrive_step + 1 + rng.below(8)),
+            }
+        })
+        .collect();
+    plan.sort_by_key(|p| p.arrive_step);
+    plan
+}
+
+/// Drive one chaos case end to end and check the three invariants.
+fn run_chaos_case(model: &ExecModel, st: &mut ExecState, rng: &mut Rng, quant: bool) {
+    let cfg = model.config;
+    let n = 3 + rng.below_usize(5);
+    let plan = random_plan(rng, cfg.vocab, n);
+
+    let page_tokens = 1 + rng.below_usize(8);
+    let page_bytes = 2 * cfg.n_layers * page_tokens * cfg.d_model * std::mem::size_of::<f32>();
+    // 60% of cases: a budget of 2..=7 pages — tight enough at these
+    // request sizes to force every ladder rung, including rejections.
+    let budget_pages = if rng.next_f64() < 0.6 { 2 + rng.below_usize(6) } else { 0 };
+    let sched_cfg = SchedulerConfig {
+        max_slots: 1 + rng.below_usize(3),
+        prefill_token_budget: 4 + rng.below_usize(12),
+        policy: if rng.next_f64() < 0.5 { AdmissionPolicy::Continuous } else { AdmissionPolicy::Wave },
+        prefix_cache_bytes: if rng.next_f64() < 0.5 { 0 } else { 1 << 20 },
+        kv_page_tokens: page_tokens,
+        kv_quant_bits: if quant { 8 } else { 0 },
+        kv_quant_margin: rng.below_usize(8),
+        kv_budget_bytes: budget_pages * page_bytes,
+        max_queue: if rng.next_f64() < 0.3 { 1 + rng.below_usize(4) } else { 0 },
+        ..SchedulerConfig::default()
+    };
+    let mut s = Scheduler::new(cfg, sched_cfg);
+    // Seeded injected faults on top of (replacing) any env-armed set:
+    // the schedule is a pure function of this seed, so failures replay.
+    let p = 0.05 + rng.next_f64() * 0.15;
+    s.set_failpoints(Arc::new(Failpoints::new(rng.below(1 << 30)).with_point(failpoint::POOL_TAKE, p)));
+
+    let mut ids: Vec<Option<u64>> = (0..n).map(|_| None).collect();
+    let mut completions: HashMap<u64, Completion> = HashMap::new();
+    let mut next = 0usize;
+    let mut step = 0u64;
+    while next < n || s.has_work() {
+        while next < n && plan[next].arrive_step <= step {
+            ids[next] = Some(s.submit_with_deadline(plan[next].req.clone(), plan[next].deadline).unwrap());
+            next += 1;
+        }
+        for (i, planned) in plan.iter().enumerate() {
+            if planned.cancel_step == Some(step) {
+                if let Some(id) = ids[i] {
+                    if let Some(c) = s.cancel(id) {
+                        completions.insert(c.id, c);
+                    }
+                }
+            }
+        }
+        if s.has_work() {
+            for c in s.step(model, st) {
+                completions.insert(c.id, c);
+            }
+        }
+        step += 1;
+        assert!(step < 10_000, "chaos schedule failed to drain");
+    }
+
+    // 1. Total accounting: one completion per submission, counters close.
+    assert_eq!(completions.len(), n, "every request must resolve exactly once");
+    let stats = s.stats();
+    assert_eq!(
+        stats.completed + stats.cancelled + stats.deadline_exceeded + stats.rejected,
+        n as u64,
+        "per-reason counters must cover every submission: {stats:?}"
+    );
+    // Not equality: a preempted request can be cancelled or expire
+    // while re-queued, resolving without ever resuming.
+    assert!(stats.resumed <= stats.preempted, "resumed without a preemption: {stats:?}");
+
+    // 3. Survivor bit-identity (lossless configs only: quantized KV is
+    // tolerance-gated, never bit-compared).
+    if !quant {
+        for (i, planned) in plan.iter().enumerate() {
+            let c = &completions[&ids[i].expect("all submitted")];
+            match c.reason {
+                FinishReason::Length | FinishReason::Stop => {
+                    let want = reference_generate(model, st, &planned.req);
+                    assert_eq!(
+                        c.tokens, want,
+                        "request {i} diverged from its fault-free reference"
+                    );
+                }
+                FinishReason::Cancelled | FinishReason::DeadlineExceeded => {
+                    let want = reference_generate(model, st, &planned.req);
+                    assert!(
+                        want.starts_with(&c.tokens),
+                        "request {i}: partial output {:?} is not a prefix of {:?}",
+                        c.tokens,
+                        want
+                    );
+                }
+                FinishReason::Rejected => {
+                    assert!(c.tokens.is_empty());
+                    assert_eq!(c.admitted_step, 0);
+                }
+            }
+        }
+    }
+
+    // 2. Page hygiene after full drain.
+    s.drain_prefix_cache();
+    let stats = s.stats();
+    assert_eq!(
+        stats.pool_free_pages as u64, stats.pool_pages_created,
+        "page leak or double-free under injected faults: {stats:?}"
+    );
+    assert_eq!(stats.kv_pages_resident, 0);
+}
+
+/// `build` is a fn pointer so the property closure stays `RefUnwindSafe`
+/// (same idiom as `tests/scheduler.rs`).
+fn check_chaos(build: fn() -> ExecModel, seed: u64, cases: usize) {
+    check("scheduler chaos", Config { cases, seed }, move |rng| {
+        let model = build();
+        let mut st = ExecState::new(model.config);
+        let quant = rng.next_f64() < 0.3;
+        run_chaos_case(&model, &mut st, rng, quant);
+    });
+}
+
+#[test]
+fn prop_chaos_dense() {
+    check_chaos(build_dense, 501, 16);
+}
+
+#[test]
+fn prop_chaos_packed() {
+    check_chaos(build_packed, 502, 8);
+}
+
+/// A scheduler with no budget and an explicitly *empty* failpoint set
+/// behaves exactly like the pre-overload engine — fault-free serving
+/// reports no overload activity at all (the "all existing bit-identity
+/// suites pass unchanged" half of the acceptance contract, checked from
+/// inside this suite even when CI arms `CLAQ_FAILPOINTS` for it).
+#[test]
+fn unarmed_serving_reports_no_overload_activity() {
+    let model = build_dense();
+    let mut st = ExecState::new(model.config);
+    let mut s = Scheduler::new(model.config, SchedulerConfig::default());
+    s.set_failpoints(Arc::new(Failpoints::new(0)));
+    for i in 0..4u16 {
+        s.submit(Request { prompt: vec![i + 1, i + 2], max_new_tokens: 4, stop_token: None })
+            .unwrap();
+    }
+    let done = s.run_to_completion(&model, &mut st);
+    assert_eq!(done.len(), 4);
+    assert!(done.iter().all(|c| c.reason.is_success()));
+    let stats = s.stats();
+    assert_eq!(
+        (stats.rejected, stats.cancelled, stats.deadline_exceeded, stats.preempted, stats.resumed),
+        (0, 0, 0, 0, 0)
+    );
+    assert_eq!(stats.pool_failed_takes, 0);
+}
+
+/// The ladder's first rung is observable: under a tight budget with a
+/// warm prefix cache, admission evicts pinned prefixes before touching
+/// live requests.
+#[test]
+fn pressure_evicts_pinned_prefixes_first() {
+    let model = build_dense();
+    let mut st = ExecState::new(model.config);
+    let page_bytes = 2 * model.config.n_layers * 4 * model.config.d_model * 4;
+    let mut s = Scheduler::new(
+        model.config,
+        SchedulerConfig {
+            max_slots: 1,
+            kv_page_tokens: 4,
+            kv_budget_bytes: 4 * page_bytes,
+            prefix_cache_bytes: 1 << 20,
+            ..SchedulerConfig::default()
+        },
+    );
+    s.set_failpoints(Arc::new(Failpoints::new(0)));
+    // Fill the budget with pinned prefixes, then serve a request that
+    // needs the pages back.
+    for i in 0..3u16 {
+        s.submit(Request {
+            prompt: vec![i + 1, i + 2, i + 3, i + 4, i + 5],
+            max_new_tokens: 2,
+            stop_token: None,
+        })
+        .unwrap();
+        s.run_to_completion(&model, &mut st);
+    }
+    assert!(s.stats().prefix_entries >= 2, "prefixes must be pinned: {:?}", s.stats());
+    s.submit(Request { prompt: vec![9; 10], max_new_tokens: 6, stop_token: None }).unwrap();
+    let done = s.run_to_completion(&model, &mut st);
+    assert!(done.iter().all(|c| c.reason.is_success()));
+    let stats = s.stats();
+    assert!(stats.prefix_evictions > 0, "rung 1 never fired: {stats:?}");
+    assert_eq!(stats.preempted, 0, "eviction must satisfy pressure before preemption");
+    s.drain_prefix_cache();
+    let stats = s.stats();
+    assert_eq!(stats.pool_free_pages as u64, stats.pool_pages_created);
+}
+
+/// Rung 2: with quantization enabled, pressure force-quantizes cold
+/// pages (margin 0) before preempting. Two requests that each fit the
+/// budget alone — so neither is shed up front — but not together: the
+/// shortfall must come out of cold pages, not a preemption.
+#[test]
+fn pressure_forces_cold_page_quantization_when_enabled() {
+    let model = build_dense();
+    let mut st = ExecState::new(model.config);
+    let page_bytes = 2 * model.config.n_layers * 2 * model.config.d_model * 4;
+    let mut s = Scheduler::new(
+        model.config,
+        SchedulerConfig {
+            max_slots: 2,
+            kv_page_tokens: 2,
+            // each request spans 4 two-token pages (2 prompt + 6
+            // generated) — within the 4-page budget alone, 8 pages
+            // together: the second half of each stream runs past what
+            // f32 residency allows
+            kv_budget_bytes: 4 * page_bytes,
+            kv_quant_bits: 8,
+            // huge margin: the periodic post-step sweep never fires, so
+            // any quantized page is the pressure path's doing
+            kv_quant_margin: 1 << 20,
+            ..SchedulerConfig::default()
+        },
+    );
+    s.set_failpoints(Arc::new(Failpoints::new(0)));
+    s.submit(Request { prompt: vec![5, 6], max_new_tokens: 6, stop_token: None }).unwrap();
+    s.submit(Request { prompt: vec![7, 8], max_new_tokens: 6, stop_token: None }).unwrap();
+    let done = s.run_to_completion(&model, &mut st);
+    assert_eq!(done.len(), 2);
+    assert!(done.iter().all(|c| c.reason == FinishReason::Length && c.tokens.len() == 6));
+    let stats = s.stats();
+    assert!(stats.kv_pages_quantized_total > 0, "rung 2 never fired: {stats:?}");
+    assert_eq!(stats.preempted, 0, "quantization must satisfy pressure before preemption");
+    assert_eq!(stats.pool_free_pages as u64, stats.pool_pages_created);
+}
+
+/// An injected `ckpt_decode` fault surfaces as a structured decode error
+/// (the cold-start error path), and disarms with its scope.
+#[test]
+fn checkpoint_decode_failpoint_is_scoped_and_structured() {
+    let model = Model::random(test_config(), &mut Rng::new(93));
+    let qm = QuantizedModel::quantize_uncalibrated(&model, &Method::fusion_2_12());
+    let bytes = Checkpoint::from_quantized(&qm).unwrap().encode().unwrap();
+    assert!(Checkpoint::decode(&bytes).is_ok(), "sane checkpoint decodes");
+    {
+        let _guard = failpoint::scoped(Arc::new(
+            Failpoints::new(7).with_point(failpoint::CKPT_DECODE, 1.0),
+        ));
+        let err = Checkpoint::decode(&bytes).unwrap_err();
+        assert!(
+            format!("{err:#}").contains(failpoint::CKPT_DECODE),
+            "error must name the failpoint: {err:#}"
+        );
+    }
+    assert!(Checkpoint::decode(&bytes).is_ok(), "failpoint disarms with its scope");
+}
+
+/// A panic on the global pool (the one the sharded kernels dispatch on)
+/// must not poison it: the same packed forward pass is bit-identical
+/// before and after — the serving half of the thread-pool panic
+/// isolation contract (`util/threadpool.rs` has the pool-level half).
+#[test]
+fn global_pool_panic_leaves_packed_forwards_bit_identical() {
+    let model = build_packed();
+    let mut st = ExecState::new(model.config);
+    let prompt = [1u16, 2, 3, 4, 5, 6];
+    let mut cache = KvCache::new(&model.config);
+    let before = prefill(&model, &mut cache, &prompt, &mut st);
+
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        ThreadPool::global().run_units(32, |i| {
+            if i == 5 {
+                panic!("injected job panic");
+            }
+        });
+    }));
+    // With CLAQ_THREADS=1 the pool runs inline and the panic still
+    // propagates; either way it must not poison later dispatches.
+    assert!(result.is_err(), "the panic payload must surface");
+
+    let mut cache = KvCache::new(&model.config);
+    let after = prefill(&model, &mut cache, &prompt, &mut st);
+    assert_eq!(before.data, after.data, "pool panic changed kernel results");
+}

@@ -1,0 +1,154 @@
+//! Preemption / resume bit-identity (DESIGN.md §14).
+//!
+//! A preempted request re-queues with `prompt ++ generated` as its new
+//! prompt, so resuming is a plain prefill over exactly the tokens its
+//! cache held. Because the kernels are deterministic and batch-invariant
+//! (`tests/scheduler.rs`), the prefill of position `p` writes the same KV
+//! rows the original decode step wrote, and the logits at the last
+//! position equal the decode logits the uninterrupted run saw — so the
+//! resumed stream must be **bit-identical** to never having been
+//! preempted. This suite preempts a request after *every* step of its
+//! life (including a double preemption right after resume, which
+//! exercises the prompt-rebuild path), across dense + packed backends ×
+//! both admission policies × prefix cache off/on — with a pinned prefix
+//! in play, the preempted cache shares pages with the trie and the
+//! resume admission re-shares them, covering the CoW corners.
+
+use claq::model::exec::{ExecModel, ExecState};
+use claq::model::quantized::QuantizedModel;
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::Method;
+use claq::runtime::scheduler::{
+    AdmissionPolicy, Completion, Request, Scheduler, SchedulerConfig, SchedulerStats,
+};
+use claq::util::rng::Rng;
+
+fn test_config() -> TransformerConfig {
+    TransformerConfig {
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 32,
+        rope_theta: 10000.0,
+        eps: 1e-5,
+    }
+}
+
+fn build_dense() -> ExecModel {
+    ExecModel::dense(&Model::random(test_config(), &mut Rng::new(81)))
+}
+
+fn build_packed() -> ExecModel {
+    let model = Model::random(test_config(), &mut Rng::new(82));
+    let em = QuantizedModel::quantize_uncalibrated(&model, &Method::fusion_2_12()).to_exec();
+    assert_eq!(em.backend, "packed");
+    em
+}
+
+/// Serve request `a` to completion (seeding the prefix cache when it is
+/// enabled), then serve `b`, preempting it after every engine step listed
+/// in `preempt_after` (skipped when it already finished). Returns `b`'s
+/// completion and the final stats.
+fn serve_pair(
+    model: &ExecModel,
+    st: &mut ExecState,
+    cfg: &SchedulerConfig,
+    a: &Request,
+    b: &Request,
+    preempt_after: &[u64],
+) -> (Completion, SchedulerStats) {
+    let mut s = Scheduler::new(model.config, cfg.clone());
+    s.submit(a.clone()).unwrap();
+    // `steps` mirrors the scheduler's own step counter across both
+    // phases, so `preempt_after` is in the same clock as
+    // `Completion::finished_step`.
+    let mut steps = 0u64;
+    while s.has_work() {
+        s.step(model, st);
+        steps += 1;
+    }
+    let idb = s.submit(b.clone()).unwrap();
+    let mut out = None;
+    while s.has_work() {
+        for c in s.step(model, st) {
+            if c.id == idb {
+                out = Some(c);
+            }
+        }
+        steps += 1;
+        if out.is_none() && preempt_after.contains(&steps) {
+            assert!(s.preempt(idb), "request must be live after step {steps}");
+        }
+        assert!(steps < 1000, "preempted request failed to drain");
+    }
+    (out.expect("request b completed"), s.stats())
+}
+
+fn check_preemption_matrix(model: &ExecModel) {
+    let mut st = ExecState::new(model.config);
+    // b extends a's full prompt, so with the prefix cache enabled the
+    // resume prefill lands on shared (pinned) pages.
+    let a = Request { prompt: vec![3, 1, 4, 1], max_new_tokens: 5, stop_token: None };
+    let b = Request { prompt: vec![3, 1, 4, 1, 5, 9], max_new_tokens: 8, stop_token: None };
+    for policy in [AdmissionPolicy::Continuous, AdmissionPolicy::Wave] {
+        for prefix_cache_bytes in [0usize, 1 << 20] {
+            let cfg = SchedulerConfig {
+                max_slots: 2,
+                policy,
+                prefix_cache_bytes,
+                // 3-token pages: the request spans several pages, so
+                // preemption and resume cross page boundaries and fork
+                // partial tails
+                kv_page_tokens: 3,
+                ..SchedulerConfig::default()
+            };
+            let (base, base_stats) = serve_pair(model, &mut st, &cfg, &a, &b, &[]);
+            assert_eq!(base_stats.preempted, 0);
+            assert_eq!(base.tokens.len(), b.max_new_tokens);
+
+            // b is live (preemptable) after every step from its
+            // admission up to the one before it finishes
+            for j in base.admitted_step..base.finished_step {
+                for schedule in [vec![j], vec![j, j + 1]] {
+                    let (got, stats) = serve_pair(model, &mut st, &cfg, &a, &b, &schedule);
+                    assert_eq!(
+                        got.tokens, base.tokens,
+                        "preemption at {schedule:?} changed tokens \
+                         (policy {policy:?}, prefix {prefix_cache_bytes})"
+                    );
+                    assert_eq!(got.reason, base.reason);
+                    assert_eq!(got.prompt_len, b.prompt.len());
+                    assert_eq!(
+                        got.admitted_step, base.admitted_step,
+                        "first-token step must survive preemption"
+                    );
+                    let expected = schedule
+                        .iter()
+                        .filter(|&&p| p >= got.admitted_step && p < got.finished_step)
+                        .count() as u64;
+                    assert_eq!(stats.preempted, expected);
+                    assert_eq!(stats.resumed, expected);
+                    assert_eq!(
+                        stats.pool_free_pages as u64 + stats.kv_pages_resident as u64,
+                        stats.pool_pages_created,
+                        "live accounting must close (pinned prefixes are resident)"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn preempt_resume_is_bit_identical_dense() {
+    let model = build_dense();
+    check_preemption_matrix(&model);
+}
+
+#[test]
+fn preempt_resume_is_bit_identical_packed() {
+    let model = build_packed();
+    check_preemption_matrix(&model);
+}
