@@ -5,7 +5,10 @@
 //! backend runs twice, once per gather kernel: the tiled kernel under the
 //! historical "packed ..." cell names and the pinned scalar kernel under
 //! "packed[scalar] ..." so one `BENCH_decode.json` shows both side by
-//! side. Packed cells carry `tok_s` and `bytes_decoded_per_s` extras
+//! side. A third quantization of the same model under `Method::ClaqVq`
+//! runs as "packed[vq] ..." — the fused grouped-gather kernel over
+//! CLAQVQ01 vector planes, whose `bytes_decoded_per_s` numerator is d×
+//! smaller per step (one index plane per column group). Packed cells carry `tok_s` and `bytes_decoded_per_s` extras
 //! (decoded-LUT bandwidth through the gather kernel) — plus the
 //! cold-start cells: the model is packed into a single-file CLAQMD01
 //! checkpoint, reloaded, smoke-tested with a 3-step decode, and timed
@@ -80,14 +83,20 @@ fn main() {
     let packed = qm.to_exec_kernel(KernelKind::Tiled);
     let packed_scalar = qm.to_exec_kernel(KernelKind::Scalar);
     let dense = ExecModel::dense(&qm.to_dense());
+    // Same model through the vector-quantized plane kind: 2-bit indices
+    // over 4-wide column groups = 0.5 index bits/param.
+    let qvq = QuantizedModel::quantize_uncalibrated(&model, &Method::ClaqVq { d: 4, bits: 2 });
+    let packed_vq = qvq.to_exec_kernel(KernelKind::Tiled);
     println!(
-        "projection weights: packed {:.2} MB vs dense {:.2} MB",
+        "projection weights: packed {:.2} MB vs vq {:.2} MB vs dense {:.2} MB",
         packed.projection_bytes() as f64 / 1e6,
+        packed_vq.projection_bytes() as f64 / 1e6,
         dense.projection_bytes() as f64 / 1e6
     );
 
     bench_backend(&mut b, &packed, "packed");
     bench_backend(&mut b, &packed_scalar, "packed[scalar]");
+    bench_backend(&mut b, &packed_vq, "packed[vq]");
     bench_backend(&mut b, &dense, "dense");
 
     // --- cold start: checkpoint -> packed engine ---------------------------

@@ -54,5 +54,24 @@ fn main() {
     b.run_with_elems("dequantize 128x128", Some(elems), || {
         black_box(qm.dequantize());
     });
+
+    // vector-quantized planes at the same shape: R^4 k-means encode (the
+    // group quantizer), CLAQVQ01 serialize/parse, and the grouped
+    // dequantize — 2-bit indices over 4-wide groups = 0.5 index b/param.
+    let vq_plan = MatrixPlan::vector_group(128, 4, 2, true);
+    b.run_with_elems("vq_quantize 128x128 d4 2b", Some(elems), || {
+        black_box(quantize_matrix(black_box(&w), None, &vq_plan));
+    });
+    let vqm = quantize_matrix(&w, None, &vq_plan);
+    b.run_with_elems("vq_pack 128x128 d4 2b", Some(elems), || {
+        black_box(pack(black_box(&vqm)).unwrap());
+    });
+    let (vpm, _) = pack(&vqm).unwrap();
+    b.run_with_elems("vq_unpack 128x128 d4 2b", Some(elems), || {
+        black_box(unpack(black_box(&vpm)).unwrap());
+    });
+    b.run_with_elems("vq_dequantize 128x128 d4 2b", Some(elems), || {
+        black_box(vqm.dequantize());
+    });
     b.finish();
 }

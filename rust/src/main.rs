@@ -25,7 +25,7 @@ const VALUE_FLAGS: &[&str] = &[
     "out", "model", "method", "bits", "s", "segments", "windows", "items", "tokens", "seed",
     "setting", "calib", "target", "workers", "artifacts", "checkpoint", "requests", "slots",
     "baseline", "fresh", "tol", "kv-page-tokens", "kv-quant-bits", "kv-budget-mb", "max-queue",
-    "deadline-steps",
+    "deadline-steps", "group-dim", "hi", "lo",
 ];
 
 fn usage() -> &'static str {
@@ -35,6 +35,8 @@ USAGE:
   claq datagen  [--out artifacts] [--tokens N]
   claq quantize --model artifacts/weights_l.bin --method claq --bits 2.12
   claq pack     --out model.claq [--model l|xl|PATH] [--method claq --bits 2.12] [--random] [--fast]
+                [--method claq-ap --bits 2.2 --hi 4 --lo 2]
+                [--method claq-vq --bits 2 --group-dim 4]   (sub-2-bit: bits/group-dim b/param)
   claq serve    --checkpoint model.claq [--requests 16] [--slots 4] [--seed 17]
                 [--kv-page-tokens 64] [--kv-quant-bits 0] [--kv-budget-mb 0]
                 [--max-queue 0] [--deadline-steps 0]
@@ -46,7 +48,12 @@ USAGE:
   claq help
 
 METHODS (for --method): fp16, rtn, gptq, awq, claq, claq-ap, claq-or,
-  claq-or-fixed, claq-fusion, claq-search
+  claq-or-fixed, claq-fusion, claq-search, claq-vq
+
+  claq-ap takes --hi/--lo (default 4/floor(bits)) for the dual-level pair.
+  claq-vq quantizes groups of --group-dim adjacent columns with one 2^bits
+  vector codebook per group: index cost is bits/group-dim bits per param,
+  e.g. --bits 2 --group-dim 4 is 0.5-bit indices.
 "
 }
 

@@ -8,7 +8,9 @@
 //! the stale quantized projection weights* — making the "deployment
 //! artifact" larger than the FP checkpoint it replaces. `CLAQMD01` stores
 //! only what cold-start serving needs: the FP parts (token embedding,
-//! norms, LM head), one `CLAQPK01` container per projection, the AWQ
+//! norms, LM head), one packed container per projection — scalar
+//! `CLAQPK01` or vector-quantized `CLAQVQ01`, dispatched per matrix on
+//! the container magic, so one file can mix plane kinds — the AWQ
 //! scales, and the method name. `ExecModel::from_checkpoint`
 //! (`model/exec.rs`) builds `PackedLinear` ops straight from the loaded
 //! containers without ever materializing a dense projection matrix.
@@ -23,7 +25,7 @@
 //! per entry (write order: layer-major, MatrixKind::ALL order):
 //!   layer u32 | kind u8
 //!   awq_len u32 | awq scales f32 × awq_len      (0 = no AWQ)
-//!   container_len u32 | CLAQPK01 bytes
+//!   container_len u32 | container bytes (CLAQPK01 or CLAQVQ01)
 //! ```
 //! Strict reads: unknown magic, bad kind tags, shape mismatches against the
 //! config, duplicate or missing matrices, and trailing bytes are all
@@ -46,6 +48,7 @@ use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"CLAQMD01";
 const CONTAINER_MAGIC: &[u8; 8] = b"CLAQPK01";
+const VQ_CONTAINER_MAGIC: &[u8; 8] = b"CLAQVQ01";
 const AWQ_MAGIC: &[u8; 8] = b"CLAQAW01";
 
 /// File names of the deprecated directory layout.
@@ -75,7 +78,7 @@ pub struct CheckpointEntry {
     pub id: MatrixId,
     /// AWQ per-input-column activation scales (None for non-AWQ methods).
     pub awq_scales: Option<Vec<f32>>,
-    /// The `CLAQPK01` matrix container.
+    /// The packed matrix container (`CLAQPK01` or `CLAQVQ01`).
     pub container: PackedMatrix,
 }
 
@@ -95,10 +98,17 @@ fn u32_len(n: usize, what: &str) -> Result<u32> {
 }
 
 /// Cheap container-header validation (magic + dims) without a full unpack
-/// — a mismatched plane fails at load, not at first forward.
+/// — a mismatched plane fails at load, not at first forward. Accepts both
+/// plane kinds: scalar `CLAQPK01` and vector-quantized `CLAQVQ01` share
+/// the rows/cols fields at offsets 8..16, so one checkpoint can mix
+/// per-matrix plane kinds and dispatch happens on the container magic.
 fn validate_container_header(bytes: &[u8], id: MatrixId, want: (usize, usize)) -> Result<()> {
     ensure!(bytes.len() >= 20, "{}: container truncated ({} bytes)", id.name(), bytes.len());
-    ensure!(&bytes[..8] == CONTAINER_MAGIC, "{}: bad container magic", id.name());
+    ensure!(
+        &bytes[..8] == CONTAINER_MAGIC || &bytes[..8] == VQ_CONTAINER_MAGIC,
+        "{}: bad container magic",
+        id.name()
+    );
     let rows = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
     let cols = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
     ensure!(

@@ -4,13 +4,19 @@
 //! implementation's business:
 //!
 //! * [`DenseLinear`] / [`Matrix`] — the dense f32 reference path.
-//! * [`PackedLinear`] — the deployable CLAQ representation: per-column
-//!   bit-packed index planes + codebooks (`quant/packed.rs` layout), with
-//!   reserved outliers applied as a sparse per-column override and AWQ
-//!   activation scales folded in. No dense weight matrix is ever
-//!   materialized; the kernel decodes columns into a reusable scratch
-//!   buffer and accumulates rank-1 (scalar kernel) or rank-4 (tiled
-//!   kernel) updates.
+//! * [`PackedLinear`] — the deployable CLAQ representation, in either
+//!   plane kind (`quant/vq.rs::PlaneKind`): per-column bit-packed index
+//!   planes + scalar codebooks (`CLAQPK01`), or vector-quantized
+//!   column-group planes (`CLAQVQ01`) where one index plane selects an
+//!   R^d centroid shared by `d` adjacent columns. Reserved outliers are
+//!   applied as a sparse per-column override and AWQ activation scales
+//!   folded in either way. No dense weight matrix is ever materialized;
+//!   the kernel decodes columns into a reusable scratch buffer and
+//!   accumulates rank-1 (scalar kernel) or rank-4 (tiled kernel) updates.
+//!   The VQ path uses a *fused grouped gather*: one bulk index unpack per
+//!   group scatters all `d` column lanes at once, so a group's plane is
+//!   read once per row block regardless of `d`, and the decoded lanes are
+//!   reused across every row of the batch exactly like scalar columns.
 //!
 //! `PackedLinear` ships two kernels (DESIGN.md §12):
 //!
@@ -41,9 +47,10 @@
 //! bookkeeping lives in the caller's [`LinearScratch`], so steady-state
 //! decode performs zero heap allocations.
 
-use crate::quant::gptq::QuantizedMatrix;
+use crate::quant::gptq::{QuantPlanes, QuantizedMatrix};
 use crate::quant::packed::{
-    decode_plane_range_into, decode_plane_tile_into, pack_indices, PackedMatrix,
+    decode_plane_range_into, decode_plane_tile_into, pack_indices, unpack_indices_range_into,
+    PackedMatrix,
 };
 use crate::tensor::Matrix;
 use crate::util::threadpool::ThreadPool;
@@ -437,6 +444,26 @@ struct PackedColumn {
     plane: Vec<u8>,
 }
 
+/// One vector-quantized column group: a single bit-packed index plane
+/// whose entries select R^`width` centroids covering `width` adjacent
+/// input features (`width == group_dim` except for the ragged tail).
+struct PackedVqGroup {
+    /// Columns this group covers (`min(group_dim, cols - g·group_dim)`).
+    width: usize,
+    /// `2^bits · width` f32 coordinates, centroid-major.
+    centroids: Vec<f32>,
+    /// `rows` indices, `bits` wide, LSB-first — one plane for all lanes.
+    plane: Vec<u8>,
+}
+
+/// The execution-side mirror of [`QuantPlanes`]: which plane kind this
+/// backend decodes. Both variants share the outlier CSR, AWQ scales, and
+/// row-sharded dispatch; only the gather differs.
+enum PackedPlanes {
+    Columns(Vec<PackedColumn>),
+    Vq { group_dim: usize, bits: u8, groups: Vec<PackedVqGroup> },
+}
+
 /// The packed CLAQ execution backend: computes `y = x · dequant(W)ᵀ`
 /// straight from the index planes, applying reserved outliers as a sparse
 /// override and folding AWQ per-column activation scales back out
@@ -444,7 +471,7 @@ struct PackedColumn {
 pub struct PackedLinear {
     rows: usize,
     cols: usize,
-    columns: Vec<PackedColumn>,
+    planes: PackedPlanes,
     /// Reserved outliers in CSR-by-column form: for column c the entries
     /// `out_start[c]..out_start[c+1]` of (out_rows, out_vals).
     out_start: Vec<usize>,
@@ -463,22 +490,50 @@ impl PackedLinear {
     /// [`Self::with_kernel`].
     pub fn from_quantized(qm: &QuantizedMatrix, awq_scales: Option<&[f32]>) -> Self {
         let (rows, cols) = (qm.rows, qm.cols);
-        assert_eq!(qm.columns.len(), cols);
         if let Some(s) = awq_scales {
             assert_eq!(s.len(), cols, "AWQ scales/columns mismatch");
         }
-        let columns = qm
-            .columns
-            .iter()
-            .map(|qc| {
-                assert_eq!(qc.indices.len(), rows);
-                PackedColumn {
-                    bits: qc.bits,
-                    centroids: qc.codebook.centroids.clone(),
-                    plane: pack_indices(&qc.indices, qc.bits),
-                }
-            })
-            .collect();
+        let planes = match &qm.planes {
+            QuantPlanes::Columns(qcols) => {
+                assert_eq!(qcols.len(), cols);
+                PackedPlanes::Columns(
+                    qcols
+                        .iter()
+                        .map(|qc| {
+                            assert_eq!(qc.indices.len(), rows);
+                            PackedColumn {
+                                bits: qc.bits,
+                                centroids: qc.codebook.centroids.clone(),
+                                plane: pack_indices(&qc.indices, qc.bits),
+                            }
+                        })
+                        .collect(),
+                )
+            }
+            QuantPlanes::Groups(vp) => {
+                let d = vp.group_dim;
+                assert!(d >= 1, "VQ group dim must be >= 1");
+                assert_eq!(vp.groups.len(), cols.div_ceil(d));
+                let bits = vp.groups.first().map_or(1, |g| g.bits);
+                let groups = vp
+                    .groups
+                    .iter()
+                    .enumerate()
+                    .map(|(g, vg)| {
+                        let width = (cols - g * d).min(d);
+                        assert_eq!(vg.bits, bits, "VQ groups must share one bit width");
+                        assert_eq!(vg.indices.len(), rows);
+                        assert_eq!(vg.codebook.dim, width, "group codebook dim/width mismatch");
+                        PackedVqGroup {
+                            width,
+                            centroids: vg.codebook.centroids.clone(),
+                            plane: pack_indices(&vg.indices, vg.bits),
+                        }
+                    })
+                    .collect();
+                PackedPlanes::Vq { group_dim: d, bits, groups }
+            }
+        };
 
         // Outliers arrive sorted by (col, row); bucket them per column.
         let mut out_start = vec![0usize; cols + 1];
@@ -500,7 +555,7 @@ impl PackedLinear {
         Self {
             rows,
             cols,
-            columns,
+            planes,
             out_start,
             out_rows,
             out_vals,
@@ -525,6 +580,17 @@ impl PackedLinear {
 
     pub fn kernel(&self) -> KernelKind {
         self.kernel
+    }
+
+    /// Which plane kind this backend decodes (scalar per-column planes or
+    /// vector-quantized column groups).
+    pub fn plane_kind(&self) -> crate::quant::vq::PlaneKind {
+        match &self.planes {
+            PackedPlanes::Columns(_) => crate::quant::vq::PlaneKind::Scalar,
+            PackedPlanes::Vq { group_dim, .. } => {
+                crate::quant::vq::PlaneKind::VectorGroup { d: *group_dim }
+            }
+        }
     }
 
     pub fn n_outliers(&self) -> usize {
@@ -556,8 +622,14 @@ impl PackedLinear {
     /// Decode rows `[r0, r1)` of column `c` (dequant + outlier override +
     /// AWQ un-scaling) into `out[..r1-r0]` — the per-column gather of the
     /// scalar kernel, bit-by-bit plane walk.
-    fn decode_column_range_into(&self, c: usize, r0: usize, r1: usize, out: &mut [f32]) {
-        let pc = &self.columns[c];
+    fn decode_column_range_into(
+        &self,
+        pc: &PackedColumn,
+        c: usize,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    ) {
         decode_plane_range_into(&pc.plane, pc.bits, &pc.centroids, r0, &mut out[..r1 - r0]);
         self.apply_column_overrides(c, r0, r1, out);
     }
@@ -566,21 +638,71 @@ impl PackedLinear {
     /// per-column gather. Indices are exact integers either way, so the
     /// decoded values are bit-identical to
     /// [`Self::decode_column_range_into`]; only the decode cost differs.
-    fn decode_column_tile_into(&self, c: usize, r0: usize, r1: usize, out: &mut [f32]) {
-        let pc = &self.columns[c];
+    fn decode_column_tile_into(
+        &self,
+        pc: &PackedColumn,
+        c: usize,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    ) {
         decode_plane_tile_into(&pc.plane, pc.bits, &pc.centroids, r0, &mut out[..r1 - r0]);
         self.apply_column_overrides(c, r0, r1, out);
+    }
+
+    /// The fused grouped gather: decode rows `[r0, r1)` of *every* lane of
+    /// VQ group `g` from its single index plane into `lanes` (lane `jj`
+    /// occupies `lanes[jj·bl..(jj+1)·bl]`, `bl = r1-r0`), then apply the
+    /// per-column outlier/AWQ overrides lane by lane. Indices are bulk
+    /// unpacked in 64-row chunks ([`unpack_indices_range_into`], the tiled
+    /// kernel's machinery) and each index scatters one full centroid row,
+    /// so the plane is read once per row block no matter how many lanes
+    /// the group has. Both kernels share this gather — decoded lanes are
+    /// identical; only the accumulation order downstream differs.
+    fn decode_vq_group_into(
+        &self,
+        grp: &PackedVqGroup,
+        group_dim: usize,
+        bits: u8,
+        g: usize,
+        r0: usize,
+        r1: usize,
+        lanes: &mut [f32],
+    ) {
+        let bl = r1 - r0;
+        let width = grp.width;
+        debug_assert!(lanes.len() >= width * bl);
+        let mut idx = [0u8; 64];
+        let mut done = 0usize;
+        while done < bl {
+            let n = (bl - done).min(64);
+            unpack_indices_range_into(&grp.plane, bits, r0 + done, &mut idx[..n]);
+            for (i, &ix) in idx[..n].iter().enumerate() {
+                let cent = &grp.centroids[ix as usize * width..ix as usize * width + width];
+                for (jj, &cv) in cent.iter().enumerate() {
+                    lanes[jj * bl + done + i] = cv;
+                }
+            }
+            done += n;
+        }
+        for jj in 0..width {
+            self.apply_column_overrides(g * group_dim + jj, r0, r1, &mut lanes[jj * bl..][..bl]);
+        }
     }
 
     /// The scalar (pinned reference) kernel body: ascending-column rank-1
     /// updates, per-element accumulation in dense dot-product order.
     fn forward_scalar(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut LinearScratch) {
         let (rows, cols) = (self.rows, self.cols);
+        let columns = match &self.planes {
+            PackedPlanes::Columns(c) => c,
+            PackedPlanes::Vq { .. } => unreachable!("VQ planes take forward_vq"),
+        };
         run_row_sharded(rows, cols, seq, 1, out, scratch, |r0, r1, decode, stage| {
             let bl = r1 - r0;
             stage[..seq * bl].fill(0.0);
-            for c in 0..cols {
-                self.decode_column_range_into(c, r0, r1, decode);
+            for (c, pc) in columns.iter().enumerate() {
+                self.decode_column_range_into(pc, c, r0, r1, decode);
                 let col = &decode[..bl];
                 for t in 0..seq {
                     let xv = x[t * cols + c];
@@ -603,6 +725,10 @@ impl PackedLinear {
     /// per-element accumulation order is a function of `cols` alone.
     fn forward_tiled(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut LinearScratch) {
         let (rows, cols) = (self.rows, self.cols);
+        let columns = match &self.planes {
+            PackedPlanes::Columns(c) => c,
+            PackedPlanes::Vq { .. } => unreachable!("VQ planes take forward_vq"),
+        };
         run_row_sharded(rows, cols, seq, COL_TILE, out, scratch, |r0, r1, decode, stage| {
             let bl = r1 - r0;
             stage[..seq * bl].fill(0.0);
@@ -612,10 +738,10 @@ impl PackedLinear {
                 let (w1, rest) = rest.split_at_mut(bl);
                 let (w2, rest) = rest.split_at_mut(bl);
                 let w3 = &mut rest[..bl];
-                self.decode_column_tile_into(c, r0, r1, w0);
-                self.decode_column_tile_into(c + 1, r0, r1, w1);
-                self.decode_column_tile_into(c + 2, r0, r1, w2);
-                self.decode_column_tile_into(c + 3, r0, r1, w3);
+                self.decode_column_tile_into(&columns[c], c, r0, r1, w0);
+                self.decode_column_tile_into(&columns[c + 1], c + 1, r0, r1, w1);
+                self.decode_column_tile_into(&columns[c + 2], c + 2, r0, r1, w2);
+                self.decode_column_tile_into(&columns[c + 3], c + 3, r0, r1, w3);
                 for t in 0..seq {
                     let xi = &x[t * cols + c..t * cols + c + COL_TILE];
                     let o = &mut stage[t * bl..(t + 1) * bl];
@@ -624,12 +750,85 @@ impl PackedLinear {
                 c += COL_TILE;
             }
             while c < cols {
-                self.decode_column_tile_into(c, r0, r1, &mut decode[..bl]);
+                self.decode_column_tile_into(&columns[c], c, r0, r1, &mut decode[..bl]);
                 let col = &decode[..bl];
                 for t in 0..seq {
                     axpy1(&mut stage[t * bl..(t + 1) * bl], x[t * cols + c], col);
                 }
                 c += 1;
+            }
+        });
+    }
+
+    /// The VQ kernel body, both flavors. Each pass gathers one whole
+    /// column group through [`Self::decode_vq_group_into`], then
+    /// accumulates its lanes:
+    ///
+    /// * scalar kernel — rank-1 per-element updates, lanes in ascending
+    ///   column order: the exact dense dot-product order, same as the
+    ///   scalar-plane scalar kernel.
+    /// * tiled kernel — lanes in chunks of 4 via [`axpy4`] with an
+    ///   [`axpy1`] ragged tail. Tiles never straddle a group boundary, so
+    ///   the per-element combine tree is a function of `(cols, group_dim)`
+    ///   alone — fixed across thread count, shard partition, and batch
+    ///   composition, preserving the serial == sharded == batched
+    ///   bit-identity contract (DESIGN.md §12) for VQ planes too.
+    fn forward_vq(
+        &self,
+        x: &[f32],
+        seq: usize,
+        out: &mut [f32],
+        scratch: &mut LinearScratch,
+        tiled: bool,
+    ) {
+        let (rows, cols) = (self.rows, self.cols);
+        let (group_dim, bits, groups) = match &self.planes {
+            PackedPlanes::Vq { group_dim, bits, groups } => (*group_dim, *bits, groups),
+            PackedPlanes::Columns(_) => unreachable!("scalar planes take forward_scalar/tiled"),
+        };
+        run_row_sharded(rows, cols, seq, group_dim, out, scratch, |r0, r1, decode, stage| {
+            let bl = r1 - r0;
+            stage[..seq * bl].fill(0.0);
+            for (g, grp) in groups.iter().enumerate() {
+                let width = grp.width;
+                let c0 = g * group_dim;
+                self.decode_vq_group_into(grp, group_dim, bits, g, r0, r1, decode);
+                if tiled {
+                    let mut jj = 0usize;
+                    while jj + COL_TILE <= width {
+                        let w0 = &decode[jj * bl..][..bl];
+                        let w1 = &decode[(jj + 1) * bl..][..bl];
+                        let w2 = &decode[(jj + 2) * bl..][..bl];
+                        let w3 = &decode[(jj + 3) * bl..][..bl];
+                        for t in 0..seq {
+                            let xi = &x[t * cols + c0 + jj..t * cols + c0 + jj + COL_TILE];
+                            let o = &mut stage[t * bl..(t + 1) * bl];
+                            axpy4(o, xi[0], xi[1], xi[2], xi[3], w0, w1, w2, w3);
+                        }
+                        jj += COL_TILE;
+                    }
+                    while jj < width {
+                        let col = &decode[jj * bl..][..bl];
+                        for t in 0..seq {
+                            axpy1(&mut stage[t * bl..(t + 1) * bl], x[t * cols + c0 + jj], col);
+                        }
+                        jj += 1;
+                    }
+                } else {
+                    for jj in 0..width {
+                        let col = &decode[jj * bl..][..bl];
+                        for t in 0..seq {
+                            let xv = x[t * cols + c0 + jj];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let o = &mut stage[t * bl..(t + 1) * bl];
+                            for (ov, &wv) in o.iter_mut().zip(col) {
+                                *ov += xv * wv;
+                            }
+                        }
+                    }
+                }
             }
         });
     }
@@ -655,25 +854,41 @@ impl LinearOp for PackedLinear {
         let (rows, cols) = (self.rows, self.cols);
         assert!(x.len() >= seq * cols, "x too short for seq={seq}");
         assert!(out.len() >= seq * rows, "out too short for seq={seq}");
-        match self.kernel {
-            KernelKind::Scalar => self.forward_scalar(x, seq, &mut out[..seq * rows], scratch),
-            KernelKind::Tiled => self.forward_tiled(x, seq, &mut out[..seq * rows], scratch),
+        let out = &mut out[..seq * rows];
+        match (&self.planes, self.kernel) {
+            (PackedPlanes::Columns(_), KernelKind::Scalar) => {
+                self.forward_scalar(x, seq, out, scratch)
+            }
+            (PackedPlanes::Columns(_), KernelKind::Tiled) => {
+                self.forward_tiled(x, seq, out, scratch)
+            }
+            (PackedPlanes::Vq { .. }, kernel) => {
+                self.forward_vq(x, seq, out, scratch, kernel == KernelKind::Tiled)
+            }
         }
     }
 
     fn weight_bytes(&self) -> usize {
-        let planes: usize = self
-            .columns
-            .iter()
-            .map(|c| c.plane.len() + c.centroids.len() * std::mem::size_of::<f32>() + 1)
-            .sum();
+        let planes: usize = match &self.planes {
+            PackedPlanes::Columns(columns) => columns
+                .iter()
+                .map(|c| c.plane.len() + c.centroids.len() * std::mem::size_of::<f32>() + 1)
+                .sum(),
+            PackedPlanes::Vq { groups, .. } => groups
+                .iter()
+                .map(|g| g.plane.len() + g.centroids.len() * std::mem::size_of::<f32>() + 1)
+                .sum(),
+        };
         planes
             + self.out_rows.len() * (std::mem::size_of::<u32>() + std::mem::size_of::<f32>())
             + self.awq_scales.as_ref().map_or(0, |s| s.len() * std::mem::size_of::<f32>())
     }
 
     fn decoded_plane_bytes(&self) -> usize {
-        self.columns.iter().map(|c| c.plane.len()).sum()
+        match &self.planes {
+            PackedPlanes::Columns(columns) => columns.iter().map(|c| c.plane.len()).sum(),
+            PackedPlanes::Vq { groups, .. } => groups.iter().map(|g| g.plane.len()).sum(),
+        }
     }
 }
 
@@ -681,6 +896,7 @@ impl LinearOp for PackedLinear {
 mod tests {
     use super::*;
     use crate::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan};
+    use crate::quant::vq::PlaneKind;
     use crate::util::rng::Rng;
 
     fn sample(
@@ -694,6 +910,23 @@ mod tests {
         let mut w = Matrix::zeros(rows, cols);
         rng.fill_normal(&mut w.data, 0.1);
         let mut plan = MatrixPlan::uniform(cols, bits, CentroidRule::KMeans, false);
+        plan.reserve = vec![reserve; cols];
+        let qm = quantize_matrix(&w, None, &plan);
+        (w, qm)
+    }
+
+    fn sample_vq(
+        seed: u64,
+        rows: usize,
+        cols: usize,
+        d: usize,
+        bits: u8,
+        reserve: usize,
+    ) -> (Matrix, QuantizedMatrix) {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.1);
+        let mut plan = MatrixPlan::vector_group(cols, d, bits, true);
         plan.reserve = vec![reserve; cols];
         let qm = quantize_matrix(&w, None, &plan);
         (w, qm)
@@ -861,5 +1094,150 @@ mod tests {
         let mut got_d = vec![0.0f32; seq * 160];
         deq.forward_into(&x, seq, &mut got_d, &mut scratch);
         assert_eq!(got_d, want_d);
+    }
+
+    /// The fused grouped gather must reproduce `dequantize()` exactly:
+    /// forward through VQ planes agrees with the dense reference on the
+    /// dequantized matrix, under both kernels, with a ragged tail group
+    /// (cols % d != 0) and reserved outliers in play.
+    #[test]
+    fn vq_packed_matches_dense_dequant() {
+        let (_, qm) = sample_vq(21, 33, 14, 4, 3, 2);
+        assert_eq!(qm.plane_kind(), PlaneKind::VectorGroup { d: 4 });
+        let deq = qm.dequantize();
+        for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+            let packed = PackedLinear::from_quantized(&qm, None).with_kernel(kernel);
+            assert_eq!(packed.plane_kind(), PlaneKind::VectorGroup { d: 4 });
+            assert_eq!(packed.out_features(), 33);
+            assert_eq!(packed.in_features(), 14);
+            assert_eq!(packed.n_outliers(), 2 * 14);
+
+            let mut rng = Rng::new(22);
+            let seq = 5;
+            let mut x = vec![0.0f32; seq * 14];
+            rng.fill_normal(&mut x, 1.0);
+            let want = dense_ref(&deq, &x, seq);
+            let mut got = vec![0.0f32; seq * 33];
+            let mut scratch = LinearScratch::new();
+            packed.forward_into(&x, seq, &mut got, &mut scratch);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{kernel:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// Group width above `COL_TILE` exercises the in-group axpy4 chunks
+    /// plus the axpy1 lane tail (d=6 → 4+2 per group); the two kernels
+    /// agree to rounding error as for scalar planes.
+    #[test]
+    fn vq_tiled_agrees_with_scalar_reference() {
+        let (_, qm) = sample_vq(23, 37, 18, 6, 3, 1);
+        let scalar = PackedLinear::from_quantized(&qm, None).with_kernel(KernelKind::Scalar);
+        let tiled = PackedLinear::from_quantized(&qm, None).with_kernel(KernelKind::Tiled);
+        let mut rng = Rng::new(24);
+        let seq = 3;
+        let mut x = vec![0.0f32; seq * 18];
+        rng.fill_normal(&mut x, 1.0);
+        let mut a = vec![0.0f32; seq * 37];
+        let mut b = vec![0.0f32; seq * 37];
+        let mut scratch = LinearScratch::new();
+        scalar.forward_into(&x, seq, &mut a, &mut scratch);
+        tiled.forward_into(&x, seq, &mut b, &mut scratch);
+        for (p, q) in a.iter().zip(&b) {
+            assert!((p - q).abs() <= 1e-5 * (1.0 + q.abs()), "{p} vs {q}");
+        }
+    }
+
+    /// The DESIGN.md §12 contract extends to VQ planes: shapes over the
+    /// parallel threshold are bit-identical to row-at-a-time serial runs
+    /// under both kernels, because the accumulation schedule is fixed by
+    /// `(cols, group_dim)` and every output element has exactly one
+    /// producing shard.
+    #[test]
+    fn vq_sharded_forward_is_bit_identical_to_serial() {
+        let (_, qm) = sample_vq(25, 160, 96, 4, 2, 1);
+        for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+            let packed = PackedLinear::from_quantized(&qm, None).with_kernel(kernel);
+            let mut rng = Rng::new(26);
+            let seq = 8; // 8 × 160 × 96 MACs — well over PAR_MIN_MACS
+            let mut x = vec![0.0f32; seq * 96];
+            rng.fill_normal(&mut x, 1.0);
+
+            let mut want = vec![0.0f32; seq * 160];
+            let mut scratch = LinearScratch::new();
+            for t in 0..seq {
+                let row = &x[t * 96..(t + 1) * 96];
+                packed.forward_into(row, 1, &mut want[t * 160..(t + 1) * 160], &mut scratch);
+            }
+
+            let mut got = vec![0.0f32; seq * 160];
+            packed.forward_into(&x, seq, &mut got, &mut scratch);
+            assert_eq!(got, want, "{kernel:?} VQ sharded kernel diverged from serial");
+        }
+    }
+
+    /// Cold-load parity: pack → CLAQVQ01 bytes → from_container forwards
+    /// identically to the dense reference on the f16-rounded dequant.
+    #[test]
+    fn vq_container_round_trip_backend() {
+        let (_, qm) = sample_vq(27, 40, 10, 4, 2, 1);
+        let (pm, rep) = crate::quant::packed::pack(&qm).unwrap();
+        assert_eq!(rep.kind, PlaneKind::VectorGroup { d: 4 });
+        let packed = PackedLinear::from_container(&pm, None).unwrap();
+        let deq = crate::quant::packed::unpack(&pm).unwrap().dequantize();
+        let mut rng = Rng::new(28);
+        let mut x = vec![0.0f32; 3 * 10];
+        rng.fill_normal(&mut x, 1.0);
+        let want = dense_ref(&deq, &x, 3);
+        let mut got = vec![0.0f32; 3 * 40];
+        let mut scratch = LinearScratch::new();
+        packed.forward_into(&x, 3, &mut got, &mut scratch);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    /// AWQ per-column un-scaling composes with the grouped gather: scales
+    /// are applied per lane after the centroid scatter, exactly like the
+    /// scalar-plane path.
+    #[test]
+    fn vq_awq_scales_divided_out() {
+        let (_, qm) = sample_vq(29, 20, 8, 2, 4, 0);
+        let scales: Vec<f32> = (0..8).map(|i| 0.5 + 0.25 * i as f32).collect();
+        let mut deq = qm.dequantize();
+        for r in 0..deq.rows {
+            let row = deq.row_mut(r);
+            for (v, &s) in row.iter_mut().zip(&scales) {
+                *v /= s;
+            }
+        }
+        for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+            let packed = PackedLinear::from_quantized(&qm, Some(&scales)).with_kernel(kernel);
+            let mut rng = Rng::new(30);
+            let mut x = vec![0.0f32; 8];
+            rng.fill_normal(&mut x, 1.0);
+            let want = dense_ref(&deq, &x, 1);
+            let mut got = vec![0.0f32; 20];
+            let mut scratch = LinearScratch::new();
+            packed.forward_into(&x, 1, &mut got, &mut scratch);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{kernel:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// VQ byte accounting: one index plane per *group*, not per column —
+    /// `decoded_plane_bytes` shrinks by the group dim relative to scalar
+    /// planes at the same bit width.
+    #[test]
+    fn vq_decoded_plane_bytes_counts_group_planes() {
+        let (_, qm) = sample_vq(31, 128, 64, 4, 2, 0);
+        let packed = PackedLinear::from_quantized(&qm, None);
+        // 16 groups of ceil(128·2/8) = 32 bytes each
+        assert_eq!(packed.decoded_plane_bytes(), 16 * 32);
+        let (_, sqm) = sample(31, 128, 64, 2, 0);
+        let spacked = PackedLinear::from_quantized(&sqm, None);
+        assert_eq!(spacked.decoded_plane_bytes(), 4 * packed.decoded_plane_bytes());
+        assert!(packed.weight_bytes() < spacked.weight_bytes());
     }
 }

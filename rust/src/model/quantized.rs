@@ -40,6 +40,16 @@ pub struct ModelSizeReport {
     pub paper_equivalent_bits: f64,
     pub container_bits_per_param: f64,
     pub total_outliers: usize,
+    /// Matrices packed as scalar per-column planes (`CLAQPK01`).
+    pub scalar_matrices: usize,
+    /// Matrices packed as vector-quantized column groups (`CLAQVQ01`).
+    pub vq_matrices: usize,
+    /// Container bytes attributable to scalar planes.
+    pub scalar_container_bytes: usize,
+    /// Container bytes attributable to VQ planes. With
+    /// `scalar_container_bytes` this partitions `container_bytes`, so
+    /// mixed-kind models report where the budget actually goes.
+    pub vq_container_bytes: usize,
     /// Bytes of the FP block (config + tok_embed + norms + LM head) —
     /// identical for every method on a given config.
     pub fp_bytes: usize,
@@ -150,6 +160,16 @@ impl QuantizedModel {
             let (_, r) = pack(qm).expect("size_report: un-packable quantized matrix");
             rep.quantized_params += r.params;
             rep.container_bytes += r.container_bytes();
+            match r.kind {
+                crate::quant::vq::PlaneKind::Scalar => {
+                    rep.scalar_matrices += 1;
+                    rep.scalar_container_bytes += r.container_bytes();
+                }
+                crate::quant::vq::PlaneKind::VectorGroup { .. } => {
+                    rep.vq_matrices += 1;
+                    rep.vq_container_bytes += r.container_bytes();
+                }
+            }
             weighted_bits += r.paper_equivalent_bits * r.params as f64;
             rep.total_outliers += qm.outliers.len();
             let awq_len = self.awq_scales.get(id).map_or(0, Vec::len);
@@ -331,6 +351,40 @@ mod tests {
         crate::util::tmp::unique_path(&format!("qmodel_test_{tag}"))
     }
 
+    /// The size report partitions containers by plane kind, and a pure-VQ
+    /// model reports the sub-scalar paper bit budget (d=4 at 2 index bits
+    /// is 0.5 paper-equivalent bits/param with no reserve).
+    #[test]
+    fn size_report_splits_plane_kinds() {
+        let m = small();
+        let rep = quantize_all(&m, 2).size_report();
+        assert_eq!(rep.scalar_matrices, m.matrix_ids().len());
+        assert_eq!(rep.vq_matrices, 0);
+        assert_eq!(rep.scalar_container_bytes, rep.container_bytes);
+        assert_eq!(rep.vq_container_bytes, 0);
+
+        let vq = QuantizedModel::quantize_uncalibrated(
+            &m,
+            &crate::quant::config::Method::ClaqVq { d: 4, bits: 2 },
+        );
+        let rep = vq.size_report();
+        assert_eq!(rep.vq_matrices, m.matrix_ids().len());
+        assert_eq!(rep.scalar_matrices, 0);
+        assert_eq!(rep.vq_container_bytes, rep.container_bytes);
+        assert!((rep.paper_equivalent_bits - 0.5).abs() < 1e-9, "{}", rep.paper_equivalent_bits);
+
+        let mut mixed = quantize_all(&m, 2);
+        let id = m.matrix_ids()[0];
+        let w = m.matrix(id);
+        mixed
+            .matrices
+            .insert(id, quantize_matrix(w, None, &MatrixPlan::vector_group(w.cols, 4, 2, true)));
+        let rep = mixed.size_report();
+        assert_eq!(rep.vq_matrices, 1);
+        assert_eq!(rep.scalar_matrices, m.matrix_ids().len() - 1);
+        assert_eq!(rep.scalar_container_bytes + rep.vq_container_bytes, rep.container_bytes);
+    }
+
     #[test]
     fn save_dir_writes_files() {
         let m = small();
@@ -389,7 +443,7 @@ mod tests {
         for (id, orig) in &qm.matrices {
             let loaded = &back.matrices[id];
             assert_eq!(loaded.outliers, orig.outliers);
-            for (a, b) in loaded.columns.iter().zip(&orig.columns) {
+            for (a, b) in loaded.columns().iter().zip(orig.columns()) {
                 assert_eq!(a.bits, b.bits);
                 assert_eq!(a.indices, b.indices);
             }

@@ -49,6 +49,11 @@ pub enum Method {
         setting: OrSetting,
         s: f64,
     },
+    /// Vector-quantized column groups (VPTQ direction): one codebook of
+    /// `2^bits` centroids in R^d per group of `d` adjacent columns, with
+    /// group-wise OBS error compensation. Index cost is `bits/d` per
+    /// parameter — the sub-2-bit operating point.
+    ClaqVq { d: usize, bits: u8 },
 }
 
 impl Method {
@@ -122,6 +127,7 @@ impl Method {
             Method::ClaqFusion { ap_target_bits, or_budget_bits, .. } => {
                 format!("CLAQ*-{:.2}", ap_target_bits + or_budget_bits)
             }
+            Method::ClaqVq { d, bits } => format!("CLAQ-VQ-d{d}-{bits}b"),
         }
     }
 
@@ -140,6 +146,7 @@ impl Method {
             Method::ClaqFusion { ap_target_bits, or_budget_bits, .. } => {
                 ap_target_bits + or_budget_bits
             }
+            Method::ClaqVq { d, bits } => *bits as f64 / *d as f64,
         }
     }
 
@@ -174,6 +181,7 @@ impl Method {
                     propagate: true,
                     damp_pct: 0.01,
                     block_size: DEFAULT_BLOCK,
+                    plane: crate::quant::vq::PlaneKind::Scalar,
                 })
             }
             Method::ClaqOr { bits, budget_bits, setting, s } => {
@@ -191,6 +199,7 @@ impl Method {
                 let rp = allocate_or(&stats, w.rows, *or_budget_bits, *setting);
                 Some(plan_with_reserve(bitplan, rp))
             }
+            Method::ClaqVq { d, bits } => Some(MatrixPlan::vector_group(cols, *d, *bits, true)),
         }
     }
 }
@@ -203,6 +212,7 @@ fn plan_with_reserve(bits: BitPlan, reserve: ReservePlan) -> MatrixPlan {
         propagate: true,
         damp_pct: 0.01,
         block_size: DEFAULT_BLOCK,
+        plane: crate::quant::vq::PlaneKind::Scalar,
     }
 }
 
@@ -263,6 +273,19 @@ mod tests {
     fn names_stable() {
         assert_eq!(Method::Rtn { bits: 4 }.name(), "RTN-4");
         assert_eq!(Method::fusion_2_12().name(), "CLAQ*-2.12");
+        assert_eq!(Method::ClaqVq { d: 4, bits: 2 }.name(), "CLAQ-VQ-d4-2b");
+    }
+
+    #[test]
+    fn vq_method_plan_and_bits() {
+        let w = sample_w();
+        let m = Method::ClaqVq { d: 4, bits: 2 };
+        assert!((m.nominal_bits() - 0.5).abs() < 1e-12);
+        assert!(m.needs_hessian());
+        let plan = m.plan_for(&w, None).expect("plan");
+        assert_eq!(plan.plane, crate::quant::vq::PlaneKind::VectorGroup { d: 4 });
+        assert!(plan.propagate);
+        assert_eq!(plan.bits, vec![2u8; w.cols]);
     }
 
     #[test]

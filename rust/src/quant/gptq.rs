@@ -27,6 +27,7 @@
 use crate::quant::codebook::{uniform_codebook, Codebook};
 use crate::quant::kmeans::{kmeans_1d_into, KMeansOpts, KMeansScratch};
 use crate::quant::reservation::pick_reserved_rows_into;
+use crate::quant::vq::{kmeans_nd_into, KMeansNdScratch, PlaneKind, VqGroup, VqPlanes};
 use crate::tensor::linalg::stabilized_inverse_factor;
 use crate::tensor::Matrix;
 use crate::util::threadpool::ThreadPool;
@@ -64,8 +65,15 @@ pub struct MatrixPlan {
     /// B-column block and batched into one row-parallel rank-B update of
     /// the trailing columns at block end. 0 means unblocked (B = cols).
     /// Purely a performance knob — every value produces bit-identical
-    /// output.
+    /// output. (Vector-group plans round B up to a multiple of the group
+    /// dim so groups never straddle block boundaries — still bit-identical
+    /// for every requested value.)
     pub block_size: usize,
+    /// Plane representation: scalar per-column codebooks (the default) or
+    /// vector codebooks over groups of `d` adjacent columns. Vector-group
+    /// plans require uniform `bits` and always cluster with K-Means (the
+    /// `rule` field is ignored — there is no uniform-grid analogue in R^d).
+    pub plane: PlaneKind,
 }
 
 impl MatrixPlan {
@@ -77,6 +85,17 @@ impl MatrixPlan {
             propagate,
             damp_pct: 0.01,
             block_size: DEFAULT_BLOCK,
+            plane: PlaneKind::Scalar,
+        }
+    }
+
+    /// A uniform-bits vector-group plan: `2^bits` centroids in R^d per
+    /// group of `d` adjacent columns (index cost `bits/d` per parameter).
+    pub fn vector_group(cols: usize, d: usize, bits: u8, propagate: bool) -> Self {
+        assert!(d >= 1, "group dim must be >= 1");
+        Self {
+            plane: PlaneKind::VectorGroup { d },
+            ..Self::uniform(cols, bits, CentroidRule::KMeans, propagate)
         }
     }
 
@@ -110,27 +129,81 @@ pub struct QuantMetrics {
     pub proxy_loss: f64,
 }
 
+/// The plane payload of a [`QuantizedMatrix`]: one scalar codebook per
+/// column (the original CLAQ form) or one vector codebook per group of
+/// adjacent columns (the sub-2-bit VQ form). Every consumer of quantized
+/// planes — container codec, checkpoint, gather kernels — dispatches on
+/// this enum.
+#[derive(Clone, Debug)]
+pub enum QuantPlanes {
+    Columns(Vec<QuantizedColumn>),
+    Groups(VqPlanes),
+}
+
 /// The quantized representation of one matrix.
 #[derive(Clone, Debug)]
 pub struct QuantizedMatrix {
     pub rows: usize,
     pub cols: usize,
-    pub columns: Vec<QuantizedColumn>,
+    pub planes: QuantPlanes,
     /// Sorted by (col, row).
     pub outliers: Vec<Outlier>,
     pub metrics: QuantMetrics,
 }
 
 impl QuantizedMatrix {
+    /// The plane kind of this matrix.
+    pub fn plane_kind(&self) -> PlaneKind {
+        match &self.planes {
+            QuantPlanes::Columns(_) => PlaneKind::Scalar,
+            QuantPlanes::Groups(vp) => PlaneKind::VectorGroup { d: vp.group_dim },
+        }
+    }
+
+    /// The scalar per-column planes. Panics on a vector-quantized matrix —
+    /// scalar-only consumers must dispatch on [`Self::plane_kind`] first.
+    pub fn columns(&self) -> &[QuantizedColumn] {
+        match &self.planes {
+            QuantPlanes::Columns(c) => c,
+            QuantPlanes::Groups(_) => {
+                panic!("scalar-plane access on a vector-quantized matrix")
+            }
+        }
+    }
+
+    /// The vector-group planes. Panics on a scalar matrix.
+    pub fn vq_planes(&self) -> &VqPlanes {
+        match &self.planes {
+            QuantPlanes::Groups(vp) => vp,
+            QuantPlanes::Columns(_) => {
+                panic!("vector-plane access on a scalar-quantized matrix")
+            }
+        }
+    }
+
     /// Reconstruct the dense matrix (codebook decode + outlier overwrite).
     /// Row-major traversal: each output row is filled contiguously instead
     /// of striding a whole column of cache lines per codebook.
     pub fn dequantize(&self) -> Matrix {
         let mut m = Matrix::zeros(self.rows, self.cols);
-        for r in 0..self.rows {
-            let row = &mut m.data[r * self.cols..(r + 1) * self.cols];
-            for (out, qc) in row.iter_mut().zip(&self.columns) {
-                *out = qc.codebook.dequantize(qc.indices[r]);
+        match &self.planes {
+            QuantPlanes::Columns(columns) => {
+                for r in 0..self.rows {
+                    let row = &mut m.data[r * self.cols..(r + 1) * self.cols];
+                    for (out, qc) in row.iter_mut().zip(columns) {
+                        *out = qc.codebook.dequantize(qc.indices[r]);
+                    }
+                }
+            }
+            QuantPlanes::Groups(vp) => {
+                for r in 0..self.rows {
+                    let row = &mut m.data[r * self.cols..(r + 1) * self.cols];
+                    for (g, grp) in vp.groups.iter().enumerate() {
+                        let (j0, j1) = vp.group_span(g, self.cols);
+                        let c = grp.codebook.centroid(grp.indices[r] as usize);
+                        row[j0..j1].copy_from_slice(c);
+                    }
+                }
             }
         }
         for o in &self.outliers {
@@ -140,9 +213,17 @@ impl QuantizedMatrix {
     }
 
     /// Average index bits per parameter (excludes codebook + outlier cost;
-    /// see `packed.rs` for full accounting).
+    /// see `packed.rs` for full accounting). For vector groups each packed
+    /// index covers `d` columns, so the per-parameter cost is `bits/d`.
     pub fn index_bits_per_param(&self) -> f64 {
-        let total: f64 = self.columns.iter().map(|c| c.bits as f64 * self.rows as f64).sum();
+        let total: f64 = match &self.planes {
+            QuantPlanes::Columns(columns) => {
+                columns.iter().map(|c| c.bits as f64 * self.rows as f64).sum()
+            }
+            QuantPlanes::Groups(vp) => {
+                vp.groups.iter().map(|g| g.bits as f64 * self.rows as f64).sum()
+            }
+        };
         total / (self.rows * self.cols) as f64
     }
 
@@ -178,6 +259,16 @@ pub struct QuantScratch {
     eblock: Vec<f64>,
     /// K-Means working buffers (sorted values, d2, centroids, counts, sums).
     kmeans: KMeansScratch,
+    /// Current group's row-vectors, row-major rows × width (VQ mode).
+    gvec: Vec<f32>,
+    /// Reserved-coordinate mask of the current group, rows × width.
+    gmask: Vec<bool>,
+    /// Training vectors (rows with no reserved coordinate), VQ mode.
+    gtrain: Vec<f32>,
+    /// Per-coordinate quantization error of the current group.
+    gerr: Vec<f32>,
+    /// R^d K-Means working buffers (VQ mode).
+    kmeans_nd: KMeansNdScratch,
 }
 
 impl QuantScratch {
@@ -235,6 +326,30 @@ fn apply_trailing_update(
     pool.run_row_chunks(work, cols, shards, kernel);
 }
 
+/// Upper Cholesky factor of the (dampened) inverse Hessian when the plan
+/// propagates, shared by the scalar and vector-group paths. No calibration
+/// data means an identity Hessian: propagation becomes a no-op but the
+/// code path stays uniform.
+fn inverse_factor_for(plan: &MatrixPlan, h: Option<&[f64]>, cols: usize) -> Option<Vec<f64>> {
+    if !plan.propagate {
+        return None;
+    }
+    let mut hd = match h {
+        Some(h) => {
+            assert_eq!(h.len(), cols * cols);
+            h.to_vec()
+        }
+        None => {
+            let mut id = vec![0.0f64; cols * cols];
+            for i in 0..cols {
+                id[i * cols + i] = 1.0;
+            }
+            id
+        }
+    };
+    Some(stabilized_inverse_factor(&mut hd, cols, plan.damp_pct))
+}
+
 /// Quantize `w` under `plan`, optionally compensating error through the
 /// calibration Hessian `h` (cols × cols, row-major f64). Returns the packed
 /// representation; `w` itself is not modified. Trailing OBS updates shard
@@ -257,27 +372,12 @@ pub fn quantize_matrix_pooled(
     let (rows, cols) = (w.rows, w.cols);
     assert_eq!(plan.bits.len(), cols, "plan/matrix column mismatch");
 
+    if let PlaneKind::VectorGroup { d } = plan.plane {
+        return quantize_matrix_vq(w, h, plan, d, pool, scratch);
+    }
+
     // Inverse-Hessian Cholesky factor for propagation.
-    let u = if plan.propagate {
-        let mut hd = match h {
-            Some(h) => {
-                assert_eq!(h.len(), cols * cols);
-                h.to_vec()
-            }
-            // No calibration data: identity Hessian makes propagation a
-            // no-op but keeps the code path uniform.
-            None => {
-                let mut id = vec![0.0f64; cols * cols];
-                for i in 0..cols {
-                    id[i * cols + i] = 1.0;
-                }
-                id
-            }
-        };
-        Some(stabilized_inverse_factor(&mut hd, cols, plan.damp_pct))
-    } else {
-        None
-    };
+    let u = inverse_factor_for(plan, h, cols);
 
     let block = if plan.block_size == 0 { cols.max(1) } else { plan.block_size };
     let mut work = w.clone(); // updated in place by propagation
@@ -430,7 +530,212 @@ pub fn quantize_matrix_pooled(
     QuantizedMatrix {
         rows,
         cols,
-        columns,
+        planes: QuantPlanes::Columns(columns),
+        outliers,
+        metrics: QuantMetrics {
+            rel_frobenius_err: if w_sq > 0.0 { (err_sq / w_sq).sqrt() } else { 0.0 },
+            proxy_loss,
+        },
+    }
+}
+
+/// The vector-group mode of [`quantize_matrix_pooled`]: `d` adjacent
+/// columns are quantized jointly per step — their row-vectors are
+/// clustered in R^d ([`kmeans_nd_into`]) and one packed index per row
+/// selects all `d` coordinates. OBS error compensation applies group-wise:
+/// the group is final the moment it is quantized (no intra-group
+/// propagation), and each of its columns contributes a scaled residual
+/// that lands entirely on the trailing columns — eagerly inside the block,
+/// deferred as part of the rank-B update at block end. Every target
+/// element still receives its updates one at a time in ascending
+/// source-column order, so serial, parallel, and every block size are
+/// bit-identical, exactly as in the scalar path.
+fn quantize_matrix_vq(
+    w: &Matrix,
+    h: Option<&[f64]>,
+    plan: &MatrixPlan,
+    d: usize,
+    pool: &ThreadPool,
+    scratch: &mut QuantScratch,
+) -> QuantizedMatrix {
+    let (rows, cols) = (w.rows, w.cols);
+    assert!(d >= 1, "group dim must be >= 1");
+    assert!(
+        plan.bits.windows(2).all(|p| p[0] == p[1]),
+        "vector-group plans require uniform bits"
+    );
+    let bits = plan.bits.first().copied().unwrap_or(0);
+    assert!((1..=8).contains(&bits), "vector-group bits must be in 1..=8");
+    let k = 1usize << bits;
+
+    let u = inverse_factor_for(plan, h, cols);
+
+    // Round the block width up to a multiple of d so no group straddles a
+    // block boundary (a group is quantized in one step, so its deferred
+    // residuals must land in one eblock). Still bit-identical for every
+    // requested block size: the per-element update order stays ascending
+    // in source column regardless of where block boundaries fall.
+    let block = if plan.block_size == 0 { cols.max(1) } else { plan.block_size };
+    let block = block.div_ceil(d) * d;
+
+    let mut work = w.clone();
+    let mut groups: Vec<VqGroup> = Vec::with_capacity(cols.div_ceil(d));
+    let mut outliers: Vec<Outlier> = Vec::new();
+    let mut proxy_loss = 0.0f64;
+    let mut err_sq = 0.0f64;
+    let mut w_sq = 0.0f64;
+    let kopts = KMeansOpts::default();
+
+    scratch.col.resize(rows, 0.0);
+
+    let mut b0 = 0usize;
+    while b0 < cols {
+        let b1 = (b0 + block).min(cols);
+        let bw = b1 - b0;
+        let defer = u.is_some() && b1 < cols;
+        if defer {
+            scratch.eblock.clear();
+            scratch.eblock.resize(rows * bw, 0.0);
+        }
+
+        let mut j0 = b0;
+        while j0 < b1 {
+            let j1 = (j0 + d).min(cols);
+            let width = j1 - j0;
+
+            // Gather the group's row-vectors from the updated working copy.
+            scratch.gvec.clear();
+            scratch.gvec.resize(rows * width, 0.0);
+            for r in 0..rows {
+                scratch.gvec[r * width..(r + 1) * width]
+                    .copy_from_slice(&work.data[r * cols + j0..r * cols + j1]);
+            }
+
+            // Outlier reservation per column; ascending jj keeps the
+            // outlier list in (col, row) order with no final sort.
+            scratch.gmask.clear();
+            scratch.gmask.resize(rows * width, false);
+            for jj in 0..width {
+                let j = j0 + jj;
+                let n_reserve = plan.reserve_at(j);
+                if n_reserve == 0 {
+                    continue;
+                }
+                for r in 0..rows {
+                    scratch.col[r] = scratch.gvec[r * width + jj];
+                }
+                pick_reserved_rows_into(
+                    &scratch.col,
+                    n_reserve,
+                    &mut scratch.sort_idx,
+                    &mut scratch.reserved_rows,
+                );
+                for &r in &scratch.reserved_rows {
+                    scratch.gmask[r * width + jj] = true;
+                    outliers.push(Outlier { row: r as u32, col: j as u32, value: scratch.col[r] });
+                }
+            }
+
+            // Codebook over the rows with no reserved coordinate; when
+            // every row reserves something, train on all rows (the masked
+            // assignment below still keeps reserved coordinates exact).
+            scratch.gtrain.clear();
+            for r in 0..rows {
+                if scratch.gmask[r * width..(r + 1) * width].iter().all(|&m| !m) {
+                    scratch.gtrain.extend_from_slice(&scratch.gvec[r * width..(r + 1) * width]);
+                }
+            }
+            let train: &[f32] =
+                if scratch.gtrain.is_empty() { &scratch.gvec } else { &scratch.gtrain };
+            let codebook = kmeans_nd_into(train, width, k, &kopts, &mut scratch.kmeans_nd).codebook;
+
+            // Quantize each row-vector (reserved coordinates excluded from
+            // the nearest-centroid distance) + per-coordinate error.
+            scratch.gerr.clear();
+            scratch.gerr.resize(rows * width, 0.0);
+            let mut indices = vec![0u8; rows];
+            for r in 0..rows {
+                let v = &scratch.gvec[r * width..(r + 1) * width];
+                let m = &scratch.gmask[r * width..(r + 1) * width];
+                let q = if m.iter().any(|&x| x) {
+                    codebook.quantize_masked(v, m)
+                } else {
+                    codebook.quantize(v)
+                };
+                indices[r] = q;
+                let c = codebook.centroid(q as usize);
+                for jj in 0..width {
+                    // reserved entries are exact
+                    scratch.gerr[r * width + jj] = if m[jj] { 0.0 } else { v[jj] - c[jj] };
+                }
+            }
+
+            // Metrics contribution of the now-final group, against the
+            // ORIGINAL weights, folded column-outer like the scalar path.
+            for jj in 0..width {
+                let j = j0 + jj;
+                for r in 0..rows {
+                    let orig = w.data[r * cols + j];
+                    let deq = if scratch.gmask[r * width + jj] {
+                        scratch.gvec[r * width + jj]
+                    } else {
+                        codebook.centroid(indices[r] as usize)[jj]
+                    };
+                    let dv = (orig - deq) as f64;
+                    err_sq += dv * dv;
+                    w_sq += orig as f64 * orig as f64;
+                }
+            }
+
+            // Group-wise OBS: the rank-d residual of this group lands
+            // entirely on the columns after it.
+            if let Some(u) = &u {
+                for jj in 0..width {
+                    let j = j0 + jj;
+                    let jb = j - b0;
+                    let urow = &u[j * cols..(j + 1) * cols];
+                    let ujj = urow[j];
+                    debug_assert!(ujj > 0.0);
+                    let inv = 1.0 / ujj;
+                    let mut e2 = 0.0f64;
+                    for r in 0..rows {
+                        let e = scratch.gerr[r * width + jj] as f64 * inv;
+                        e2 += e * e;
+                        if defer {
+                            scratch.eblock[r * bw + jb] = e;
+                        }
+                        if e != 0.0 && j1 < b1 {
+                            let row = &mut work.data[r * cols..(r + 1) * cols];
+                            for (x, &uv) in row[j1..b1].iter_mut().zip(&urow[j1..b1]) {
+                                *x -= (e * uv) as f32;
+                            }
+                        }
+                    }
+                    proxy_loss += e2;
+                }
+            }
+
+            groups.push(VqGroup { codebook, indices, bits });
+            j0 = j1;
+        }
+
+        // Lazy batched propagation into the trailing columns.
+        if defer {
+            let u = u.as_ref().expect("defer implies propagation");
+            apply_trailing_update(&mut work.data, cols, b0, b1, &scratch.eblock, u, pool);
+        }
+        b0 = b1;
+    }
+
+    debug_assert!(
+        outliers.windows(2).all(|p| (p[0].col, p[0].row) < (p[1].col, p[1].row)),
+        "outliers must be emitted in (col, row) order"
+    );
+
+    QuantizedMatrix {
+        rows,
+        cols,
+        planes: QuantPlanes::Groups(VqPlanes { group_dim: d, groups }),
         outliers,
         metrics: QuantMetrics {
             rel_frobenius_err: if w_sq > 0.0 { (err_sq / w_sq).sqrt() } else { 0.0 },
@@ -480,7 +785,7 @@ mod tests {
         assert_eq!((d.rows, d.cols), (32, 16));
         // every dequantized value must be a centroid of its column codebook
         for c in 0..16 {
-            let cb = &q.columns[c].codebook;
+            let cb = &q.columns()[c].codebook;
             for r in 0..32 {
                 assert!(cb.centroids.contains(&d.at(r, c)));
             }
@@ -611,11 +916,12 @@ mod tests {
             propagate: false,
             damp_pct: 0.01,
             block_size: DEFAULT_BLOCK,
+            plane: PlaneKind::Scalar,
         };
         let q = quantize_matrix(&w, None, &plan);
-        assert_eq!(q.columns[0].codebook.len(), 16);
-        assert_eq!(q.columns[1].codebook.len(), 4);
-        assert_eq!(q.columns[3].codebook.len(), 8);
+        assert_eq!(q.columns()[0].codebook.len(), 16);
+        assert_eq!(q.columns()[1].codebook.len(), 4);
+        assert_eq!(q.columns()[3].codebook.len(), 8);
         assert!((q.index_bits_per_param() - 11.0 / 4.0).abs() < 1e-12);
     }
 
@@ -721,6 +1027,103 @@ mod tests {
                         serial.metrics.proxy_loss.to_bits(),
                         par.metrics.proxy_loss.to_bits()
                     );
+                }
+            }
+        }
+    }
+
+    /// The VQ analogue of `block_size_bit_identical_smoke`: group-wise OBS
+    /// with every block size (rounded up to a multiple of d internally)
+    /// must match the unblocked path bit for bit — on a ragged shape where
+    /// the final group is narrower than d.
+    #[test]
+    fn vq_block_size_bit_identical_smoke() {
+        let cols = 22; // d=4 → 5 full groups + a width-2 tail group
+        let w = random_w(40, cols, 61);
+        let h = random_h(cols, 62);
+        let mut plan = MatrixPlan::vector_group(cols, 4, 3, true);
+        plan.reserve = vec![2; cols];
+        plan.block_size = 0; // unblocked reference
+        let reference = quantize_matrix(&w, Some(&h), &plan);
+        for bs in [1usize, 3, 8, cols] {
+            plan.block_size = bs;
+            let q = quantize_matrix(&w, Some(&h), &plan);
+            assert_eq!(bits_of(&reference.dequantize()), bits_of(&q.dequantize()), "B={bs}");
+            assert_eq!(reference.outliers, q.outliers, "B={bs}");
+            assert_eq!(
+                reference.metrics.rel_frobenius_err.to_bits(),
+                q.metrics.rel_frobenius_err.to_bits(),
+                "B={bs}"
+            );
+            assert_eq!(
+                reference.metrics.proxy_loss.to_bits(),
+                q.metrics.proxy_loss.to_bits(),
+                "B={bs}"
+            );
+        }
+    }
+
+    /// VQ trailing updates shard across the pool exactly like scalar ones:
+    /// every worker count matches serial bit for bit.
+    #[test]
+    fn vq_parallel_trailing_update_bit_identical_to_serial() {
+        let (rows, cols) = (600, 40);
+        let w = random_w(rows, cols, 71);
+        let h = random_h(cols, 72);
+        let mut plan = MatrixPlan::vector_group(cols, 4, 2, true);
+        plan.reserve = vec![2; cols];
+        plan.block_size = 8;
+        let serial =
+            quantize_matrix_pooled(&w, Some(&h), &plan, &ThreadPool::new(1), &mut QuantScratch::new());
+        for workers in [2usize, 4, 7] {
+            let pool = ThreadPool::new(workers);
+            let par = quantize_matrix_pooled(&w, Some(&h), &plan, &pool, &mut QuantScratch::new());
+            assert_eq!(bits_of(&serial.dequantize()), bits_of(&par.dequantize()), "workers={workers}");
+            assert_eq!(serial.outliers, par.outliers);
+            assert_eq!(serial.metrics.proxy_loss.to_bits(), par.metrics.proxy_loss.to_bits());
+        }
+    }
+
+    /// VQ reserved entries are exact, emitted in (col, row) order, and the
+    /// index cost lands at bits/d per parameter.
+    #[test]
+    fn vq_reserved_exact_and_sub2bit_accounting() {
+        let w = random_w(64, 16, 81);
+        let mut plan = MatrixPlan::vector_group(16, 4, 2, false);
+        plan.reserve = vec![3; 16];
+        let q = quantize_matrix(&w, None, &plan);
+        assert_eq!(q.outliers.len(), 3 * 16);
+        let dq = q.dequantize();
+        for o in &q.outliers {
+            assert_eq!(dq.at(o.row as usize, o.col as usize), o.value);
+            assert_eq!(o.value, w.at(o.row as usize, o.col as usize));
+        }
+        for p in q.outliers.windows(2) {
+            assert!((p[0].col, p[0].row) < (p[1].col, p[1].row), "unsorted outliers");
+        }
+        // 2 index bits per 4-wide group → 0.5 bits/param.
+        assert!((q.index_bits_per_param() - 0.5).abs() < 1e-12);
+        assert_eq!(q.plane_kind(), PlaneKind::VectorGroup { d: 4 });
+        assert_eq!(q.vq_planes().groups.len(), 4);
+    }
+
+    /// Dequantized VQ values are centroids of their group's codebook
+    /// (outliers aside), including the ragged tail group.
+    #[test]
+    fn vq_dequantize_draws_from_codebooks() {
+        let w = random_w(32, 10, 91); // d=4 → groups of width 4, 4, 2
+        let plan = MatrixPlan::vector_group(10, 4, 3, false);
+        let q = quantize_matrix(&w, None, &plan);
+        let vp = q.vq_planes();
+        assert_eq!(vp.groups.len(), 3);
+        assert_eq!(vp.groups[2].codebook.dim, 2);
+        let dq = q.dequantize();
+        for r in 0..32 {
+            for (g, grp) in vp.groups.iter().enumerate() {
+                let (j0, j1) = vp.group_span(g, q.cols);
+                let c = grp.codebook.centroid(grp.indices[r] as usize);
+                for (jj, j) in (j0..j1).enumerate() {
+                    assert_eq!(dq.at(r, j), c[jj]);
                 }
             }
         }

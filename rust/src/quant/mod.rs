@@ -15,11 +15,13 @@ pub mod packed;
 pub mod precision;
 pub mod reservation;
 pub mod search;
+pub mod vq;
 
 pub use codebook::Codebook;
 pub use config::Method;
 pub use gptq::{
-    quantize_matrix, quantize_matrix_pooled, CentroidRule, MatrixPlan, QuantScratch,
+    quantize_matrix, quantize_matrix_pooled, CentroidRule, MatrixPlan, QuantPlanes, QuantScratch,
     QuantizedMatrix, DEFAULT_BLOCK,
 };
 pub use outliers::OutlierStats;
+pub use vq::PlaneKind;

@@ -6,18 +6,33 @@
 //! coordinates; both accountings are exposed so the experiment tables can
 //! quote paper-comparable numbers *and* honest container sizes.
 //!
-//! Layout (little-endian):
+//! Two container kinds share the codec, distinguished by magic. The
+//! scalar per-column layout (little-endian):
 //! ```text
 //! magic "CLAQPK01" | rows u32 | cols u32 | n_outliers u32
 //! per column: bits u8 | 2^bits centroids (f16) | ceil(rows*bits/8) packed bytes
 //! outliers:   (row u32, col u32, value f32) × n_outliers
 //! ```
+//! and the vector-group layout (DESIGN.md §15), whose fixed-offset prefix
+//! (rows/cols/n_outliers at bytes 8..20) matches CLAQPK01 byte for byte so
+//! header validators only need to accept either magic:
+//! ```text
+//! magic "CLAQVQ01" | rows u32 | cols u32 | n_outliers u32 | group_dim u8 | bits u8
+//! per group: 2^bits centroids in R^width (f16, centroid-major)
+//!            | ceil(rows*bits/8) packed bytes
+//! outliers:  (row u32, col u32, value f32) × n_outliers
+//! ```
+//! Group `g` covers columns `[g·d, min((g+1)·d, cols))`; the final group's
+//! `width` may be smaller than `group_dim` (the ragged tail), and every
+//! width is derivable from the header, so the stream stays self-framing.
 
-use crate::quant::gptq::{Outlier, QuantizedColumn, QuantizedMatrix};
 use crate::quant::codebook::Codebook;
+use crate::quant::gptq::{Outlier, QuantPlanes, QuantizedColumn, QuantizedMatrix};
+use crate::quant::vq::{PlaneKind, VqCodebook, VqGroup, VqPlanes};
 use anyhow::{bail, Context, Result};
 
-const MAGIC: &[u8; 8] = b"CLAQPK01";
+pub const MAGIC: &[u8; 8] = b"CLAQPK01";
+pub const VQ_MAGIC: &[u8; 8] = b"CLAQVQ01";
 
 // ---------------------------------------------------------------- f16 ----
 
@@ -272,16 +287,35 @@ pub struct PackedMatrix {
     pub bytes: Vec<u8>,
 }
 
-/// Size accounting for one packed matrix.
-#[derive(Clone, Copy, Debug, Default)]
+/// Size accounting for one packed matrix, tagged with the plane kind so
+/// model-level reports can break container bytes down per kind.
+#[derive(Clone, Copy, Debug)]
 pub struct SizeReport {
+    /// Which container layout this matrix packed into.
+    pub kind: PlaneKind,
     pub params: usize,
     pub index_bytes: usize,
     pub codebook_bytes: usize,
     pub outlier_bytes: usize,
     pub header_bytes: usize,
-    /// index bits + 16·outliers per param — the paper's accounting.
+    /// Index bits + 16·outliers per param — the paper's accounting. For
+    /// vector groups one packed index covers `d` columns, so the index
+    /// term is `bits/d` per parameter.
     pub paper_equivalent_bits: f64,
+}
+
+impl Default for SizeReport {
+    fn default() -> Self {
+        Self {
+            kind: PlaneKind::Scalar,
+            params: 0,
+            index_bytes: 0,
+            codebook_bytes: 0,
+            outlier_bytes: 0,
+            header_bytes: 0,
+            paper_equivalent_bits: 0.0,
+        }
+    }
 }
 
 impl SizeReport {
@@ -305,10 +339,17 @@ impl SizeReport {
 /// stream — every later column would be decoded from the wrong offset.
 /// Such a matrix is rejected here with a clear error instead.
 pub fn pack(qm: &QuantizedMatrix) -> Result<(PackedMatrix, SizeReport)> {
-    if qm.columns.len() != qm.cols {
-        bail!("matrix has {} columns but {} quantized planes", qm.cols, qm.columns.len());
+    match &qm.planes {
+        QuantPlanes::Columns(columns) => pack_scalar(qm, columns),
+        QuantPlanes::Groups(vp) => pack_vq(qm, vp),
     }
-    for (c, col) in qm.columns.iter().enumerate() {
+}
+
+fn pack_scalar(qm: &QuantizedMatrix, columns: &[QuantizedColumn]) -> Result<(PackedMatrix, SizeReport)> {
+    if columns.len() != qm.cols {
+        bail!("matrix has {} columns but {} quantized planes", qm.cols, columns.len());
+    }
+    for (c, col) in columns.iter().enumerate() {
         if !(1..=8).contains(&col.bits) {
             bail!("column {c}: invalid bit width {}", col.bits);
         }
@@ -334,7 +375,7 @@ pub fn pack(qm: &QuantizedMatrix) -> Result<(PackedMatrix, SizeReport)> {
 
     let mut index_bytes = 0usize;
     let mut codebook_bytes = 0usize;
-    for col in &qm.columns {
+    for col in columns {
         bytes.push(col.bits);
         for &c in &col.codebook.centroids {
             bytes.extend_from_slice(&f32_to_f16_bits(c).to_le_bytes());
@@ -344,16 +385,11 @@ pub fn pack(qm: &QuantizedMatrix) -> Result<(PackedMatrix, SizeReport)> {
         index_bytes += packed.len();
         bytes.extend_from_slice(&packed);
     }
-    let mut outlier_bytes = 0usize;
-    for o in &qm.outliers {
-        bytes.extend_from_slice(&o.row.to_le_bytes());
-        bytes.extend_from_slice(&o.col.to_le_bytes());
-        bytes.extend_from_slice(&o.value.to_le_bytes());
-        outlier_bytes += 12;
-    }
+    let outlier_bytes = write_outliers(&mut bytes, &qm.outliers);
     let params = qm.rows * qm.cols;
-    let index_bits: f64 = qm.columns.iter().map(|c| c.bits as f64 * qm.rows as f64).sum();
+    let index_bits: f64 = columns.iter().map(|c| c.bits as f64 * qm.rows as f64).sum();
     let report = SizeReport {
+        kind: PlaneKind::Scalar,
         params,
         index_bytes,
         codebook_bytes,
@@ -364,9 +400,108 @@ pub fn pack(qm: &QuantizedMatrix) -> Result<(PackedMatrix, SizeReport)> {
     Ok((PackedMatrix { bytes }, report))
 }
 
-/// Deserialize a container produced by [`pack`].
+/// Expected width of group `g` for `cols` columns in groups of `d`.
+fn group_width(g: usize, d: usize, cols: usize) -> usize {
+    (cols - g * d).min(d)
+}
+
+fn write_outliers(bytes: &mut Vec<u8>, outliers: &[Outlier]) -> usize {
+    for o in outliers {
+        bytes.extend_from_slice(&o.row.to_le_bytes());
+        bytes.extend_from_slice(&o.col.to_le_bytes());
+        bytes.extend_from_slice(&o.value.to_le_bytes());
+    }
+    12 * outliers.len()
+}
+
+/// Serialize a vector-quantized matrix into a CLAQVQ01 container. The same
+/// desync discipline as [`pack_scalar`]: the reader consumes exactly
+/// `2^bits · width` f16 centroids and `ceil(rows·bits/8)` index bytes per
+/// group, so any group whose codebook or index plane disagrees with the
+/// header-derived layout is rejected here with a clear error.
+fn pack_vq(qm: &QuantizedMatrix, vp: &VqPlanes) -> Result<(PackedMatrix, SizeReport)> {
+    let d = vp.group_dim;
+    if d == 0 || d > 255 {
+        bail!("group dim {d} out of range (1..=255)");
+    }
+    let n_groups = qm.cols.div_ceil(d);
+    if vp.groups.len() != n_groups {
+        bail!(
+            "matrix has {} columns in groups of {d} ({n_groups} groups) but {} quantized groups",
+            qm.cols,
+            vp.groups.len()
+        );
+    }
+    let bits = vp.groups.first().map(|g| g.bits).unwrap_or(0);
+    if !(1..=8).contains(&bits) {
+        bail!("invalid vector-group bit width {bits}");
+    }
+    for (g, grp) in vp.groups.iter().enumerate() {
+        if grp.bits != bits {
+            bail!("group {g}: bit width {} differs from group 0's {bits} (uniform required)", grp.bits);
+        }
+        let width = group_width(g, d, qm.cols);
+        if grp.codebook.dim != width {
+            bail!("group {g}: codebook dim {} but group covers {width} columns", grp.codebook.dim);
+        }
+        let want = 1usize << bits;
+        if grp.codebook.len() != want {
+            bail!(
+                "group {g}: codebook has {} centroids but bit width {bits} requires exactly {want} \
+                 (a shorter codebook would desync the container byte stream)",
+                grp.codebook.len()
+            );
+        }
+        if grp.indices.len() != qm.rows {
+            bail!("group {g}: {} indices for {} rows", grp.indices.len(), qm.rows);
+        }
+    }
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(VQ_MAGIC);
+    bytes.extend_from_slice(&(qm.rows as u32).to_le_bytes());
+    bytes.extend_from_slice(&(qm.cols as u32).to_le_bytes());
+    bytes.extend_from_slice(&(qm.outliers.len() as u32).to_le_bytes());
+    bytes.push(d as u8);
+    bytes.push(bits);
+    let header_bytes = bytes.len();
+
+    let mut index_bytes = 0usize;
+    let mut codebook_bytes = 0usize;
+    for grp in &vp.groups {
+        for &c in &grp.codebook.centroids {
+            bytes.extend_from_slice(&f32_to_f16_bits(c).to_le_bytes());
+        }
+        codebook_bytes += 2 * grp.codebook.centroids.len();
+        let packed = pack_indices(&grp.indices, bits);
+        index_bytes += packed.len();
+        bytes.extend_from_slice(&packed);
+    }
+    let outlier_bytes = write_outliers(&mut bytes, &qm.outliers);
+    let params = qm.rows * qm.cols;
+    let index_bits: f64 = vp.groups.iter().map(|g| g.bits as f64 * qm.rows as f64).sum();
+    let report = SizeReport {
+        kind: PlaneKind::VectorGroup { d },
+        params,
+        index_bytes,
+        codebook_bytes,
+        outlier_bytes,
+        header_bytes,
+        paper_equivalent_bits: (index_bits + 16.0 * qm.outliers.len() as f64) / params as f64,
+    };
+    Ok((PackedMatrix { bytes }, report))
+}
+
+/// Deserialize a container produced by [`pack`], dispatching on the
+/// container magic (CLAQPK01 scalar vs CLAQVQ01 vector-group).
 pub fn unpack(pm: &PackedMatrix) -> Result<QuantizedMatrix> {
     let b = &pm.bytes;
+    if b.len() >= 8 && &b[..8] == VQ_MAGIC {
+        return unpack_vq(b);
+    }
+    unpack_scalar(b)
+}
+
+fn unpack_scalar(b: &[u8]) -> Result<QuantizedMatrix> {
     let mut pos = 0usize;
     let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
         if *pos + n > b.len() {
@@ -417,7 +552,70 @@ pub fn unpack(pm: &PackedMatrix) -> Result<QuantizedMatrix> {
     Ok(QuantizedMatrix {
         rows,
         cols,
-        columns,
+        planes: QuantPlanes::Columns(columns),
+        outliers,
+        metrics: Default::default(),
+    })
+}
+
+fn unpack_vq(b: &[u8]) -> Result<QuantizedMatrix> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > b.len() {
+            bail!("truncated container at offset {pos}");
+        }
+        let s = &b[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let magic = take(&mut pos, 8)?;
+    if magic != VQ_MAGIC {
+        bail!("bad magic");
+    }
+    let rows = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let cols = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let n_out = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let d = take(&mut pos, 1)?[0] as usize;
+    let bits = take(&mut pos, 1)?[0];
+    if d == 0 {
+        bail!("invalid group dim 0");
+    }
+    if !(1..=8).contains(&bits) {
+        bail!("invalid vector-group bit width {bits}");
+    }
+
+    let n_groups = cols.div_ceil(d);
+    let mut groups = Vec::with_capacity(n_groups);
+    for g in 0..n_groups {
+        let width = group_width(g, d, cols);
+        let k = 1usize << bits;
+        let mut centroids = Vec::with_capacity(k * width);
+        for _ in 0..k * width {
+            let h = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap());
+            centroids.push(f16_bits_to_f32(h));
+        }
+        let packed_len = (rows * bits as usize).div_ceil(8);
+        let packed = take(&mut pos, packed_len)?;
+        let indices = unpack_indices(packed, bits, rows);
+        groups.push(VqGroup { codebook: VqCodebook::new(width, centroids), indices, bits });
+    }
+    let mut outliers = Vec::with_capacity(n_out);
+    for _ in 0..n_out {
+        let row = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let col = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let value = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if row as usize >= rows || col as usize >= cols {
+            bail!("outlier out of range ({row},{col})");
+        }
+        outliers.push(Outlier { row, col, value });
+    }
+    if pos != b.len() {
+        bail!("trailing bytes ({} unread)", b.len() - pos);
+    }
+    Ok(QuantizedMatrix {
+        rows,
+        cols,
+        planes: QuantPlanes::Groups(VqPlanes { group_dim: d, groups }),
         outliers,
         metrics: Default::default(),
     })
@@ -577,7 +775,7 @@ mod tests {
         assert_eq!(back.rows, qm.rows);
         assert_eq!(back.cols, qm.cols);
         assert_eq!(back.outliers, qm.outliers);
-        for (a, b) in back.columns.iter().zip(&qm.columns) {
+        for (a, b) in back.columns().iter().zip(qm.columns()) {
             assert_eq!(a.bits, b.bits);
             assert_eq!(a.indices, b.indices);
             // centroids round-trip through f16
@@ -585,6 +783,179 @@ mod tests {
                 assert_eq!(x, f16_bits_to_f32(f32_to_f16_bits(y)));
             }
         }
+    }
+
+    fn sample_vq_qm(seed: u64, rows: usize, cols: usize, d: usize, bits: u8) -> QuantizedMatrix {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.1);
+        let mut plan = MatrixPlan::vector_group(cols, d, bits, false);
+        plan.reserve = vec![1; cols];
+        quantize_matrix(&w, None, &plan)
+    }
+
+    #[test]
+    fn vq_container_round_trip() {
+        // cols=10, d=4 → groups of width 4, 4, 2 (ragged tail exercised)
+        let qm = sample_vq_qm(5, 40, 10, 4, 3);
+        let (pm, rep) = pack(&qm).unwrap();
+        assert_eq!(&pm.bytes[..8], VQ_MAGIC);
+        assert_eq!(pm.bytes.len(), rep.container_bytes());
+        assert_eq!(rep.kind, PlaneKind::VectorGroup { d: 4 });
+        let back = unpack(&pm).unwrap();
+        assert_eq!((back.rows, back.cols), (qm.rows, qm.cols));
+        assert_eq!(back.outliers, qm.outliers);
+        let (bv, qv) = (back.vq_planes(), qm.vq_planes());
+        assert_eq!(bv.group_dim, 4);
+        assert_eq!(bv.groups.len(), qv.groups.len());
+        for (a, b) in bv.groups.iter().zip(&qv.groups) {
+            assert_eq!(a.bits, b.bits);
+            assert_eq!(a.indices, b.indices);
+            assert_eq!(a.codebook.dim, b.codebook.dim);
+            for (&x, &y) in a.codebook.centroids.iter().zip(&b.codebook.centroids) {
+                assert_eq!(x, f16_bits_to_f32(f32_to_f16_bits(y)));
+            }
+        }
+    }
+
+    /// Hand-computed byte accounting for the VQ container: rows=8, cols=6,
+    /// d=2, bits=2 → header 22 B; 3 groups, each 4 centroids × 2 coords
+    /// × 2 B = 16 B of codebook + ceil(8·2/8) = 2 B of indices; plus
+    /// 12 B per outlier. Paper bits: 2/2 = 1 index bit/param plus
+    /// 16·n_out/48.
+    #[test]
+    fn vq_size_report_hand_computed() {
+        let mut rng = Rng::new(6);
+        let mut w = Matrix::zeros(8, 6);
+        rng.fill_normal(&mut w.data, 0.1);
+        let mut plan = MatrixPlan::vector_group(6, 2, 2, false);
+        plan.reserve = vec![1, 0, 0, 0, 0, 0]; // exactly one outlier
+        let qm = quantize_matrix(&w, None, &plan);
+        assert_eq!(qm.outliers.len(), 1);
+        let (pm, rep) = pack(&qm).unwrap();
+        assert_eq!(rep.header_bytes, 22);
+        assert_eq!(rep.codebook_bytes, 3 * 16);
+        assert_eq!(rep.index_bytes, 3 * 2);
+        assert_eq!(rep.outlier_bytes, 12);
+        assert_eq!(rep.params, 48);
+        assert_eq!(pm.bytes.len(), 22 + 48 + 6 + 12);
+        assert_eq!(pm.bytes.len(), rep.container_bytes());
+        let want_paper = 1.0 + 16.0 / 48.0;
+        assert!((rep.paper_equivalent_bits - want_paper).abs() < 1e-12);
+        assert!((rep.paper_equivalent_bits - qm.equivalent_bits_paper()).abs() < 1e-12);
+    }
+
+    /// Hand-computed scalar accounting alongside, pinning the kind tag:
+    /// rows=8, cols=3, bits=2 → header 20 B; per column 1 B bits +
+    /// 4 centroids × 2 B + 2 B indices = 11 B.
+    #[test]
+    fn scalar_size_report_hand_computed() {
+        let mut rng = Rng::new(7);
+        let mut w = Matrix::zeros(8, 3);
+        rng.fill_normal(&mut w.data, 0.1);
+        let plan = MatrixPlan::uniform(3, 2, CentroidRule::KMeans, false);
+        let qm = quantize_matrix(&w, None, &plan);
+        let (pm, rep) = pack(&qm).unwrap();
+        assert_eq!(rep.kind, PlaneKind::Scalar);
+        assert_eq!(rep.header_bytes, 20);
+        assert_eq!(rep.codebook_bytes, 3 * 9);
+        assert_eq!(rep.index_bytes, 3 * 2);
+        assert_eq!(rep.outlier_bytes, 0);
+        assert_eq!(pm.bytes.len(), 20 + 27 + 6);
+    }
+
+    /// The sub-2-bit acceptance shape: d=4, bits=2 over a 64×64 matrix
+    /// lands under 2.0 container bits per parameter (0.5 index bits +
+    /// codebooks + header), something no scalar config can reach.
+    #[test]
+    fn vq_container_bits_below_two() {
+        let mut rng = Rng::new(8);
+        let mut w = Matrix::zeros(64, 64);
+        rng.fill_normal(&mut w.data, 0.1);
+        let plan = MatrixPlan::vector_group(64, 4, 2, false);
+        let qm = quantize_matrix(&w, None, &plan);
+        let (_, rep) = pack(&qm).unwrap();
+        assert!(
+            rep.container_bits_per_param() < 2.0,
+            "container bits {} not sub-2.0",
+            rep.container_bits_per_param()
+        );
+        assert!(rep.paper_equivalent_bits < 1.0);
+    }
+
+    #[test]
+    fn vq_corrupt_containers_rejected() {
+        let qm = sample_vq_qm(9, 40, 12, 4, 3);
+        let (pm, _) = pack(&qm).unwrap();
+        // bad magic
+        let mut bad = pm.clone();
+        bad.bytes[0] = b'X';
+        assert!(unpack(&bad).is_err());
+        // truncated mid-codebook (first group's centroids start at 22)
+        let mut trunc = pm.clone();
+        trunc.bytes.truncate(30);
+        assert!(unpack(&trunc).is_err());
+        // group-dim byte corrupted: derived group layout no longer matches
+        // the byte stream (desync → truncation/trailing rejection)
+        let mut gd = pm.clone();
+        gd.bytes[20] = 3;
+        assert!(unpack(&gd).is_err());
+        // group dim 0 is invalid outright
+        let mut gd0 = pm.clone();
+        gd0.bytes[20] = 0;
+        assert!(unpack(&gd0).is_err());
+        // bits byte corrupted: codebook/plane sizes change → desync
+        let mut bb = pm.clone();
+        bb.bytes[21] = 7;
+        assert!(unpack(&bb).is_err());
+        // bits byte out of range
+        let mut b0 = pm.clone();
+        b0.bytes[21] = 0;
+        assert!(unpack(&b0).is_err());
+        // trailing garbage
+        let mut long = pm.clone();
+        long.bytes.push(0);
+        assert!(unpack(&long).is_err());
+    }
+
+    /// Desync-rejecting validation at pack time for hand-built VQ planes:
+    /// wrong codebook size, wrong codebook dim, wrong group count, mixed
+    /// bit widths, and wrong index length are all caught.
+    #[test]
+    fn malformed_vq_planes_rejected_at_pack() {
+        let make = |groups: Vec<VqGroup>, d: usize| QuantizedMatrix {
+            rows: 4,
+            cols: 4,
+            planes: QuantPlanes::Groups(VqPlanes { group_dim: d, groups }),
+            outliers: Vec::new(),
+            metrics: Default::default(),
+        };
+        let good_group = |bits: u8| VqGroup {
+            codebook: VqCodebook::new(2, vec![0.0; (1usize << bits) * 2]),
+            indices: vec![0; 4],
+            bits,
+        };
+        // well-formed baseline packs
+        assert!(pack(&make(vec![good_group(2), good_group(2)], 2)).is_ok());
+        // wrong group count
+        assert!(pack(&make(vec![good_group(2)], 2)).is_err());
+        // short codebook (desync)
+        let mut short = good_group(2);
+        short.codebook.centroids.truncate(6);
+        assert!(pack(&make(vec![short, good_group(2)], 2)).is_err());
+        // codebook dim disagrees with group width
+        let wrong_dim = VqGroup {
+            codebook: VqCodebook::new(1, vec![0.0; 4]),
+            indices: vec![0; 4],
+            bits: 2,
+        };
+        assert!(pack(&make(vec![wrong_dim, good_group(2)], 2)).is_err());
+        // mixed bit widths
+        assert!(pack(&make(vec![good_group(2), good_group(3)], 2)).is_err());
+        // wrong index length
+        let mut short_idx = good_group(2);
+        short_idx.indices.pop();
+        assert!(pack(&make(vec![good_group(2), short_idx], 2)).is_err());
     }
 
     #[test]
@@ -625,11 +996,11 @@ mod tests {
         let make = |centroids: Vec<f32>, bits: u8| QuantizedMatrix {
             rows: 4,
             cols: 1,
-            columns: vec![QuantizedColumn {
+            planes: QuantPlanes::Columns(vec![QuantizedColumn {
                 codebook: Codebook::new(centroids),
                 indices: vec![0, 1, 1, 0],
                 bits,
-            }],
+            }]),
             outliers: Vec::new(),
             metrics: Default::default(),
         };
@@ -641,10 +1012,12 @@ mod tests {
         // the well-formed versions of both pack fine
         let ok2 = make(vec![-1.0, 0.0, 0.5, 1.0], 2);
         let (pm, _) = pack(&ok2).unwrap();
-        assert_eq!(unpack(&pm).unwrap().columns[0].indices, ok2.columns[0].indices);
+        assert_eq!(unpack(&pm).unwrap().columns()[0].indices, ok2.columns()[0].indices);
         // row-count mismatch is caught too
         let mut bad_rows = make(vec![-1.0, 0.0, 0.5, 1.0], 2);
-        bad_rows.columns[0].indices.pop();
+        if let QuantPlanes::Columns(cs) = &mut bad_rows.planes {
+            cs[0].indices.pop();
+        }
         assert!(pack(&bad_rows).is_err());
     }
 

@@ -1,0 +1,577 @@
+//! K-Means in R^d — the centroid generator for vector-quantized
+//! column-group planes (the VPTQ direction; DESIGN.md §15).
+//!
+//! Scalar CLAQ clusters the entries of one column (`kmeans_1d`); the VQ
+//! plane kind clusters the *row-vectors* of a group of `d` adjacent
+//! columns, so each codebook entry is a point in R^d and one packed index
+//! per row selects all `d` coordinates at once — index cost `bits/d` per
+//! parameter, which is how the container reaches below 2 bits. The
+//! implementation mirrors `kmeans_1d` deliberately: k-means++ seeding,
+//! Lloyd iterations out of a caller-owned scratch (zero steady-state
+//! allocations), the same deterministic seeding rule
+//! (`seed ^ n.rotate_left(17)`), and the same widest-cluster empty-repair
+//! policy — the repaired centroid lands exactly on the donor cluster's
+//! farthest member, each donor is used at most once per pass, and the
+//! degenerate fallback (fewer distinct points than clusters) doesn't
+//! count as a repair. The 1-D specialization sorts its inputs to make the
+//! Lloyd step a linear merge; in R^d there is no such order, so
+//! assignment is the plain O(n·k·d) nearest-centroid scan with a strict
+//! `<` improvement rule (ties resolve to the lowest centroid index).
+
+use crate::quant::kmeans::KMeansOpts;
+use crate::util::rng::Rng;
+
+/// Which plane representation a quantization plan produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlaneKind {
+    /// One scalar codebook of `2^bits` centroids per column (CLAQPK01).
+    Scalar,
+    /// One vector codebook of `2^bits` centroids in R^d per group of `d`
+    /// adjacent columns (CLAQVQ01); index cost is `bits/d` per parameter.
+    VectorGroup { d: usize },
+}
+
+impl PlaneKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlaneKind::Scalar => "scalar",
+            PlaneKind::VectorGroup { .. } => "vq",
+        }
+    }
+}
+
+/// A vector codebook: `len()` centroids in R^`dim`, centroid-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VqCodebook {
+    pub dim: usize,
+    /// `len·dim` coordinates, centroid-major.
+    pub centroids: Vec<f32>,
+}
+
+impl VqCodebook {
+    pub fn new(dim: usize, centroids: Vec<f32>) -> Self {
+        assert!(dim >= 1, "codebook dim must be >= 1");
+        assert_eq!(centroids.len() % dim, 0, "centroid buffer not a multiple of dim");
+        Self { dim, centroids }
+    }
+
+    pub fn len(&self) -> usize {
+        self.centroids.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.centroids.is_empty()
+    }
+
+    pub fn centroid(&self, i: usize) -> &[f32] {
+        &self.centroids[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Nearest centroid by squared Euclidean distance (f64 accumulation,
+    /// coordinate order fixed). Strict `<` improvement, so ties resolve to
+    /// the lowest index — the vector analogue of `Codebook::quantize`.
+    pub fn quantize(&self, v: &[f32]) -> u8 {
+        debug_assert_eq!(v.len(), self.dim);
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for (i, c) in self.centroids.chunks_exact(self.dim).enumerate() {
+            let mut d = 0.0f64;
+            for (&x, &cc) in v.iter().zip(c) {
+                let e = x as f64 - cc as f64;
+                d += e * e;
+            }
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best as u8
+    }
+
+    /// Nearest centroid ignoring masked coordinates: outlier-reserved
+    /// entries are stored exactly in FP and must not steer the assignment
+    /// of the coordinates that *are* represented by the codebook.
+    pub fn quantize_masked(&self, v: &[f32], mask: &[bool]) -> u8 {
+        debug_assert_eq!(v.len(), self.dim);
+        debug_assert_eq!(mask.len(), self.dim);
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for (i, c) in self.centroids.chunks_exact(self.dim).enumerate() {
+            let mut d = 0.0f64;
+            for jj in 0..self.dim {
+                if mask[jj] {
+                    continue;
+                }
+                let e = v[jj] as f64 - c[jj] as f64;
+                d += e * e;
+            }
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best as u8
+    }
+}
+
+/// One quantized column group: vector codebook + one index per row.
+#[derive(Clone, Debug)]
+pub struct VqGroup {
+    pub codebook: VqCodebook,
+    pub indices: Vec<u8>,
+    pub bits: u8,
+}
+
+/// The vector-quantized planes of one matrix: groups of `group_dim`
+/// adjacent columns (the final group may be narrower when `cols` is not a
+/// multiple of `group_dim` — its codebook's `dim` is the ragged width).
+#[derive(Clone, Debug)]
+pub struct VqPlanes {
+    pub group_dim: usize,
+    pub groups: Vec<VqGroup>,
+}
+
+impl VqPlanes {
+    /// Column range `[start, end)` covered by group `g`.
+    pub fn group_span(&self, g: usize, cols: usize) -> (usize, usize) {
+        let start = g * self.group_dim;
+        (start, (start + self.group_dim).min(cols))
+    }
+}
+
+/// Result of clustering one column group.
+#[derive(Clone, Debug)]
+pub struct KMeansNdResult {
+    pub codebook: VqCodebook,
+    pub inertia: f64,
+    pub iters: usize,
+}
+
+/// Reusable clustering workspace for [`kmeans_nd_into`]; buffers grow to
+/// the largest (n, k, dim) seen and are then recycled.
+#[derive(Default)]
+pub struct KMeansNdScratch {
+    /// d2[i] = squared distance of point i to its nearest chosen centroid
+    /// (k-means++ table).
+    d2: Vec<f64>,
+    centroids: Vec<f64>,
+    /// assign[i] = cluster of point i from the latest Lloyd sweep.
+    assign: Vec<u32>,
+    counts: Vec<usize>,
+    sums: Vec<f64>,
+    far_d2: Vec<f64>,
+    far_idx: Vec<usize>,
+    consumed: Vec<bool>,
+}
+
+impl KMeansNdScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+fn dist2_to(p: &[f32], c: &[f64]) -> f64 {
+    let mut d = 0.0f64;
+    for (&x, &cc) in p.iter().zip(c) {
+        let e = x as f64 - cc;
+        d += e * e;
+    }
+    d
+}
+
+fn dist2_pts(a: &[f32], b: &[f32]) -> f64 {
+    let mut d = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let e = x as f64 - y as f64;
+        d += e * e;
+    }
+    d
+}
+
+/// K-means++ seeding over R^dim points: `k` initial centroids, each an
+/// actual data point, sampled proportional to squared distance from the
+/// already-chosen set (uniform when all residual distances vanish).
+fn kmeanspp_init_nd(
+    points: &[f32],
+    dim: usize,
+    k: usize,
+    rng: &mut Rng,
+    centroids: &mut Vec<f64>,
+    d2: &mut Vec<f64>,
+) {
+    let n = points.len() / dim;
+    centroids.clear();
+    centroids.reserve(k * dim);
+    let p0 = rng.below_usize(n);
+    centroids.extend(points[p0 * dim..(p0 + 1) * dim].iter().map(|&x| x as f64));
+    d2.clear();
+    d2.extend(points.chunks_exact(dim).map(|p| dist2_to(p, &centroids[..dim])));
+    for _ in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            // All points coincide with chosen centroids; pick uniformly.
+            rng.below_usize(n)
+        } else {
+            let mut t = rng.next_f64() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                t -= w;
+                if t <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        let chosen = &points[pick * dim..(pick + 1) * dim];
+        centroids.extend(chosen.iter().map(|&x| x as f64));
+        for (i, p) in points.chunks_exact(dim).enumerate() {
+            let dd = dist2_pts(p, chosen);
+            if dd < d2[i] {
+                d2[i] = dd;
+            }
+        }
+    }
+}
+
+/// Reseed empty clusters by splitting the widest populated cluster at its
+/// extreme — same policy as the 1-D `repair_empty`: the donor is the
+/// populated cluster (≥ 2 members, not yet consumed this pass) whose
+/// farthest member lies farthest from its freshly updated centroid, and
+/// the repaired centroid is placed exactly on that member. When no such
+/// donor exists (fewer distinct points than clusters) the centroid falls
+/// back to the first data point, which keeps the codebook well-formed
+/// without counting as a repair.
+#[allow(clippy::too_many_arguments)]
+fn repair_empty_nd(
+    points: &[f32],
+    dim: usize,
+    centroids: &mut [f64],
+    assign: &[u32],
+    counts: &[usize],
+    far_d2: &mut Vec<f64>,
+    far_idx: &mut Vec<usize>,
+    consumed: &mut Vec<bool>,
+) -> bool {
+    let k = counts.len();
+    if counts.iter().all(|&c| c > 0) {
+        return false;
+    }
+    // Rare path: one sweep computing each cluster's farthest member
+    // against the post-Lloyd centroids (member sets are the last
+    // assignment, mirroring the prefix-sum runs of the 1-D repair).
+    far_d2.clear();
+    far_d2.resize(k, 0.0);
+    far_idx.clear();
+    far_idx.resize(k, usize::MAX);
+    for (i, p) in points.chunks_exact(dim).enumerate() {
+        let c = assign[i] as usize;
+        let dd = dist2_to(p, &centroids[c * dim..(c + 1) * dim]);
+        if far_idx[c] == usize::MAX || dd > far_d2[c] {
+            far_d2[c] = dd;
+            far_idx[c] = i;
+        }
+    }
+    consumed.clear();
+    consumed.resize(k, false);
+    let mut repaired = false;
+    for i in 0..k {
+        if counts[i] > 0 {
+            continue;
+        }
+        let mut best: Option<(usize, f64)> = None; // (donor, spread)
+        for j in 0..k {
+            if counts[j] >= 2 && !consumed[j] && far_d2[j] > 0.0 {
+                let better = match best {
+                    Some((_, bs)) => far_d2[j] > bs,
+                    None => true,
+                };
+                if better {
+                    best = Some((j, far_d2[j]));
+                }
+            }
+        }
+        match best {
+            Some((donor, _)) => {
+                let src = &points[far_idx[donor] * dim..(far_idx[donor] + 1) * dim];
+                for (c, &x) in centroids[i * dim..(i + 1) * dim].iter_mut().zip(src) {
+                    *c = x as f64;
+                }
+                consumed[donor] = true;
+                repaired = true;
+            }
+            // Degenerate (fewer distinct points than clusters); place at
+            // an arbitrary data point to keep the codebook well-formed.
+            None => {
+                for (c, &x) in centroids[i * dim..(i + 1) * dim].iter_mut().zip(&points[..dim]) {
+                    *c = x as f64;
+                }
+            }
+        }
+    }
+    repaired
+}
+
+/// Cluster `points` (n × dim, row-major) into `k` centroids in R^dim.
+/// Empty input yields an all-zero codebook; a constant point set yields
+/// `k` copies of that point. Allocates a fresh workspace per call — hot
+/// loops should hold a [`KMeansNdScratch`] and call [`kmeans_nd_into`].
+pub fn kmeans_nd(points: &[f32], dim: usize, k: usize, opts: &KMeansOpts) -> KMeansNdResult {
+    kmeans_nd_into(points, dim, k, opts, &mut KMeansNdScratch::new())
+}
+
+/// [`kmeans_nd`] running out of a caller-owned workspace: zero heap
+/// allocations in steady state besides the returned codebook.
+pub fn kmeans_nd_into(
+    points: &[f32],
+    dim: usize,
+    k: usize,
+    opts: &KMeansOpts,
+    scratch: &mut KMeansNdScratch,
+) -> KMeansNdResult {
+    assert!(k >= 1, "k must be >= 1");
+    assert!(dim >= 1, "dim must be >= 1");
+    assert_eq!(points.len() % dim, 0, "points not a multiple of dim");
+    let n = points.len() / dim;
+    if n == 0 {
+        return KMeansNdResult {
+            codebook: VqCodebook::new(dim, vec![0.0; k * dim]),
+            inertia: 0.0,
+            iters: 0,
+        };
+    }
+    debug_assert!(points.iter().all(|v| v.is_finite()), "non-finite weight");
+
+    // Degenerate: constant point set → all centroids equal that point.
+    let first = &points[..dim];
+    if points.chunks_exact(dim).all(|p| p == first) {
+        let mut c = Vec::with_capacity(k * dim);
+        for _ in 0..k {
+            c.extend_from_slice(first);
+        }
+        return KMeansNdResult { codebook: VqCodebook::new(dim, c), inertia: 0.0, iters: 0 };
+    }
+
+    let KMeansNdScratch { d2, centroids, assign, counts, sums, far_d2, far_idx, consumed } =
+        scratch;
+    let mut rng = Rng::new(opts.seed ^ (n as u64).rotate_left(17));
+    kmeanspp_init_nd(points, dim, k, &mut rng, centroids, d2);
+
+    let mut inertia = f64::INFINITY;
+    let mut iters = 0usize;
+    for it in 0..opts.max_iters {
+        iters = it + 1;
+        // Assignment + accumulation (O(n·k·dim) nearest-centroid scan).
+        counts.clear();
+        counts.resize(k, 0);
+        sums.clear();
+        sums.resize(k * dim, 0.0);
+        assign.clear();
+        assign.resize(n, 0);
+        let mut in_ = 0.0f64;
+        for (i, p) in points.chunks_exact(dim).enumerate() {
+            let mut bc = 0usize;
+            let mut bd = dist2_to(p, &centroids[..dim]);
+            for c in 1..k {
+                let dd = dist2_to(p, &centroids[c * dim..(c + 1) * dim]);
+                if dd < bd {
+                    bd = dd;
+                    bc = c;
+                }
+            }
+            assign[i] = bc as u32;
+            counts[bc] += 1;
+            for (s, &x) in sums[bc * dim..(bc + 1) * dim].iter_mut().zip(p) {
+                *s += x as f64;
+            }
+            in_ += bd;
+        }
+        inertia = in_;
+        let mut moved = 0.0f64;
+        for c in 0..k {
+            if counts[c] > 0 {
+                for jj in 0..dim {
+                    let nc = sums[c * dim + jj] / counts[c] as f64;
+                    moved = moved.max((nc - centroids[c * dim + jj]).abs());
+                    centroids[c * dim + jj] = nc;
+                }
+            }
+            // empty clusters handled below (reseed)
+        }
+        let repaired =
+            repair_empty_nd(points, dim, centroids, assign, counts, far_d2, far_idx, consumed);
+        if !repaired && moved < opts.tol {
+            break;
+        }
+    }
+    KMeansNdResult {
+        codebook: VqCodebook::new(dim, centroids.iter().map(|&c| c as f32).collect()),
+        inertia,
+        iters,
+    }
+}
+
+/// Total squared quantization error of `points` against a vector codebook.
+pub fn inertia_nd(points: &[f32], cb: &VqCodebook) -> f64 {
+    points
+        .chunks_exact(cb.dim)
+        .map(|p| {
+            let c = cb.centroid(cb.quantize(p) as usize);
+            dist2_pts(p, c)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_default;
+
+    #[test]
+    fn recovers_separated_blobs() {
+        // Three well-separated 2-D blobs; k=3 must land near the blob means.
+        let mut pts = Vec::new();
+        for i in 0..100 {
+            let j = 0.001 * (i as f32);
+            pts.extend_from_slice(&[-1.0 + j, -1.0 + j]);
+            pts.extend_from_slice(&[0.0 + j, 3.0 + j]);
+            pts.extend_from_slice(&[5.0 + j, -2.0 + j]);
+        }
+        let r = kmeans_nd(&pts, 2, 3, &KMeansOpts::default());
+        let mut found = [false; 3];
+        for c in r.codebook.centroids.chunks_exact(2) {
+            for (b, target) in found.iter_mut().zip([[-0.95, -0.95], [0.05, 3.05], [5.05, -1.95]])
+            {
+                if (c[0] - target[0]).abs() < 0.1 && (c[1] - target[1]).abs() < 0.1 {
+                    *b = true;
+                }
+            }
+        }
+        assert!(found.iter().all(|&b| b), "blob means not recovered: {:?}", r.codebook.centroids);
+    }
+
+    #[test]
+    fn constant_points() {
+        let pts: Vec<f32> = [0.5f32, -0.25].repeat(64);
+        let r = kmeans_nd(&pts, 2, 4, &KMeansOpts::default());
+        assert_eq!(r.inertia, 0.0);
+        for c in r.codebook.centroids.chunks_exact(2) {
+            assert_eq!(c, &[0.5, -0.25]);
+        }
+    }
+
+    #[test]
+    fn empty_input_zero_codebook() {
+        let r = kmeans_nd(&[], 3, 4, &KMeansOpts::default());
+        assert_eq!(r.codebook.centroids, vec![0.0; 12]);
+    }
+
+    #[test]
+    fn k_larger_than_distinct_points() {
+        let pts = vec![1.0f32, 0.0, 2.0, 1.0, 1.0, 0.0, 2.0, 1.0];
+        let r = kmeans_nd(&pts, 2, 8, &KMeansOpts::default());
+        assert!(inertia_nd(&pts, &r.codebook) < 1e-10);
+    }
+
+    #[test]
+    fn quantize_matches_nearest_centroid() {
+        check_default("vq nearest centroid", |rng| {
+            let dim = 1 + rng.below_usize(4);
+            let n = 32 + rng.below_usize(128);
+            let mut pts = vec![0.0f32; n * dim];
+            rng.fill_normal(&mut pts, 1.0);
+            let r = kmeans_nd(&pts, dim, 8, &KMeansOpts::default());
+            let cb = &r.codebook;
+            for p in pts.chunks_exact(dim).take(32) {
+                let qi = cb.quantize(p) as usize;
+                let qd = dist2_pts(p, cb.centroid(qi));
+                for i in 0..cb.len() {
+                    assert!(qd <= dist2_pts(p, cb.centroid(i)) + 1e-9);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_ties_resolve_low() {
+        // Two identical centroids: the lower index must win.
+        let cb = VqCodebook::new(2, vec![1.0, 1.0, 1.0, 1.0, 9.0, 9.0]);
+        assert_eq!(cb.quantize(&[1.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn masked_quantize_ignores_reserved_coords() {
+        // Point (0, 100): coordinate 1 is reserved. Unmasked, the huge
+        // second coordinate drags the pick to centroid 1; masked, only the
+        // first coordinate counts and centroid 0 wins.
+        let cb = VqCodebook::new(2, vec![0.0, 0.0, 50.0, 80.0]);
+        assert_eq!(cb.quantize(&[0.0, 100.0]), 1);
+        assert_eq!(cb.quantize_masked(&[0.0, 100.0], &[false, true]), 0);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_alloc() {
+        check_default("vq scratch reuse", |rng| {
+            let mut scratch = KMeansNdScratch::new();
+            for _ in 0..4 {
+                let dim = 1 + rng.below_usize(4);
+                let n = 8 + rng.below_usize(200);
+                let mut pts = vec![0.0f32; n * dim];
+                rng.fill_normal(&mut pts, 1.0);
+                let k = 1 << (1 + rng.below_usize(4));
+                let a = kmeans_nd(&pts, dim, k, &KMeansOpts::default());
+                let b = kmeans_nd_into(&pts, dim, k, &KMeansOpts::default(), &mut scratch);
+                assert_eq!(a.codebook.centroids, b.codebook.centroids);
+                assert_eq!(a.inertia.to_bits(), b.inertia.to_bits());
+                assert_eq!(a.iters, b.iters);
+            }
+        });
+    }
+
+    #[test]
+    fn repair_places_centroid_on_widest_cluster_extreme() {
+        // Cluster 0 owns five points around the origin plus one far
+        // outlier at (4, 0); cluster 1 owns one point; cluster 2 is empty.
+        // The widest donor is cluster 0 and the repaired centroid must
+        // land exactly on its farthest member (4, 0).
+        let pts = [0.0f32, 0.0, 1.0, 0.0, 2.0, 0.0, 3.0, 0.0, 4.0, 0.0, 20.0, 0.0];
+        let mut centroids = vec![2.0f64, 0.0, 30.0, 0.0, 100.0, 0.0];
+        let assign = vec![0u32, 0, 0, 0, 0, 1];
+        let counts = vec![5usize, 1, 0];
+        let (mut fd, mut fi, mut cons) = (Vec::new(), Vec::new(), Vec::new());
+        let repaired =
+            repair_empty_nd(&pts, 2, &mut centroids, &assign, &counts, &mut fd, &mut fi, &mut cons);
+        assert!(repaired);
+        assert_eq!(&centroids[4..6], &[4.0, 0.0], "expected split at (4,0), got {centroids:?}");
+    }
+
+    #[test]
+    fn beats_scalar_on_correlated_pairs() {
+        // Adjacent-coordinate correlation is the whole point of VQ: with
+        // y ≈ x, 16 centroids in R^2 (4 bits/pair = 2 bits/param) track
+        // the diagonal much better than two independent 4-centroid scalar
+        // codebooks (2 bits/coord, the same 4 bits/pair index budget).
+        let mut rng = crate::util::rng::Rng::new(11);
+        let n = 512;
+        let mut pts = vec![0.0f32; n * 2];
+        for i in 0..n {
+            let x = rng.next_f64() as f32 * 2.0 - 1.0;
+            let eps = (rng.next_f64() as f32 - 0.5) * 0.05;
+            pts[i * 2] = x;
+            pts[i * 2 + 1] = x + eps;
+        }
+        let vq = kmeans_nd(&pts, 2, 16, &KMeansOpts::default());
+        let e_vq = inertia_nd(&pts, &vq.codebook);
+        // Scalar baseline at the same 4 bits per pair: 2 centroids/coord.
+        let xs: Vec<f32> = (0..n).map(|i| pts[i * 2]).collect();
+        let ys: Vec<f32> = (0..n).map(|i| pts[i * 2 + 1]).collect();
+        let kx = crate::quant::kmeans::kmeans_1d(&xs, 4, &KMeansOpts::default());
+        let ky = crate::quant::kmeans::kmeans_1d(&ys, 4, &KMeansOpts::default());
+        let e_sc = crate::quant::kmeans::inertia(&xs, &kx.codebook)
+            + crate::quant::kmeans::inertia(&ys, &ky.codebook);
+        assert!(
+            e_vq < e_sc * 0.8,
+            "VQ {e_vq} should beat independent scalar codebooks {e_sc} on correlated pairs"
+        );
+    }
+}

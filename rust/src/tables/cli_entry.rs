@@ -25,7 +25,26 @@ use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-/// Parse a `--method NAME --bits B [--s S] [--setting N]` triple.
+/// Parse the adaptive-precision candidate pair from `--hi`/`--lo`
+/// (defaulting to the paper's 4-bit high level and `floor(--bits)` low
+/// level), validated here so a bad pair fails with a usage error instead
+/// of a panic in `BitPair::new`.
+fn parse_bit_pair(args: &Args, bits: f64) -> Result<BitPair> {
+    let hi: u8 = args.get_parse_or("hi", 4).map_err(anyhow::Error::msg)?;
+    let lo: u8 = args.get_parse_or("lo", bits.floor() as u8).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        (1..=8).contains(&lo) && lo < hi && hi <= 8,
+        "--hi/--lo must satisfy 1 <= lo < hi <= 8 (got hi={hi}, lo={lo})"
+    );
+    anyhow::ensure!(
+        (lo as f64) <= bits && bits <= hi as f64,
+        "--bits {bits} is outside the [{lo}, {hi}] range of --lo/--hi — no column mix can hit it"
+    );
+    Ok(BitPair::new(hi, lo))
+}
+
+/// Parse a `--method NAME --bits B [--s S] [--setting N] [--hi H --lo L]
+/// [--group-dim D]` method spec.
 pub fn parse_method(args: &Args) -> Result<Method> {
     let name = args.get_or("method", "claq");
     let bits: f64 = args.get_parse_or("bits", 4.0).map_err(anyhow::Error::msg)?;
@@ -55,7 +74,7 @@ pub fn parse_method(args: &Args) -> Result<Method> {
                     "3.12" => Method::fusion_3_12(),
                     "3.23" => Method::fusion_3_23(),
                     _ => Method::ClaqAp {
-                        pair: BitPair::new(4, bits.floor() as u8),
+                        pair: parse_bit_pair(args, bits)?,
                         target_bits: bits,
                         metric: ColumnMetric::OutlierRatio,
                         s,
@@ -64,11 +83,24 @@ pub fn parse_method(args: &Args) -> Result<Method> {
             }
         }
         "claq-ap" => Method::ClaqAp {
-            pair: BitPair::new(4, bits.floor() as u8),
+            pair: parse_bit_pair(args, bits)?,
             target_bits: bits,
             metric: ColumnMetric::OutlierRatio,
             s,
         },
+        "claq-vq" => {
+            anyhow::ensure!(
+                (bits - ibits as f64).abs() < 1e-9 && (1..=8).contains(&ibits),
+                "--bits must be an integer in [1, 8] for claq-vq (got {bits}); sub-bit \
+                 budgets come from --group-dim, not fractional index widths"
+            );
+            let d: usize = args.get_parse_or("group-dim", 4).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(
+                (1..=255).contains(&d),
+                "--group-dim must be in [1, 255] (got {d}) — the CLAQVQ01 header stores it as u8"
+            );
+            Method::ClaqVq { d, bits: ibits }
+        }
         "claq-or" => Method::ClaqOr {
             bits: bits.floor() as u8,
             budget_bits: bits - bits.floor(),
@@ -213,6 +245,12 @@ pub fn pack(args: &Args) -> Result<()> {
         100.0 * rep.checkpoint_bytes as f64 / fp_artifact_bytes as f64,
         fp_artifact_bytes
     );
+    if rep.vq_matrices > 0 {
+        println!(
+            "  plane kinds: {} scalar (CLAQPK01, {} B) + {} vector-group (CLAQVQ01, {} B)",
+            rep.scalar_matrices, rep.scalar_container_bytes, rep.vq_matrices, rep.vq_container_bytes
+        );
+    }
     println!("  cold-start it with: claq serve --checkpoint {}", out.display());
     Ok(())
 }

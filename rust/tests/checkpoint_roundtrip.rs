@@ -21,8 +21,9 @@ use claq::model::checkpoint::Checkpoint;
 use claq::model::exec::{argmax, decode_step, prefill, ExecModel, ExecState, KvCache};
 use claq::model::io::save_model;
 use claq::model::quantized::QuantizedModel;
-use claq::model::{Model, TransformerConfig};
+use claq::model::{MatrixId, MatrixKind, Model, TransformerConfig};
 use claq::quant::config::Method;
+use claq::quant::gptq::{quantize_matrix, MatrixPlan};
 use claq::util::rng::Rng;
 
 fn test_cfg() -> TransformerConfig {
@@ -158,6 +159,112 @@ fn awq_checkpoint_round_trip_bit_identical() {
 #[test]
 fn claq3_checkpoint_round_trip_bit_identical() {
     round_trip(&Method::Claq { bits: 3 }, "claq3");
+}
+
+/// Vector-quantized planes (CLAQVQ01 containers): 2-bit indices over
+/// 4-wide column groups — 0.5 index bits/param, the sub-2-bit
+/// configuration the plane-kind refactor exists for. The whole
+/// quantize → save → cold-load → decode path must hold bit-identity
+/// exactly as for scalar planes.
+#[test]
+fn vq_checkpoint_round_trip_bit_identical() {
+    round_trip(&Method::ClaqVq { d: 4, bits: 2 }, "vq");
+}
+
+/// One CLAQMD01 file mixing plane kinds: a scalar-quantized model with a
+/// single projection swapped to a vector-quantized plane. Per-entry
+/// container magic dispatch must round-trip the mix, and the size report
+/// must partition the byte budget by kind.
+#[test]
+fn mixed_plane_kind_checkpoint_round_trip() {
+    let (_, mut qm) = quantized(&Method::Claq { bits: 2 });
+    let id = MatrixId { layer: 0, kind: MatrixKind::WUp };
+    let w = qm.base.matrix(id).clone();
+    let plan = MatrixPlan::vector_group(w.cols, 4, 2, true);
+    qm.matrices.insert(id, quantize_matrix(&w, None, &plan));
+
+    let path = uniq_path("mixed");
+    let written = qm.save(&path).unwrap();
+    assert_eq!(
+        written,
+        qm.size_report().checkpoint_bytes as u64,
+        "mixed: exact accounting"
+    );
+    let rep = qm.size_report();
+    assert_eq!(rep.vq_matrices, 1, "exactly the swapped projection is VQ");
+    assert_eq!(rep.scalar_matrices, qm.matrices.len() - 1);
+    assert_eq!(
+        rep.scalar_container_bytes + rep.vq_container_bytes,
+        rep.container_bytes,
+        "per-kind bytes partition the container budget"
+    );
+
+    let ckpt = Checkpoint::load(&path).unwrap();
+    let n_vq = ckpt
+        .entries
+        .iter()
+        .filter(|e| e.container.bytes.starts_with(b"CLAQVQ01"))
+        .count();
+    let n_scalar = ckpt
+        .entries
+        .iter()
+        .filter(|e| e.container.bytes.starts_with(b"CLAQPK01"))
+        .count();
+    assert_eq!(n_vq, 1, "one embedded CLAQVQ01 container");
+    assert_eq!(n_vq + n_scalar, ckpt.entries.len(), "every entry is one of the two kinds");
+
+    let cold = ExecModel::from_checkpoint(ckpt).unwrap();
+    let deployed = qm.to_exec_deployed().unwrap();
+    assert_exec_bit_identical(&cold, &deployed, "mixed: cold vs deployed");
+
+    let loaded = QuantizedModel::load(&path).unwrap();
+    assert_exec_bit_identical(&loaded.to_exec(), &cold, "mixed: loaded vs cold");
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Corruption inside an embedded CLAQVQ01 container. The checkpoint
+/// header scan (`Checkpoint::load`) validates container magic + dims;
+/// deeper plane corruption is caught where the container is actually
+/// parsed (`ExecModel::from_checkpoint` / `QuantizedModel::load`).
+#[test]
+fn corrupt_vq_containers_in_checkpoint_rejected() {
+    let (_, qm) = quantized(&Method::ClaqVq { d: 4, bits: 2 });
+    let path = uniq_path("vq_corrupt");
+    qm.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let pos = bytes
+        .windows(8)
+        .position(|w| w == b"CLAQVQ01")
+        .expect("checkpoint embeds a CLAQVQ01 container");
+
+    // flipped magic byte on the embedded container -> rejected at load
+    let mut bad = bytes.clone();
+    bad[pos] ^= 0xFF;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(Checkpoint::load(&path).is_err(), "bad VQ container magic accepted");
+
+    // zeroed group-dim header byte (offset 20 = after magic/rows/cols/n_out):
+    // passes the cheap header scan, must fail at container parse time
+    let mut bad = bytes.clone();
+    bad[pos + 20] = 0;
+    std::fs::write(&path, &bad).unwrap();
+    let ckpt = Checkpoint::load(&path).expect("header scan does not parse planes");
+    assert!(ExecModel::from_checkpoint(ckpt).is_err(), "group dim 0 accepted by exec build");
+    assert!(QuantizedModel::load(&path).is_err(), "group dim 0 accepted by model load");
+
+    // inflated group dim: the declared group count / codebook extents no
+    // longer match the container byte stream (truncated-codebook shape)
+    let mut bad = bytes.clone();
+    bad[pos + 20] = 255;
+    std::fs::write(&path, &bad).unwrap();
+    let ckpt = Checkpoint::load(&path).expect("header scan does not parse planes");
+    assert!(
+        ExecModel::from_checkpoint(ckpt).is_err(),
+        "group-dim/cols mismatch accepted by exec build"
+    );
+
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

@@ -76,7 +76,7 @@ fn prop_container_round_trip() {
         assert_eq!(pm.bytes.len(), report.container_bytes());
         let back = unpack(&pm).unwrap();
         assert_eq!(back.outliers, q.outliers);
-        for (a, b) in back.columns.iter().zip(&q.columns) {
+        for (a, b) in back.columns().iter().zip(q.columns()) {
             assert_eq!(a.indices, b.indices);
             assert_eq!(a.bits, b.bits);
         }
@@ -174,7 +174,7 @@ fn prop_obs_no_worse_output_error() {
 fn prop_blocked_quantizer_bit_identical() {
     fn assert_bit_identical(a: &QuantizedMatrix, b: &QuantizedMatrix, ctx: &str) {
         assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{ctx}: shape");
-        for (c, (ca, cb)) in a.columns.iter().zip(&b.columns).enumerate() {
+        for (c, (ca, cb)) in a.columns().iter().zip(b.columns()).enumerate() {
             assert_eq!(ca.bits, cb.bits, "{ctx}: bits col {c}");
             assert_eq!(ca.indices, cb.indices, "{ctx}: indices col {c}");
             let bits_a: Vec<u32> = ca.codebook.centroids.iter().map(|v| v.to_bits()).collect();

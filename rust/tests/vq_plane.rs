@@ -1,0 +1,226 @@
+//! Property suite for the vector-quantized plane kind (`CLAQVQ01`) end to
+//! end — the sub-2-bit sibling of `tests/tiled_kernel.rs`. Sweeps group
+//! dims × bit widths × outlier reservations × ragged shapes (group tails
+//! narrower than `d`, column counts off the COL_TILE boundary) and checks:
+//!
+//! * tiled vs scalar gather kernels agree to tolerance over the fused
+//!   grouped-gather decode, in memory and through the f16 container (with
+//!   AWQ scales folded in);
+//! * the bit-identity contract survives the plane-kind switch: batched
+//!   output equals token-at-a-time output EXACTLY, including shapes that
+//!   cross the parallel row-sharding threshold, for both kernels and for
+//!   cold-loaded (container-parsed) operators alike — the accumulation
+//!   order is a function of `(cols, group_dim)` alone;
+//! * a `Method::ClaqVq` config actually lands under 2.0 container bits
+//!   per parameter (codebooks and headers included) at serving shapes;
+//! * at matched ~2.0 paper-equivalent bits, VQ reconstruction error is no
+//!   worse than scalar CLAQ on matrices with correlated adjacent columns
+//!   (the regime the plane kind exists for).
+
+use claq::model::linear::{KernelKind, LinearOp, LinearScratch, PackedLinear};
+use claq::quant::gptq::{quantize_matrix, MatrixPlan, QuantizedMatrix};
+use claq::quant::packed::pack;
+use claq::quant::vq::PlaneKind;
+use claq::tensor::Matrix;
+use claq::util::proptest::{check, gen_column, Config};
+use claq::util::rng::Rng;
+
+/// Random ragged-shaped VQ-quantized matrix: group dim 1..=6 (1 = the
+/// degenerate scalar-like case), 2..=4 index bits, shapes chosen so the
+/// final group is usually narrower than `d` and the in-group lane count
+/// exercises both the axpy4 chunks and the axpy1 tail.
+fn random_vq(rng: &mut Rng, with_outliers: bool) -> QuantizedMatrix {
+    let rows = 3 + rng.below_usize(62); // 3..=64: crosses u64-window tails
+    let cols = 1 + rng.below_usize(23); // 1..=23: ragged group tails
+    let d = 1 + rng.below_usize(6); // 1..=6: straddles COL_TILE=4
+    let bits = 2 + rng.below_usize(3) as u8; // 2..=4 bits per group index
+    let mut w = Matrix::zeros(rows, cols);
+    for c in 0..cols {
+        let col = gen_column(rng, rows, 0.05);
+        w.set_col(c, &col);
+    }
+    let mut plan = MatrixPlan::vector_group(cols, d, bits, true);
+    if with_outliers {
+        plan.reserve = (0..cols).map(|_| rng.below_usize(3)).collect();
+    }
+    quantize_matrix(&w, None, &plan)
+}
+
+fn forward(lin: &PackedLinear, x: &[f32], seq: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; seq * lin.out_features()];
+    let mut scratch = LinearScratch::new();
+    lin.forward_into(x, seq, &mut out, &mut scratch);
+    out
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+    for (a, b) in got.iter().zip(want) {
+        assert!((a - b).abs() <= tol * (1.0 + b.abs()), "tiled {a} vs scalar {b} (tol {tol})");
+    }
+}
+
+/// Tiled == scalar to tolerance over the fused grouped gather, with and
+/// without reserved outliers, over random group dims and ragged shapes.
+#[test]
+fn prop_vq_tiled_matches_scalar_f32_codebooks() {
+    for (seed, with_outliers) in [(701u64, false), (702, true)] {
+        check("vq tiled vs scalar f32", Config { cases: 32, seed }, move |rng| {
+            let qm = random_vq(rng, with_outliers);
+            assert!(matches!(qm.plane_kind(), PlaneKind::VectorGroup { .. }));
+            let scalar = PackedLinear::from_quantized(&qm, None).with_kernel(KernelKind::Scalar);
+            let tiled = PackedLinear::from_quantized(&qm, None).with_kernel(KernelKind::Tiled);
+            let seq = 1 + rng.below_usize(5);
+            let mut x = vec![0.0f32; seq * qm.cols];
+            rng.fill_normal(&mut x, 1.0);
+            assert_close(&forward(&tiled, &x, seq), &forward(&scalar, &x, seq), 1e-5);
+        });
+    }
+}
+
+/// Same property through the serialized CLAQVQ01 container, so the group
+/// codebooks both kernels gather from are f16-rounded — and with AWQ
+/// scales folded into the decoded lanes.
+#[test]
+fn prop_vq_tiled_matches_scalar_f16_container_and_awq() {
+    check("vq tiled vs scalar f16+awq", Config { cases: 24, seed: 703 }, |rng| {
+        let qm = random_vq(rng, true);
+        let scales: Vec<f32> = (0..qm.cols).map(|_| 0.5 + 1.5 * rng.next_f32()).collect();
+        let (pm, rep) = pack(&qm).unwrap();
+        assert!(matches!(rep.kind, PlaneKind::VectorGroup { .. }));
+        let scalar = PackedLinear::from_container(&pm, Some(&scales))
+            .unwrap()
+            .with_kernel(KernelKind::Scalar);
+        let tiled = PackedLinear::from_container(&pm, Some(&scales))
+            .unwrap()
+            .with_kernel(KernelKind::Tiled);
+        let seq = 1 + rng.below_usize(4);
+        let mut x = vec![0.0f32; seq * qm.cols];
+        rng.fill_normal(&mut x, 1.0);
+        assert_close(&forward(&tiled, &x, seq), &forward(&scalar, &x, seq), 1e-5);
+    });
+}
+
+/// The bit-identity contract under VQ planes: batched output equals
+/// token-at-a-time output EXACTLY (`assert_eq!`) for both kernels,
+/// including shapes large enough to cross the parallel row-sharding
+/// threshold, and including operators cold-loaded from the container —
+/// per-element accumulation order is a function of `(cols, group_dim)`
+/// alone, never of seq, shard count, codebook precision, or which
+/// dispatch path ran.
+#[test]
+fn prop_vq_batched_and_sharded_bit_identical_to_serial() {
+    check("vq bit identity", Config { cases: 10, seed: 704 }, |rng| {
+        // big enough that seq·rows·cols crosses PAR_MIN_MACS on most draws
+        let rows = 96 + rng.below_usize(96);
+        let cols = 32 + rng.below_usize(64);
+        let d = [2usize, 3, 4, 6][rng.below_usize(4)];
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.1);
+        let mut plan = MatrixPlan::vector_group(cols, d, 3, true);
+        plan.reserve = vec![1; cols];
+        let qm = quantize_matrix(&w, None, &plan);
+        let (pm, _) = pack(&qm).unwrap();
+
+        let seq = 2 + rng.below_usize(7);
+        let mut x = vec![0.0f32; seq * cols];
+        rng.fill_normal(&mut x, 1.0);
+
+        for kernel in [KernelKind::Tiled, KernelKind::Scalar] {
+            let ops = [
+                PackedLinear::from_quantized(&qm, None).with_kernel(kernel),
+                PackedLinear::from_container(&pm, None).unwrap().with_kernel(kernel),
+            ];
+            for (which, lin) in ops.iter().enumerate() {
+                // token-at-a-time reference (serial path: small MACs)
+                let mut want = vec![0.0f32; seq * rows];
+                let mut scratch = LinearScratch::new();
+                for t in 0..seq {
+                    let mut row_out = vec![0.0f32; rows];
+                    lin.forward_into(&x[t * cols..(t + 1) * cols], 1, &mut row_out, &mut scratch);
+                    want[t * rows..(t + 1) * rows].copy_from_slice(&row_out);
+                }
+                let got = forward(lin, &x, seq);
+                assert_eq!(
+                    got, want,
+                    "vq batched/sharded diverged from serial \
+                     ({rows}x{cols} d={d} {kernel:?} source={which})"
+                );
+                // and deterministic run over run
+                assert_eq!(forward(lin, &x, seq), got);
+            }
+        }
+    });
+}
+
+/// The headline budget claim, end to end at a serving-class shape: a
+/// `ClaqVq { d: 4, bits: 2 }` quantization of a 256×128 matrix costs
+/// under 2.0 container bits per parameter with *everything* counted —
+/// packed index planes, f16 group codebooks, headers — at 0.5 paper
+/// (index-only) bits, and the container cold-loads into a working
+/// PackedLinear whose forward matches the dequantized reference.
+#[test]
+fn vq_sub_2bit_container_budget_end_to_end() {
+    let mut rng = Rng::new(77);
+    let (rows, cols) = (256usize, 128usize);
+    let mut w = Matrix::zeros(rows, cols);
+    rng.fill_normal(&mut w.data, 0.05);
+    let plan = MatrixPlan::vector_group(cols, 4, 2, true);
+    let qm = quantize_matrix(&w, None, &plan);
+    let (pm, rep) = pack(&qm).unwrap();
+
+    assert_eq!(rep.kind, PlaneKind::VectorGroup { d: 4 });
+    assert!((rep.paper_equivalent_bits - 0.5).abs() < 1e-12, "index bits = 2/4 per param");
+    let bpp = rep.container_bits_per_param();
+    assert!(bpp < 2.0, "container bits/param {bpp} should be sub-2.0 at 256x128 d=4 2b");
+
+    // cold-load and decode: container-parsed operator ≈ dequantized dense
+    let lin = PackedLinear::from_container(&pm, None).unwrap().with_kernel(KernelKind::Tiled);
+    let deq = claq::quant::packed::unpack(&pm).unwrap().dequantize();
+    let mut x = vec![0.0f32; cols];
+    rng.fill_normal(&mut x, 1.0);
+    let got = forward(&lin, &x, 1);
+    for r in 0..rows {
+        let want: f32 = (0..cols).map(|c| deq.at(r, c) * x[c]).sum();
+        assert!(
+            (got[r] - want).abs() <= 1e-4 * (1.0 + want.abs()),
+            "row {r}: {} vs {want}",
+            got[r]
+        );
+    }
+}
+
+/// Accuracy at a matched ~2.0 paper-bit budget: on matrices whose
+/// adjacent column pairs are strongly correlated (the structure VQ
+/// exploits), `d=2, bits=4` vector groups (16 centroids in R², 2.0
+/// index bits/param) reconstruct no worse than scalar 2-bit CLAQ
+/// (4 centroids per column, the same 2.0 index bits/param).
+#[test]
+fn vq_matches_scalar_accuracy_at_equal_paper_bits() {
+    let mut rng = Rng::new(78);
+    let (rows, cols) = (256usize, 16usize);
+    let mut w = Matrix::zeros(rows, cols);
+    for p in 0..cols / 2 {
+        for r in 0..rows {
+            let x = rng.next_f32() * 2.0 - 1.0;
+            let eps = (rng.next_f32() - 0.5) * 0.05;
+            *w.at_mut(r, 2 * p) = x;
+            *w.at_mut(r, 2 * p + 1) = x + eps;
+        }
+    }
+
+    let vq_plan = MatrixPlan::vector_group(cols, 2, 4, true);
+    let sc_plan = MatrixPlan::uniform(cols, 2, claq::quant::gptq::CentroidRule::KMeans, true);
+    let q_vq = quantize_matrix(&w, None, &vq_plan);
+    let q_sc = quantize_matrix(&w, None, &sc_plan);
+
+    // identical paper accounting on both sides: 2.0 bits, no outliers
+    assert!((q_vq.equivalent_bits_paper() - 2.0).abs() < 1e-12);
+    assert!((q_sc.equivalent_bits_paper() - 2.0).abs() < 1e-12);
+
+    let (e_vq, e_sc) = (q_vq.metrics.rel_frobenius_err, q_sc.metrics.rel_frobenius_err);
+    assert!(
+        e_vq <= e_sc,
+        "VQ rel-Frobenius {e_vq} should not lose to scalar {e_sc} on correlated pairs \
+         at the same 2.0 paper bits"
+    );
+}
