@@ -165,21 +165,19 @@ fn serve_trace(
     label: &'static str,
 ) -> ServeReport {
     let mut st = ExecState::new(model.config);
-    let mut sched = Scheduler::new(
-        model.config,
-        SchedulerConfig {
-            max_slots,
-            prefill_token_budget: 2 * model.config.max_seq,
-            policy,
-            prefix_cache_bytes,
-            kv_page_tokens,
-            kv_quant_bits,
-            kv_budget_bytes: overload.kv_budget_mb * (1 << 20),
-            max_queue: overload.max_queue,
-            deadline_steps: overload.deadline_steps,
-            ..SchedulerConfig::default()
-        },
-    );
+    let sched_cfg = SchedulerConfig::builder()
+        .max_slots(max_slots)
+        .prefill_token_budget(2 * model.config.max_seq)
+        .policy(policy)
+        .prefix_cache_bytes(prefix_cache_bytes)
+        .kv_page_tokens(kv_page_tokens)
+        .kv_quant_bits(kv_quant_bits)
+        .kv_budget_bytes(overload.kv_budget_mb * (1 << 20))
+        .max_queue(overload.max_queue)
+        .deadline_steps(overload.deadline_steps)
+        .build()
+        .unwrap_or_else(|e| panic!("incoherent scheduler config: {e}"));
+    let mut sched = Scheduler::new(model.config, sched_cfg);
     let mut arrival_by_id = vec![0.0f64; trace.len()];
     let mut completions: Vec<Completion> = Vec::new();
     let mut step_wall: Vec<f64> = Vec::new(); // engine step -> wall seconds

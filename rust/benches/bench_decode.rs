@@ -8,7 +8,12 @@
 //! side. A third quantization of the same model under `Method::ClaqVq`
 //! runs as "packed[vq] ..." — the fused grouped-gather kernel over
 //! CLAQVQ01 vector planes, whose `bytes_decoded_per_s` numerator is d×
-//! smaller per step (one index plane per column group). Packed cells carry `tok_s` and `bytes_decoded_per_s` extras
+//! smaller per step (one index plane per column group). A fourth,
+//! "packed[ap-2.12] ...", quantizes with pure adaptive precision
+//! (`claq-ap:2+4@2.12`, parsed through the typed spec grammar): every
+//! projection carries mixed per-column bit planes with no outlier
+//! reservation, so these cells isolate the equal-bit-run decode path of
+//! the mixed-bit kernels. Packed cells carry `tok_s` and `bytes_decoded_per_s` extras
 //! (decoded-LUT bandwidth through the gather kernel) — plus the
 //! cold-start cells: the model is packed into a single-file CLAQMD01
 //! checkpoint, reloaded, smoke-tested with a 3-step decode, and timed
@@ -20,7 +25,7 @@ use claq::model::exec::{decode_step, prefill, ExecModel, ExecState, KvCache};
 use claq::model::linear::KernelKind;
 use claq::model::quantized::QuantizedModel;
 use claq::model::{Model, TransformerConfig};
-use claq::quant::config::Method;
+use claq::quant::config::{Method, MethodSpec};
 use claq::runtime::executor::ColdStart;
 use claq::util::benchlib::{black_box, Bench};
 use claq::util::rng::Rng;
@@ -87,6 +92,11 @@ fn main() {
     // over 4-wide column groups = 0.5 index bits/param.
     let qvq = QuantizedModel::quantize_uncalibrated(&model, &Method::ClaqVq { d: 4, bits: 2 });
     let packed_vq = qvq.to_exec_kernel(KernelKind::Tiled);
+    // Pure adaptive precision through the typed spec grammar: mixed
+    // per-column bits on every projection, no outlier reservation.
+    let ap_spec: MethodSpec = "claq-ap:2+4@2.12".parse().expect("ap bench spec");
+    let qap = QuantizedModel::quantize_uncalibrated(&model, ap_spec.method());
+    let packed_ap = qap.to_exec_kernel(KernelKind::Tiled);
     println!(
         "projection weights: packed {:.2} MB vs vq {:.2} MB vs dense {:.2} MB",
         packed.projection_bytes() as f64 / 1e6,
@@ -97,6 +107,7 @@ fn main() {
     bench_backend(&mut b, &packed, "packed");
     bench_backend(&mut b, &packed_scalar, "packed[scalar]");
     bench_backend(&mut b, &packed_vq, "packed[vq]");
+    bench_backend(&mut b, &packed_ap, "packed[ap-2.12]");
     bench_backend(&mut b, &dense, "dense");
 
     // --- cold start: checkpoint -> packed engine ---------------------------

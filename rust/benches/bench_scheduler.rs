@@ -67,21 +67,21 @@ fn run_scenario(
     overload: (usize, usize),
 ) -> ScenarioResult {
     let mut st = ExecState::new(model.config);
-    let mut sched = Scheduler::new(
-        model.config,
-        SchedulerConfig {
-            max_slots: slots,
-            prefill_token_budget: 2 * model.config.max_seq,
-            policy,
-            prefix_cache_bytes,
-            kv_page_tokens: kv.0,
-            kv_quant_bits: kv.1,
-            kv_quant_margin: kv.2,
-            kv_budget_bytes: overload.0,
-            max_queue: overload.1,
-            ..SchedulerConfig::default()
-        },
-    );
+    let mut b = SchedulerConfig::builder()
+        .max_slots(slots)
+        .prefill_token_budget(2 * model.config.max_seq)
+        .policy(policy)
+        .prefix_cache_bytes(prefix_cache_bytes)
+        .kv_page_tokens(kv.0)
+        .kv_quant_bits(kv.1)
+        .kv_budget_bytes(overload.0)
+        .max_queue(overload.1);
+    // The builder rejects a quantizer margin with quantization off, so a
+    // margin is forwarded only for kvq scenarios.
+    if kv.1 > 0 {
+        b = b.kv_quant_margin(kv.2);
+    }
+    let mut sched = Scheduler::new(model.config, b.build().expect("bench scenario config"));
     let mut completions = Vec::new();
     let mut step_wall = Vec::new();
     let mut submit_wall = vec![0.0f64; arrivals.len()]; // indexed by id

@@ -426,6 +426,102 @@ pub fn quantize_model_heuristic(
     (qm, stats, result)
 }
 
+/// `claq tune` driver (DESIGN.md §16): per-layer adaptive precision where
+/// every matrix of layer `l` is quantized at `targets[l]` equivalent bits
+/// within `pair` — plain uniform CLAQ at the interval ends, `ClaqAp`
+/// mixed-bit planes in between. Same sequential-calibration discipline as
+/// [`quantize_model_heuristic`]; the targets come from
+/// `quant::search::allocate_layer_targets` over measured probe runs.
+pub fn quantize_model_tuned(
+    model: &Model,
+    pair: BitPair,
+    targets: &[f64],
+    s: f64,
+    segments: &[Vec<u16>],
+    opts: &PipelineOpts,
+) -> (QuantizedModel, PipelineStats) {
+    assert_eq!(
+        targets.len(),
+        model.config.n_layers,
+        "one bit target per layer ({} targets, {} layers)",
+        targets.len(),
+        model.config.n_layers
+    );
+    let (lo, hi) = (pair.lo as f64, pair.hi as f64);
+    let mut work = model.clone();
+    let mut matrices = HashMap::new();
+    let mut stats = PipelineStats::default();
+    let mut state = ForwardState::new(model.config);
+    let pool = ThreadPool::new(opts.workers);
+    let mut inc = opts.incremental.then(|| IncrementalCalib::new(&work, segments));
+
+    for layer in 0..model.config.n_layers {
+        let t0 = Instant::now();
+        let hessians = match &inc {
+            Some(ic) => ic.capture(&work, segments, layer, &mut state),
+            None => calibrate_layer(&work, segments, layer, &mut state),
+        };
+        stats.calib_seconds += t0.elapsed().as_secs_f64();
+        let target = targets[layer].clamp(lo, hi);
+        let method = if (target - lo).abs() < 1e-9 {
+            Method::Claq { bits: pair.lo }
+        } else if (target - hi).abs() < 1e-9 {
+            Method::Claq { bits: pair.hi }
+        } else {
+            Method::ClaqAp {
+                pair,
+                target_bits: target,
+                metric: crate::quant::outliers::ColumnMetric::OutlierRatio,
+                s,
+            }
+        };
+        let kinds = MatrixKind::ALL;
+        let t1 = Instant::now();
+        let results: Vec<_> = pool.run(kinds.len(), |ki| {
+            let kind = kinds[ki];
+            let id = MatrixId { layer, kind };
+            let w = work.matrix(id);
+            let h = hessians.h.get(&kind).unwrap().as_slice();
+            let mut plan = method.plan_for(w, None).unwrap();
+            plan.block_size = opts.quant_block;
+            let q = quantize_matrix(w, Some(h), &plan);
+            let deq = q.dequantize();
+            (id, q, deq)
+        });
+        stats.quant_seconds += t1.elapsed().as_secs_f64();
+        for (id, q, deq) in results {
+            stats.per_matrix_err.push((id.name(), q.metrics.rel_frobenius_err));
+            matrices.insert(id, q);
+            *work.matrix_mut(id) = deq;
+        }
+        if let Some(ic) = inc.as_mut() {
+            ic.advance(&work, segments, layer, &mut state);
+        }
+    }
+    // parameter-weighted achieved equivalent bits, for the method label
+    let mut bits_params = 0.0f64;
+    let mut total_params = 0.0f64;
+    for (layer, &t) in targets.iter().enumerate() {
+        let params: usize = MatrixKind::ALL
+            .iter()
+            .map(|&kind| {
+                let w = model.matrix(MatrixId { layer, kind });
+                w.rows * w.cols
+            })
+            .sum();
+        bits_params += t.clamp(lo, hi) * params as f64;
+        total_params += params as f64;
+    }
+    let qm = QuantizedModel {
+        base: work,
+        matrices,
+        awq_scales: HashMap::new(),
+        method_name: format!("CLAQ+AP(tuned)-{:.2}", bits_params / total_params),
+    };
+    save_checkpoint_if_requested(&qm, opts, &mut stats);
+    (qm, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -515,6 +611,28 @@ mod tests {
         assert!(result.achieved_bits <= 2.5 + 1e-6);
         let rep = qm.size_report();
         assert!(rep.paper_equivalent_bits <= 2.5 + 0.1);
+    }
+
+    #[test]
+    fn tuned_pipeline_mixes_bits_per_layer() {
+        let (model, calib, _) = setup();
+        let pair = BitPair::new(4, 2);
+        let targets = vec![2.0, 2.5];
+        let (qm, _) =
+            quantize_model_tuned(&model, pair, &targets, 13.0, &calib, &PipelineOpts::default());
+        assert_eq!(qm.matrices.len(), model.matrix_ids().len());
+        assert!(qm.method_name.starts_with("CLAQ+AP(tuned)-"), "{}", qm.method_name);
+        for kind in MatrixKind::ALL {
+            // layer 0 at the lo end is plain uniform 2-bit
+            let q0 = &qm.matrices[&MatrixId { layer: 0, kind }];
+            assert!(q0.columns().iter().all(|c| c.bits == 2), "{kind:?} layer 0 not uniform");
+            // layer 1 at 2.5 equivalent bits is genuinely mixed 2/4
+            let q1 = &qm.matrices[&MatrixId { layer: 1, kind }];
+            let n_hi = q1.columns().iter().filter(|c| c.bits == 4).count();
+            let n_lo = q1.columns().iter().filter(|c| c.bits == 2).count();
+            assert_eq!(n_hi + n_lo, q1.cols, "{kind:?} layer 1 has off-pair widths");
+            assert!(n_hi > 0 && n_lo > 0, "{kind:?} layer 1 should mix bits");
+        }
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //!                 checkpoint (the quantize-once / serve-many artifact).
 //! * `serve`     — cold-start the continuous-batching engine from a
 //!                 checkpoint, skipping quantization entirely.
+//! * `tune`      — per-layer bit-budget autotuner: probe layer sensitivity
+//!                 against measured perplexity + decode tok/s, emit a tuned
+//!                 mixed-bit checkpoint.
 //! * `table <n>` — regenerate paper table n (1–13).
 //! * `figure <n>`— regenerate paper figure n (3–5).
 //! * `outliers`  — print outlier-order diagnostics for a model.
@@ -25,7 +28,7 @@ const VALUE_FLAGS: &[&str] = &[
     "out", "model", "method", "bits", "s", "segments", "windows", "items", "tokens", "seed",
     "setting", "calib", "target", "workers", "artifacts", "checkpoint", "requests", "slots",
     "baseline", "fresh", "tol", "kv-page-tokens", "kv-quant-bits", "kv-budget-mb", "max-queue",
-    "deadline-steps", "group-dim", "hi", "lo",
+    "deadline-steps", "group-dim", "hi", "lo", "decode-tokens",
 ];
 
 fn usage() -> &'static str {
@@ -33,27 +36,39 @@ fn usage() -> &'static str {
 
 USAGE:
   claq datagen  [--out artifacts] [--tokens N]
-  claq quantize --model artifacts/weights_l.bin --method claq --bits 2.12
-  claq pack     --out model.claq [--model l|xl|PATH] [--method claq --bits 2.12] [--random] [--fast]
-                [--method claq-ap --bits 2.2 --hi 4 --lo 2]
-                [--method claq-vq --bits 2 --group-dim 4]   (sub-2-bit: bits/group-dim b/param)
+  claq quantize --model artifacts/weights_l.bin --method fusion-2.12
+  claq pack     --out model.claq [--model l|xl|PATH] [--method SPEC] [--random] [--fast]
   claq serve    --checkpoint model.claq [--requests 16] [--slots 4] [--seed 17]
                 [--kv-page-tokens 64] [--kv-quant-bits 0] [--kv-budget-mb 0]
                 [--max-queue 0] [--deadline-steps 0]
+  claq tune     [--target 2.5] [--hi 4 --lo 2] [--windows 8] [--decode-tokens 64]
+                [--out tuned.claq] [--model l|xl|PATH] [--random] [--smoke]
   claq table    <1|2|3|4|5|6|7|8|10|12|13> [--fast]
   claq figure   <3|4|5>
   claq outliers [--model PATH] [--s 13]
-  claq eval     --model PATH [--method METHOD --bits B]
+  claq eval     --model PATH [--method SPEC]
   claq bench-check [--baseline ci/bench_baseline] [--fresh .] [--tol 0.25] [--update]
   claq help
 
-METHODS (for --method): fp16, rtn, gptq, awq, claq, claq-ap, claq-or,
-  claq-or-fixed, claq-fusion, claq-search, claq-vq
+METHOD SPECS (for --method; parse-time validated, see README methods table):
+  fp16              no quantization
+  rtn:B gptq:B awq:B claq:B
+                    uniform B-bit baselines / CLAQ K-Means (B in 1..=8)
+  claq-ap:LO+HI@T   adaptive precision, LO/HI-bit columns mixed to hit
+                    T equivalent bits (e.g. claq-ap:2+4@2.05)
+  claq-or:B+E       outlier reservation, B-bit + E extra budget bits
+  claq-or-fixed:B+E fixed-rate reservation variant
+  claq-vq:dDbB      vector-quantized groups of D adjacent columns sharing
+                    one 2^B-entry codebook (B/D bits per param indices)
+  fusion-2.12|2.24|3.12|3.23
+                    paper Appendix F fusion presets (AP + OR); also
+                    spelled claq-fusion-2.12; fusion:LO+HI@A+O is the
+                    generic form (AP target A, OR budget O)
+  tune emits per-layer mixed-bit BitPlans searched against measured
+  perplexity and decode tok/s; --smoke is the fast CI self-check.
 
-  claq-ap takes --hi/--lo (default 4/floor(bits)) for the dual-level pair.
-  claq-vq quantizes groups of --group-dim adjacent columns with one 2^bits
-  vector codebook per group: index cost is bits/group-dim bits per param,
-  e.g. --bits 2 --group-dim 4 is 0.5-bit indices.
+  Bare names (claq, claq-ap, claq-vq, ... with --bits/--hi/--lo/--group-dim
+  /--s/--setting) remain as deprecated aliases for one release.
 "
 }
 
@@ -70,6 +85,7 @@ fn main() -> Result<()> {
         "quantize" => claq::tables::cli_entry::quantize(&args),
         "pack" => claq::tables::cli_entry::pack(&args),
         "serve" => claq::tables::cli_entry::serve(&args),
+        "tune" => claq::tables::cli_entry::tune(&args),
         "eval" => claq::tables::cli_entry::eval(&args),
         "table" => claq::tables::cli_entry::table(&args),
         "figure" => claq::tables::cli_entry::figure(&args),

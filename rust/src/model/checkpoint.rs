@@ -19,7 +19,7 @@
 //! ```text
 //! magic "CLAQMD01"
 //! method_len u32 | method UTF-8
-//! FP block (CLAQFP01 body, model/io.rs): config | tok_embed |
+//! FP block (framing-less, model/io.rs): config | tok_embed |
 //!   per layer: attn_norm, mlp_norm | final_norm | lm_head
 //! n_entries u32
 //! per entry (write order: layer-major, MatrixKind::ALL order):
@@ -32,29 +32,22 @@
 //! rejected (`bail!`), mirroring the container-level
 //! `corrupt_containers_rejected` discipline.
 //!
-//! The deprecated `save_dir`/`load_dir` directory layout survives as a shim
-//! over the same codecs (per-matrix `.claq` files + `fp_parts.bin` +
-//! `method.txt` + `awq_scales.bin`); loading a directory that cannot prove
-//! its AWQ scales fails loudly instead of silently mis-dequantizing.
+//! The deprecated `save_dir`/`load_dir` directory layout (per-matrix
+//! `.claq` files + `fp_parts.bin` + `method.txt` + `awq_scales.bin`) is
+//! gone: `CLAQMD01` is the only checkpoint format.
 
 use super::io::{fp_parts_byte_len, FpParts};
 use super::quantized::QuantizedModel;
 use super::{MatrixId, MatrixKind};
 use crate::quant::packed::{self, PackedMatrix};
 use anyhow::{anyhow, bail, ensure, Context, Result};
-use std::collections::{HashMap, HashSet};
+use std::collections::HashSet;
 use std::io::Write;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"CLAQMD01";
 const CONTAINER_MAGIC: &[u8; 8] = b"CLAQPK01";
 const VQ_CONTAINER_MAGIC: &[u8; 8] = b"CLAQVQ01";
-const AWQ_MAGIC: &[u8; 8] = b"CLAQAW01";
-
-/// File names of the deprecated directory layout.
-pub const METHOD_FILE: &str = "method.txt";
-pub const FP_FILE: &str = "fp_parts.bin";
-pub const AWQ_FILE: &str = "awq_scales.bin";
 
 /// Fixed per-entry framing bytes: layer u32 + kind u8 + awq_len u32 +
 /// container_len u32.
@@ -294,8 +287,7 @@ impl Checkpoint {
         if pos != b.len() {
             bail!("trailing bytes ({} unread)", b.len() - pos);
         }
-        // The dir shim's discipline applies to the single file too: an
-        // AWQ-method checkpoint without scales would cold-start into an
+        // An AWQ-method checkpoint without scales would cold-start into an
         // engine that serves scaled weights it never unscales.
         if method_uses_awq(&method_name) {
             for e in &entries {
@@ -331,114 +323,6 @@ impl Checkpoint {
 /// bytes written (what the pipeline's save-after-quantize option records).
 pub fn save_checkpoint(qm: &QuantizedModel, path: &Path) -> Result<u64> {
     Checkpoint::from_quantized(qm)?.save(path)
-}
-
-// -------------------------------------------- deprecated directory shim ----
-
-/// Deprecated: the pre-checkpoint one-file-per-matrix layout, now written
-/// through the same codecs (per-matrix `CLAQPK01` files, a `CLAQFP01`
-/// `fp_parts.bin` — FP parts only, no stale dense projections — plus
-/// `method.txt` and, for AWQ models, `awq_scales.bin`). Prefer
-/// [`Checkpoint::save`] / [`save_checkpoint`].
-pub fn save_dir(qm: &QuantizedModel, dir: &Path) -> Result<()> {
-    let ckpt = Checkpoint::from_quantized(qm)?;
-    std::fs::create_dir_all(dir)?;
-    for e in &ckpt.entries {
-        packed::save(&e.container, &dir.join(format!("{}.claq", e.id.name())))?;
-    }
-    ckpt.fp.save(&dir.join(FP_FILE))?;
-    std::fs::write(dir.join(METHOD_FILE), &ckpt.method_name)?;
-    if ckpt.entries.iter().any(|e| e.awq_scales.is_some()) {
-        let mut out = Vec::new();
-        out.extend_from_slice(AWQ_MAGIC);
-        let n = ckpt.entries.iter().filter(|e| e.awq_scales.is_some()).count();
-        out.extend_from_slice(&(n as u32).to_le_bytes());
-        for e in &ckpt.entries {
-            if let Some(s) = &e.awq_scales {
-                out.extend_from_slice(&(e.id.layer as u32).to_le_bytes());
-                out.push(e.id.kind.to_u8());
-                out.extend_from_slice(&(s.len() as u32).to_le_bytes());
-                for &v in s {
-                    out.extend_from_slice(&v.to_le_bytes());
-                }
-            }
-        }
-        std::fs::write(dir.join(AWQ_FILE), out)?;
-    }
-    Ok(())
-}
-
-fn load_awq_file(path: &Path) -> Result<HashMap<MatrixId, Vec<f32>>> {
-    let b = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
-    ensure!(b.len() >= 12 && &b[..8] == AWQ_MAGIC, "bad AWQ scales file");
-    let n = u32::from_le_bytes(b[8..12].try_into().unwrap()) as usize;
-    let mut pos = 12usize;
-    let mut out = HashMap::with_capacity(n);
-    for _ in 0..n {
-        ensure!(pos + 9 <= b.len(), "truncated AWQ scales file");
-        let layer = u32::from_le_bytes(b[pos..pos + 4].try_into().unwrap()) as usize;
-        let kind = MatrixKind::from_u8(b[pos + 4])
-            .ok_or_else(|| anyhow!("invalid matrix kind in AWQ scales file"))?;
-        let len = u32::from_le_bytes(b[pos + 5..pos + 9].try_into().unwrap()) as usize;
-        pos += 9;
-        ensure!(pos + 4 * len <= b.len(), "truncated AWQ scales file");
-        let scales = b[pos..pos + 4 * len]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        pos += 4 * len;
-        ensure!(
-            out.insert(MatrixId { layer, kind }, scales).is_none(),
-            "duplicate AWQ scales entry"
-        );
-    }
-    ensure!(pos == b.len(), "trailing bytes in AWQ scales file");
-    Ok(out)
-}
-
-/// Deprecated inverse of [`save_dir`]. Fails loudly on the legacy
-/// pre-checkpoint layout (no `method.txt` — those directories dropped AWQ
-/// scales at save time), and on any AWQ-method directory whose
-/// `awq_scales.bin` is missing: such a model cannot dequantize correctly,
-/// so refusing beats silently serving wrong weights.
-pub fn load_dir(dir: &Path) -> Result<Checkpoint> {
-    let method_name = std::fs::read_to_string(dir.join(METHOD_FILE))
-        .map_err(|_| {
-            anyhow!(
-                "{} has no {METHOD_FILE}: this is the legacy pre-checkpoint save_dir layout, \
-                 which dropped AWQ scales and wrote stale dense projections — requantize and \
-                 re-save with the current format",
-                dir.display()
-            )
-        })?
-        .trim()
-        .to_string();
-    let fp = FpParts::load(&dir.join(FP_FILE))?;
-    let cfg = fp.config;
-    let mut awq = if dir.join(AWQ_FILE).exists() {
-        load_awq_file(&dir.join(AWQ_FILE))?
-    } else {
-        HashMap::new()
-    };
-    if method_uses_awq(&method_name) && awq.is_empty() {
-        bail!(
-            "{} holds AWQ model '{}' but no {AWQ_FILE}: without activation scales the \
-             quantized weights cannot be dequantized — requantize and re-save",
-            dir.display(),
-            method_name
-        );
-    }
-    let mut entries = Vec::with_capacity(cfg.n_layers * MatrixKind::ALL.len());
-    for layer in 0..cfg.n_layers {
-        for kind in MatrixKind::ALL {
-            let id = MatrixId { layer, kind };
-            let pm = packed::load(&dir.join(format!("{}.claq", id.name())))?;
-            validate_container_header(&pm.bytes, id, kind.shape(&cfg))?;
-            entries.push(CheckpointEntry { id, awq_scales: awq.remove(&id), container: pm });
-        }
-    }
-    ensure!(awq.is_empty(), "AWQ scales present for matrices not in the model");
-    Ok(Checkpoint { method_name, fp, entries })
 }
 
 #[cfg(test)]
@@ -590,28 +474,4 @@ mod tests {
         assert!(format!("{err:#}").contains("scales"), "{err:#}");
     }
 
-    #[test]
-    fn dir_shim_round_trips_and_legacy_is_refused() {
-        let qm = with_awq_scales(quantized(&Method::Claq { bits: 3 }));
-        let dir = uniq_path("dir");
-        save_dir(&qm, &dir).unwrap();
-        let back = load_dir(&dir).unwrap();
-        assert_eq!(back.method_name, "AWQ-4");
-        assert_eq!(back.entries.len(), qm.matrices.len());
-        for e in &back.entries {
-            assert_eq!(e.awq_scales.as_ref(), qm.awq_scales.get(&e.id));
-        }
-
-        // deleting the scales file simulates the legacy lossy layout: an
-        // AWQ directory without scales must be refused, not half-loaded
-        std::fs::remove_file(dir.join(AWQ_FILE)).unwrap();
-        let err = load_dir(&dir).unwrap_err();
-        assert!(format!("{err:#}").contains("scales"), "{err:#}");
-
-        // a directory without method.txt is the legacy layout: refused
-        std::fs::remove_file(dir.join(METHOD_FILE)).unwrap();
-        let err = load_dir(&dir).unwrap_err();
-        assert!(format!("{err:#}").contains("legacy"), "{err:#}");
-        let _ = std::fs::remove_dir_all(&dir);
-    }
 }

@@ -16,14 +16,13 @@
 //! The module also defines [`FpParts`] — the **FP-only** subset of a model
 //! (config, token embedding, norms, LM head; no attention/MLP projection
 //! weights). It is the FP block of the single-file CLAQMD01 checkpoint
-//! (`model/checkpoint.rs`) and, with the `CLAQFP01` magic, a standalone
-//! file in the deprecated `save_dir` layout. Serializing a quantized
-//! model's FP side through `FpParts` instead of `save_model` is what keeps
-//! checkpoints smaller than the FP artifact: the dense projections (stale
-//! copies for a quantized model) are never written.
+//! (`model/checkpoint.rs`). Serializing a quantized model's FP side
+//! through `FpParts` instead of `save_model` is what keeps checkpoints
+//! smaller than the FP artifact: the dense projections (stale copies for a
+//! quantized model) are never written.
 //!
 //! ```text
-//! CLAQFP01 block (after the optional magic):
+//! FP block (no magic — the checkpoint owns framing):
 //! vocab u32 | d_model u32 | n_layers u32 | n_heads u32 | d_ff u32 |
 //! max_seq u32 | rope_theta f32 | eps f32
 //! tok_embed (vocab×d f32)
@@ -39,8 +38,6 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"CLAQWT01";
-/// Magic of a standalone FP-parts file (deprecated `save_dir` layout).
-pub const FP_MAGIC: &[u8; 8] = b"CLAQFP01";
 
 fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
     // bulk conversion: f32 slice -> LE bytes
@@ -73,8 +70,8 @@ fn read_f32(r: &mut impl Read) -> Result<f32> {
     Ok(f32::from_le_bytes(b))
 }
 
-/// Write the 32-byte config block (shared by CLAQWT01, CLAQFP01, and the
-/// checkpoint codec).
+/// Write the 32-byte config block (shared by CLAQWT01 and the checkpoint
+/// codec).
 fn write_config(w: &mut impl Write, c: &TransformerConfig) -> Result<()> {
     for v in [c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.max_seq] {
         w.write_all(&(v as u32).to_le_bytes())?;
@@ -167,8 +164,8 @@ pub fn load_model(path: &Path) -> Result<Model> {
 /// gains, final norm, and LM head. This is everything a packed execution
 /// model needs besides the CLAQ planes — the dense projection weights are
 /// deliberately absent (for a quantized model they are stale copies, and
-/// writing them made the old `save_dir` artifact *larger* than the FP
-/// checkpoint it was meant to replace).
+/// writing them would make the checkpoint larger than the FP artifact it
+/// replaces).
 #[derive(Clone, Debug)]
 pub struct FpParts {
     pub config: TransformerConfig,
@@ -243,40 +240,6 @@ impl FpParts {
         Ok(Self { config, tok_embed, attn_norms, mlp_norms, final_norm, lm_head })
     }
 
-    /// Save as a standalone `CLAQFP01` file (the `save_dir` shim's
-    /// `fp_parts.bin`).
-    pub fn save(&self, path: &Path) -> Result<()> {
-        let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
-        let mut w = std::io::BufWriter::new(f);
-        w.write_all(FP_MAGIC)?;
-        self.write_to(&mut w)?;
-        w.flush()?;
-        Ok(())
-    }
-
-    /// Load a standalone FP-parts file. Accepts `CLAQFP01` (the current
-    /// layout) and, as a migration path, a full `CLAQWT01` model file —
-    /// the layout the pre-checkpoint `save_dir` wrote — from which only
-    /// the FP parts are kept.
-    pub fn load(path: &Path) -> Result<Self> {
-        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
-        let mut r = std::io::BufReader::new(f);
-        let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
-        if &magic == MAGIC {
-            drop(r);
-            return Ok(Self::from_model(&load_model(path)?));
-        }
-        if &magic != FP_MAGIC {
-            bail!("bad magic in {} (expected CLAQFP01 or CLAQWT01)", path.display());
-        }
-        let parts = Self::read_from(&mut r)?;
-        let mut probe = [0u8; 1];
-        if r.read(&mut probe)? != 0 {
-            bail!("trailing bytes in {}", path.display());
-        }
-        Ok(parts)
-    }
 }
 
 #[cfg(test)]
@@ -339,25 +302,6 @@ mod tests {
         assert_eq!(back.mlp_norms[0], m.layers[0].mlp_norm);
         assert_eq!(back.final_norm, m.final_norm);
         assert_eq!(back.lm_head.data, m.lm_head.data);
-
-        // standalone file round trip, and the legacy CLAQWT01 migration path
-        let fp_path = crate::util::tmp::unique_path("io_fp").with_extension("bin");
-        parts.save(&fp_path).unwrap();
-        assert_eq!(std::fs::metadata(&fp_path).unwrap().len() as usize, 8 + buf.len());
-        let from_file = FpParts::load(&fp_path).unwrap();
-        assert_eq!(from_file.lm_head.data, m.lm_head.data);
-        let full_path = crate::util::tmp::unique_path("io_full").with_extension("bin");
-        save_model(&m, &full_path).unwrap();
-        let from_full = FpParts::load(&full_path).unwrap();
-        assert_eq!(from_full.tok_embed.data, m.tok_embed.data);
-        assert_eq!(from_full.attn_norms.len(), cfg.n_layers);
-        // the FP-parts file is strictly smaller than the full model file
-        assert!(
-            std::fs::metadata(&fp_path).unwrap().len()
-                < std::fs::metadata(&full_path).unwrap().len()
-        );
-        let _ = std::fs::remove_file(&fp_path);
-        let _ = std::fs::remove_file(&full_path);
     }
 
     #[test]

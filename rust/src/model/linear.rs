@@ -36,6 +36,17 @@
 //!   every serial/parallel/batched bit-identity property still holds
 //!   exactly under either kernel.
 //!
+//! Per-column bit widths may differ (CLAQ adaptive precision assigns each
+//! column its own width), so scalar planes are stored as maximal
+//! *equal-bit runs* ([`equal_bit_runs`]): lane-concatenated planes and
+//! codebooks with uniform strides. A column tile that falls inside one run
+//! decodes with a single bit-width dispatch ([`decode_run_tile_into`]);
+//! a tile straddling a run boundary decodes lane by lane. Which path a
+//! tile takes changes decode cost only — decoded floats are bit-identical,
+//! and tile boundaries sit at fixed multiples of `COL_TILE` regardless of
+//! the run structure, so the accumulation order stays a function of `cols`
+//! alone and every bit-identity contract holds for mixed-bit matrices too.
+//!
 //! Both backends shard their output rows across the process-wide
 //! [`ThreadPool`] (see [`run_row_sharded`]): every shard computes a
 //! disjoint block of output features for the whole batch, decoding only
@@ -49,8 +60,8 @@
 
 use crate::quant::gptq::{QuantPlanes, QuantizedMatrix};
 use crate::quant::packed::{
-    decode_plane_range_into, decode_plane_tile_into, pack_indices, unpack_indices_range_into,
-    PackedMatrix,
+    decode_plane_range_into, decode_plane_tile_into, decode_run_tile_into, equal_bit_runs,
+    pack_indices, unpack_indices_range_into, PackedMatrix,
 };
 use crate::tensor::Matrix;
 use crate::util::threadpool::ThreadPool;
@@ -435,13 +446,46 @@ impl LinearOp for DenseLinear {
     }
 }
 
-/// One quantized input feature: bit-packed row indices + decoded codebook.
-struct PackedColumn {
+/// A maximal run of adjacent equal-bit columns, stored lane-concatenated:
+/// lane `l` (column `c0 + l`) owns plane bytes
+/// `planes[l·plane_stride..][..plane_stride]` and codebook floats
+/// `centroids[l·cent_stride..][..cent_stride]`. Mixed-precision matrices
+/// (CLAQ adaptive precision gives every column its own bit width) decompose
+/// into these runs via [`equal_bit_runs`]; the uniform strides within a run
+/// are what let the tiled kernel decode a whole column tile with a single
+/// bit-width dispatch ([`decode_run_tile_into`]).
+struct PackedRun {
+    /// First column of the run.
+    c0: usize,
+    /// Columns in the run.
+    len: usize,
+    /// Index width shared by every column of the run (1..=8).
     bits: u8,
-    /// Codebook centroids decoded to f32 (2^bits entries, ≤ 256).
+    /// Packed plane bytes per column: ceil(rows·bits / 8).
+    plane_stride: usize,
+    /// `len · plane_stride` bytes, lane-major (the container plane layout
+    /// per lane, LSB-first).
+    planes: Vec<u8>,
+    /// Codebook floats per column: `1 << bits` (short quantizer codebooks
+    /// are zero-padded; indices never reach the padding).
+    cent_stride: usize,
+    /// `len · cent_stride` f32 centroids, lane-major.
     centroids: Vec<f32>,
-    /// `rows` indices, `bits` wide, LSB-first (the container plane layout).
-    plane: Vec<u8>,
+}
+
+impl PackedRun {
+    fn lane_plane(&self, l: usize) -> &[u8] {
+        &self.planes[l * self.plane_stride..(l + 1) * self.plane_stride]
+    }
+
+    fn lane_centroids(&self, l: usize) -> &[f32] {
+        &self.centroids[l * self.cent_stride..(l + 1) * self.cent_stride]
+    }
+
+    /// One past the last column of the run.
+    fn end(&self) -> usize {
+        self.c0 + self.len
+    }
 }
 
 /// One vector-quantized column group: a single bit-packed index plane
@@ -460,7 +504,10 @@ struct PackedVqGroup {
 /// backend decodes. Both variants share the outlier CSR, AWQ scales, and
 /// row-sharded dispatch; only the gather differs.
 enum PackedPlanes {
-    Columns(Vec<PackedColumn>),
+    /// Per-column scalar planes, grouped into maximal equal-bit runs.
+    /// `col_run[c]` is the index of the run owning column `c` — the O(1)
+    /// lookup behind the tiled kernel's whole-tile-in-one-run test.
+    Columns { runs: Vec<PackedRun>, col_run: Vec<u32> },
     Vq { group_dim: usize, bits: u8, groups: Vec<PackedVqGroup> },
 }
 
@@ -496,19 +543,36 @@ impl PackedLinear {
         let planes = match &qm.planes {
             QuantPlanes::Columns(qcols) => {
                 assert_eq!(qcols.len(), cols);
-                PackedPlanes::Columns(
-                    qcols
-                        .iter()
-                        .map(|qc| {
-                            assert_eq!(qc.indices.len(), rows);
-                            PackedColumn {
-                                bits: qc.bits,
-                                centroids: qc.codebook.centroids.clone(),
-                                plane: pack_indices(&qc.indices, qc.bits),
-                            }
-                        })
-                        .collect(),
-                )
+                let bit_map: Vec<u8> = qcols.iter().map(|qc| qc.bits).collect();
+                let mut runs: Vec<PackedRun> = Vec::new();
+                let mut col_run = vec![0u32; cols];
+                for br in equal_bit_runs(&bit_map) {
+                    let plane_stride = (rows * br.bits as usize).div_ceil(8);
+                    let cent_stride = 1usize << br.bits;
+                    let mut planes = Vec::with_capacity(br.len * plane_stride);
+                    let mut centroids = Vec::with_capacity(br.len * cent_stride);
+                    for l in 0..br.len {
+                        let qc = &qcols[br.c0 + l];
+                        assert_eq!(qc.indices.len(), rows);
+                        planes.extend_from_slice(&pack_indices(&qc.indices, qc.bits));
+                        let cb = &qc.codebook.centroids;
+                        assert!(cb.len() <= cent_stride, "codebook larger than 2^bits");
+                        centroids.extend_from_slice(cb);
+                        centroids.resize((l + 1) * cent_stride, 0.0);
+                        col_run[br.c0 + l] = runs.len() as u32;
+                    }
+                    debug_assert_eq!(planes.len(), br.len * plane_stride);
+                    runs.push(PackedRun {
+                        c0: br.c0,
+                        len: br.len,
+                        bits: br.bits,
+                        plane_stride,
+                        planes,
+                        cent_stride,
+                        centroids,
+                    });
+                }
+                PackedPlanes::Columns { runs, col_run }
             }
             QuantPlanes::Groups(vp) => {
                 let d = vp.group_dim;
@@ -586,7 +650,7 @@ impl PackedLinear {
     /// vector-quantized column groups).
     pub fn plane_kind(&self) -> crate::quant::vq::PlaneKind {
         match &self.planes {
-            PackedPlanes::Columns(_) => crate::quant::vq::PlaneKind::Scalar,
+            PackedPlanes::Columns { .. } => crate::quant::vq::PlaneKind::Scalar,
             PackedPlanes::Vq { group_dim, .. } => {
                 crate::quant::vq::PlaneKind::VectorGroup { d: *group_dim }
             }
@@ -619,34 +683,51 @@ impl PackedLinear {
         }
     }
 
-    /// Decode rows `[r0, r1)` of column `c` (dequant + outlier override +
-    /// AWQ un-scaling) into `out[..r1-r0]` — the per-column gather of the
-    /// scalar kernel, bit-by-bit plane walk.
+    /// Decode rows `[r0, r1)` of column `c` — lane `l` of `run` — (dequant
+    /// + outlier override + AWQ un-scaling) into `out[..r1-r0]`: the
+    /// per-column gather of the scalar kernel, bit-by-bit plane walk.
     fn decode_column_range_into(
         &self,
-        pc: &PackedColumn,
+        run: &PackedRun,
+        l: usize,
         c: usize,
         r0: usize,
         r1: usize,
         out: &mut [f32],
     ) {
-        decode_plane_range_into(&pc.plane, pc.bits, &pc.centroids, r0, &mut out[..r1 - r0]);
+        debug_assert_eq!(run.c0 + l, c);
+        decode_plane_range_into(
+            run.lane_plane(l),
+            run.bits,
+            run.lane_centroids(l),
+            r0,
+            &mut out[..r1 - r0],
+        );
         self.apply_column_overrides(c, r0, r1, out);
     }
 
     /// Same decode through the bulk index unpack — the tiled kernel's
-    /// per-column gather. Indices are exact integers either way, so the
-    /// decoded values are bit-identical to
+    /// per-column gather, used for tiles that straddle a run boundary and
+    /// for the ragged column tail. Indices are exact integers either way,
+    /// so the decoded values are bit-identical to
     /// [`Self::decode_column_range_into`]; only the decode cost differs.
     fn decode_column_tile_into(
         &self,
-        pc: &PackedColumn,
+        run: &PackedRun,
+        l: usize,
         c: usize,
         r0: usize,
         r1: usize,
         out: &mut [f32],
     ) {
-        decode_plane_tile_into(&pc.plane, pc.bits, &pc.centroids, r0, &mut out[..r1 - r0]);
+        debug_assert_eq!(run.c0 + l, c);
+        decode_plane_tile_into(
+            run.lane_plane(l),
+            run.bits,
+            run.lane_centroids(l),
+            r0,
+            &mut out[..r1 - r0],
+        );
         self.apply_column_overrides(c, r0, r1, out);
     }
 
@@ -694,24 +775,29 @@ impl PackedLinear {
     /// updates, per-element accumulation in dense dot-product order.
     fn forward_scalar(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut LinearScratch) {
         let (rows, cols) = (self.rows, self.cols);
-        let columns = match &self.planes {
-            PackedPlanes::Columns(c) => c,
+        let runs = match &self.planes {
+            PackedPlanes::Columns { runs, .. } => runs,
             PackedPlanes::Vq { .. } => unreachable!("VQ planes take forward_vq"),
         };
         run_row_sharded(rows, cols, seq, 1, out, scratch, |r0, r1, decode, stage| {
             let bl = r1 - r0;
             stage[..seq * bl].fill(0.0);
-            for (c, pc) in columns.iter().enumerate() {
-                self.decode_column_range_into(pc, c, r0, r1, decode);
-                let col = &decode[..bl];
-                for t in 0..seq {
-                    let xv = x[t * cols + c];
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let o = &mut stage[t * bl..(t + 1) * bl];
-                    for (ov, &wv) in o.iter_mut().zip(col) {
-                        *ov += xv * wv;
+            // Runs tile [0, cols) in order, so iterating run-by-run visits
+            // columns in the same ascending order as before.
+            for run in runs {
+                for l in 0..run.len {
+                    let c = run.c0 + l;
+                    self.decode_column_range_into(run, l, c, r0, r1, decode);
+                    let col = &decode[..bl];
+                    for t in 0..seq {
+                        let xv = x[t * cols + c];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let o = &mut stage[t * bl..(t + 1) * bl];
+                        for (ov, &wv) in o.iter_mut().zip(col) {
+                            *ov += xv * wv;
+                        }
                     }
                 }
             }
@@ -720,13 +806,19 @@ impl PackedLinear {
 
     /// The tiled kernel body: [`COL_TILE`] columns decoded in bulk per
     /// pass, then one rank-4 [`axpy4`] update per batch row, so every
-    /// decoded tile is reused across all tokens of the step. The ragged
-    /// column tail falls back to rank-1 [`axpy1`] updates. The resulting
-    /// per-element accumulation order is a function of `cols` alone.
+    /// decoded tile is reused across all tokens of the step. A tile that
+    /// falls entirely inside one equal-bit run takes the fused path — one
+    /// bit-width dispatch decodes all four lanes
+    /// ([`decode_run_tile_into`]); a tile straddling a run boundary (only
+    /// possible for mixed-bit matrices) decodes lane by lane. Both paths
+    /// produce bit-identical floats, and tile boundaries sit at fixed
+    /// multiples of `COL_TILE` regardless of the run structure, so the
+    /// per-element accumulation order stays a function of `cols` alone.
+    /// The ragged column tail falls back to rank-1 [`axpy1`] updates.
     fn forward_tiled(&self, x: &[f32], seq: usize, out: &mut [f32], scratch: &mut LinearScratch) {
         let (rows, cols) = (self.rows, self.cols);
-        let columns = match &self.planes {
-            PackedPlanes::Columns(c) => c,
+        let (runs, col_run) = match &self.planes {
+            PackedPlanes::Columns { runs, col_run } => (runs.as_slice(), col_run.as_slice()),
             PackedPlanes::Vq { .. } => unreachable!("VQ planes take forward_vq"),
         };
         run_row_sharded(rows, cols, seq, COL_TILE, out, scratch, |r0, r1, decode, stage| {
@@ -734,14 +826,34 @@ impl PackedLinear {
             stage[..seq * bl].fill(0.0);
             let mut c = 0usize;
             while c + COL_TILE <= cols {
-                let (w0, rest) = decode.split_at_mut(bl);
-                let (w1, rest) = rest.split_at_mut(bl);
-                let (w2, rest) = rest.split_at_mut(bl);
-                let w3 = &mut rest[..bl];
-                self.decode_column_tile_into(&columns[c], c, r0, r1, w0);
-                self.decode_column_tile_into(&columns[c + 1], c + 1, r0, r1, w1);
-                self.decode_column_tile_into(&columns[c + 2], c + 2, r0, r1, w2);
-                self.decode_column_tile_into(&columns[c + 3], c + 3, r0, r1, w3);
+                let run = &runs[col_run[c] as usize];
+                if c + COL_TILE <= run.end() {
+                    let l0 = c - run.c0;
+                    decode_run_tile_into(
+                        &run.planes[l0 * run.plane_stride..(l0 + COL_TILE) * run.plane_stride],
+                        run.plane_stride,
+                        run.bits,
+                        &run.centroids[l0 * run.cent_stride..(l0 + COL_TILE) * run.cent_stride],
+                        run.cent_stride,
+                        COL_TILE,
+                        r0,
+                        &mut decode[..COL_TILE * bl],
+                    );
+                    for k in 0..COL_TILE {
+                        self.apply_column_overrides(c + k, r0, r1, &mut decode[k * bl..][..bl]);
+                    }
+                } else {
+                    for k in 0..COL_TILE {
+                        let rn = &runs[col_run[c + k] as usize];
+                        let l = c + k - rn.c0;
+                        let dst = &mut decode[k * bl..][..bl];
+                        self.decode_column_tile_into(rn, l, c + k, r0, r1, dst);
+                    }
+                }
+                let w0 = &decode[..bl];
+                let w1 = &decode[bl..2 * bl];
+                let w2 = &decode[2 * bl..3 * bl];
+                let w3 = &decode[3 * bl..4 * bl];
                 for t in 0..seq {
                     let xi = &x[t * cols + c..t * cols + c + COL_TILE];
                     let o = &mut stage[t * bl..(t + 1) * bl];
@@ -750,7 +862,8 @@ impl PackedLinear {
                 c += COL_TILE;
             }
             while c < cols {
-                self.decode_column_tile_into(&columns[c], c, r0, r1, &mut decode[..bl]);
+                let rn = &runs[col_run[c] as usize];
+                self.decode_column_tile_into(rn, c - rn.c0, c, r0, r1, &mut decode[..bl]);
                 let col = &decode[..bl];
                 for t in 0..seq {
                     axpy1(&mut stage[t * bl..(t + 1) * bl], x[t * cols + c], col);
@@ -784,7 +897,7 @@ impl PackedLinear {
         let (rows, cols) = (self.rows, self.cols);
         let (group_dim, bits, groups) = match &self.planes {
             PackedPlanes::Vq { group_dim, bits, groups } => (*group_dim, *bits, groups),
-            PackedPlanes::Columns(_) => unreachable!("scalar planes take forward_scalar/tiled"),
+            PackedPlanes::Columns { .. } => unreachable!("scalar planes take forward_scalar/tiled"),
         };
         run_row_sharded(rows, cols, seq, group_dim, out, scratch, |r0, r1, decode, stage| {
             let bl = r1 - r0;
@@ -856,10 +969,10 @@ impl LinearOp for PackedLinear {
         assert!(out.len() >= seq * rows, "out too short for seq={seq}");
         let out = &mut out[..seq * rows];
         match (&self.planes, self.kernel) {
-            (PackedPlanes::Columns(_), KernelKind::Scalar) => {
+            (PackedPlanes::Columns { .. }, KernelKind::Scalar) => {
                 self.forward_scalar(x, seq, out, scratch)
             }
-            (PackedPlanes::Columns(_), KernelKind::Tiled) => {
+            (PackedPlanes::Columns { .. }, KernelKind::Tiled) => {
                 self.forward_tiled(x, seq, out, scratch)
             }
             (PackedPlanes::Vq { .. }, kernel) => {
@@ -870,9 +983,11 @@ impl LinearOp for PackedLinear {
 
     fn weight_bytes(&self) -> usize {
         let planes: usize = match &self.planes {
-            PackedPlanes::Columns(columns) => columns
+            // Per run: packed planes + f32 codebooks + one bits byte per
+            // column — the same accounting as the old per-column storage.
+            PackedPlanes::Columns { runs, .. } => runs
                 .iter()
-                .map(|c| c.plane.len() + c.centroids.len() * std::mem::size_of::<f32>() + 1)
+                .map(|r| r.planes.len() + r.centroids.len() * std::mem::size_of::<f32>() + r.len)
                 .sum(),
             PackedPlanes::Vq { groups, .. } => groups
                 .iter()
@@ -886,7 +1001,7 @@ impl LinearOp for PackedLinear {
 
     fn decoded_plane_bytes(&self) -> usize {
         match &self.planes {
-            PackedPlanes::Columns(columns) => columns.iter().map(|c| c.plane.len()).sum(),
+            PackedPlanes::Columns { runs, .. } => runs.iter().map(|r| r.planes.len()).sum(),
             PackedPlanes::Vq { groups, .. } => groups.iter().map(|g| g.plane.len()).sum(),
         }
     }
@@ -910,6 +1025,27 @@ mod tests {
         let mut w = Matrix::zeros(rows, cols);
         rng.fill_normal(&mut w.data, 0.1);
         let mut plan = MatrixPlan::uniform(cols, bits, CentroidRule::KMeans, false);
+        plan.reserve = vec![reserve; cols];
+        let qm = quantize_matrix(&w, None, &plan);
+        (w, qm)
+    }
+
+    /// Mixed per-column bit widths: `bit_of(c)` picks column `c`'s width,
+    /// so tests can place run boundaries mid-tile.
+    fn sample_mixed(
+        seed: u64,
+        rows: usize,
+        cols: usize,
+        reserve: usize,
+        bit_of: impl Fn(usize) -> u8,
+    ) -> (Matrix, QuantizedMatrix) {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut w.data, 0.1);
+        let mut plan = MatrixPlan::uniform(cols, 2, CentroidRule::KMeans, false);
+        for (c, b) in plan.bits.iter_mut().enumerate() {
+            *b = bit_of(c);
+        }
         plan.reserve = vec![reserve; cols];
         let qm = quantize_matrix(&w, None, &plan);
         (w, qm)
@@ -993,6 +1129,77 @@ mod tests {
         for (p, q) in a.iter().zip(&b) {
             assert!((p - q).abs() <= 1e-5 * (1.0 + q.abs()), "{p} vs {q}");
         }
+    }
+
+    /// Mixed-bit planes against the dense dequant, under both kernels.
+    /// The bit pattern places run boundaries so the tiled kernel exercises
+    /// every path: tile [0,4) inside the 2-bit run (fused run decode),
+    /// tiles [4,8) and [8,12) straddling run boundaries (per-lane
+    /// fallback), and a ragged 2-column tail — with reserved outliers on
+    /// every column.
+    #[test]
+    fn mixed_bit_packed_matches_dense_dequant() {
+        let bits: [u8; 14] = [2, 2, 2, 2, 2, 2, 4, 4, 4, 3, 3, 3, 3, 8];
+        let (_, qm) = sample_mixed(41, 33, bits.len(), 2, |c| bits[c]);
+        let deq = qm.dequantize();
+        for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+            let packed = PackedLinear::from_quantized(&qm, None).with_kernel(kernel);
+            let mut rng = Rng::new(42);
+            let seq = 5;
+            let mut x = vec![0.0f32; seq * bits.len()];
+            rng.fill_normal(&mut x, 1.0);
+            let want = dense_ref(&deq, &x, seq);
+            let mut got = vec![0.0f32; seq * 33];
+            let mut scratch = LinearScratch::new();
+            packed.forward_into(&x, seq, &mut got, &mut scratch);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{kernel:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// The DESIGN.md §12 bit-identity contract holds for mixed-bit
+    /// matrices: shapes over the parallel threshold agree bit-for-bit with
+    /// row-at-a-time serial runs under both kernels, because which decode
+    /// path a tile takes (fused run vs per-lane fallback) never changes
+    /// the decoded floats or the accumulation schedule.
+    #[test]
+    fn mixed_bit_sharded_forward_is_bit_identical_to_serial() {
+        // runs of 5, 4, and 1 columns repeating — boundaries at
+        // non-multiples of COL_TILE, so both tile paths run
+        let (_, qm) = sample_mixed(43, 160, 96, 1, |c| match c % 10 {
+            0..=4 => 2,
+            5..=8 => 4,
+            _ => 3,
+        });
+        for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+            let packed = PackedLinear::from_quantized(&qm, None).with_kernel(kernel);
+            let mut rng = Rng::new(44);
+            let seq = 8; // 8 × 160 × 96 MACs — well over PAR_MIN_MACS
+            let mut x = vec![0.0f32; seq * 96];
+            rng.fill_normal(&mut x, 1.0);
+
+            let mut want = vec![0.0f32; seq * 160];
+            let mut scratch = LinearScratch::new();
+            for t in 0..seq {
+                let row = &x[t * 96..(t + 1) * 96];
+                packed.forward_into(row, 1, &mut want[t * 160..(t + 1) * 160], &mut scratch);
+            }
+
+            let mut got = vec![0.0f32; seq * 160];
+            packed.forward_into(&x, seq, &mut got, &mut scratch);
+            assert_eq!(got, want, "{kernel:?} mixed-bit sharded kernel diverged from serial");
+        }
+    }
+
+    /// Mixed-bit byte accounting: each column's plane is ceil(rows·bits/8)
+    /// bytes regardless of how columns group into runs.
+    #[test]
+    fn mixed_bit_decoded_plane_bytes_exact() {
+        let (_, qm) = sample_mixed(45, 128, 64, 0, |c| if c < 48 { 2 } else { 4 });
+        let packed = PackedLinear::from_quantized(&qm, None);
+        // 48 columns of ceil(128·2/8) = 32 bytes + 16 of ceil(128·4/8) = 64
+        assert_eq!(packed.decoded_plane_bytes(), 48 * 32 + 16 * 64);
     }
 
     #[test]

@@ -263,15 +263,6 @@ impl QuantizedModel {
         ExecModel::from_checkpoint(Checkpoint::from_quantized(self)?)
     }
 
-    /// Deprecated: the one-file-per-matrix directory layout, kept as a
-    /// shim over the checkpoint codecs (`model/checkpoint.rs::save_dir`).
-    /// Unlike the pre-checkpoint version, AWQ scales are serialized and
-    /// the FP file holds only tok_embed/norms/LM head — never the stale
-    /// dense projections. Prefer [`QuantizedModel::save`].
-    pub fn save_dir(&self, dir: &std::path::Path) -> Result<()> {
-        checkpoint::save_dir(self, dir)
-    }
-
     /// Mean relative Frobenius error across quantized matrices (diagnostic).
     pub fn mean_rel_err(&self) -> f64 {
         if self.matrices.is_empty() {
@@ -383,19 +374,6 @@ mod tests {
         assert_eq!(rep.vq_matrices, 1);
         assert_eq!(rep.scalar_matrices, m.matrix_ids().len() - 1);
         assert_eq!(rep.scalar_container_bytes + rep.vq_container_bytes, rep.container_bytes);
-    }
-
-    #[test]
-    fn save_dir_writes_files() {
-        let m = small();
-        let qm = quantize_all(&m, 3);
-        let dir = uniq_path("dir");
-        let _ = std::fs::remove_dir_all(&dir);
-        qm.save_dir(&dir).unwrap();
-        let n = std::fs::read_dir(&dir).unwrap().count();
-        // matrices + fp_parts.bin + method.txt (no awq_scales.bin here)
-        assert_eq!(n, m.matrix_ids().len() + 2);
-        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// The old save_dir serialized the *full dense model* (stale quantized

@@ -204,6 +204,225 @@ impl Method {
     }
 }
 
+// ------------------------------------------------------------ MethodSpec ----
+
+/// A [`Method`] parsed from (and printable as) the typed spec grammar —
+/// the single method-selection surface shared by the CLI (`--method`),
+/// the benches, and the tests:
+///
+/// ```text
+/// fp16                      no quantization
+/// rtn:B | gptq:B | awq:B    uniform baselines, integer B in 1..=8
+/// claq:B                    CLAQ single precision (K-Means + OBS)
+/// claq-ap:LO+HI@T           adaptive precision: pair (LO, HI), target T
+/// claq-or:B+E               outlier reservation: base B, budget E bits
+/// claq-or-fixed:B+E         uniform-per-column reservation baseline
+/// claq-vq:dDbB              vector groups of D columns, B index bits
+/// fusion-2.12               Appendix F presets (2.12 / 2.24 / 3.12 / 3.23)
+/// fusion:LO+HI@A+O          generic fusion: AP target A, OR budget O
+/// ```
+///
+/// `claq-fusion-…` is accepted as an alias for `fusion-…`. Parsing is
+/// case-insensitive; [`std::fmt::Display`] prints the canonical lowercase
+/// spelling, and `parse(display(spec))` returns an equal [`Method`] for
+/// every spec the parser can produce (pinned by `tests/mixed_bits.rs`).
+/// The legacy `--bits`/`--hi`/`--lo`/`--group-dim` flag spelling survives
+/// one more release as a documented alias in `tables/cli_entry.rs`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MethodSpec(pub Method);
+
+impl MethodSpec {
+    /// One-line grammar reminder, embedded in every parse error.
+    pub const GRAMMAR: &'static str = "fp16 | rtn:B | gptq:B | awq:B | claq:B | \
+         claq-ap:LO+HI@T | claq-or:B+E | claq-or-fixed:B+E | claq-vq:dDbB | \
+         fusion-2.12|2.24|3.12|3.23 | fusion:LO+HI@A+O";
+
+    pub fn method(&self) -> &Method {
+        &self.0
+    }
+
+    pub fn into_method(self) -> Method {
+        self.0
+    }
+}
+
+fn spec_bits(s: &str, what: &str) -> Result<u8, String> {
+    let b: u8 = s
+        .parse()
+        .map_err(|_| format!("{what}: '{s}' is not an integer bit width (want 1..=8)"))?;
+    if !(1..=8).contains(&b) {
+        return Err(format!("{what}: bit width {b} out of range (the container packs 1..=8-bit index planes)"));
+    }
+    Ok(b)
+}
+
+fn spec_f64(s: &str, what: &str) -> Result<f64, String> {
+    s.parse::<f64>().map_err(|_| format!("{what}: '{s}' is not a number"))
+}
+
+/// Parse `LO+HI` into a validated [`BitPair`].
+fn spec_pair(s: &str, what: &str) -> Result<BitPair, String> {
+    let (lo_s, hi_s) = s
+        .split_once('+')
+        .ok_or_else(|| format!("{what}: expected LO+HI (e.g. 2+4), got '{s}'"))?;
+    let lo = spec_bits(lo_s, what)?;
+    let hi = spec_bits(hi_s, what)?;
+    if lo >= hi {
+        return Err(format!("{what}: require LO < HI, got {lo}+{hi}"));
+    }
+    Ok(BitPair::new(hi, lo))
+}
+
+fn spec_fusion_preset(tag: &str) -> Result<Method, String> {
+    match tag {
+        "2.12" => Ok(Method::fusion_2_12()),
+        "2.24" => Ok(Method::fusion_2_24()),
+        "3.12" => Ok(Method::fusion_3_12()),
+        "3.23" => Ok(Method::fusion_3_23()),
+        other => Err(format!(
+            "unknown fusion preset '{other}' (Appendix F defines 2.12, 2.24, 3.12, 3.23; \
+             arbitrary budgets spell fusion:LO+HI@A+O)"
+        )),
+    }
+}
+
+impl std::str::FromStr for MethodSpec {
+    type Err = String;
+
+    fn from_str(raw: &str) -> Result<Self, Self::Err> {
+        let s = raw.trim().to_ascii_lowercase();
+        let fail = |msg: String| format!("bad method spec '{raw}': {msg} [grammar: {}]", MethodSpec::GRAMMAR);
+        if s == "fp16" {
+            return Ok(MethodSpec(Method::Fp16));
+        }
+        // Preset sugar (and its historical alias) uses '-', not ':'.
+        if let Some(tag) = s.strip_prefix("fusion-").or_else(|| s.strip_prefix("claq-fusion-")) {
+            return spec_fusion_preset(tag).map(MethodSpec).map_err(fail);
+        }
+        let (head, rest) = s
+            .split_once(':')
+            .ok_or_else(|| fail(format!("no ':' found and '{s}' is not fp16 or a fusion-X.YZ preset")))?;
+        let m = match head {
+            "rtn" => Method::Rtn { bits: spec_bits(rest, "rtn").map_err(fail)? },
+            "gptq" => Method::Gptq { bits: spec_bits(rest, "gptq").map_err(fail)? },
+            "awq" => Method::Awq { bits: spec_bits(rest, "awq").map_err(fail)? },
+            "claq" => Method::Claq { bits: spec_bits(rest, "claq").map_err(fail)? },
+            "claq-ap" => {
+                let (pair_s, t_s) = rest
+                    .split_once('@')
+                    .ok_or_else(|| fail("claq-ap: expected LO+HI@TARGET (e.g. 2+4@2.05)".into()))?;
+                let pair = spec_pair(pair_s, "claq-ap").map_err(fail)?;
+                let target = spec_f64(t_s, "claq-ap target").map_err(fail)?;
+                if !(pair.lo as f64 <= target && target <= pair.hi as f64) {
+                    return Err(fail(format!(
+                        "claq-ap: target {target} outside [{}, {}] — no column mix of the pair can hit it",
+                        pair.lo, pair.hi
+                    )));
+                }
+                Method::ClaqAp { pair, target_bits: target, metric: ColumnMetric::OutlierRatio, s: DEFAULT_S }
+            }
+            "claq-or" | "claq-or-fixed" => {
+                let (b_s, e_s) = rest
+                    .split_once('+')
+                    .ok_or_else(|| fail(format!("{head}: expected B+E (e.g. 2+0.14)")))?;
+                let bits = spec_bits(b_s, head).map_err(fail)?;
+                let budget = spec_f64(e_s, "reservation budget").map_err(fail)?;
+                if !(0.0..=16.0).contains(&budget) {
+                    return Err(fail(format!("{head}: budget {budget} bits/param out of range [0, 16]")));
+                }
+                if head == "claq-or" {
+                    Method::ClaqOr { bits, budget_bits: budget, setting: OrSetting::SETTING2, s: DEFAULT_S }
+                } else {
+                    Method::ClaqOrFixed { bits, budget_bits: budget }
+                }
+            }
+            "claq-vq" => {
+                let body = rest
+                    .strip_prefix('d')
+                    .ok_or_else(|| fail("claq-vq: expected dDbB (e.g. d4b2)".into()))?;
+                let (d_s, b_s) = body
+                    .split_once('b')
+                    .ok_or_else(|| fail("claq-vq: expected dDbB (e.g. d4b2)".into()))?;
+                let d: usize = d_s
+                    .parse()
+                    .map_err(|_| fail(format!("claq-vq: '{d_s}' is not a group dim")))?;
+                if !(1..=255).contains(&d) {
+                    return Err(fail(format!(
+                        "claq-vq: group dim {d} out of range [1, 255] — the CLAQVQ01 header stores it as u8"
+                    )));
+                }
+                Method::ClaqVq { d, bits: spec_bits(b_s, "claq-vq").map_err(fail)? }
+            }
+            "fusion" => {
+                let (pair_s, budgets) = rest
+                    .split_once('@')
+                    .ok_or_else(|| fail("fusion: expected LO+HI@A+O (e.g. 2+4@2.05+0.07)".into()))?;
+                let pair = spec_pair(pair_s, "fusion").map_err(fail)?;
+                let (a_s, o_s) = budgets
+                    .split_once('+')
+                    .ok_or_else(|| fail("fusion: expected AP+OR budgets after '@' (e.g. 2.05+0.07)".into()))?;
+                let ap = spec_f64(a_s, "fusion AP target").map_err(fail)?;
+                let or = spec_f64(o_s, "fusion OR budget").map_err(fail)?;
+                if !(pair.lo as f64 <= ap && ap <= pair.hi as f64) {
+                    return Err(fail(format!(
+                        "fusion: AP target {ap} outside [{}, {}]",
+                        pair.lo, pair.hi
+                    )));
+                }
+                if !(0.0..=16.0).contains(&or) {
+                    return Err(fail(format!("fusion: OR budget {or} bits/param out of range [0, 16]")));
+                }
+                Method::ClaqFusion {
+                    pair,
+                    ap_target_bits: ap,
+                    or_budget_bits: or,
+                    setting: OrSetting::SETTING2,
+                    s: DEFAULT_S,
+                }
+            }
+            other => {
+                return Err(fail(format!("unknown method family '{other}'")));
+            }
+        };
+        Ok(MethodSpec(m))
+    }
+}
+
+impl std::fmt::Display for MethodSpec {
+    /// The canonical spelling — preset sugar for the four Appendix F
+    /// fusion points, the generic grammar everywhere else.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (preset, tag) in [
+            (Method::fusion_2_12(), "2.12"),
+            (Method::fusion_2_24(), "2.24"),
+            (Method::fusion_3_12(), "3.12"),
+            (Method::fusion_3_23(), "3.23"),
+        ] {
+            if self.0 == preset {
+                return write!(f, "fusion-{tag}");
+            }
+        }
+        match &self.0 {
+            Method::Fp16 => write!(f, "fp16"),
+            Method::Rtn { bits } => write!(f, "rtn:{bits}"),
+            Method::Gptq { bits } => write!(f, "gptq:{bits}"),
+            Method::Awq { bits } => write!(f, "awq:{bits}"),
+            Method::Claq { bits } => write!(f, "claq:{bits}"),
+            Method::ClaqAp { pair, target_bits, .. } => {
+                write!(f, "claq-ap:{}+{}@{}", pair.lo, pair.hi, target_bits)
+            }
+            Method::ClaqOr { bits, budget_bits, .. } => write!(f, "claq-or:{bits}+{budget_bits}"),
+            Method::ClaqOrFixed { bits, budget_bits } => {
+                write!(f, "claq-or-fixed:{bits}+{budget_bits}")
+            }
+            Method::ClaqFusion { pair, ap_target_bits, or_budget_bits, .. } => {
+                write!(f, "fusion:{}+{}@{}+{}", pair.lo, pair.hi, ap_target_bits, or_budget_bits)
+            }
+            Method::ClaqVq { d, bits } => write!(f, "claq-vq:d{d}b{bits}"),
+        }
+    }
+}
+
 fn plan_with_reserve(bits: BitPlan, reserve: ReservePlan) -> MatrixPlan {
     MatrixPlan {
         bits: bits.bits,
@@ -293,5 +512,92 @@ mod tests {
         assert!(!Method::Fp16.needs_hessian());
         assert!(!Method::Rtn { bits: 4 }.needs_hessian());
         assert!(Method::Claq { bits: 2 }.needs_hessian());
+    }
+
+    #[test]
+    fn method_spec_parses_every_family() {
+        let cases: [(&str, Method); 10] = [
+            ("fp16", Method::Fp16),
+            ("rtn:4", Method::Rtn { bits: 4 }),
+            ("gptq:3", Method::Gptq { bits: 3 }),
+            ("awq:4", Method::Awq { bits: 4 }),
+            ("claq:2", Method::Claq { bits: 2 }),
+            (
+                "claq-ap:2+4@2.05",
+                Method::ClaqAp {
+                    pair: BitPair::new(4, 2),
+                    target_bits: 2.05,
+                    metric: ColumnMetric::OutlierRatio,
+                    s: DEFAULT_S,
+                },
+            ),
+            (
+                "claq-or:2+0.14",
+                Method::ClaqOr {
+                    bits: 2,
+                    budget_bits: 0.14,
+                    setting: OrSetting::SETTING2,
+                    s: DEFAULT_S,
+                },
+            ),
+            ("claq-or-fixed:2+0.14", Method::ClaqOrFixed { bits: 2, budget_bits: 0.14 }),
+            ("claq-vq:d4b2", Method::ClaqVq { d: 4, bits: 2 }),
+            ("fusion-2.12", Method::fusion_2_12()),
+        ];
+        for (spec, want) in cases {
+            let got: MethodSpec = spec.parse().unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(got.0, want, "{spec}");
+        }
+        // alias + case insensitivity + generic fusion
+        assert_eq!("claq-fusion-3.12".parse::<MethodSpec>().unwrap().0, Method::fusion_3_12());
+        assert_eq!("CLAQ:4".parse::<MethodSpec>().unwrap().0, Method::Claq { bits: 4 });
+        assert_eq!("fusion:2+4@2.05+0.07".parse::<MethodSpec>().unwrap().0, Method::fusion_2_12());
+    }
+
+    #[test]
+    fn method_spec_rejects_malformed_with_context() {
+        for (spec, needle) in [
+            ("claq:9", "out of range"),
+            ("claq:two", "not an integer"),
+            ("claq-ap:4+2@3", "LO < HI"),
+            ("claq-ap:2+4@5", "outside"),
+            ("claq-ap:2+4", "TARGET"),
+            ("claq-vq:d4b12", "out of range"),
+            ("claq-vq:d0b2", "group dim"),
+            ("claq-vq:4x2", "dDbB"),
+            ("fusion-2.5", "unknown fusion preset"),
+            ("warp:3", "unknown method family"),
+            ("claq", "no ':'"),
+        ] {
+            let err = spec.parse::<MethodSpec>().unwrap_err();
+            assert!(err.contains(needle), "{spec}: error '{err}' missing '{needle}'");
+            assert!(err.contains("grammar"), "{spec}: error '{err}' should cite the grammar");
+        }
+    }
+
+    #[test]
+    fn method_spec_display_round_trips() {
+        for spec in [
+            "fp16",
+            "rtn:4",
+            "gptq:3",
+            "awq:4",
+            "claq:2",
+            "claq-ap:2+4@2.05",
+            "claq-or:2+0.14",
+            "claq-or-fixed:3+0.07",
+            "claq-vq:d4b2",
+            "fusion-2.12",
+            "fusion-2.24",
+            "fusion:2+4@2.2+0.1",
+        ] {
+            let parsed: MethodSpec = spec.parse().unwrap();
+            let shown = parsed.to_string();
+            let reparsed: MethodSpec = shown.parse().unwrap_or_else(|e| panic!("{shown}: {e}"));
+            assert_eq!(parsed, reparsed, "{spec} -> {shown}");
+        }
+        // presets canonicalize to their sugar, aliases included
+        assert_eq!("claq-fusion-2.12".parse::<MethodSpec>().unwrap().to_string(), "fusion-2.12");
+        assert_eq!("fusion:2+4@2.05+0.07".parse::<MethodSpec>().unwrap().to_string(), "fusion-2.12");
     }
 }

@@ -259,6 +259,85 @@ pub fn decode_plane_tile_into(
     }
 }
 
+// -------------------------------------------------- mixed-bit run tiles ----
+
+/// A maximal run of adjacent columns sharing one bit width — the unit the
+/// mixed-bit tiled kernel decodes with a single bit-width dispatch
+/// (DESIGN.md §16). Runs partition `[0, cols)` in column order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitRun {
+    /// First column of the run.
+    pub c0: usize,
+    /// Number of columns in the run.
+    pub len: usize,
+    /// The shared index bit width.
+    pub bits: u8,
+}
+
+impl BitRun {
+    /// One past the last column of the run.
+    pub fn end(&self) -> usize {
+        self.c0 + self.len
+    }
+}
+
+/// Decompose a per-column bit-width map into maximal equal-bit runs. An
+/// adaptive-precision plan (`BitPlan`) promotes a *set* of columns to the
+/// hi width, so a mixed-bit matrix is typically a handful of long runs —
+/// each of which the tiled kernel can hand to the PR 6 bulk per-bit-width
+/// unpackers with one dispatch, instead of re-dispatching per column.
+pub fn equal_bit_runs(bits: &[u8]) -> Vec<BitRun> {
+    let mut runs: Vec<BitRun> = Vec::new();
+    for (c, &b) in bits.iter().enumerate() {
+        match runs.last_mut() {
+            Some(r) if r.bits == b => r.len += 1,
+            _ => runs.push(BitRun { c0: c, len: 1, bits: b }),
+        }
+    }
+    runs
+}
+
+/// Multi-lane variant of [`decode_plane_tile_into`] for an equal-bit run:
+/// decode the same `[start, start + out.len()/lanes)` row window of
+/// `lanes` adjacent columns that share one `bits` width, with a single
+/// bit-width dispatch covering every lane. Lane `l` reads the packed
+/// plane at `planes[l·plane_stride ..]`, gathers through the `2^bits`
+/// centroids at `centroids[l·cent_stride ..]`, and writes
+/// `out[l·bl .. (l+1)·bl]` (`bl = out.len()/lanes`, the kernels'
+/// lane-major tile layout). Exactly the values per-column
+/// [`decode_plane_tile_into`] produces — bit-identical, not just close —
+/// so swapping the per-column loop for the run decode is invisible to the
+/// serial/sharded/batched identity contract of `model/linear.rs`.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_run_tile_into(
+    planes: &[u8],
+    plane_stride: usize,
+    bits: u8,
+    centroids: &[f32],
+    cent_stride: usize,
+    lanes: usize,
+    start: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(lanes > 0 && out.len() % lanes == 0, "ragged lane tile");
+    let bl = out.len() / lanes;
+    let k = 1usize << bits;
+    let mut idx = [0u8; 64];
+    for (l, dst) in out.chunks_exact_mut(bl).enumerate() {
+        let plane = &planes[l * plane_stride..(l + 1) * plane_stride];
+        let cb = &centroids[l * cent_stride..l * cent_stride + k];
+        let mut done = 0usize;
+        while done < bl {
+            let chunk = (bl - done).min(64);
+            unpack_indices_range_into(plane, bits, start + done, &mut idx[..chunk]);
+            for (o, &i) in dst[done..done + chunk].iter_mut().zip(&idx[..chunk]) {
+                *o = cb[i as usize];
+            }
+            done += chunk;
+        }
+    }
+}
+
 /// Unpack `n` indices of `bits` width from a packed byte stream.
 pub fn unpack_indices(packed: &[u8], bits: u8, n: usize) -> Vec<u8> {
     assert!((1..=8).contains(&bits));
@@ -741,6 +820,100 @@ mod tests {
             decode_plane_tile_into(&packed, bits, &centroids, start, &mut got);
             // same indices, same gather: bit-identical, not just close
             assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn equal_bit_runs_partition_in_order() {
+        assert_eq!(equal_bit_runs(&[]), vec![]);
+        assert_eq!(equal_bit_runs(&[4]), vec![BitRun { c0: 0, len: 1, bits: 4 }]);
+        let runs = equal_bit_runs(&[2, 2, 4, 4, 4, 2, 8]);
+        assert_eq!(
+            runs,
+            vec![
+                BitRun { c0: 0, len: 2, bits: 2 },
+                BitRun { c0: 2, len: 3, bits: 4 },
+                BitRun { c0: 5, len: 1, bits: 2 },
+                BitRun { c0: 6, len: 1, bits: 8 },
+            ]
+        );
+        // runs tile [0, cols) exactly, in column order
+        let mut next = 0usize;
+        for r in &runs {
+            assert_eq!(r.c0, next);
+            next = r.end();
+        }
+        assert_eq!(next, 7);
+    }
+
+    #[test]
+    fn equal_bit_runs_property() {
+        check_default("equal-bit runs", |rng| {
+            let n = 1 + rng.below_usize(40);
+            let bits: Vec<u8> = (0..n).map(|_| 1 + rng.below(4) as u8).collect();
+            let runs = equal_bit_runs(&bits);
+            let mut next = 0usize;
+            for (i, r) in runs.iter().enumerate() {
+                assert_eq!(r.c0, next, "runs must tile in order");
+                assert!(r.len > 0);
+                assert!(bits[r.c0..r.end()].iter().all(|&b| b == r.bits));
+                if i > 0 {
+                    assert_ne!(runs[i - 1].bits, r.bits, "adjacent runs must differ (maximal)");
+                }
+                next = r.end();
+            }
+            assert_eq!(next, n);
+        });
+    }
+
+    #[test]
+    fn run_tile_decode_matches_per_column_decode() {
+        check_default("run tile decode", |rng| {
+            let bits = 1 + rng.below_usize(8) as u8;
+            let k = 1usize << bits;
+            let rows = 1 + rng.below_usize(150);
+            let lanes = 1 + rng.below_usize(4);
+            let plane_stride = (rows * bits as usize).div_ceil(8);
+            // lane-concatenated planes and codebooks, as PackedRun stores
+            let mut planes = Vec::new();
+            let mut centroids = Vec::new();
+            let mut per_lane_idx = Vec::new();
+            for _ in 0..lanes {
+                let idx: Vec<u8> = (0..rows).map(|_| rng.below(k as u64) as u8).collect();
+                let packed = pack_indices(&idx, bits);
+                assert_eq!(packed.len(), plane_stride);
+                planes.extend_from_slice(&packed);
+                centroids.extend((0..k).map(|_| rng.normal_f32()));
+                per_lane_idx.push(idx);
+            }
+            let start = rng.below_usize(rows);
+            let bl = 1 + rng.below_usize(rows - start);
+            let mut got = vec![0.0f32; lanes * bl];
+            decode_run_tile_into(
+                &planes,
+                plane_stride,
+                bits,
+                &centroids,
+                k,
+                lanes,
+                start,
+                &mut got,
+            );
+            // reference: the per-column tile decode, lane by lane
+            for l in 0..lanes {
+                let mut want = vec![0.0f32; bl];
+                decode_plane_tile_into(
+                    &planes[l * plane_stride..(l + 1) * plane_stride],
+                    bits,
+                    &centroids[l * k..(l + 1) * k],
+                    start,
+                    &mut want,
+                );
+                assert_eq!(got[l * bl..(l + 1) * bl], want, "lane {l} differs");
+                for (r, &i) in want.iter().zip(&per_lane_idx[l][start..start + bl]) {
+                    assert_eq!(*r, centroids[l * k + i as usize]);
+                }
+            }
         });
     }
 

@@ -178,9 +178,87 @@ pub fn search(matrices: &[MatrixInfo], cfg: &SearchConfig) -> SearchResult {
     best.expect("search space non-empty (Lo-only is always feasible)")
 }
 
+// ---------------------------------------------------------------------------
+// `claq tune` — measured per-layer bit-budget allocation (DESIGN.md §16)
+// ---------------------------------------------------------------------------
+
+/// The autotuner's search space: one adaptive-precision [`BitPair`] shared
+/// by every layer, a global equivalent-bits target, and the granularity at
+/// which budget is handed out (per-layer targets land on the `step_bits`
+/// grid, except when a layer saturates at `hi`).
+#[derive(Clone, Copy, Debug)]
+pub struct TuneSpace {
+    pub pair: crate::quant::precision::BitPair,
+    /// Global parameter-weighted equivalent-bits target across all layers.
+    pub target_bits: f64,
+    /// Allocation granularity in equivalent bits (e.g. 0.125).
+    pub step_bits: f64,
+}
+
+/// One layer's measured response to precision: the perplexity drop per
+/// equivalent bit added to this layer (from the lo→hi probe run against
+/// `perplexity_exec`), and its parameter count (budget accounting weight).
+#[derive(Clone, Debug)]
+pub struct LayerSensitivity {
+    pub layer: usize,
+    pub params: usize,
+    pub ppl_drop_per_bit: f64,
+}
+
+/// Greedy per-layer target allocation under a global equivalent-bits
+/// budget. Layers are ranked by marginal utility density — measured
+/// perplexity drop per bit·param (`ppl_drop_per_bit / params`) — and
+/// filled to `hi` in that order until the budget `(target - lo) ·
+/// Σparams` runs out; partial grants snap *down* to the `step_bits` grid
+/// so the achieved average never exceeds the target. Layers with
+/// non-positive measured sensitivity stay at `lo` (promoting them spends
+/// budget for no measured gain), so the achieved average may undershoot
+/// the target when few layers respond. Deterministic: ties in density
+/// break toward the lower layer index.
+pub fn allocate_layer_targets(space: &TuneSpace, layers: &[LayerSensitivity]) -> Vec<f64> {
+    assert!(!layers.is_empty(), "no layers to allocate over");
+    assert!(space.step_bits > 0.0, "step_bits must be positive");
+    let lo = space.pair.lo as f64;
+    let hi = space.pair.hi as f64;
+    assert!(
+        lo <= space.target_bits && space.target_bits <= hi,
+        "target {} outside [{lo}, {hi}]",
+        space.target_bits
+    );
+
+    let density = |l: &LayerSensitivity| l.ppl_drop_per_bit / l.params.max(1) as f64;
+    let mut order: Vec<usize> =
+        (0..layers.len()).filter(|&i| layers[i].ppl_drop_per_bit > 0.0).collect();
+    order.sort_by(|&a, &b| {
+        density(&layers[b]).partial_cmp(&density(&layers[a])).unwrap().then(a.cmp(&b))
+    });
+
+    let total: f64 = layers.iter().map(|l| l.params as f64).sum();
+    let mut budget = (space.target_bits - lo) * total; // bit·params to hand out
+    let mut targets = vec![lo; layers.len()];
+    for &i in &order {
+        if budget <= 1e-9 {
+            break;
+        }
+        let params = layers[i].params.max(1) as f64;
+        let mut grant = (hi - lo).min(budget / params);
+        if grant < hi - lo {
+            // partial grant: snap down to the step grid
+            grant = (grant / space.step_bits).floor() * space.step_bits;
+        }
+        if grant <= 0.0 {
+            continue;
+        }
+        targets[i] = lo + grant;
+        budget -= grant * params;
+    }
+    targets
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::precision::BitPair;
 
     fn mk(n: usize, spread: f64) -> Vec<MatrixInfo> {
         (0..n)
@@ -258,5 +336,78 @@ mod tests {
         let or_all: f64 = ms.iter().map(|m| m.outlier_ratio).sum::<f64>() / ms.len() as f64;
         let uniform_score = or_all * cfg.ps3 * uniform_p3 * ms.len() as f64;
         assert!(r.score >= uniform_score - 1e-9);
+    }
+
+    fn sens(drops: &[f64]) -> Vec<LayerSensitivity> {
+        drops
+            .iter()
+            .enumerate()
+            .map(|(layer, &d)| LayerSensitivity { layer, params: 1000, ppl_drop_per_bit: d })
+            .collect()
+    }
+
+    fn weighted_mean(targets: &[f64], layers: &[LayerSensitivity]) -> f64 {
+        let total: f64 = layers.iter().map(|l| l.params as f64).sum();
+        targets.iter().zip(layers).map(|(t, l)| t * l.params as f64).sum::<f64>() / total
+    }
+
+    #[test]
+    fn tune_allocation_respects_budget_and_bounds() {
+        let layers = sens(&[5.0, 1.0, 0.2, 0.0]);
+        let space =
+            TuneSpace { pair: BitPair::new(4, 2), target_bits: 2.5, step_bits: 0.125 };
+        let targets = allocate_layer_targets(&space, &layers);
+        assert!(targets.iter().all(|&t| (2.0..=4.0).contains(&t)), "{targets:?}");
+        let mean = weighted_mean(&targets, &layers);
+        assert!(mean <= 2.5 + 1e-9, "over budget: {mean}");
+        // budget = 0.5·4000 bit·params; the most sensitive layer absorbs
+        // exactly all of it by saturating to hi
+        assert_eq!(targets, vec![4.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn tune_allocation_prefers_sensitive_layers() {
+        let layers = sens(&[0.3, 2.0, 0.1, 0.7]);
+        let space =
+            TuneSpace { pair: BitPair::new(4, 2), target_bits: 2.75, step_bits: 0.125 };
+        let targets = allocate_layer_targets(&space, &layers);
+        // fill order must follow sensitivity order: 1, 3, 0, 2
+        assert!(targets[1] >= targets[3] && targets[3] >= targets[0] && targets[0] >= targets[2]);
+        assert_eq!(targets[1], 4.0, "most sensitive layer saturates first: {targets:?}");
+    }
+
+    #[test]
+    fn tune_allocation_zero_sensitivity_stays_lo() {
+        let layers = sens(&[0.0, -0.1, 0.0]);
+        let space =
+            TuneSpace { pair: BitPair::new(4, 2), target_bits: 3.0, step_bits: 0.25 };
+        // nothing measured as responding: keep every layer at lo rather
+        // than spending bits for no gain
+        assert_eq!(allocate_layer_targets(&space, &layers), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn tune_allocation_snaps_partial_grants_to_step_grid() {
+        let layers = sens(&[1.0, 0.5]);
+        let space =
+            TuneSpace { pair: BitPair::new(4, 2), target_bits: 2.3, step_bits: 0.25 };
+        let targets = allocate_layer_targets(&space, &layers);
+        // budget 0.6·2000: layer 0 gets 0.6 snapped down to 0.5; the
+        // 0.1-bit remainder is below one step on layer 1
+        assert_eq!(targets, vec![2.5, 2.0]);
+        for t in &targets {
+            let frac = (t - 2.0) / 0.25;
+            assert!((frac - frac.round()).abs() < 1e-9, "off-grid target {t}");
+        }
+        let mean = weighted_mean(&targets, &layers);
+        assert!(mean <= 2.3 + 1e-9 && mean >= 2.3 - 0.25, "mean {mean}");
+    }
+
+    #[test]
+    fn tune_allocation_full_budget_saturates_everything() {
+        let layers = sens(&[0.4, 0.2, 0.9]);
+        let space =
+            TuneSpace { pair: BitPair::new(4, 2), target_bits: 4.0, step_bits: 0.125 };
+        assert_eq!(allocate_layer_targets(&space, &layers), vec![4.0, 4.0, 4.0]);
     }
 }

@@ -215,6 +215,168 @@ impl Default for SchedulerConfig {
     }
 }
 
+impl SchedulerConfig {
+    /// The validating front door for configs assembled from user input
+    /// (CLI flags, bench scenarios, example drivers): unset knobs take the
+    /// [`Default`] values, and [`SchedulerConfigBuilder::build`] rejects
+    /// incoherent combinations with a typed error instead of letting them
+    /// panic (or silently misbehave) inside the engine. Struct literals
+    /// remain available for tests that construct configs wholesale.
+    pub fn builder() -> SchedulerConfigBuilder {
+        SchedulerConfigBuilder::default()
+    }
+}
+
+/// An incoherent knob combination rejected by
+/// [`SchedulerConfigBuilder::build`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SchedulerConfigError {
+    /// `max_slots == 0`: the engine needs at least one live slot.
+    ZeroSlots,
+    /// `prefill_token_budget == 0`: a zero budget admits nothing, ever.
+    ZeroPrefillBudget,
+    /// `kv_quant_bits` wider than the cold-page codec supports.
+    KvQuantBitsTooWide { bits: u8 },
+    /// `kv_quant_margin` was set while `kv_quant_bits` is 0 (cold-page
+    /// quantization off) — the margin would silently do nothing.
+    MarginWithoutQuant,
+    /// A bounded `kv_budget_bytes` with `max_queue == 0`: under memory
+    /// pressure preempted requests re-queue, so an unbounded queue turns a
+    /// byte budget into unbounded buffering instead of shedding load.
+    BudgetWithoutQueueBound,
+}
+
+impl std::fmt::Display for SchedulerConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::ZeroSlots => write!(f, "max_slots must be >= 1"),
+            Self::ZeroPrefillBudget => {
+                write!(f, "prefill_token_budget must be >= 1 (a zero budget admits nothing)")
+            }
+            Self::KvQuantBitsTooWide { bits } => {
+                write!(f, "kv_quant_bits ({bits}) exceeds the {MAX_KV_QUANT_BITS}-bit codec")
+            }
+            Self::MarginWithoutQuant => {
+                write!(f, "kv_quant_margin set while kv_quant_bits is 0 (quantization off)")
+            }
+            Self::BudgetWithoutQueueBound => write!(
+                f,
+                "bounded kv_budget_bytes needs a bounded max_queue: preemption re-queues \
+                 requests, so an unbounded queue defeats the byte budget"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SchedulerConfigError {}
+
+/// Builder for [`SchedulerConfig`]; see [`SchedulerConfig::builder`].
+/// Every setter overrides one knob; `build` validates the combination.
+/// Passing a knob its default value is always accepted (so CLI plumbing
+/// can forward flag defaults unconditionally) — the cross-knob checks fire
+/// only on combinations that cannot mean what they say, e.g. a quantizer
+/// margin with quantization off.
+#[derive(Clone, Debug, Default)]
+pub struct SchedulerConfigBuilder {
+    max_slots: Option<usize>,
+    prefill_token_budget: Option<usize>,
+    policy: Option<AdmissionPolicy>,
+    prefix_cache_bytes: Option<usize>,
+    kv_page_tokens: Option<usize>,
+    kv_quant_bits: Option<u8>,
+    kv_quant_margin: Option<usize>,
+    kv_budget_bytes: Option<usize>,
+    max_queue: Option<usize>,
+    deadline_steps: Option<u64>,
+}
+
+impl SchedulerConfigBuilder {
+    pub fn max_slots(mut self, v: usize) -> Self {
+        self.max_slots = Some(v);
+        self
+    }
+
+    pub fn prefill_token_budget(mut self, v: usize) -> Self {
+        self.prefill_token_budget = Some(v);
+        self
+    }
+
+    pub fn policy(mut self, v: AdmissionPolicy) -> Self {
+        self.policy = Some(v);
+        self
+    }
+
+    pub fn prefix_cache_bytes(mut self, v: usize) -> Self {
+        self.prefix_cache_bytes = Some(v);
+        self
+    }
+
+    pub fn kv_page_tokens(mut self, v: usize) -> Self {
+        self.kv_page_tokens = Some(v);
+        self
+    }
+
+    pub fn kv_quant_bits(mut self, v: u8) -> Self {
+        self.kv_quant_bits = Some(v);
+        self
+    }
+
+    pub fn kv_quant_margin(mut self, v: usize) -> Self {
+        self.kv_quant_margin = Some(v);
+        self
+    }
+
+    pub fn kv_budget_bytes(mut self, v: usize) -> Self {
+        self.kv_budget_bytes = Some(v);
+        self
+    }
+
+    pub fn max_queue(mut self, v: usize) -> Self {
+        self.max_queue = Some(v);
+        self
+    }
+
+    pub fn deadline_steps(mut self, v: u64) -> Self {
+        self.deadline_steps = Some(v);
+        self
+    }
+
+    pub fn build(self) -> Result<SchedulerConfig, SchedulerConfigError> {
+        let d = SchedulerConfig::default();
+        let cfg = SchedulerConfig {
+            max_slots: self.max_slots.unwrap_or(d.max_slots),
+            prefill_token_budget: self.prefill_token_budget.unwrap_or(d.prefill_token_budget),
+            policy: self.policy.unwrap_or(d.policy),
+            prefix_cache_bytes: self.prefix_cache_bytes.unwrap_or(d.prefix_cache_bytes),
+            kv_page_tokens: self.kv_page_tokens.unwrap_or(d.kv_page_tokens),
+            kv_quant_bits: self.kv_quant_bits.unwrap_or(d.kv_quant_bits),
+            kv_quant_margin: self.kv_quant_margin.unwrap_or(d.kv_quant_margin),
+            kv_budget_bytes: self.kv_budget_bytes.unwrap_or(d.kv_budget_bytes),
+            max_queue: self.max_queue.unwrap_or(d.max_queue),
+            deadline_steps: self.deadline_steps.unwrap_or(d.deadline_steps),
+        };
+        if cfg.max_slots == 0 {
+            return Err(SchedulerConfigError::ZeroSlots);
+        }
+        if cfg.prefill_token_budget == 0 {
+            return Err(SchedulerConfigError::ZeroPrefillBudget);
+        }
+        if cfg.kv_quant_bits > MAX_KV_QUANT_BITS {
+            return Err(SchedulerConfigError::KvQuantBitsTooWide { bits: cfg.kv_quant_bits });
+        }
+        // Explicitly-set-to-zero bits means "quantization off" like unset
+        // bits do; the margin check fires only when a margin was *set*
+        // while quantization is off.
+        if self.kv_quant_margin.is_some() && cfg.kv_quant_bits == 0 {
+            return Err(SchedulerConfigError::MarginWithoutQuant);
+        }
+        if cfg.kv_budget_bytes > 0 && cfg.max_queue == 0 {
+            return Err(SchedulerConfigError::BudgetWithoutQueueBound);
+        }
+        Ok(cfg)
+    }
+}
+
 /// Counters for the serving report; pool numbers come straight from the
 /// [`KvPagePool`], residency from a distinct-page walk over every live
 /// and pinned page table (each shared page counted once).
@@ -1563,5 +1725,88 @@ mod tests {
         assert_eq!(stats.preempted, 1);
         assert_eq!(stats.resumed, 1);
         assert_eq!(stats.pool_free_pages as u64, stats.pool_pages_created);
+    }
+
+    #[test]
+    fn builder_defaults_match_default() {
+        let built = SchedulerConfig::builder().build().unwrap();
+        let d = SchedulerConfig::default();
+        assert_eq!(built.max_slots, d.max_slots);
+        assert_eq!(built.prefill_token_budget, d.prefill_token_budget);
+        assert_eq!(built.policy, d.policy);
+        assert_eq!(built.prefix_cache_bytes, d.prefix_cache_bytes);
+        assert_eq!(built.kv_page_tokens, d.kv_page_tokens);
+        assert_eq!(built.kv_quant_bits, d.kv_quant_bits);
+        assert_eq!(built.kv_quant_margin, d.kv_quant_margin);
+        assert_eq!(built.kv_budget_bytes, d.kv_budget_bytes);
+        assert_eq!(built.max_queue, d.max_queue);
+        assert_eq!(built.deadline_steps, d.deadline_steps);
+    }
+
+    /// CLI plumbing forwards flag defaults unconditionally, so setting a
+    /// knob to its default value must always build — including explicit
+    /// zeros for the "off" knobs.
+    #[test]
+    fn builder_accepts_explicit_defaults() {
+        let cfg = SchedulerConfig::builder()
+            .max_slots(4)
+            .prefill_token_budget(256)
+            .policy(AdmissionPolicy::Continuous)
+            .kv_page_tokens(64)
+            .kv_quant_bits(0)
+            .kv_budget_bytes(0)
+            .max_queue(0)
+            .deadline_steps(0)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.max_slots, 4);
+        assert_eq!(cfg.kv_quant_bits, 0);
+    }
+
+    #[test]
+    fn builder_rejects_degenerate_knobs() {
+        assert_eq!(
+            SchedulerConfig::builder().max_slots(0).build().unwrap_err(),
+            SchedulerConfigError::ZeroSlots
+        );
+        assert_eq!(
+            SchedulerConfig::builder().prefill_token_budget(0).build().unwrap_err(),
+            SchedulerConfigError::ZeroPrefillBudget
+        );
+        assert_eq!(
+            SchedulerConfig::builder().kv_quant_bits(MAX_KV_QUANT_BITS + 1).build().unwrap_err(),
+            SchedulerConfigError::KvQuantBitsTooWide { bits: MAX_KV_QUANT_BITS + 1 }
+        );
+    }
+
+    /// A margin with quantization off would silently do nothing — rejected
+    /// whether bits were left unset or explicitly set to 0. Margins with
+    /// bits on build fine.
+    #[test]
+    fn builder_rejects_margin_without_quant() {
+        assert_eq!(
+            SchedulerConfig::builder().kv_quant_margin(64).build().unwrap_err(),
+            SchedulerConfigError::MarginWithoutQuant
+        );
+        assert_eq!(
+            SchedulerConfig::builder().kv_quant_bits(0).kv_quant_margin(64).build().unwrap_err(),
+            SchedulerConfigError::MarginWithoutQuant
+        );
+        let cfg =
+            SchedulerConfig::builder().kv_quant_bits(4).kv_quant_margin(64).build().unwrap();
+        assert_eq!((cfg.kv_quant_bits, cfg.kv_quant_margin), (4, 64));
+    }
+
+    /// A bounded byte budget re-queues preempted requests, so it demands a
+    /// bounded queue; with a queue bound (or no budget) it builds.
+    #[test]
+    fn builder_rejects_budget_without_queue_bound() {
+        assert_eq!(
+            SchedulerConfig::builder().kv_budget_bytes(1 << 20).build().unwrap_err(),
+            SchedulerConfigError::BudgetWithoutQueueBound
+        );
+        let cfg = SchedulerConfig::builder().kv_budget_bytes(1 << 20).max_queue(8).build().unwrap();
+        assert_eq!(cfg.kv_budget_bytes, 1 << 20);
+        assert!(SchedulerConfig::builder().kv_budget_bytes(0).max_queue(0).build().is_ok());
     }
 }

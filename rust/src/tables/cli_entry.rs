@@ -6,17 +6,19 @@
 
 use super::runner::{emit, render_table, Harness, ModelKey};
 use super::{figures, tables_ablation, tables_appendix, tables_main};
-use crate::coordinator::pipeline::{quantize_model, PipelineOpts};
+use crate::coordinator::pipeline::{quantize_model, quantize_model_tuned, PipelineOpts};
 use crate::coordinator::registry::artifacts_dir;
 use crate::data::calibration::default_calibration;
-use crate::data::corpus::CorpusKind;
-use crate::model::exec::{ExecState, DEFAULT_PAGE_TOKENS};
+use crate::data::corpus::{generate, CorpusKind};
+use crate::eval::perplexity::perplexity_exec;
+use crate::model::exec::{argmax, decode_step, prefill, ExecState, KvCache, DEFAULT_PAGE_TOKENS};
 use crate::model::io::load_model;
 use crate::model::{MatrixId, MatrixKind, Model, TransformerConfig};
-use crate::quant::config::{Method, DEFAULT_S};
+use crate::quant::config::{Method, MethodSpec, DEFAULT_S};
 use crate::quant::outliers::{ColumnMetric, OutlierStats};
 use crate::quant::precision::BitPair;
 use crate::quant::reservation::OrSetting;
+use crate::quant::search::{allocate_layer_targets, LayerSensitivity, TuneSpace};
 use crate::runtime::executor::ColdStart;
 use crate::runtime::scheduler::{AdmissionPolicy, Request, Scheduler, SchedulerConfig};
 use crate::util::cli::Args;
@@ -43,10 +45,34 @@ fn parse_bit_pair(args: &Args, bits: f64) -> Result<BitPair> {
     Ok(BitPair::new(hi, lo))
 }
 
-/// Parse a `--method NAME --bits B [--s S] [--setting N] [--hi H --lo L]
-/// [--group-dim D]` method spec.
+/// Parse `--method`. The front door is the typed spec grammar
+/// (`quant/config.rs::MethodSpec`): anything containing a `:` — plus the
+/// `fusion-X.YZ` presets and `fp16` — goes through `FromStr` with
+/// parse-time validation and exhaustive errors, e.g.
+/// `--method claq-ap:2+4@2.05`, `--method claq-vq:d4b2`,
+/// `--method fusion-2.12`.
+///
+/// Bare legacy names (`claq`, `claq-ap`, …) still take the historical
+/// `--bits B [--s S] [--setting N] [--hi H --lo L] [--group-dim D]` flag
+/// spelling — kept as documented aliases for one release; prefer the spec
+/// grammar.
 pub fn parse_method(args: &Args) -> Result<Method> {
     let name = args.get_or("method", "claq");
+    if name == "fp16"
+        || name.contains(':')
+        || name.starts_with("fusion-")
+        || name.starts_with("claq-fusion-")
+    {
+        return name
+            .parse::<MethodSpec>()
+            .map(MethodSpec::into_method)
+            .map_err(anyhow::Error::msg);
+    }
+    parse_method_legacy(args, name)
+}
+
+/// The pre-MethodSpec flag plumbing (deprecated alias path).
+fn parse_method_legacy(args: &Args, name: &str) -> Result<Method> {
     let bits: f64 = args.get_parse_or("bits", 4.0).map_err(anyhow::Error::msg)?;
     // The container packs 1..=8-bit index planes; reject degenerate widths
     // here instead of panicking deep in the quantizer/pack path. FP16
@@ -287,27 +313,27 @@ pub fn serve(args: &Args) -> Result<()> {
         args.get_parse_or("kv-page-tokens", DEFAULT_PAGE_TOKENS).map_err(anyhow::Error::msg)?;
     let kv_quant_bits: u8 =
         args.get_parse_or("kv-quant-bits", 0).map_err(anyhow::Error::msg)?;
-    anyhow::ensure!(kv_quant_bits <= 8, "--kv-quant-bits must be in [0, 8] (0 = off)");
     let kv_budget_mb: usize =
         args.get_parse_or("kv-budget-mb", 0).map_err(anyhow::Error::msg)?;
     let max_queue: usize = args.get_parse_or("max-queue", 0).map_err(anyhow::Error::msg)?;
     let deadline_steps: u64 =
         args.get_parse_or("deadline-steps", 0).map_err(anyhow::Error::msg)?;
 
-    let mut sched = Scheduler::new(
-        cfg,
-        SchedulerConfig {
-            max_slots: slots,
-            prefill_token_budget: 2 * cfg.max_seq,
-            policy: AdmissionPolicy::Continuous,
-            kv_page_tokens,
-            kv_quant_bits,
-            kv_budget_bytes: kv_budget_mb * (1 << 20),
-            max_queue,
-            deadline_steps,
-            ..SchedulerConfig::default()
-        },
-    );
+    // The validating builder rejects incoherent flag combinations (e.g. a
+    // bounded --kv-budget-mb with an unbounded queue) with a usage error
+    // instead of serving a configuration that can only melt down.
+    let sched_cfg = SchedulerConfig::builder()
+        .max_slots(slots)
+        .prefill_token_budget(2 * cfg.max_seq)
+        .policy(AdmissionPolicy::Continuous)
+        .kv_page_tokens(kv_page_tokens)
+        .kv_quant_bits(kv_quant_bits)
+        .kv_budget_bytes(kv_budget_mb * (1 << 20))
+        .max_queue(max_queue)
+        .deadline_steps(deadline_steps)
+        .build()
+        .map_err(|e| anyhow::anyhow!("{e:#}"))?;
+    let mut sched = Scheduler::new(cfg, sched_cfg);
     // Prompts are sized to the checkpoint's own config (vocab, max_seq).
     let mut rng = Rng::new(seed);
     for _ in 0..n_requests {
@@ -364,6 +390,160 @@ pub fn serve(args: &Args) -> Result<()> {
         stats.kv_pages_quantized_total,
         stats.shared_kv_bytes_saved as f64 / 1e6
     );
+    Ok(())
+}
+
+/// `claq tune [--target 2.5] [--hi 4 --lo 2] [--windows 8]
+/// [--decode-tokens 64] [--out tuned.claq] [--model l|xl|PATH] [--random]
+/// [--seed 17] [--fast] [--smoke]` — the per-layer bit-budget autotuner
+/// (DESIGN.md §16).
+///
+/// Probes each layer's perplexity sensitivity (an all-`lo` baseline run
+/// plus one run per layer with only that layer promoted to `hi`, all
+/// scored with `perplexity_exec` on the packed engine), hands the global
+/// `--target` equivalent-bits budget out greedily across layers
+/// (`quant/search.rs::allocate_layer_targets`), quantizes with the chosen
+/// per-layer `BitPlan` targets, measures the resulting packed engine's
+/// greedy-decode tok/s, and (with `--out`) writes the tuned mixed-bit
+/// CLAQMD01 checkpoint. `--smoke` is the CI mode: a tiny random 2-layer
+/// model, minimal calibration, and a couple of probe windows — exercises
+/// the whole probe → allocate → quantize → serve loop in seconds.
+pub fn tune(args: &Args) -> Result<()> {
+    let smoke = args.has("smoke");
+    let hi: u8 = args.get_parse_or("hi", 4).map_err(anyhow::Error::msg)?;
+    let lo: u8 = args.get_parse_or("lo", 2).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        (1..=8).contains(&lo) && lo < hi && hi <= 8,
+        "--hi/--lo must satisfy 1 <= lo < hi <= 8 (got hi={hi}, lo={lo})"
+    );
+    let pair = BitPair::new(hi, lo);
+    let target: f64 = args.get_parse_or("target", 2.5).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        (lo as f64) <= target && target <= hi as f64,
+        "--target {target} is outside the [{lo}, {hi}] range of --lo/--hi"
+    );
+    let seed: u64 = args.get_parse_or("seed", 17).map_err(anyhow::Error::msg)?;
+    let windows: usize = args
+        .get_parse_or("windows", if smoke { 2 } else { 8 })
+        .map_err(anyhow::Error::msg)?;
+    let windows = windows.max(1);
+    let decode_tokens: usize = args
+        .get_parse_or("decode-tokens", if smoke { 16 } else { 64 })
+        .map_err(anyhow::Error::msg)?;
+    let out = args.get("out").map(PathBuf::from);
+
+    let dir = artifacts_dir();
+    let model = if smoke {
+        // CI smoke: a tiny 2-layer model keeps the n_layers+2 pipeline
+        // runs below a second each; the loop exercised is the real one.
+        let cfg = TransformerConfig {
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 48,
+            max_seq: 32,
+            ..TransformerConfig::tiny_l()
+        };
+        Model::random(cfg, &mut Rng::new(seed))
+    } else if args.has("random") {
+        Model::random(TransformerConfig::tiny_l(), &mut Rng::new(seed))
+    } else {
+        let path = match args.get_or("model", "l") {
+            "l" | "tiny-l" => dir.join(ModelKey::TinyL.weights_file()),
+            "xl" | "tiny-xl" => dir.join(ModelKey::TinyXl.weights_file()),
+            p => PathBuf::from(p),
+        };
+        load_model(&path).with_context(|| {
+            format!(
+                "load weights from {} — run `make artifacts`, pass --model PATH, or use --random",
+                path.display()
+            )
+        })?
+    };
+    let cfg = model.config;
+    let n_segments = if smoke { 4 } else if args.has("fast") { 8 } else { 24 };
+    let calib = default_calibration(&dir, cfg.max_seq, n_segments);
+    // Heldout probe stream, disjoint seed from the calibration sampler.
+    let stream = generate(CorpusKind::SynthC4, windows * cfg.max_seq + cfg.max_seq, 2);
+    let opts = PipelineOpts { verbose: args.has("verbose"), ..Default::default() };
+
+    println!(
+        "tune: {} layers / {} params, pair {lo}+{hi}, target {target:.2} bits/param, \
+         {windows} probe windows",
+        cfg.n_layers,
+        cfg.n_params()
+    );
+    let t0 = Instant::now();
+
+    // 1. all-lo baseline
+    let lo_targets = vec![lo as f64; cfg.n_layers];
+    let (qm_lo, _) = quantize_model_tuned(&model, pair, &lo_targets, DEFAULT_S, &calib, &opts);
+    let ppl_lo = perplexity_exec(&qm_lo.to_exec(), &stream, windows).ppl;
+    println!("  baseline all-{lo}-bit: ppl {ppl_lo:.3}");
+
+    // 2. one probe per layer: only that layer promoted to hi
+    let mut sens = Vec::with_capacity(cfg.n_layers);
+    for layer in 0..cfg.n_layers {
+        let mut t = lo_targets.clone();
+        t[layer] = hi as f64;
+        let (qm_probe, _) = quantize_model_tuned(&model, pair, &t, DEFAULT_S, &calib, &opts);
+        let ppl = perplexity_exec(&qm_probe.to_exec(), &stream, windows).ppl;
+        let params: usize = MatrixKind::ALL
+            .iter()
+            .map(|&kind| {
+                let w = model.matrix(MatrixId { layer, kind });
+                w.rows * w.cols
+            })
+            .sum();
+        let drop_per_bit = (ppl_lo - ppl) / (hi - lo) as f64;
+        println!("  probe layer {layer} at {hi}-bit: ppl {ppl:.3} (drop {drop_per_bit:+.4}/bit)");
+        sens.push(LayerSensitivity { layer, params, ppl_drop_per_bit: drop_per_bit });
+    }
+
+    // 3. greedy budget allocation, then the final tuned quantization
+    let space = TuneSpace { pair, target_bits: target, step_bits: 0.125 };
+    let targets = allocate_layer_targets(&space, &sens);
+    let final_opts = PipelineOpts { save_checkpoint: out.clone(), ..opts };
+    let (qm, stats) = quantize_model_tuned(&model, pair, &targets, DEFAULT_S, &calib, &final_opts);
+    if let Some(err) = stats.checkpoint_error {
+        bail!("checkpoint save failed: {err}");
+    }
+    let exec = qm.to_exec();
+    let ppl = perplexity_exec(&exec, &stream, windows).ppl;
+
+    // 4. measured greedy-decode throughput of the tuned packed engine
+    let prompt_len = (cfg.max_seq / 4).clamp(1, 8);
+    let decode_tokens = decode_tokens.clamp(1, cfg.max_seq - prompt_len);
+    let prompt: Vec<u16> = stream[..prompt_len].to_vec();
+    let mut st = ExecState::new(cfg);
+    let mut cache = KvCache::new(&cfg);
+    let logits = prefill(&exec, &mut cache, &prompt, &mut st);
+    let mut tok = argmax(logits.row(prompt_len - 1));
+    let td = Instant::now();
+    for _ in 0..decode_tokens {
+        let logits = decode_step(&exec, &mut [&mut cache], &[tok], &mut st);
+        tok = argmax(logits.row(0));
+    }
+    let tok_s = decode_tokens as f64 / td.elapsed().as_secs_f64().max(1e-9);
+
+    let total_params: f64 = sens.iter().map(|l| l.params as f64).sum();
+    let achieved: f64 =
+        targets.iter().zip(&sens).map(|(t, l)| t * l.params as f64).sum::<f64>() / total_params;
+    for (layer, t) in targets.iter().enumerate() {
+        println!("  layer {layer}: chosen target {t:.3} bits");
+    }
+    let rep = qm.size_report();
+    println!(
+        "tuned in {:.1}s: {:.3} bits/param allocated ({:.2} container), ppl {ppl:.3} \
+         (all-lo {ppl_lo:.3}), decode {tok_s:.0} tok/s over {decode_tokens} tokens",
+        t0.elapsed().as_secs_f64(),
+        achieved,
+        rep.container_bits_per_param,
+    );
+    if let Some(out) = out {
+        println!("  wrote {} ({} B) — serve it with: claq serve --checkpoint {}",
+            out.display(), rep.checkpoint_bytes, out.display());
+    }
     Ok(())
 }
 

@@ -4,9 +4,10 @@
 use claq::coordinator::pipeline::{quantize_model, PipelineOpts};
 use claq::data::calibration::{sample_segments, CalibConfig};
 use claq::data::corpus::{generate, CorpusKind, VOCAB};
+use claq::model::checkpoint::Checkpoint;
 use claq::model::{Model, TransformerConfig};
 use claq::quant::config::Method;
-use claq::quant::packed::{load, pack, unpack};
+use claq::quant::packed::{load, pack, save, unpack};
 use claq::util::rng::Rng;
 
 #[test]
@@ -28,13 +29,18 @@ fn quantized_model_survives_disk_round_trip() {
 
     let dir = claq::util::tmp::unique_path("container_it");
     let _ = std::fs::remove_dir_all(&dir);
-    qm.save_dir(&dir).unwrap();
+    std::fs::create_dir_all(&dir).unwrap();
 
-    // Every packed matrix reloads to identical dequantized weights modulo
-    // the f16 codebook storage.
+    // Every packed matrix survives a standalone container file round trip
+    // and reloads to identical dequantized weights modulo the f16 codebook
+    // storage.
     for (&id, qmat) in &qm.matrices {
-        let pm = load(&dir.join(format!("{}.claq", id.name()))).unwrap();
-        let back = unpack(&pm).unwrap();
+        let path = dir.join(format!("{}.claq", id.name()));
+        let (pm, _) = pack(qmat).unwrap();
+        save(&pm, &path).unwrap();
+        let pm_back = load(&path).unwrap();
+        assert_eq!(pm.bytes, pm_back.bytes, "{}: container bytes changed on disk", id.name());
+        let back = unpack(&pm_back).unwrap();
         let a = qmat.dequantize();
         let b = back.dequantize();
         let mut max_rel = 0.0f64;
@@ -43,13 +49,15 @@ fn quantized_model_survives_disk_round_trip() {
             max_rel = max_rel.max(((x - y).abs() as f64) / denom);
         }
         assert!(max_rel < 1.0 / 512.0, "{}: f16 codebook error too large {max_rel}", id.name());
-        // and the bytes round-trip exactly
+        // and the bytes round-trip exactly through a re-pack
         let (pm2, _) = pack(&back).unwrap();
         assert_eq!(pm.bytes, pm2.bytes);
     }
 
-    // the deprecated directory shim reloads as a full checkpoint, too
-    let ckpt = claq::model::checkpoint::load_dir(&dir).unwrap();
+    // the single-file checkpoint carries the same set of matrices
+    let ckpt_path = dir.join("model.claqmd");
+    qm.save(&ckpt_path).unwrap();
+    let ckpt = Checkpoint::load(&ckpt_path).unwrap();
     assert_eq!(ckpt.entries.len(), qm.matrices.len());
     assert_eq!(ckpt.method_name, qm.method_name);
     let _ = std::fs::remove_dir_all(&dir);

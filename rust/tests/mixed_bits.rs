@@ -1,0 +1,372 @@
+//! Mixed-precision property suite: the end-to-end contracts ISSUE 10's
+//! tentpole rests on, pinned from outside the crate.
+//!
+//! 1. The typed method-spec grammar round-trips: `parse(display(spec))`
+//!    yields an equal [`Method`] for every spec the parser can produce,
+//!    and malformed specs fail with the grammar in the error.
+//! 2. Mixed-bit packed kernels: tiled agrees with scalar (and with the
+//!    dense dequant) to 1e-5 over adversarial per-column bit patterns —
+//!    run boundaries mid-tile, ragged tails, all-lo/all-hi degenerate
+//!    plans.
+//! 3. Bit-identity: sharded and batched mixed-bit forwards equal the
+//!    row-at-a-time serial forward bit-for-bit under both kernels.
+//! 4. CLAQPK01 containers account mixed-bit planes byte-exactly per
+//!    column, and corrupt per-column bit tags are rejected.
+//! 5. Adaptive precision hits its bit budget: container bits/param within
+//!    0.01 of the AP target at realistic widths.
+//! 6. A mixed-bit model packed via a parsed spec serves from a cold-loaded
+//!    checkpoint bit-identically to the in-memory deployed path across
+//!    prefill, batch-1 greedy decode, and batch-3 decode.
+
+use claq::coordinator::pipeline::{quantize_model, PipelineOpts};
+use claq::data::calibration::{sample_segments, CalibConfig};
+use claq::data::corpus::{generate, CorpusKind, VOCAB};
+use claq::model::checkpoint::Checkpoint;
+use claq::model::exec::{argmax, decode_step, prefill, ExecModel, ExecState, KvCache};
+use claq::model::linear::{KernelKind, LinearOp, LinearScratch, PackedLinear};
+use claq::model::{Model, TransformerConfig};
+use claq::quant::config::{Method, MethodSpec};
+use claq::quant::gptq::{quantize_matrix, CentroidRule, MatrixPlan, QuantizedMatrix};
+use claq::quant::packed::{pack, unpack};
+use claq::tensor::Matrix;
+use claq::util::rng::Rng;
+
+// ------------------------------------------------------------ helpers ----
+
+fn sample_mixed(
+    seed: u64,
+    rows: usize,
+    cols: usize,
+    reserve: usize,
+    bit_of: impl Fn(usize) -> u8,
+) -> (Matrix, QuantizedMatrix) {
+    let mut rng = Rng::new(seed);
+    let mut w = Matrix::zeros(rows, cols);
+    rng.fill_normal(&mut w.data, 0.1);
+    let mut plan = MatrixPlan::uniform(cols, 2, CentroidRule::KMeans, false);
+    for (c, b) in plan.bits.iter_mut().enumerate() {
+        *b = bit_of(c);
+    }
+    plan.reserve = vec![reserve; cols];
+    let qm = quantize_matrix(&w, None, &plan);
+    (w, qm)
+}
+
+fn forward(linear: &PackedLinear, x: &[f32], seq: usize, rows: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; seq * rows];
+    let mut scratch = LinearScratch::new();
+    linear.forward_into(x, seq, &mut out, &mut scratch);
+    out
+}
+
+fn assert_close(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: shape");
+    for (x, y) in a.iter().zip(b) {
+        assert!((x - y).abs() <= 1e-5 * (1.0 + y.abs()), "{ctx}: {x} vs {y}");
+    }
+}
+
+// ------------------------------------------------------ 1. MethodSpec ----
+
+/// Every family the grammar can express, including the degenerate corners.
+/// `parse → display → parse` must land on an equal `Method`, and the
+/// display must be stable (`display(parse(display(s))) == display(parse(s))`).
+#[test]
+fn method_spec_parse_display_round_trips() {
+    let specs = [
+        "fp16",
+        "rtn:4",
+        "gptq:3",
+        "awq:4",
+        "claq:2",
+        "claq:8",
+        "claq-ap:2+4@2.05",
+        "claq-ap:3+4@3.5",
+        "claq-or:2+0.14",
+        "claq-or-fixed:3+0.07",
+        "claq-vq:d4b2",
+        "claq-vq:d1b2",
+        "fusion-2.12",
+        "fusion-2.24",
+        "fusion-3.12",
+        "fusion-3.23",
+        "fusion:2+4@2.3+0.1",
+    ];
+    for s in specs {
+        let spec: MethodSpec = s.parse().unwrap_or_else(|e| panic!("'{s}' failed: {e}"));
+        let shown = spec.to_string();
+        let again: MethodSpec = shown.parse().unwrap_or_else(|e| panic!("'{shown}' failed: {e}"));
+        assert_eq!(spec, again, "'{s}' -> '{shown}' did not round-trip");
+        assert_eq!(shown, again.to_string(), "'{s}': display not stable");
+    }
+
+    // parsing is case-insensitive and whitespace-tolerant
+    let upper: MethodSpec = " CLAQ-AP:2+4@2.05 ".parse().unwrap();
+    assert_eq!(upper, "claq-ap:2+4@2.05".parse().unwrap());
+
+    // the historical alias spells the same preset
+    let alias: MethodSpec = "claq-fusion-2.12".parse().unwrap();
+    assert_eq!(alias.method(), &Method::fusion_2_12());
+    assert_eq!(alias.to_string(), "fusion-2.12");
+
+    // a generic fusion spec equal to a preset canonicalizes to the sugar
+    let generic: MethodSpec = "fusion:2+4@2.05+0.07".parse().unwrap();
+    assert_eq!(generic.to_string(), "fusion-2.12");
+}
+
+#[test]
+fn method_spec_rejects_malformed_with_grammar() {
+    let bad = [
+        "claq",             // missing ':B'
+        "claq:0",           // bits below 1
+        "claq:9",           // bits above the container's 8-bit planes
+        "claq-ap:4+2@3",    // LO >= HI
+        "claq-ap:2+4@5.0",  // target outside [lo, hi]
+        "claq-ap:2+4",      // missing '@TARGET'
+        "claq-or:2",        // missing '+E'
+        "claq-or:2+17",     // budget out of range
+        "claq-vq:4b2",      // missing the 'd' prefix
+        "claq-vq:d0b2",     // zero group dim
+        "fusion-9.99",      // unknown Appendix F preset
+        "fusion:2+4@2.05",  // missing OR budget
+        "quantize-harder",  // unknown family
+        "",
+    ];
+    for s in bad {
+        let err = match s.parse::<MethodSpec>() {
+            Ok(spec) => panic!("'{s}' should not parse, got {spec:?}"),
+            Err(e) => e,
+        };
+        assert!(err.contains("grammar"), "'{s}': error lacks the grammar hint: {err}");
+    }
+}
+
+// --------------------------------------------- 2. tiled vs scalar 1e-5 ----
+
+/// Adversarial per-column bit patterns: every tile either sits inside one
+/// equal-bit run (fused decode) or straddles a boundary (per-lane
+/// fallback), plus ragged tails and degenerate all-lo/all-hi plans. Both
+/// kernels must match the dense dequant to 1e-5 on all of them.
+#[test]
+fn mixed_bit_plans_tiled_matches_scalar_and_dense() {
+    type Pattern = (&'static str, usize, Box<dyn Fn(usize) -> u8>);
+    let patterns: Vec<Pattern> = vec![
+        ("alternating", 17, Box::new(|c| if c % 2 == 0 { 2 } else { 4 })),
+        ("runs-of-3", 23, Box::new(|c| [2u8, 3, 4][(c / 3) % 3])),
+        ("all-lo", 16, Box::new(|_| 2)),
+        ("all-hi", 14, Box::new(|_| 8)),
+        ("one-wide-col", 12, Box::new(|c| if c == 5 { 8 } else { 2 })),
+        ("random-ish", 31, Box::new(|c| 2 + ((c * 7 + 3) % 4) as u8)),
+    ];
+    for (name, cols, bit_of) in patterns {
+        let (_, qm) = sample_mixed(7 + cols as u64, 29, cols, 1, bit_of);
+        let deq = qm.dequantize();
+        let mut rng = Rng::new(100 + cols as u64);
+        let seq = 3;
+        let mut x = vec![0.0f32; seq * cols];
+        rng.fill_normal(&mut x, 1.0);
+
+        let mut want = vec![0.0f32; seq * 29];
+        let mut scratch = LinearScratch::new();
+        deq.forward_into(&x, seq, &mut want, &mut scratch);
+
+        let scalar = PackedLinear::from_quantized(&qm, None).with_kernel(KernelKind::Scalar);
+        let tiled = PackedLinear::from_quantized(&qm, None).with_kernel(KernelKind::Tiled);
+        let a = forward(&scalar, &x, seq, 29);
+        let b = forward(&tiled, &x, seq, 29);
+        assert_close(&a, &want, &format!("{name}: scalar vs dense"));
+        assert_close(&b, &want, &format!("{name}: tiled vs dense"));
+        assert_close(&b, &a, &format!("{name}: tiled vs scalar"));
+    }
+}
+
+// ------------------------------------------------------ 3. bit-identity ----
+
+/// Serial (row-at-a-time), sharded (seq over the parallel threshold), and
+/// batched (several rows in one call) mixed-bit forwards are bit-identical
+/// under both kernels: the accumulation schedule is a function of `cols`
+/// alone, never of the run structure or the batch shape.
+#[test]
+fn mixed_bit_serial_sharded_batched_bit_identical() {
+    let (rows, cols) = (160, 96);
+    let (_, qm) = sample_mixed(51, rows, cols, 1, |c| match c % 11 {
+        0..=3 => 2,
+        4..=8 => 4,
+        _ => 8,
+    });
+    for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+        let packed = PackedLinear::from_quantized(&qm, None).with_kernel(kernel);
+        let mut rng = Rng::new(52);
+        let seq = 8; // 8 × 160 × 96 MACs — over the parallel threshold
+        let mut x = vec![0.0f32; seq * cols];
+        rng.fill_normal(&mut x, 1.0);
+
+        // serial reference: one token per call
+        let mut serial = vec![0.0f32; seq * rows];
+        let mut scratch = LinearScratch::new();
+        for t in 0..seq {
+            let row = &x[t * cols..(t + 1) * cols];
+            packed.forward_into(row, 1, &mut serial[t * rows..(t + 1) * rows], &mut scratch);
+        }
+
+        // sharded: all tokens at once
+        let sharded = forward(&packed, &x, seq, rows);
+        assert_eq!(sharded, serial, "{kernel:?}: sharded != serial");
+
+        // batched: 3 + 5 split must hit the same bits as 8-at-once
+        let mut batched = vec![0.0f32; seq * rows];
+        packed.forward_into(&x[..3 * cols], 3, &mut batched[..3 * rows], &mut scratch);
+        packed.forward_into(&x[3 * cols..], 5, &mut batched[3 * rows..], &mut scratch);
+        assert_eq!(batched, serial, "{kernel:?}: batched != serial");
+    }
+}
+
+// --------------------------------------- 4. container byte accounting ----
+
+/// CLAQPK01 stores mixed-bit planes with exact per-column accounting:
+/// 20 header bytes, then per column 1 bits byte + 2·2^bits f16 centroids +
+/// ceil(rows·bits/8) plane bytes, then 12 bytes per outlier. The size
+/// report partitions the same total, unpack→re-pack is byte-stable, and a
+/// zeroed per-column bit tag is rejected.
+#[test]
+fn mixed_bit_container_byte_accounting_exact() {
+    let (rows, cols) = (33, 14);
+    let bits: [u8; 14] = [2, 2, 2, 2, 2, 2, 4, 4, 4, 3, 3, 3, 3, 8];
+    let (_, qm) = sample_mixed(61, rows, cols, 2, |c| bits[c]);
+    let (pm, report) = pack(&qm).unwrap();
+
+    let header = 8 + 4 + 4 + 4;
+    let per_column: usize =
+        bits.iter().map(|&b| 1 + 2 * (1usize << b) + (rows * b as usize).div_ceil(8)).sum();
+    let outliers = 12 * qm.outliers.len();
+    assert_eq!(qm.outliers.len(), 2 * cols, "reserve=2 on every column");
+    assert_eq!(pm.bytes.len(), header + per_column + outliers, "container length");
+    assert_eq!(report.header_bytes, header);
+    assert_eq!(report.outlier_bytes, outliers);
+    assert_eq!(
+        report.index_bytes + report.codebook_bytes,
+        per_column,
+        "per-column bytes split into index planes + (bits byte, codebook)"
+    );
+    assert_eq!(report.container_bytes(), pm.bytes.len(), "report covers every byte");
+
+    // per-column bits survive the round trip, and re-packing is byte-stable
+    let back = unpack(&pm).unwrap();
+    let got: Vec<u8> = back.columns().iter().map(|c| c.bits).collect();
+    assert_eq!(got, bits.to_vec());
+    let (pm2, _) = pack(&back).unwrap();
+    assert_eq!(pm.bytes, pm2.bytes);
+
+    // a zeroed bit tag desyncs the stream — the reader must refuse it
+    let mut bad = pm.bytes.clone();
+    bad[header] = 0;
+    assert!(
+        unpack(&claq::quant::packed::PackedMatrix { bytes: bad }).is_err(),
+        "zero bit width accepted"
+    );
+}
+
+// --------------------------------------------------- 5. AP bit budgets ----
+
+/// Adaptive precision lands its budget: at 128 columns the promote
+/// granularity is (hi−lo)/(2·cols) ≈ 0.008, so the packed container's
+/// paper-accounted bits/param must sit within 0.01 of the AP target.
+#[test]
+fn ap_container_bits_per_param_within_a_hundredth() {
+    for target in [2.05, 2.5, 3.0] {
+        let spec: MethodSpec = format!("claq-ap:2+4@{target}").parse().unwrap();
+        let mut rng = Rng::new(71);
+        let mut w = Matrix::zeros(64, 128);
+        rng.fill_normal(&mut w.data, 0.1);
+        let plan = spec.method().plan_for(&w, None).unwrap();
+        let qm = quantize_matrix(&w, None, &plan);
+        let (_, report) = pack(&qm).unwrap();
+        let got = report.paper_equivalent_bits;
+        assert!(
+            (got - target).abs() <= 0.01,
+            "claq-ap:2+4@{target}: achieved {got} bits/param, off by more than 0.01"
+        );
+    }
+}
+
+// ----------------------------------------- 6. pack → serve end-to-end ----
+
+fn assert_bits_equal(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: shape");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: logit {i}: {x} vs {y}");
+    }
+}
+
+/// A mixed-bit model quantized via a *parsed spec* (pure AP — every
+/// projection carries mixed per-column bits, no outlier reservation to
+/// mask plane bugs) round-trips through a CLAQMD01 checkpoint and serves
+/// bit-identically to the in-memory deployed path: prefill, batch-1 greedy
+/// decode, and batch-3 decode all produce the same logits, hence the same
+/// tokens.
+#[test]
+fn mixed_bit_checkpoint_serves_bit_identically() {
+    let cfg = TransformerConfig {
+        vocab: VOCAB,
+        d_model: 24,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 32,
+        rope_theta: 10000.0,
+        eps: 1e-5,
+    };
+    let model = Model::random(cfg, &mut Rng::new(81));
+    let stream = generate(CorpusKind::SynthC4, 4000, 1);
+    let calib = sample_segments(&stream, &CalibConfig { n_segments: 6, seq_len: 32, seed: 8 });
+    let spec: MethodSpec = "claq-ap:2+4@2.5".parse().unwrap();
+    let (qm, _) = quantize_model(&model, spec.method(), &calib, &PipelineOpts::default());
+
+    let path = claq::util::tmp::unique_path("mixed_bits_e2e");
+    qm.save(&path).unwrap();
+    let cold = ExecModel::from_checkpoint(Checkpoint::load(&path).unwrap()).unwrap();
+    assert_eq!(cold.backend, "packed");
+    let deployed = qm.to_exec_deployed().unwrap();
+
+    let mut st = ExecState::new(cfg);
+    let toks: Vec<u16> = (0..16u16).map(|i| (i * 37) % VOCAB as u16).collect();
+    let mut ca = KvCache::new(&cfg);
+    let mut cb = KvCache::new(&cfg);
+    let la = prefill(&cold, &mut ca, &toks, &mut st);
+    let lb = prefill(&deployed, &mut cb, &toks, &mut st);
+    assert_bits_equal(&la.data, &lb.data, "prefill");
+
+    let mut ta = argmax(la.row(toks.len() - 1));
+    let mut tb = argmax(lb.row(toks.len() - 1));
+    for step in 0..6 {
+        assert_eq!(ta, tb, "greedy token diverged at step {step}");
+        let la = decode_step(&cold, &mut [&mut ca], &[ta], &mut st);
+        let lb = decode_step(&deployed, &mut [&mut cb], &[tb], &mut st);
+        assert_bits_equal(&la.data, &lb.data, &format!("decode step {step}"));
+        ta = argmax(la.row(0));
+        tb = argmax(lb.row(0));
+    }
+
+    // batch-3 decode at mixed depths exercises the batched dispatch path
+    let prompts: [&[u16]; 3] = [&[1, 2, 3], &[9, 8, 7, 6, 5], &[40, 0]];
+    let mk = |m: &ExecModel, st: &mut ExecState| -> Vec<KvCache> {
+        prompts
+            .iter()
+            .map(|p| {
+                let mut c = KvCache::new(&cfg);
+                let _ = prefill(m, &mut c, p, st);
+                c
+            })
+            .collect()
+    };
+    let mut caches_a = mk(&cold, &mut st);
+    let mut caches_b = mk(&deployed, &mut st);
+    let next = [4u16, 11, 200];
+    let mut refs_a: Vec<&mut KvCache> = caches_a.iter_mut().collect();
+    let mut refs_b: Vec<&mut KvCache> = caches_b.iter_mut().collect();
+    let la = decode_step(&cold, &mut refs_a, &next, &mut st);
+    let lb = decode_step(&deployed, &mut refs_b, &next, &mut st);
+    assert_bits_equal(&la.data, &lb.data, "batch-3 decode");
+
+    let _ = std::fs::remove_file(&path);
+}
